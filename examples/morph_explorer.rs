@@ -1,0 +1,55 @@
+//! Morph explorer: print the superpattern lattice and morphing equations
+//! for any pattern (both directions of the Match Conversion Theorem).
+//!
+//! ```bash
+//! cargo run --release --example morph_explorer -- cycle4
+//! cargo run --release --example morph_explorer -- "0-1,1-2,2-3,3-0,0-2;vi"
+//! ```
+
+use morphmine::bench::{describe_short, render_unique_equation};
+use morphmine::morph::MorphExpr;
+use morphmine::pattern::{gen, iso, parse};
+
+fn main() -> anyhow::Result<()> {
+    let spec = std::env::args().nth(1).unwrap_or_else(|| "cycle4".into());
+    let p = parse::parse(&spec)?;
+    println!("pattern: {p:?}");
+    println!("  |Aut| = {}", iso::automorphisms(&p).len());
+    println!(
+        "  kind: {}",
+        if p.is_clique() {
+            "clique (edge- AND vertex-induced; never morphs)"
+        } else if p.is_vertex_induced() {
+            "vertex-induced"
+        } else if p.is_edge_induced() {
+            "edge-induced"
+        } else {
+            "mixed anti-edges"
+        }
+    );
+
+    let skeleton = p.edge_induced();
+    println!("\nsuperpattern lattice (q ⊃n p over the edge skeleton):");
+    for q in gen::superpatterns(&skeleton) {
+        let phi = iso::phi_count(&skeleton, &q);
+        let reps = iso::phi_coset_reps(&skeleton, &q).len();
+        println!(
+            "  {:<12} |φ| = {phi:>3}  coset reps = {reps}",
+            describe_short(&q)
+        );
+    }
+
+    if p.is_edge_induced() && !p.is_clique() {
+        println!("\nTheorem 3.1 (edge-induced → vertex-induced alternatives):");
+        println!("  {}", render_unique_equation(&MorphExpr::theorem_3_1(&p)));
+    }
+    if p.is_vertex_induced() && !p.is_clique() {
+        println!("\nCorollary 3.1 (vertex-induced → signed mix):");
+        println!("  {}", render_unique_equation(&MorphExpr::corollary_3_1(&p)));
+        let mut full = MorphExpr::corollary_3_1(&p);
+        full.expand_to_edge_basis();
+        println!("recursively expanded to the edge-induced basis:");
+        println!("  {}", render_unique_equation(&full));
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+"""AOT compile path: lower the Layer-2 census model to HLO **text** for the
+Rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--sizes 64,128]
+
+Writes ``census_<N>.hlo.txt`` plus a small manifest describing the output
+vector layout for the Rust side.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_census(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    lowered = jax.jit(lambda a: (model.census(a),)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="64,128")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    for n in sizes:
+        text = lower_census(n)
+        path = os.path.join(args.out_dir, f"census_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = {
+        "outputs": model.OUTPUTS,
+        "sizes": sizes,
+        "dtype": "f64",
+        "note": "input: padded 0/1 adjacency (n,n), zero diagonal",
+    }
+    mpath = os.path.join(args.out_dir, "census_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

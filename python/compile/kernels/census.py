@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: blocked masked-matmul census.
+
+The dense motif census (Layer 2, ``model.py``) is built from two primitives
+over the adjacency matrix ``A``:
+
+* ``C = X @ Y``            (walk counting), and
+* ``B = C ∘ M``            (edge masking — restrict walk counts to edges),
+
+fused into one Pallas kernel so the mask never re-reads ``C`` from HBM.
+``masked_matmul(X, Y, M)`` returns ``(C, B)``; the census calls it with
+``(A, A, A)`` for triangles/diamonds and ``(C, C, A)`` for 5-cycles.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles HBM→VMEM with
+``BlockSpec`` at ``(BM, BK) × (BK, BN)`` granularity and accumulates over the
+``k`` grid axis, which is exactly the MXU-friendly schedule; the mask fuse
+happens on the final ``k`` step while the accumulator tile is still resident
+in VMEM. On this CPU image the kernel runs with ``interpret=True`` (Mosaic
+custom-calls cannot execute on the CPU PJRT plugin); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: 128 matches the MXU systolic array edge; smaller matrices fall
+# back to a single block.
+DEFAULT_BLOCK = 128
+
+
+def _census_kernel(x_ref, y_ref, m_ref, c_ref, b_ref, *, nk: int):
+    """One (i, j, k) grid step: accumulate X_ik @ Y_kj into C_ij; on the last
+    k step, emit the masked tile B_ij = C_ij * M_ij."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += x_ref[...] @ y_ref[...]
+
+    @pl.when(k == nk - 1)
+    def _mask():
+        b_ref[...] = c_ref[...] * m_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def masked_matmul(x, y, m, *, block: int = DEFAULT_BLOCK):
+    """Fused ``(x @ y, (x @ y) * m)`` via a blocked Pallas kernel.
+
+    All inputs must be square ``(n, n)`` with ``n`` divisible by the block
+    size (the census pads adjacency matrices to the artifact size).
+    """
+    n = x.shape[0]
+    assert x.shape == y.shape == m.shape == (n, n), (x.shape, y.shape, m.shape)
+    bs = min(block, n)
+    assert n % bs == 0, f"n={n} not divisible by block={bs}"
+    nk = n // bs
+    grid = (n // bs, n // bs, nk)
+    out_shape = (
+        jax.ShapeDtypeStruct((n, n), x.dtype),
+        jax.ShapeDtypeStruct((n, n), x.dtype),
+    )
+    c, b = pl.pallas_call(
+        functools.partial(_census_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, k)),  # X_ik
+            pl.BlockSpec((bs, bs), lambda i, j, k: (k, j)),  # Y_kj
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),  # M_ij
+        ],
+        out_specs=(
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),  # C_ij
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),  # B_ij
+        ),
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, m)
+    return c, b

@@ -1,0 +1,127 @@
+"""Pure-jnp / pure-python oracles for the Layer-1 kernel and Layer-2 model.
+
+* ``masked_matmul_ref`` — the kernel's correctness reference.
+* ``brute_force_motifs`` — exact unique-subgraph motif counts by exhaustive
+  enumeration (tiny graphs only); the model's correctness reference.
+* ``unique_embeddings`` — `|φ(p, q)| / |Aut(p)|`, used to derive the
+  morphing conversion matrix independently of the Rust implementation.
+"""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_matmul_ref(x, y, m):
+    """Reference for kernels.census.masked_matmul."""
+    c = jnp.matmul(x, y)
+    return c, c * m
+
+
+# ---------------------------------------------------------------------------
+# tiny-graph pattern utilities (numpy, exhaustive — test oracles only)
+# ---------------------------------------------------------------------------
+
+# 3- and 4-motif edge lists, ordered by edge count (must stay aligned with
+# model.MOTIFS3 / model.MOTIFS4)
+MOTIFS3 = {
+    "wedge": [(0, 1), (1, 2)],
+    "triangle": [(0, 1), (1, 2), (2, 0)],
+}
+
+MOTIFS4 = {
+    "star4": [(0, 1), (0, 2), (0, 3)],
+    "path4": [(0, 1), (1, 2), (2, 3)],
+    "tailed_triangle": [(0, 1), (1, 2), (2, 0), (2, 3)],
+    "cycle4": [(0, 1), (1, 2), (2, 3), (3, 0)],
+    "diamond": [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)],
+    "clique4": [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],
+}
+
+
+def _adj_of(n, edges):
+    a = np.zeros((n, n), dtype=np.int64)
+    for u, v in edges:
+        a[u, v] = a[v, u] = 1
+    return a
+
+
+def automorphism_count(n, edges):
+    """|Aut(p)| by brute force over permutations."""
+    a = _adj_of(n, edges)
+    count = 0
+    for perm in itertools.permutations(range(n)):
+        p = np.array(perm)
+        if np.array_equal(a[np.ix_(p, p)], a):
+            count += 1
+    return count
+
+
+def unique_embeddings(p_edges, q_edges, n):
+    """Unique embeddings of edge-set p into edge-set q on the same n
+    vertices: |{σ : E(p)^σ ⊆ E(q)}| / |Aut(p)|."""
+    ap = _adj_of(n, p_edges)
+    aq = _adj_of(n, q_edges)
+    maps = 0
+    for perm in itertools.permutations(range(n)):
+        p = np.array(perm)
+        # σ maps p-vertex i to q-vertex perm[i]: check E(p) ⊆ E(q)^σ
+        if np.all(aq[np.ix_(p, p)] >= ap):
+            maps += 1
+    return maps // automorphism_count(n, p_edges)
+
+
+def edge_induced_counts(adj, motifs, n_pat):
+    """Exact unique edge-induced subgraph counts of each motif, by
+    enumerating vertex subsets and sub-edge-sets. Tiny graphs only."""
+    n = adj.shape[0]
+    out = {}
+    for name, edges in motifs.items():
+        ap = _adj_of(n_pat, edges)
+        count = 0
+        for sub in itertools.combinations(range(n), n_pat):
+            seen = set()
+            for perm in itertools.permutations(sub):
+                p = np.array(perm)
+                if np.all(adj[np.ix_(p, p)] >= ap):
+                    # record the edge image to count unique subgraphs
+                    img = frozenset(
+                        (min(p[u], p[v]), max(p[u], p[v])) for u, v in edges
+                    )
+                    seen.add(img)
+            count += len(seen)
+        out[name] = count
+    return out
+
+
+def vertex_induced_counts(adj, motifs, n_pat):
+    """Exact unique vertex-induced subgraph counts (induced-subgraph
+    isomorphism per vertex subset)."""
+    n = adj.shape[0]
+    out = {name: 0 for name in motifs}
+    pats = {name: _adj_of(n_pat, edges) for name, edges in motifs.items()}
+    for sub in itertools.combinations(range(n), n_pat):
+        induced = adj[np.ix_(sub, sub)]
+        for name, ap in pats.items():
+            ok = any(
+                np.array_equal(induced[np.ix_(np.array(p), np.array(p))], ap)
+                for p in itertools.permutations(range(n_pat))
+            )
+            if ok:
+                out[name] += 1
+                break  # induced structure matches exactly one motif
+    return out
+
+
+def brute_force_motifs(adj, size):
+    """Vertex-induced motif counts for `size` in {3, 4}."""
+    motifs = MOTIFS3 if size == 3 else MOTIFS4
+    return vertex_induced_counts(adj, motifs, size)
+
+
+def random_adjacency(rng, n, p):
+    """Symmetric 0/1 adjacency with edge probability p, zero diagonal."""
+    a = (rng.random((n, n)) < p).astype(np.int64)
+    a = np.triu(a, 1)
+    return a + a.T

@@ -1,0 +1,150 @@
+"""Layer-2 JAX model: dense adjacency-matrix motif census with the paper's
+morphing equations applied in-graph.
+
+Given a padded 0/1 adjacency matrix ``A`` (f64, zero diagonal), the model
+computes **edge-induced** counts of all 3- and 4-vertex connected patterns
+(plus the 5-cycle) from closed-walk / degree identities driven by the
+Layer-1 masked-matmul kernel, then converts them to **vertex-induced** motif
+counts by inverting the Match Conversion Theorem's linear system
+(Theorem 3.1: ``counts_E = U · counts_V`` where ``U[p][q]`` is the number of
+unique embeddings ``φ(p^E, q^E)/|Aut(p)|`` — the Fig. 4 coefficients).
+
+The conversion matrix is derived *independently* of the Rust implementation
+(brute force over permutations in ``kernels.ref``), so the Rust↔XLA
+cross-check in ``rust/tests`` validates two separately-derived
+implementations of the same theorem.
+
+Output vector layout: see ``OUTPUTS``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.census import masked_matmul
+
+OUTPUTS = [
+    "vertices",          # number of non-isolated... no: n with padding = row count of ones? -> num vertices with degree>0
+    "edges",
+    "wedge_vi",          # vertex-induced 3-motifs
+    "triangle",
+    "star4_vi",          # vertex-induced 4-motifs (order matches ref.MOTIFS4)
+    "path4_vi",
+    "tailed_triangle_vi",
+    "cycle4_vi",
+    "diamond_vi",
+    "clique4",
+    "cycle5_e",          # edge-induced 5-cycle count (Table 1's p7)
+]
+
+_MOTIF4_NAMES = list(ref.MOTIFS4.keys())
+
+
+def _conversion_matrix(motifs, n_pat):
+    """U[p][q] = unique embeddings of p's edge set into q's edge set
+    (same vertex count). Upper-triangular in edge-count order, unit
+    diagonal — invertible over the integers."""
+    names = list(motifs.keys())
+    k = len(names)
+    u = np.zeros((k, k), dtype=np.int64)
+    for i, pi in enumerate(names):
+        for j, qj in enumerate(names):
+            if len(motifs[qj]) >= len(motifs[pi]):
+                u[i, j] = ref.unique_embeddings(motifs[pi], motifs[qj], n_pat)
+    return u
+
+
+# Derived once at import; tiny (≤ 4! per entry).
+U3 = _conversion_matrix(ref.MOTIFS3, 3)
+U4 = _conversion_matrix(ref.MOTIFS4, 4)
+U3_INV = np.linalg.inv(U3)
+U4_INV = np.linalg.inv(U4)
+
+
+def census(a):
+    """Compute the census vector for a padded adjacency matrix ``a``.
+
+    Returns an f64 vector aligned with ``OUTPUTS``.
+    """
+    a = a.astype(jnp.float64)
+    d = a.sum(axis=1)
+
+    # --- kernel pass 1: C = A@A, B = C∘A ------------------------------
+    c, b = masked_matmul(a, a, a)
+
+    n_active = jnp.sum(d > 0).astype(jnp.float64)
+    m = d.sum() / 2.0
+
+    # 3-vertex counts
+    wedges_e = jnp.sum(d * (d - 1.0)) / 2.0          # Σ C(d,2)
+    triangles = jnp.sum(b) / 6.0                      # tr(A³)/6
+
+    # 4-vertex edge-induced counts
+    star4_e = jnp.sum(d * (d - 1.0) * (d - 2.0)) / 6.0  # Σ C(d,3)
+    # paths on 4 vertices: Σ_{(i,j)∈E}(d_i−1)(d_j−1) − 3T
+    dm1 = d - 1.0
+    path4_e = (jnp.einsum("ij,i,j->", a, dm1, dm1) / 2.0) - 3.0 * triangles
+    # tailed triangles: Σ_v t_v (d_v − 2), t_v = per-vertex triangles
+    t_v = b.sum(axis=1) / 2.0
+    tailed_e = jnp.sum(t_v * (d - 2.0))
+    # 4-cycles: (tr A⁴ − 2m − 4W)/8, tr A⁴ = Σ C²
+    tr_a4 = jnp.sum(c * c)
+    cycle4_e = (tr_a4 - 2.0 * m - 4.0 * wedges_e) / 8.0
+    # diamonds (edge-induced): Σ_{edges} C(t_e, 2), t_e = B_ij
+    diamond_e = jnp.sum(b * (b - 1.0)) / 4.0  # /2 per pair, /2 double count
+    # 4-cliques: (1/24) Σ A_ij A_ik A_il A_jk A_jl A_kl — contract k then l
+    # P_ijl = Σ_k A_ik A_jk A_kl  (only needed where A_ij A_il A_jl = 1)
+    p_ijl = jnp.einsum("ik,jk,kl->ijl", a, a, a)
+    clique4 = jnp.einsum("ijl,ij,il,jl->", p_ijl, a, a, a) / 24.0
+
+    # --- kernel pass 2: 5-cycles need (C@C)∘A --------------------------
+    _, e5 = masked_matmul(c, c, a)
+    tr_a5 = jnp.sum(e5)  # Σ_ij (A²A²)_ij A_ji = tr(A⁵)
+    cycle5_e = (tr_a5 - 30.0 * triangles - 10.0 * tailed_e) / 10.0
+
+    # --- morphing: edge-induced → vertex-induced -----------------------
+    # NOTE: the conversion is unrolled to scalar multiply-adds instead of a
+    # constant matvec (`U_INV @ counts`): xla_extension 0.5.1 — the runtime
+    # behind the Rust `xla` crate — silently evaluates dots against large
+    # constant operands to zero after the HLO-text round-trip. Scalar
+    # constants survive. (Verified in /tmp repro; see DESIGN.md §Runtime.)
+    def _convert(u_inv, counts):
+        out = []
+        for i in range(u_inv.shape[0]):
+            acc = None
+            for j in range(u_inv.shape[1]):
+                cij = float(u_inv[i, j])
+                if cij == 0.0:
+                    continue
+                term = cij * counts[j]
+                acc = term if acc is None else acc + term
+            out.append(acc)
+        return out
+
+    counts3_e = [wedges_e, triangles]
+    counts3_v = _convert(U3_INV, counts3_e)
+    counts4_e = [star4_e, path4_e, tailed_e, cycle4_e, diamond_e, clique4]
+    counts4_v = _convert(U4_INV, counts4_e)
+
+    # All outputs are integer counts mathematically; round away any f64
+    # reassociation drift introduced by the XLA optimizer (observed ~1e-9
+    # relative error on Σ C(d,3)-style reductions in xla_extension 0.5.1).
+    return jnp.round(jnp.stack(
+        [
+            n_active,
+            m,
+            counts3_v[0],   # wedge_vi
+            counts3_e[1],   # triangle (clique: E == V)
+            counts4_v[0],   # star4_vi
+            counts4_v[1],   # path4_vi
+            counts4_v[2],   # tailed_triangle_vi
+            counts4_v[3],   # cycle4_vi
+            counts4_v[4],   # diamond_vi
+            counts4_e[5],   # clique4
+            cycle5_e,
+        ]
+    ))
+
+
+def census_output_index(name):
+    return OUTPUTS.index(name)

@@ -1,0 +1,26 @@
+//! `cargo bench` entry: regenerates every table and figure of the paper
+//! (criterion is unavailable offline; the harness prints markdown reports
+//! and records medians through `util::timer::BenchRunner`).
+//!
+//! Scale via env: `MM_BENCH_SCALE=tiny|small|medium` (default tiny so the
+//! full grid completes in minutes), `MM_BENCH_EXP=all|table1|…`.
+
+use morphmine::bench;
+use morphmine::graph::generators::Scale;
+
+fn main() -> anyhow::Result<()> {
+    // cargo bench passes --bench; ignore unknown flags
+    let exp = std::env::var("MM_BENCH_EXP").unwrap_or_else(|_| "all".into());
+    let scale = Scale::parse(
+        &std::env::var("MM_BENCH_SCALE").unwrap_or_else(|_| "tiny".into()),
+    )
+    .expect("MM_BENCH_SCALE must be tiny|small|medium");
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    println!(
+        "# morphmine paper benches (scale={scale:?}, threads={threads})"
+    );
+    bench::run_experiment(&exp, scale, threads)?;
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Counting aggregation: `λ(m) = 1`, `⊕ = +`, `∘*` = identity.
+//!
+//! Values are ℤ (i128 to stay safe when values are scaled by `|φ|·|Aut|`
+//! coefficients on dense graphs), so the Corollary 3.1 subtraction is exact.
+
+use super::Aggregation;
+use crate::graph::VertexId;
+
+/// The counting aggregation of the paper's simplest example.
+pub struct CountAgg;
+
+impl Aggregation for CountAgg {
+    type Value = i128;
+
+    fn identity(&self) -> i128 {
+        0
+    }
+
+    #[inline]
+    fn accumulate(&self, acc: &mut i128, _m: &[VertexId]) {
+        *acc += 1;
+    }
+
+    fn combine(&self, a: i128, b: i128) -> i128 {
+        a + b
+    }
+
+    fn permute(&self, v: &i128, _f: &[usize]) -> i128 {
+        *v // counts are permutation-invariant: a(m ∘ f) = a(m)
+    }
+
+    fn scale(&self, v: &i128, c: i64) -> i128 {
+        v * c as i128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_laws() {
+        let a = CountAgg;
+        assert_eq!(a.identity(), 0);
+        let mut x = a.identity();
+        a.accumulate(&mut x, &[1, 2, 3]);
+        a.accumulate(&mut x, &[4, 5, 6]);
+        assert_eq!(x, 2);
+        assert_eq!(a.combine(x, 3), 5);
+        assert_eq!(a.permute(&x, &[2, 0, 1]), x);
+        assert_eq!(a.scale(&x, -3), -6);
+    }
+}

@@ -1,0 +1,163 @@
+//! Enumeration aggregation: the value is the (signed multiset of) matches
+//! themselves.
+//!
+//! Signed multisets make the Corollary 3.1 set difference exact: subtracted
+//! matches cancel to zero. A well-formed final value has only positive
+//! multiplicities ([`MatchSet::assert_consistent`]); negative residues would
+//! indicate a morphing bug (the property tests rely on this).
+
+use super::Aggregation;
+use crate::graph::VertexId;
+use std::collections::HashMap;
+
+/// Signed multiset of matches. Keys are maps `pattern vertex → data vertex`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MatchSet {
+    pub counts: HashMap<Vec<VertexId>, i64>,
+}
+
+impl MatchSet {
+    /// Number of entries with positive multiplicity, weighted.
+    pub fn positive_len(&self) -> u64 {
+        self.counts.values().filter(|&&c| c > 0).map(|&c| c as u64).sum()
+    }
+
+    /// All distinct matches with positive multiplicity, sorted.
+    pub fn matches(&self) -> Vec<Vec<VertexId>> {
+        let mut v: Vec<_> = self
+            .counts
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, _)| k.clone())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Distinct *subgraphs* (vertex sets) with positive multiplicity.
+    pub fn unique_subgraphs(&self) -> Vec<Vec<VertexId>> {
+        let mut seen = std::collections::HashSet::new();
+        for (m, &c) in &self.counts {
+            if c > 0 {
+                let mut s = m.clone();
+                s.sort_unstable();
+                seen.insert(s);
+            }
+        }
+        let mut v: Vec<_> = seen.into_iter().collect();
+        v.sort();
+        v
+    }
+
+    /// Panic if any multiplicity is negative (morphing must never produce
+    /// negative residues on a consistent query).
+    pub fn assert_consistent(&self) {
+        for (m, &c) in &self.counts {
+            assert!(c >= 0, "negative multiplicity {c} for match {m:?}");
+        }
+    }
+
+    fn insert(&mut self, m: Vec<VertexId>, c: i64) {
+        let e = self.counts.entry(m).or_insert(0);
+        *e += c;
+        if *e == 0 {
+            // keep the map compact; removal also makes PartialEq meaningful
+            let key = self
+                .counts
+                .iter()
+                .find(|(_, &v)| v == 0)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = key {
+                self.counts.remove(&k);
+            }
+        }
+    }
+}
+
+/// Enumerating aggregation: `λ(m) = {m}`, `⊕` = multiset sum,
+/// `∘*` = per-match domain permutation.
+pub struct EnumerateAgg;
+
+impl Aggregation for EnumerateAgg {
+    type Value = MatchSet;
+
+    fn identity(&self) -> MatchSet {
+        MatchSet::default()
+    }
+
+    fn accumulate(&self, acc: &mut MatchSet, m: &[VertexId]) {
+        acc.insert(m.to_vec(), 1);
+    }
+
+    fn combine(&self, mut a: MatchSet, b: MatchSet) -> MatchSet {
+        for (m, c) in b.counts {
+            a.insert(m, c);
+        }
+        a
+    }
+
+    fn permute(&self, v: &MatchSet, f: &[usize]) -> MatchSet {
+        // value over q, f : V(p) → V(q); each match m over q becomes m ∘ f
+        let mut out = MatchSet::default();
+        for (m, &c) in &v.counts {
+            let pm: Vec<VertexId> = f.iter().map(|&fq| m[fq]).collect();
+            out.insert(pm, c);
+        }
+        out
+    }
+
+    fn scale(&self, v: &MatchSet, c: i64) -> MatchSet {
+        let mut out = MatchSet::default();
+        for (m, &k) in &v.counts {
+            out.insert(m.clone(), k * c);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiset_cancellation() {
+        let a = EnumerateAgg;
+        let mut x = a.identity();
+        a.accumulate(&mut x, &[1, 2]);
+        a.accumulate(&mut x, &[3, 4]);
+        let y = a.scale(&x, -1);
+        let z = a.combine(x, y);
+        assert_eq!(z.positive_len(), 0);
+        assert!(z.counts.is_empty(), "cancelled entries are removed");
+    }
+
+    #[test]
+    fn permute_reindexes_matches() {
+        let a = EnumerateAgg;
+        let mut x = a.identity();
+        a.accumulate(&mut x, &[10, 20, 30]); // match over q
+        let f = vec![2, 0]; // p has 2 vertices; f: V(p)→V(q)
+        let y = a.permute(&x, &f);
+        assert_eq!(y.matches(), vec![vec![30, 10]]);
+    }
+
+    #[test]
+    fn unique_subgraphs_dedupes_automorphic_maps() {
+        let a = EnumerateAgg;
+        let mut x = a.identity();
+        a.accumulate(&mut x, &[1, 2, 3]);
+        a.accumulate(&mut x, &[3, 2, 1]);
+        assert_eq!(x.positive_len(), 2);
+        assert_eq!(x.unique_subgraphs(), vec![vec![1, 2, 3]]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_residue_detected() {
+        let a = EnumerateAgg;
+        let mut x = a.identity();
+        a.accumulate(&mut x, &[1, 2]);
+        let y = a.scale(&x, -2);
+        a.combine(x, y).assert_consistent();
+    }
+}

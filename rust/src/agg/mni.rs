@@ -1,0 +1,183 @@
+//! MNI (minimum node image) support aggregation [Bringmann & Nijssen], used
+//! by Frequent Subgraph Mining.
+//!
+//! The MNI table has a column per pattern vertex; column `v` collects the
+//! data vertices `m(v)` over all matches `m`. The support is the size of the
+//! smallest column. It is anti-monotonic, which FSM's level-wise pruning
+//! relies on.
+//!
+//! Columns are stored as signed multisets (`data vertex → multiplicity`) so
+//! the aggregation is additive: Corollary 3.1's disjoint subtraction
+//! cancels exactly, and the domain of a column is its positive support.
+//! (Since full match sets are closed under `Aut(p)`, symmetric vertices end
+//! up with identical columns — the "groups of symmetric vertices" in the
+//! paper's formulation.)
+
+use super::Aggregation;
+use crate::graph::VertexId;
+use std::collections::HashMap;
+
+/// MNI table: one signed-multiset column per pattern vertex.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MniTable {
+    pub columns: Vec<HashMap<VertexId, i64>>,
+}
+
+impl MniTable {
+    pub fn new(n: usize) -> MniTable {
+        MniTable {
+            columns: vec![HashMap::new(); n],
+        }
+    }
+
+    /// The MNI support: size of the smallest column domain (positive keys).
+    pub fn support(&self) -> u64 {
+        self.columns
+            .iter()
+            .map(|c| c.values().filter(|&&x| x > 0).count() as u64)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Domain of column `v` (sorted, positive multiplicities only).
+    pub fn domain(&self, v: usize) -> Vec<VertexId> {
+        let mut d: Vec<_> = self.columns[v]
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .map(|(&u, _)| u)
+            .collect();
+        d.sort_unstable();
+        d
+    }
+
+    /// Panic on negative multiplicities (morphing must cancel exactly).
+    pub fn assert_consistent(&self) {
+        for (v, col) in self.columns.iter().enumerate() {
+            for (&u, &c) in col {
+                assert!(c >= 0, "column {v}: negative multiplicity {c} for vertex {u}");
+            }
+        }
+    }
+}
+
+/// The MNI aggregation: `λ(m)` = table with `{m(v)}` in column `v`,
+/// `⊕` = column-wise multiset sum, `∘*` = column reindexing.
+pub struct MniAgg {
+    /// Number of pattern vertices (table width).
+    pub n: usize,
+}
+
+impl Aggregation for MniAgg {
+    type Value = MniTable;
+
+    fn identity(&self) -> MniTable {
+        MniTable::new(self.n)
+    }
+
+    fn accumulate(&self, acc: &mut MniTable, m: &[VertexId]) {
+        debug_assert_eq!(m.len(), self.n);
+        for (v, &u) in m.iter().enumerate() {
+            *acc.columns[v].entry(u).or_insert(0) += 1;
+        }
+    }
+
+    fn combine(&self, mut a: MniTable, b: MniTable) -> MniTable {
+        debug_assert_eq!(a.columns.len(), b.columns.len());
+        for (ca, cb) in a.columns.iter_mut().zip(b.columns) {
+            for (u, c) in cb {
+                let e = ca.entry(u).or_insert(0);
+                *e += c;
+                if *e == 0 {
+                    ca.remove(&u);
+                }
+            }
+        }
+        a
+    }
+
+    fn permute(&self, v: &MniTable, f: &[usize]) -> MniTable {
+        // value over q; f : V(p) → V(q); result column i = input column f[i].
+        // The result width is |p| = f.len() (may differ from self.n when
+        // converting across patterns of different size — not used in
+        // practice since morphing is same-size, but keep it correct).
+        MniTable {
+            columns: f.iter().map(|&fq| v.columns[fq].clone()).collect(),
+        }
+    }
+
+    fn scale(&self, v: &MniTable, c: i64) -> MniTable {
+        MniTable {
+            columns: v
+                .columns
+                .iter()
+                .map(|col| col.iter().map(|(&u, &k)| (u, k * c)).collect())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::aggregate_pattern;
+    use crate::graph::GraphBuilder;
+    use crate::pattern::catalog;
+
+    #[test]
+    fn support_is_min_column() {
+        let mut t = MniTable::new(2);
+        t.columns[0].insert(1, 2);
+        t.columns[0].insert(2, 1);
+        t.columns[1].insert(9, 1);
+        assert_eq!(t.support(), 1);
+        assert_eq!(t.domain(0), vec![1, 2]);
+    }
+
+    #[test]
+    fn star_center_support() {
+        // star with center 0, leaves 1..4 — pattern: labeled edge (hub=a, leaf=b)
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (0, 4)])
+            .labels(vec![0, 1, 1, 1, 1])
+            .build("star");
+        let p = crate::pattern::Pattern::from_edges(2, &[(0, 1)]).with_labels(&[0, 1]);
+        let agg = MniAgg { n: 2 };
+        let t = aggregate_pattern(&g, &p, &agg, 1);
+        // column 0 = {center}, column 1 = 4 leaves → MNI support 1
+        assert_eq!(t.domain(0), vec![0]);
+        assert_eq!(t.domain(1).len(), 4);
+        assert_eq!(t.support(), 1);
+    }
+
+    #[test]
+    fn symmetric_vertices_equal_domains() {
+        // full match set: wedge (path3) endpoints are symmetric
+        let g = GraphBuilder::new().edges(&[(0, 1), (1, 2), (2, 3)]).build("p4");
+        let p = catalog::path(3);
+        let agg = MniAgg { n: 3 };
+        let t = aggregate_pattern(&g, &p, &agg, 1);
+        assert_eq!(t.domain(0), t.domain(2), "symmetric endpoints");
+    }
+
+    #[test]
+    fn combine_cancels() {
+        let agg = MniAgg { n: 1 };
+        let mut a = agg.identity();
+        agg.accumulate(&mut a, &[5]);
+        let b = agg.scale(&a, -1);
+        let c = agg.combine(a, b);
+        assert_eq!(c.support(), 0);
+        c.assert_consistent();
+    }
+
+    #[test]
+    fn permute_reindexes_columns() {
+        let agg = MniAgg { n: 3 };
+        let mut t = agg.identity();
+        agg.accumulate(&mut t, &[10, 20, 30]);
+        let f = vec![2, 1, 0];
+        let u = agg.permute(&t, &f);
+        assert_eq!(u.domain(0), vec![30]);
+        assert_eq!(u.domain(2), vec![10]);
+    }
+}

@@ -1,0 +1,127 @@
+//! Aggregation framework — the paper's `a = (λ, ⊕)` abstraction with the
+//! permute operator `∘*` (§3.2.3).
+//!
+//! An [`Aggregation`] maps matches to values (`λ`), combines values (`⊕`),
+//! permutes values along pattern-to-pattern vertex maps (`∘*`, needed by the
+//! Aggregation Conversion Theorem) and — for the Corollary 3.1 direction —
+//! scales values by *signed* integers. Counting is ℤ-valued; enumeration and
+//! MNI tables are represented as signed multisets so that the disjoint set
+//! difference of Corollary 3.1 is exact (the paper notes the image must be
+//! additive for that direction).
+//!
+//! **Convention:** all values aggregate over the *full* match set `M(p)`
+//! (all subgraph-isomorphism maps, `|Aut(p)|` per subgraph). The matcher
+//! explores canonical (symmetry-broken) matches; [`aggregate_pattern`]
+//! symmetrizes over `Aut(p)` at the end:
+//! `a(M_full) = ⨁_{α ∈ Aut(p)} a(M_canon) ∘* α`.
+
+pub mod count;
+pub mod enumerate;
+pub mod mni;
+
+pub use count::CountAgg;
+pub use enumerate::EnumerateAgg;
+pub use mni::MniAgg;
+
+use crate::graph::{DataGraph, VertexId};
+use crate::pattern::{iso, Pattern};
+use crate::plan::Plan;
+
+/// An aggregation `a = (λ, ⊕, ∘*)` in the sense of §3.2.3.
+pub trait Aggregation: Sync {
+    type Value: Clone + Send + PartialEq + std::fmt::Debug;
+
+    /// Identity of `⊕`.
+    fn identity(&self) -> Self::Value;
+
+    /// Accumulate one match into `acc` (in-place `acc ⊕= λ(m)`).
+    /// `m` is indexed by **pattern vertex** (not matching-order position).
+    fn accumulate(&self, acc: &mut Self::Value, m: &[VertexId]);
+
+    /// `⊕` of two values.
+    fn combine(&self, a: Self::Value, b: Self::Value) -> Self::Value;
+
+    /// `∘*`: reindex a value computed over pattern `q` along a vertex map
+    /// `f : V(p) → V(q)`, producing a value over pattern `p`.
+    /// Must satisfy `a(m ∘ f) = a(m) ∘* f`.
+    fn permute(&self, v: &Self::Value, f: &[usize]) -> Self::Value;
+
+    /// Scale by a signed integer (repeated `⊕` / formal inverse).
+    fn scale(&self, v: &Self::Value, c: i64) -> Self::Value;
+}
+
+/// Aggregate a pattern over the full match set `M(p, G)`:
+/// runs the symmetry-broken matcher in parallel, then symmetrizes over the
+/// automorphism group.
+pub fn aggregate_pattern<A: Aggregation>(
+    graph: &DataGraph,
+    pattern: &Pattern,
+    agg: &A,
+    threads: usize,
+) -> A::Value {
+    let plan = Plan::compile(pattern);
+    let canon = aggregate_canonical(graph, &plan, agg, threads);
+    symmetrize(pattern, agg, &canon)
+}
+
+/// Aggregate over canonical (symmetry-broken) matches only.
+pub fn aggregate_canonical<A: Aggregation>(
+    graph: &DataGraph,
+    plan: &Plan,
+    agg: &A,
+    threads: usize,
+) -> A::Value {
+    let order = &plan.order;
+    let n = order.len();
+    crate::exec::parallel::par_run(
+        graph,
+        plan,
+        threads,
+        || (agg.identity(), vec![0 as VertexId; n]),
+        |(acc, scratch), m| {
+            // positions → pattern vertices
+            for (pos, &pv) in order.iter().enumerate() {
+                scratch[pv] = m[pos];
+            }
+            agg.accumulate(acc, scratch);
+        },
+        |(a, s), (b, _)| (agg.combine(a, b), s),
+    )
+    .0
+}
+
+/// `a(M_full) = ⨁_{α ∈ Aut(p)} a(M_canon) ∘* α`.
+pub fn symmetrize<A: Aggregation>(pattern: &Pattern, agg: &A, canon: &A::Value) -> A::Value {
+    let mut acc = agg.identity();
+    for alpha in iso::automorphisms(pattern) {
+        acc = agg.combine(acc, agg.permute(canon, &alpha));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::pattern::catalog;
+
+    #[test]
+    fn aggregate_full_count_is_aut_times_canonical() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)])
+            .build("k4");
+        let p = catalog::triangle();
+        let full = aggregate_pattern(&g, &p, &CountAgg, 2);
+        // 4 triangles × |Aut| = 6 maps each
+        assert_eq!(full, 24);
+    }
+
+    #[test]
+    fn symmetrize_respects_permute_law() {
+        // enumeration: canonical triangle matches symmetrized give all maps
+        let g = GraphBuilder::new().edges(&[(0, 1), (1, 2), (2, 0)]).build("k3");
+        let p = catalog::triangle();
+        let v = aggregate_pattern(&g, &p, &EnumerateAgg, 1);
+        assert_eq!(v.positive_len(), 6, "3! maps of the single triangle");
+    }
+}

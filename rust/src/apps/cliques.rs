@@ -1,0 +1,55 @@
+//! Clique counting — the degenerate corner of the morphing lattice (cliques
+//! are simultaneously edge- and vertex-induced, so they never morph; the
+//! optimizer must leave them alone).
+
+use crate::exec::parallel::par_count_matches;
+use crate::graph::DataGraph;
+use crate::pattern::catalog;
+use crate::plan::Plan;
+
+/// Count k-cliques (unique subgraphs).
+pub fn count_cliques(graph: &DataGraph, k: usize, threads: usize) -> u64 {
+    assert!((1..=crate::pattern::MAX_PATTERN_VERTICES).contains(&k));
+    if k == 1 {
+        return graph.num_vertices() as u64;
+    }
+    if k == 2 {
+        return graph.num_edges() as u64;
+    }
+    let plan = Plan::compile(&catalog::clique(k));
+    par_count_matches(graph, &plan, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn cliques_in_k5() {
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        let g = GraphBuilder::new().edges(&edges).build("k5");
+        assert_eq!(count_cliques(&g, 1, 1), 5);
+        assert_eq!(count_cliques(&g, 2, 1), 10);
+        assert_eq!(count_cliques(&g, 3, 2), 10);
+        assert_eq!(count_cliques(&g, 4, 2), 5);
+        assert_eq!(count_cliques(&g, 5, 2), 1);
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let g = erdos_renyi(30, 140, 71);
+        for k in 3..=4 {
+            assert_eq!(
+                count_cliques(&g, k, 2),
+                crate::exec::brute_force_count(&g, &crate::pattern::catalog::clique(k))
+            );
+        }
+    }
+}

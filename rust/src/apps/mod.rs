@@ -1,0 +1,17 @@
+//! Graph mining applications built on the matcher + morphing engine:
+//! motif counting, frequent subgraph mining, pattern matching and clique
+//! finding — the application set of the paper's evaluation (§4.2).
+
+pub mod approx;
+pub mod cliques;
+pub mod fsm;
+pub mod incremental;
+pub mod matching;
+pub mod motifs;
+
+pub use approx::{approx_motifs, ApproxMotifCounts};
+pub use cliques::count_cliques;
+pub use fsm::{fsm, FsmConfig, FsmResult};
+pub use incremental::IncrementalMotifCounter;
+pub use matching::{match_patterns, MatchResult};
+pub use motifs::{count_motifs, MotifCounts};

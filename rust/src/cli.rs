@@ -1,0 +1,268 @@
+//! Hand-rolled CLI (clap is not available offline).
+//!
+//! ```text
+//! morphmine motifs  --graph <spec> [--size 4] [--pmr off|naive|cost] [--threads N]
+//! morphmine match   --graph <spec> --patterns <p1,p2,…> [--pmr …] [--explain]
+//! morphmine fsm     --graph <spec> [--edges 3] [--support 100] [--pmr …]
+//! morphmine cliques --graph <spec> [--k 4]
+//! morphmine census  --graph <spec> [--artifacts artifacts]
+//! morphmine gen     --dataset mico[:scale] --out <path>
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5] [--scale tiny|small|medium]
+//! morphmine info    --graph <spec>
+//! ```
+//!
+//! Graph specs: dataset names (`mico`, `patents`, `youtube`, `orkut`,
+//! optionally `:tiny|:small|:medium`) or a path to an edge-list file.
+
+use crate::coordinator::{Config, Coordinator};
+use crate::graph::io::load_spec;
+use crate::morph::Policy;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed flags: `--key value` pairs plus positional subcommand.
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("usage: morphmine <motifs|match|fsm|cliques|census|gen|bench|info> [--flags]\nsee `morphmine help`");
+        }
+        let cmd = argv[0].clone();
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("expected --flag, got {a:?}");
+            };
+            let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+            i += 1;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad --{key} {s:?}: {e}")),
+        }
+    }
+}
+
+fn policy_of(args: &Args) -> Result<Policy> {
+    let s = args.get_or("pmr", "cost");
+    Policy::parse(&s).with_context(|| format!("bad --pmr {s:?} (off|naive|cost)"))
+}
+
+fn coordinator_of(args: &Args) -> Result<Coordinator> {
+    let spec = args
+        .get("graph")
+        .context("missing --graph <dataset[:scale] | path>")?;
+    let graph = load_spec(spec)?;
+    let mut config = Config {
+        policy: policy_of(args)?,
+        threads: args.parse_num("threads", crate::exec::parallel::default_threads())?,
+        artifacts_dir: None,
+        ..Config::default()
+    };
+    if let Some(dir) = args.get("artifacts") {
+        config.artifacts_dir = Some(dir.into());
+    }
+    Coordinator::new(graph, config)
+}
+
+/// CLI entrypoint.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv)?;
+    match args.cmd.as_str() {
+        "motifs" => {
+            let c = coordinator_of(&args)?;
+            let size = args.parse_num("size", 4usize)?;
+            println!("{}", c.describe());
+            let t = crate::util::timer::Timer::start();
+            let (counts, backend) = c.motifs(size)?;
+            println!("backend: {backend:?}   elapsed: {:.3}s", t.secs());
+            for (p, n) in &counts.counts {
+                println!("{:>16}  {:?}", n, p);
+            }
+            print_profile(&counts.profile);
+        }
+        "match" => {
+            let c = coordinator_of(&args)?;
+            let specs = args.get("patterns").context("missing --patterns p1,p2,…")?;
+            let queries = specs
+                .split(',')
+                .map(crate::pattern::parse::parse)
+                .collect::<Result<Vec<_>>>()?;
+            println!("{}", c.describe());
+            let t = crate::util::timer::Timer::start();
+            let r = c.match_patterns(&queries);
+            println!("elapsed: {:.3}s", t.secs());
+            for (q, n) in queries.iter().zip(&r.counts) {
+                println!("{:>16}  {:?}", n, q);
+            }
+            if args.get("explain").is_some() {
+                println!("alternative pattern set:");
+                for p in &r.alt_set {
+                    println!("    {p:?}");
+                }
+                for e in &r.equations {
+                    println!("  {e}");
+                }
+            }
+            print_profile(&r.profile);
+        }
+        "fsm" => {
+            let c = coordinator_of(&args)?;
+            let edges = args.parse_num("edges", 3usize)?;
+            let support = args.parse_num("support", 100u64)?;
+            println!("{}", c.describe());
+            let t = crate::util::timer::Timer::start();
+            let r = c.fsm(edges, support);
+            println!("elapsed: {:.3}s", t.secs());
+            println!(
+                "frequent {}-edge patterns (support ≥ {support}): {}",
+                edges,
+                r.frequent.len()
+            );
+            for (p, s) in r.frequent.iter().take(20) {
+                println!("{s:>12}  {p:?}");
+            }
+            print_profile(&r.profile);
+        }
+        "cliques" => {
+            let c = coordinator_of(&args)?;
+            let k = args.parse_num("k", 4usize)?;
+            let t = crate::util::timer::Timer::start();
+            let n = c.cliques(k);
+            println!("{k}-cliques: {n}   ({:.3}s)", t.secs());
+        }
+        "census" => {
+            let spec = args.get("graph").context("missing --graph")?;
+            let graph = load_spec(spec)?;
+            let dir = args.get_or("artifacts", "artifacts");
+            let be = crate::runtime::CensusBackend::load(std::path::Path::new(&dir))?;
+            println!("dense census via PJRT ({})", be.platform());
+            let t = crate::util::timer::Timer::start();
+            let r = be.census_graph(&graph)?;
+            println!("elapsed: {:.3}s", t.secs());
+            for (name, v) in crate::runtime::CENSUS_OUTPUTS.iter().zip(&r.values) {
+                println!("{v:>16}  {name}");
+            }
+        }
+        "gen" => {
+            let d = args.get("dataset").context("missing --dataset")?;
+            let out = args.get("out").context("missing --out <path>")?;
+            let graph = load_spec(d)?;
+            crate::graph::io::save_text(&graph, std::path::Path::new(out))?;
+            println!(
+                "wrote {} (|V|={} |E|={})",
+                out,
+                graph.num_vertices(),
+                graph.num_edges()
+            );
+        }
+        "bench" => {
+            let exp = args.get_or("exp", "all");
+            let scale = crate::graph::generators::Scale::parse(&args.get_or("scale", "tiny"))
+                .context("bad --scale")?;
+            let threads = args.parse_num("threads", crate::exec::parallel::default_threads())?;
+            crate::bench::run_experiment(&exp, scale, threads)?;
+        }
+        "info" => {
+            let c = coordinator_of(&args)?;
+            println!("{}", c.describe());
+            let s = c.stats();
+            println!(
+                "wedges={:.0} density={:.6} clustering={:.4} deg²Σ={:.0}",
+                s.wedges, s.density, s.clustering, s.deg_sq_sum
+            );
+        }
+        "help" | "--help" | "-h" => {
+            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info");
+        }
+        other => bail!("unknown command {other:?} — try `morphmine help`"),
+    }
+    Ok(())
+}
+
+fn print_profile(p: &crate::util::timer::PhaseProfile) {
+    let total = p.total().as_secs_f64();
+    if total <= 0.0 {
+        return;
+    }
+    print!("phases:");
+    for (name, d) in p.entries() {
+        print!("  {name}={:.3}s ({:.0}%)", d.as_secs_f64(), 100.0 * d.as_secs_f64() / total);
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn args_parse_flags() {
+        let a = Args::parse(&argv("motifs --graph mico:tiny --size 4 --explain")).unwrap();
+        assert_eq!(a.cmd, "motifs");
+        assert_eq!(a.get("graph"), Some("mico:tiny"));
+        assert_eq!(a.parse_num("size", 3usize).unwrap(), 4);
+        assert_eq!(a.get("explain"), Some("true"));
+        assert!(a.parse_num::<usize>("graph", 1).is_err());
+    }
+
+    #[test]
+    fn run_motifs_smoke() {
+        run(argv("motifs --graph mico:tiny --size 3 --pmr naive --threads 2")).unwrap();
+    }
+
+    #[test]
+    fn run_match_smoke() {
+        run(argv(
+            "match --graph patents:tiny --patterns cycle4,diamond-vi --pmr cost --explain --threads 2",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn run_info_and_gen() {
+        run(argv("info --graph mico:tiny")).unwrap();
+        let out = std::env::temp_dir().join("mm_cli_gen.txt");
+        run(argv(&format!("gen --dataset mico:tiny --out {}", out.display()))).unwrap();
+        assert!(out.exists());
+    }
+
+    #[test]
+    fn run_rejects_unknown() {
+        assert!(run(argv("frobnicate")).is_err());
+        assert!(run(Vec::new()).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Mining coordinator — the Layer-3 leader that owns a loaded data graph,
+//! plans queries through the morphing engine, dispatches matching work to
+//! the thread pool or the dense XLA backend, and reports phase metrics
+//! (matching vs aggregation, the Figure-2 breakdown).
+
+pub mod query;
+
+use crate::apps::{self, FsmConfig, FsmResult, MatchResult, MotifCounts};
+use crate::graph::{DataGraph, GraphStats};
+use crate::morph::Policy;
+use crate::runtime::CensusBackend;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Worker threads for the sparse matcher.
+    pub threads: usize,
+    /// Morphing policy.
+    pub policy: Policy,
+    /// Where the AOT census artifacts live (`None` = sparse only).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Use the dense XLA backend for whole-graph motif censuses when the
+    /// graph fits an artifact.
+    pub allow_dense: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            threads: crate::exec::parallel::default_threads(),
+            policy: Policy::CostBased,
+            artifacts_dir: None,
+            allow_dense: true,
+        }
+    }
+}
+
+/// Which backend served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Sparse pattern-aware matcher (Rust, Layer 3).
+    Sparse,
+    /// Dense XLA census (Layers 1–2 via PJRT).
+    DenseXla,
+}
+
+/// The mining coordinator.
+pub struct Coordinator {
+    graph: DataGraph,
+    config: Config,
+    census: Option<CensusBackend>,
+    stats: std::sync::OnceLock<GraphStats>,
+}
+
+impl Coordinator {
+    /// Create a coordinator; loads census artifacts if configured.
+    pub fn new(graph: DataGraph, config: Config) -> Result<Coordinator> {
+        let census = match &config.artifacts_dir {
+            Some(dir) if config.allow_dense => Some(CensusBackend::load(dir)?),
+            _ => None,
+        };
+        Ok(Coordinator {
+            graph,
+            config,
+            census,
+            stats: std::sync::OnceLock::new(),
+        })
+    }
+
+    pub fn graph(&self) -> &DataGraph {
+        &self.graph
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    /// Graph statistics (computed once, shared by cost models and reports).
+    pub fn stats(&self) -> &GraphStats {
+        self.stats
+            .get_or_init(|| GraphStats::compute(&self.graph, 2000, 0xC00D))
+    }
+
+    /// Does the dense backend apply to this request?
+    fn dense_applicable(&self, size: usize) -> bool {
+        matches!(&self.census, Some(be) if size <= 4
+            && self.graph.num_vertices() <= be.max_size())
+    }
+
+    /// Motif counting with automatic backend selection. Returns the counts
+    /// and which backend served them.
+    pub fn motifs(&self, size: usize) -> Result<(MotifCounts, Backend)> {
+        if self.dense_applicable(size) {
+            let be = self.census.as_ref().unwrap();
+            let mut profile = crate::util::timer::PhaseProfile::new();
+            let r = profile.time("census", || be.census_graph(&self.graph))?;
+            let (motifs, vals): (Vec<crate::pattern::Pattern>, Vec<f64>) = match size {
+                3 => (
+                    crate::runtime::census_motifs3().to_vec(),
+                    vec![r.get("wedge_vi").unwrap(), r.get("triangle").unwrap()],
+                ),
+                4 => (
+                    crate::runtime::census_motifs4().to_vec(),
+                    r.motifs4().to_vec(),
+                ),
+                _ => unreachable!(),
+            };
+            let counts = motifs
+                .into_iter()
+                .zip(vals)
+                .map(|(p, v)| (p, v.round() as u64))
+                .collect();
+            return Ok((
+                MotifCounts {
+                    counts,
+                    profile,
+                    base: Vec::new(),
+                },
+                Backend::DenseXla,
+            ));
+        }
+        Ok((
+            apps::count_motifs(&self.graph, size, self.config.policy, self.config.threads),
+            Backend::Sparse,
+        ))
+    }
+
+    /// Pattern matching through the morphing engine.
+    pub fn match_patterns(&self, queries: &[crate::pattern::Pattern]) -> MatchResult {
+        apps::match_patterns(&self.graph, queries, self.config.policy, self.config.threads)
+    }
+
+    /// Frequent subgraph mining.
+    pub fn fsm(&self, max_edges: usize, support: u64) -> FsmResult {
+        apps::fsm(
+            &self.graph,
+            &FsmConfig {
+                max_edges,
+                support,
+                policy: self.config.policy,
+                threads: self.config.threads,
+            },
+        )
+    }
+
+    /// k-clique counting.
+    pub fn cliques(&self, k: usize) -> u64 {
+        apps::count_cliques(&self.graph, k, self.config.threads)
+    }
+
+    /// One-line summary for reports.
+    pub fn describe(&self) -> String {
+        let s = self.stats();
+        format!(
+            "{}: |V|={} |E|={} maxdeg={} avgdeg={:.1} labels={} policy={:?} threads={} dense={}",
+            self.graph.name(),
+            s.num_vertices,
+            s.num_edges,
+            s.max_degree,
+            s.avg_degree,
+            self.graph.num_labels(),
+            self.config.policy,
+            self.config.threads,
+            self.census.is_some(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{assign_labels, erdos_renyi};
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("census_64.hlo.txt").exists().then_some(p)
+    }
+
+    #[test]
+    fn coordinator_sparse_roundtrip() {
+        let g = assign_labels(erdos_renyi(60, 200, 81), 4, 1.4, 82);
+        let c = Coordinator::new(g, Config {
+            artifacts_dir: None,
+            threads: 2,
+            ..Config::default()
+        })
+        .unwrap();
+        let (m, backend) = c.motifs(4).unwrap();
+        assert_eq!(backend, Backend::Sparse);
+        assert_eq!(m.counts.len(), 6);
+        let fs = c.fsm(2, 2);
+        assert!(!fs.levels.is_empty());
+        assert!(c.cliques(3) > 0);
+        assert!(c.describe().contains("|V|=60"));
+    }
+
+    #[test]
+    fn coordinator_dense_backend_selected_and_agrees() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let g = erdos_renyi(50, 170, 83);
+        let dense = Coordinator::new(
+            g.clone(),
+            Config {
+                artifacts_dir: Some(dir),
+                threads: 2,
+                ..Config::default()
+            },
+        )
+        .unwrap();
+        let sparse = Coordinator::new(g, Config {
+            artifacts_dir: None,
+            threads: 2,
+            ..Config::default()
+        })
+        .unwrap();
+        let (md, bd) = dense.motifs(4).unwrap();
+        let (ms, bs) = sparse.motifs(4).unwrap();
+        assert_eq!(bd, Backend::DenseXla);
+        assert_eq!(bs, Backend::Sparse);
+        for (p, a) in &md.counts {
+            assert_eq!(Some(*a), ms.get(p), "{p:?}");
+        }
+        // 3-motifs via dense too
+        let (m3, b3) = dense.motifs(3).unwrap();
+        assert_eq!(b3, Backend::DenseXla);
+        assert_eq!(m3.counts.len(), 2);
+    }
+
+    #[test]
+    fn dense_skipped_when_too_large() {
+        let Some(dir) = artifacts() else { return };
+        let g = erdos_renyi(500, 1500, 84);
+        let c = Coordinator::new(
+            g,
+            Config {
+                artifacts_dir: Some(dir),
+                threads: 2,
+                ..Config::default()
+            },
+        )
+        .unwrap();
+        let (_, backend) = c.motifs(4).unwrap();
+        assert_eq!(backend, Backend::Sparse);
+    }
+}

@@ -1,0 +1,88 @@
+//! Query descriptions: a parsed, serializable form of what the CLI / bench
+//! harness asks the coordinator to do.
+
+use crate::pattern::{parse, Pattern};
+use anyhow::{bail, Result};
+
+/// A mining query.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// Count all motifs of a size (3–5).
+    Motifs { size: usize },
+    /// Match a set of patterns (count unique matches).
+    Match { patterns: Vec<Pattern> },
+    /// Frequent subgraph mining.
+    Fsm { max_edges: usize, support: u64 },
+    /// k-clique counting.
+    Cliques { k: usize },
+}
+
+impl Query {
+    /// Parse a query string:
+    /// `motifs:4`, `match:cycle4-vi,p3`, `fsm:3:300`, `cliques:4`.
+    pub fn parse(s: &str) -> Result<Query> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or_default();
+        match kind {
+            "motifs" => {
+                let size: usize = parts
+                    .next()
+                    .unwrap_or("4")
+                    .parse()?;
+                if !(3..=5).contains(&size) {
+                    bail!("motif size must be 3..=5, got {size}");
+                }
+                Ok(Query::Motifs { size })
+            }
+            "match" => {
+                let spec = parts.next().unwrap_or_default();
+                if spec.is_empty() {
+                    bail!("match query needs patterns: match:<p1>,<p2>,…");
+                }
+                let patterns = spec
+                    .split(',')
+                    .map(parse::parse)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Query::Match { patterns })
+            }
+            "fsm" => {
+                let max_edges: usize = parts.next().unwrap_or("3").parse()?;
+                let support: u64 = parts.next().unwrap_or("100").parse()?;
+                Ok(Query::Fsm { max_edges, support })
+            }
+            "cliques" => {
+                let k: usize = parts.next().unwrap_or("4").parse()?;
+                Ok(Query::Cliques { k })
+            }
+            other => bail!("unknown query kind {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert!(matches!(Query::parse("motifs:4").unwrap(), Query::Motifs { size: 4 }));
+        assert!(matches!(Query::parse("cliques:5").unwrap(), Query::Cliques { k: 5 }));
+        match Query::parse("fsm:3:250").unwrap() {
+            Query::Fsm { max_edges, support } => {
+                assert_eq!((max_edges, support), (3, 250));
+            }
+            _ => panic!(),
+        }
+        match Query::parse("match:cycle4,p3").unwrap() {
+            Query::Match { patterns } => assert_eq!(patterns.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad() {
+        assert!(Query::parse("motifs:9").is_err());
+        assert!(Query::parse("match:").is_err());
+        assert!(Query::parse("bogus:1").is_err());
+    }
+}

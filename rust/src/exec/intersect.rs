@@ -1,0 +1,180 @@
+//! Sorted-set kernels: the inner loop of the matching engine.
+//!
+//! Adjacency lists are sorted `u32` slices. Intersections use galloping when
+//! sizes are skewed (hub lists vs. leaf lists differ by orders of magnitude
+//! in the power-law graphs the paper mines).
+
+use crate::graph::VertexId;
+
+/// Threshold size ratio above which galloping beats linear merge.
+const GALLOP_RATIO: usize = 16;
+
+/// `out = a ∩ b` (clears `out`).
+pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    out.clear();
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    if small.is_empty() {
+        return;
+    }
+    if large.len() / small.len().max(1) >= GALLOP_RATIO {
+        // galloping: binary-search each small element in the large list
+        let mut lo = 0;
+        for &x in small {
+            match large[lo..].binary_search(&x) {
+                Ok(i) => {
+                    out.push(x);
+                    lo += i + 1;
+                }
+                Err(i) => {
+                    lo += i;
+                    if lo >= large.len() {
+                        break;
+                    }
+                }
+            }
+        }
+    } else {
+        // linear merge
+        let (mut i, mut j) = (0, 0);
+        while i < small.len() && j < large.len() {
+            match small[i].cmp(&large[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    out.push(small[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// `out = a \ b` (clears `out`).
+pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    out.clear();
+    if b.is_empty() {
+        out.extend_from_slice(a);
+        return;
+    }
+    if b.len() / a.len().max(1) >= GALLOP_RATIO {
+        // few candidates vs large subtracted list: binary search each
+        for &x in a {
+            if b.binary_search(&x).is_err() {
+                out.push(x);
+            }
+        }
+    } else {
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() {
+            if j >= b.len() || a[i] < b[j] {
+                out.push(a[i]);
+                i += 1;
+            } else if a[i] > b[j] {
+                j += 1;
+            } else {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Retain elements of `v` strictly greater than `bound` (lists are sorted:
+/// binary search + drain the prefix). Used for symmetry-breaking filters.
+pub fn retain_greater(v: &mut Vec<VertexId>, bound: VertexId) {
+    let cut = v.partition_point(|&x| x <= bound);
+    v.drain(..cut);
+}
+
+/// Retain elements strictly less than `bound`.
+pub fn retain_less(v: &mut Vec<VertexId>, bound: VertexId) {
+    let cut = v.partition_point(|&x| x < bound);
+    v.truncate(cut);
+}
+
+/// Remove one element by value if present (injectivity filter).
+pub fn remove_value(v: &mut Vec<VertexId>, x: VertexId) {
+    if let Ok(i) = v.binary_search(&x) {
+        v.remove(i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn naive_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|x| b.contains(x)).copied().collect()
+    }
+
+    fn naive_difference(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|x| !b.contains(x)).copied().collect()
+    }
+
+    #[test]
+    fn intersect_basics() {
+        let mut out = Vec::new();
+        intersect_into(&[1, 3, 5, 7], &[2, 3, 4, 7, 9], &mut out);
+        assert_eq!(out, vec![3, 7]);
+        intersect_into(&[], &[1, 2], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn intersect_galloping_path() {
+        let large: Vec<u32> = (0..10_000).map(|i| i * 3).collect();
+        let small = vec![3, 2999 * 3, 5000, 9999 * 3];
+        let mut out = Vec::new();
+        intersect_into(&small, &large, &mut out);
+        assert_eq!(out, naive_intersect(&small, &large));
+    }
+
+    #[test]
+    fn difference_basics() {
+        let mut out = Vec::new();
+        difference_into(&[1, 2, 3, 4], &[2, 4, 6], &mut out);
+        assert_eq!(out, vec![1, 3]);
+        difference_into(&[1, 2], &[], &mut out);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn retain_filters() {
+        let mut v = vec![1, 4, 6, 9, 12];
+        retain_greater(&mut v, 6);
+        assert_eq!(v, vec![9, 12]);
+        let mut v = vec![1, 4, 6, 9, 12];
+        retain_less(&mut v, 6);
+        assert_eq!(v, vec![1, 4]);
+    }
+
+    #[test]
+    fn remove_value_works() {
+        let mut v = vec![1, 4, 6];
+        remove_value(&mut v, 4);
+        assert_eq!(v, vec![1, 6]);
+        remove_value(&mut v, 5);
+        assert_eq!(v, vec![1, 6]);
+    }
+
+    #[test]
+    fn prop_against_naive() {
+        proptest::check(0x1A7, 200, |rng| {
+            let mut a: Vec<u32> = (0..rng.below(60)).map(|_| rng.below(100) as u32).collect();
+            let mut b: Vec<u32> = (0..rng.below(1500)).map(|_| rng.below(2000) as u32).collect();
+            a.sort_unstable();
+            a.dedup();
+            b.sort_unstable();
+            b.dedup();
+            let mut out = Vec::new();
+            intersect_into(&a, &b, &mut out);
+            assert_eq!(out, naive_intersect(&a, &b));
+            intersect_into(&b, &a, &mut out);
+            assert_eq!(out, naive_intersect(&a, &b), "commutativity");
+            difference_into(&a, &b, &mut out);
+            assert_eq!(out, naive_difference(&a, &b));
+        });
+    }
+}

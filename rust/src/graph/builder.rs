@@ -1,0 +1,204 @@
+//! Graph construction: dedupe, symmetrize, sort, optional degree-based
+//! vertex renaming (Peregrine normalizes IDs so that higher-degree vertices
+//! get smaller IDs, which improves the effectiveness of ID-order symmetry
+//! breaking).
+
+use super::{csr::DataGraph, Label, VertexId};
+
+/// Builder for [`DataGraph`]: accepts an arbitrary multiset of (possibly
+/// duplicated, self-looped, unordered) edges and produces a clean CSR.
+#[derive(Default)]
+pub struct GraphBuilder {
+    edges: Vec<(VertexId, VertexId)>,
+    labels: Option<Vec<Label>>,
+    n_hint: usize,
+    degree_order: bool,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one undirected edge.
+    pub fn edge(mut self, u: VertexId, v: VertexId) -> Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    /// Add many edges.
+    pub fn edges(mut self, es: &[(VertexId, VertexId)]) -> Self {
+        self.edges.extend_from_slice(es);
+        self
+    }
+
+    /// Provide per-vertex labels (indexed by the *input* vertex IDs).
+    pub fn labels(mut self, labels: Vec<Label>) -> Self {
+        self.labels = Some(labels);
+        self
+    }
+
+    /// Ensure at least `n` vertices even if some are isolated.
+    pub fn num_vertices(mut self, n: usize) -> Self {
+        self.n_hint = n;
+        self
+    }
+
+    /// Rename vertices so higher-degree vertices receive smaller IDs
+    /// (improves symmetry-breaking pruning; used for benchmark datasets).
+    pub fn degree_ordered(mut self, yes: bool) -> Self {
+        self.degree_order = yes;
+        self
+    }
+
+    /// Finalize into a [`DataGraph`].
+    pub fn build(self, name: &str) -> DataGraph {
+        let GraphBuilder {
+            mut edges,
+            labels,
+            n_hint,
+            degree_order,
+        } = self;
+
+        // drop self loops, normalize direction
+        edges.retain(|&(u, v)| u != v);
+        for e in edges.iter_mut() {
+            if e.0 > e.1 {
+                *e = (e.1, e.0);
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+
+        let n = edges
+            .iter()
+            .map(|&(u, v)| (u.max(v) as usize) + 1)
+            .max()
+            .unwrap_or(0)
+            .max(n_hint)
+            .max(labels.as_ref().map_or(0, |l| l.len()));
+
+        // optional degree-ordered rename
+        let (edges, labels) = if degree_order {
+            let mut deg = vec![0usize; n];
+            for &(u, v) in &edges {
+                deg[u as usize] += 1;
+                deg[v as usize] += 1;
+            }
+            let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+            order.sort_by_key(|&v| std::cmp::Reverse(deg[v as usize]));
+            let mut rename = vec![0 as VertexId; n];
+            for (new_id, &old_id) in order.iter().enumerate() {
+                rename[old_id as usize] = new_id as VertexId;
+            }
+            let edges: Vec<_> = edges
+                .iter()
+                .map(|&(u, v)| {
+                    let (a, b) = (rename[u as usize], rename[v as usize]);
+                    if a < b {
+                        (a, b)
+                    } else {
+                        (b, a)
+                    }
+                })
+                .collect();
+            let labels = labels.map(|l| {
+                let mut nl = vec![0; n];
+                for (old, &lab) in l.iter().enumerate() {
+                    nl[rename[old] as usize] = lab;
+                }
+                nl
+            });
+            (edges, labels)
+        } else {
+            (edges, labels)
+        };
+
+        // CSR
+        let mut deg = vec![0usize; n];
+        for &(u, v) in &edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0 as VertexId; offsets[n]];
+        for &(u, v) in &edges {
+            neighbors[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        for v in 0..n {
+            neighbors[offsets[v]..offsets[v + 1]].sort_unstable();
+        }
+
+        let labels = labels.map(|mut l| {
+            l.resize(n, 0);
+            l
+        });
+
+        DataGraph::from_parts(offsets, neighbors, labels, name.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedupes_and_symmetrizes() {
+        let g = GraphBuilder::new()
+            .edges(&[(1, 0), (0, 1), (1, 1), (2, 1)])
+            .build("g");
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn isolated_vertices_via_hint() {
+        let g = GraphBuilder::new()
+            .edge(0, 1)
+            .num_vertices(5)
+            .build("g");
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.degree(4), 0);
+    }
+
+    #[test]
+    fn labels_carried() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2)])
+            .labels(vec![5, 6, 5])
+            .build("g");
+        assert!(g.is_labeled());
+        assert_eq!(g.label(0), 5);
+        assert_eq!(g.label(1), 6);
+        assert_eq!(g.num_labels(), 7);
+    }
+
+    #[test]
+    fn degree_order_renames_hub_to_zero() {
+        // star centered at 3
+        let g = GraphBuilder::new()
+            .edges(&[(3, 0), (3, 1), (3, 2), (3, 4)])
+            .degree_ordered(true)
+            .build("g");
+        assert_eq!(g.degree(0), 4, "hub should be renamed to vertex 0");
+        assert!(g.check_invariants());
+    }
+
+    #[test]
+    fn degree_order_preserves_labels() {
+        let g = GraphBuilder::new()
+            .edges(&[(3, 0), (3, 1), (3, 2)])
+            .labels(vec![9, 9, 9, 1])
+            .degree_ordered(true)
+            .build("g");
+        assert_eq!(g.label(0), 1, "hub label must follow the rename");
+    }
+}

@@ -1,0 +1,209 @@
+//! Compressed-sparse-row data graph with sorted adjacency lists.
+//!
+//! This is the substrate the matching engine explores. Invariants:
+//! * undirected simple graph: every edge appears in both endpoint lists,
+//!   no self loops, no duplicates;
+//! * each adjacency list is sorted ascending — required by the galloping
+//!   intersection/difference kernels in [`crate::exec::intersect`];
+//! * optional vertex labels, dense in `0..num_labels`.
+
+use super::{Label, VertexId};
+
+/// An immutable undirected data graph in CSR form.
+#[derive(Clone, Debug)]
+pub struct DataGraph {
+    offsets: Vec<usize>,
+    neighbors: Vec<VertexId>,
+    labels: Option<Vec<Label>>,
+    num_labels: u32,
+    name: String,
+}
+
+impl DataGraph {
+    /// Build from parts. `neighbors[offsets[v]..offsets[v+1]]` must be the
+    /// sorted neighbor list of `v`. Prefer [`crate::graph::GraphBuilder`].
+    pub fn from_parts(
+        offsets: Vec<usize>,
+        neighbors: Vec<VertexId>,
+        labels: Option<Vec<Label>>,
+        name: String,
+    ) -> Self {
+        debug_assert!(!offsets.is_empty());
+        let num_labels = labels
+            .as_ref()
+            .map(|l| l.iter().copied().max().map_or(0, |m| m + 1))
+            .unwrap_or(0);
+        let g = DataGraph {
+            offsets,
+            neighbors,
+            labels,
+            num_labels,
+            name,
+        };
+        debug_assert!(g.check_invariants());
+        g
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Sorted neighbor list of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.neighbors[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Whether `(u, v)` is an edge (binary search; lists are sorted).
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Label of `v` (0 for unlabeled graphs).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        self.labels.as_ref().map_or(0, |l| l[v as usize])
+    }
+
+    /// Whether the graph carries labels.
+    #[inline]
+    pub fn is_labeled(&self) -> bool {
+        self.labels.is_some()
+    }
+
+    /// Number of distinct labels (`0` for unlabeled graphs).
+    #[inline]
+    pub fn num_labels(&self) -> u32 {
+        self.num_labels
+    }
+
+    /// Dataset name (for reports).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Verify CSR invariants (debug builds / tests).
+    pub fn check_invariants(&self) -> bool {
+        let n = self.num_vertices();
+        if *self.offsets.last().unwrap() != self.neighbors.len() {
+            return false;
+        }
+        if let Some(l) = &self.labels {
+            if l.len() != n {
+                return false;
+            }
+        }
+        for v in 0..n as VertexId {
+            let ns = self.neighbors(v);
+            for w in ns.windows(2) {
+                if w[0] >= w[1] {
+                    return false; // unsorted or duplicate
+                }
+            }
+            for &u in ns {
+                if u as usize >= n || u == v {
+                    return false; // out of range or self loop
+                }
+                // symmetry
+                if self.neighbors(u).binary_search(&v).is_err() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Densify a vertex subset into a 0/1 adjacency matrix of size
+    /// `block.len() × block.len()` (row-major f32) — feed for the XLA dense
+    /// census backend.
+    pub fn densify(&self, block: &[VertexId]) -> Vec<f32> {
+        let k = block.len();
+        let mut a = vec![0f32; k * k];
+        // position of each block vertex
+        let mut pos = std::collections::HashMap::with_capacity(k);
+        for (i, &v) in block.iter().enumerate() {
+            pos.insert(v, i);
+        }
+        for (i, &v) in block.iter().enumerate() {
+            for &u in self.neighbors(v) {
+                if let Some(&j) = pos.get(&u) {
+                    a[i * k + j] = 1.0;
+                }
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::GraphBuilder;
+
+    fn triangle_plus_tail() -> crate::graph::DataGraph {
+        // 0-1, 1-2, 2-0 triangle; 2-3 tail
+        GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (2, 0), (2, 3)])
+            .build("t")
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+        assert!(!g.is_labeled());
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn invariants_hold() {
+        let g = triangle_plus_tail();
+        assert!(g.check_invariants());
+    }
+
+    #[test]
+    fn densify_block() {
+        let g = triangle_plus_tail();
+        let a = g.densify(&[0, 1, 2]);
+        // triangle on the block: all off-diagonal ones
+        assert_eq!(
+            a,
+            vec![0., 1., 1., 1., 0., 1., 1., 1., 0.]
+        );
+        let a2 = g.densify(&[0, 3]);
+        assert_eq!(a2, vec![0., 0., 0., 0.]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Mutable adjacency graph for incremental mining (paper §1, "Other
+//! Applications": incremental mining / mining on graph streams).
+//!
+//! [`DynGraph`] supports edge insertion/deletion with sorted adjacency kept
+//! incrementally, and converts to/from the immutable CSR [`DataGraph`] used
+//! by the batch matcher.
+
+use super::{DataGraph, GraphBuilder, Label, VertexId};
+
+/// A mutable undirected simple graph.
+#[derive(Clone, Debug, Default)]
+pub struct DynGraph {
+    adj: Vec<Vec<VertexId>>,
+    labels: Option<Vec<Label>>,
+    num_edges: usize,
+}
+
+impl DynGraph {
+    pub fn new(n: usize) -> DynGraph {
+        DynGraph {
+            adj: vec![Vec::new(); n],
+            labels: None,
+            num_edges: 0,
+        }
+    }
+
+    /// Import from CSR.
+    pub fn from_data_graph(g: &DataGraph) -> DynGraph {
+        let n = g.num_vertices();
+        DynGraph {
+            adj: (0..n as VertexId).map(|v| g.neighbors(v).to_vec()).collect(),
+            labels: g
+                .is_labeled()
+                .then(|| (0..n as VertexId).map(|v| g.label(v)).collect()),
+            num_edges: g.num_edges(),
+        }
+    }
+
+    /// Export to CSR (for the batch matcher).
+    pub fn to_data_graph(&self, name: &str) -> DataGraph {
+        let mut edges = Vec::with_capacity(self.num_edges);
+        for (v, ns) in self.adj.iter().enumerate() {
+            for &u in ns {
+                if (v as VertexId) < u {
+                    edges.push((v as VertexId, u));
+                }
+            }
+        }
+        let mut b = GraphBuilder::new().edges(&edges).num_vertices(self.adj.len());
+        if let Some(l) = &self.labels {
+            b = b.labels(l.clone());
+        }
+        b.build(name)
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.adj[v as usize].len()
+    }
+
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.adj[v as usize]
+    }
+
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        self.adj[a as usize].binary_search(&b).is_ok()
+    }
+
+    /// Insert edge; returns false if it already existed (no-op).
+    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert_ne!(u, v, "self loops not allowed");
+        let max = u.max(v) as usize;
+        if max >= self.adj.len() {
+            self.adj.resize(max + 1, Vec::new());
+            if let Some(l) = &mut self.labels {
+                l.resize(max + 1, 0);
+            }
+        }
+        match self.adj[u as usize].binary_search(&v) {
+            Ok(_) => false,
+            Err(i) => {
+                self.adj[u as usize].insert(i, v);
+                let j = self.adj[v as usize].binary_search(&u).unwrap_err();
+                self.adj[v as usize].insert(j, u);
+                self.num_edges += 1;
+                true
+            }
+        }
+    }
+
+    /// Remove edge; returns false if absent.
+    pub fn remove_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        match self.adj[u as usize].binary_search(&v) {
+            Err(_) => false,
+            Ok(i) => {
+                self.adj[u as usize].remove(i);
+                let j = self.adj[v as usize].binary_search(&u).unwrap();
+                self.adj[v as usize].remove(j);
+                self.num_edges -= 1;
+                true
+            }
+        }
+    }
+
+    pub fn label(&self, v: VertexId) -> Label {
+        self.labels.as_ref().map_or(0, |l| l[v as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut g = DynGraph::new(4);
+        assert!(g.insert_edge(0, 1));
+        assert!(!g.insert_edge(1, 0), "duplicate rejected");
+        assert!(g.insert_edge(1, 2));
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(1), &[2]);
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let mut g = DynGraph::new(0);
+        g.insert_edge(5, 9);
+        assert_eq!(g.num_vertices(), 10);
+        assert!(g.has_edge(9, 5));
+    }
+
+    #[test]
+    fn csr_conversion_roundtrip() {
+        let g0 = erdos_renyi(60, 200, 5);
+        let dg = DynGraph::from_data_graph(&g0);
+        let g1 = dg.to_data_graph("rt");
+        assert_eq!(g0.num_edges(), g1.num_edges());
+        for v in 0..60 {
+            assert_eq!(g0.neighbors(v), g1.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn adjacency_stays_sorted() {
+        let mut g = DynGraph::new(5);
+        for (u, v) in [(0, 4), (0, 2), (0, 3), (0, 1)] {
+            g.insert_edge(u, v);
+        }
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Graph IO: a simple text format compatible with common edge lists.
+//!
+//! ```text
+//! # comment
+//! v <id> <label>      (optional labeled-vertex lines)
+//! e <u> <v>           (edge lines; plain "<u> <v>" also accepted)
+//! ```
+
+use super::{DataGraph, GraphBuilder, Label, VertexId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Load a graph from the text format above.
+pub fn load_text(path: &Path) -> Result<DataGraph> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening graph file {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut labels: Vec<(VertexId, Label)> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let first = it.next().unwrap();
+        match first {
+            "v" => {
+                let id: VertexId = it
+                    .next()
+                    .context("v line missing id")?
+                    .parse()
+                    .with_context(|| format!("line {}", lineno + 1))?;
+                let lab: Label = it
+                    .next()
+                    .context("v line missing label")?
+                    .parse()
+                    .with_context(|| format!("line {}", lineno + 1))?;
+                labels.push((id, lab));
+            }
+            "e" => {
+                let u: VertexId = it.next().context("e line missing u")?.parse()?;
+                let v: VertexId = it.next().context("e line missing v")?.parse()?;
+                edges.push((u, v));
+            }
+            tok => {
+                let u: VertexId = tok
+                    .parse()
+                    .with_context(|| format!("line {}: expected vertex id, got {tok:?}", lineno + 1))?;
+                let v: VertexId = it
+                    .next()
+                    .with_context(|| format!("line {}: missing second endpoint", lineno + 1))?
+                    .parse()?;
+                edges.push((u, v));
+            }
+        }
+    }
+    if edges.is_empty() && labels.is_empty() {
+        bail!("empty graph file {}", path.display());
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "graph".into());
+    let mut b = GraphBuilder::new().edges(&edges);
+    if !labels.is_empty() {
+        let n = labels
+            .iter()
+            .map(|&(v, _)| v as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(edges.iter().map(|&(u, v)| u.max(v) as usize + 1).max().unwrap_or(0));
+        let mut lab = vec![0 as Label; n];
+        for (v, l) in labels {
+            lab[v as usize] = l;
+        }
+        b = b.labels(lab);
+    }
+    Ok(b.build(&name))
+}
+
+/// Save a graph in the text format above.
+pub fn save_text(g: &DataGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating graph file {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# morphmine graph: {} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges())?;
+    if g.is_labeled() {
+        for v in 0..g.num_vertices() as VertexId {
+            writeln!(w, "v {} {}", v, g.label(v))?;
+        }
+    }
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            if v < u {
+                writeln!(w, "e {v} {u}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Graph spec used on the CLI: either a dataset name
+/// (`mico|patents|youtube|orkut[:tiny|small|medium]`) or a path to a file.
+pub fn load_spec(spec: &str) -> Result<DataGraph> {
+    use crate::graph::generators::{Dataset, Scale};
+    let (name, scale) = match spec.split_once(':') {
+        Some((n, s)) => (
+            n,
+            Scale::parse(s).with_context(|| format!("bad scale {s:?}"))?,
+        ),
+        None => (spec, Scale::Small),
+    };
+    if let Some(d) = Dataset::parse(name) {
+        return Ok(d.generate(scale));
+    }
+    load_text(Path::new(spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    #[test]
+    fn roundtrip_unlabeled() {
+        let g = erdos_renyi(50, 120, 1);
+        let dir = std::env::temp_dir().join("morphmine_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g1.txt");
+        save_text(&g, &p).unwrap();
+        let g2 = load_text(&p).unwrap();
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_eq!(g.num_edges(), g2.num_edges());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn roundtrip_labeled() {
+        let g = crate::graph::generators::assign_labels(erdos_renyi(30, 60, 2), 5, 1.5, 3);
+        let dir = std::env::temp_dir().join("morphmine_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g2.txt");
+        save_text(&g, &p).unwrap();
+        let g2 = load_text(&p).unwrap();
+        assert!(g2.is_labeled());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(g.label(v), g2.label(v));
+        }
+    }
+
+    #[test]
+    fn plain_edge_list_accepted() {
+        let dir = std::env::temp_dir().join("morphmine_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g3.txt");
+        std::fs::write(&p, "# c\n0 1\n1 2\n").unwrap();
+        let g = load_text(&p).unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn load_spec_dataset() {
+        let g = load_spec("mico:tiny").unwrap();
+        assert_eq!(g.name(), "mico-sim");
+        assert!(load_spec("unknown:bogus").is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! Data-graph substrate: CSR storage, builders, IO, synthetic generators and
+//! the statistics that feed the morphing cost model.
+//!
+//! The paper evaluates on Mico, Patents, YouTube and Orkut. Those exact
+//! datasets are not available in this environment, so [`generators`]
+//! synthesizes stand-ins with matched degree skew, density and label
+//! cardinality (see DESIGN.md §5). All mining code is dataset-agnostic.
+
+mod builder;
+mod csr;
+pub mod dynamic;
+pub mod generators;
+pub mod io;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+pub use csr::DataGraph;
+pub use dynamic::DynGraph;
+pub use stats::GraphStats;
+
+/// Vertex identifier in a data graph.
+pub type VertexId = u32;
+
+/// Vertex label (dense small integers; `0..num_labels`).
+pub type Label = u32;

@@ -1,0 +1,172 @@
+//! Graph statistics feeding the morphing cost model (paper §4.1, factor 3:
+//! "the details of the data graph", including degree distribution,
+//! connectivity and label distributions).
+
+use super::{DataGraph, VertexId};
+
+/// Summary statistics of a data graph.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    /// Σ d(v)
+    pub deg_sum: f64,
+    /// Σ d(v)²
+    pub deg_sq_sum: f64,
+    /// Σ C(d(v), 2) — the number of wedges (2-paths).
+    pub wedges: f64,
+    /// Edge density 2m / n(n-1).
+    pub density: f64,
+    /// Probability that a random vertex pair is adjacent (== density).
+    pub edge_prob: f64,
+    /// Expected size of the intersection of two random adjacency lists.
+    pub avg_intersection: f64,
+    /// Sampled global clustering coefficient (triangles / wedges).
+    pub clustering: f64,
+    /// Per-label vertex frequency (empty for unlabeled graphs).
+    pub label_freq: Vec<f64>,
+}
+
+impl GraphStats {
+    /// Compute stats; triangle/clustering estimated by sampling `samples`
+    /// wedges (exact enumeration would defeat the purpose of a cost model).
+    pub fn compute(g: &DataGraph, samples: usize, seed: u64) -> GraphStats {
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        let mut deg_sum = 0f64;
+        let mut deg_sq = 0f64;
+        let mut wedges = 0f64;
+        let mut max_degree = 0usize;
+        for v in 0..n as VertexId {
+            let d = g.degree(v) as f64;
+            deg_sum += d;
+            deg_sq += d * d;
+            wedges += d * (d - 1.0) / 2.0;
+            max_degree = max_degree.max(g.degree(v));
+        }
+        let density = if n > 1 {
+            2.0 * m as f64 / (n as f64 * (n as f64 - 1.0))
+        } else {
+            0.0
+        };
+        // E[|N(u) ∩ N(v)|] for random u,v ≈ (Σd)²/(n²) * 1/n * ... use the
+        // configuration-model estimate: Σ d(w)(d(w)-1)/ ... simplified:
+        // each w is a common neighbor with prob (d_w/2m)² per incident
+        // edge pair; expected common neighbors = Σ d_w (d_w -1) / n² * ...
+        // We use wedges * 2 / n² which is exact for the config model.
+        let avg_intersection = if n > 0 {
+            2.0 * wedges / (n as f64 * n as f64)
+        } else {
+            0.0
+        };
+
+        // sampled clustering: pick random wedges, check closure
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut closed = 0usize;
+        let mut tried = 0usize;
+        if m > 0 {
+            for _ in 0..samples {
+                let v = rng.below_usize(n) as VertexId;
+                let d = g.degree(v);
+                if d < 2 {
+                    continue;
+                }
+                let ns = g.neighbors(v);
+                let a = ns[rng.below_usize(d)];
+                let b = ns[rng.below_usize(d)];
+                if a == b {
+                    continue;
+                }
+                tried += 1;
+                if g.has_edge(a, b) {
+                    closed += 1;
+                }
+            }
+        }
+        let clustering = if tried > 0 {
+            closed as f64 / tried as f64
+        } else {
+            0.0
+        };
+
+        let label_freq = if g.is_labeled() {
+            let mut hist = vec![0f64; g.num_labels() as usize];
+            for v in 0..n as VertexId {
+                hist[g.label(v) as usize] += 1.0;
+            }
+            hist.iter_mut().for_each(|c| *c /= n as f64);
+            hist
+        } else {
+            Vec::new()
+        };
+
+        GraphStats {
+            num_vertices: n,
+            num_edges: m,
+            max_degree,
+            avg_degree: if n > 0 { deg_sum / n as f64 } else { 0.0 },
+            deg_sum,
+            deg_sq_sum: deg_sq,
+            wedges,
+            density,
+            edge_prob: density,
+            avg_intersection,
+            clustering,
+            label_freq,
+        }
+    }
+
+    /// Frequency of `label` (1.0 for unlabeled graphs — no selectivity).
+    pub fn label_prob(&self, label: u32) -> f64 {
+        if self.label_freq.is_empty() {
+            1.0
+        } else {
+            self.label_freq.get(label as usize).copied().unwrap_or(0.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn triangle_stats() {
+        let g = GraphBuilder::new().edges(&[(0, 1), (1, 2), (2, 0)]).build("k3");
+        let s = GraphStats::compute(&g, 1000, 1);
+        assert_eq!(s.num_vertices, 3);
+        assert_eq!(s.num_edges, 3);
+        assert_eq!(s.max_degree, 2);
+        assert!((s.avg_degree - 2.0).abs() < 1e-9);
+        assert!((s.wedges - 3.0).abs() < 1e-9);
+        assert!((s.density - 1.0).abs() < 1e-9);
+        assert!((s.clustering - 1.0).abs() < 1e-9, "triangle closes all wedges");
+    }
+
+    #[test]
+    fn er_clustering_low() {
+        let g = erdos_renyi(500, 1500, 7);
+        let s = GraphStats::compute(&g, 2000, 2);
+        assert!(s.clustering < 0.1, "ER graphs have ~p clustering, got {}", s.clustering);
+    }
+
+    #[test]
+    fn label_probs_sum_to_one() {
+        let g = crate::graph::generators::assign_labels(erdos_renyi(300, 600, 3), 10, 1.5, 4);
+        let s = GraphStats::compute(&g, 100, 5);
+        let sum: f64 = s.label_freq.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!((s.label_prob(0) - s.label_freq[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unlabeled_label_prob_is_one() {
+        let g = erdos_renyi(50, 100, 9);
+        let s = GraphStats::compute(&g, 10, 1);
+        assert_eq!(s.label_prob(3), 1.0);
+    }
+}

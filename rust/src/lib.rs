@@ -1,0 +1,39 @@
+//! # morphmine
+//!
+//! A pattern-aware graph mining framework implementing **Pattern Morphing**
+//! (Jamshidi & Vora, 2020): a structure-aware algebra over graph patterns that
+//! converts a query pattern set into an equivalent *alternative* pattern set
+//! that is cheaper to match, then reconstructs exact results for the original
+//! queries from the alternative matches.
+//!
+//! The crate is organised as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the mining coordinator: data-graph substrate,
+//!   pattern algebra, Peregrine-style pattern-aware matching engine,
+//!   aggregation framework (counting / enumeration / MNI support), the
+//!   morphing engine with its cost-based optimizer, and the applications
+//!   (motif counting, FSM, pattern matching, clique finding).
+//! * **Layer 2 (python/compile/model.py)** — a dense adjacency-matrix motif
+//!   census written in JAX, AOT-lowered to HLO and executed from Rust via
+//!   PJRT ([`runtime`]). It encodes the same morphing equations in dense
+//!   linear algebra and acts as an alternative counting backend.
+//! * **Layer 1 (python/compile/kernels/census.py)** — the Pallas kernel for
+//!   the census hot-spot (blocked masked matmul + fused reductions).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod agg;
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod morph;
+pub mod pattern;
+pub mod plan;
+pub mod runtime;
+pub mod util;
+
+pub use graph::DataGraph;
+pub use pattern::Pattern;

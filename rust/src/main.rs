@@ -1,0 +1,18 @@
+//! `morphmine` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands cover the paper's applications and the reproduction harness:
+//!
+//! ```text
+//! morphmine motifs   --graph <spec> --size 4 [--pmr naive|cost|off]
+//! morphmine fsm      --graph <spec> --edges 3 --support 300 [--pmr ...]
+//! morphmine match    --graph <spec> --pattern <pat> [--pmr ...]
+//! morphmine bench    --exp table3 [--scale small]
+//! morphmine census   --graph <spec> --artifacts artifacts/   # XLA dense backend
+//! morphmine gen      --dataset mico-sim --out data/mico.txt  # synthesize datasets
+//! ```
+fn main() {
+    if let Err(e) = morphmine::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

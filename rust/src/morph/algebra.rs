@@ -1,0 +1,329 @@
+//! The structure-aware pattern algebra: morph *expressions* implementing the
+//! Match Conversion Theorem (3.1), its inverse (Corollary 3.1) and the
+//! Aggregation Conversion Theorem (3.2).
+//!
+//! A [`MorphExpr`] represents, for a query pattern `p`:
+//!
+//! ```text
+//! a(M(p)) = ⨁_{terms (q, F)} ⨁_{(f, c) ∈ F} c · ( a(M(q)) ∘* f )
+//! ```
+//!
+//! where each term pattern `q` is stored as its canonical representative and
+//! `F` is a signed multiset of vertex maps `f : V(p) → V(q)`. Expressions
+//! can be substituted into each other (composition of maps), which is how
+//! the recursive expansion of Corollary 3.1 reaches an edge-induced basis.
+
+use crate::agg::Aggregation;
+use crate::pattern::canon::{canonical_form_with_iso, CanonKey};
+use crate::pattern::gen::superpatterns;
+use crate::pattern::iso::{phi_coset_reps, VertexMap};
+use crate::pattern::Pattern;
+use std::collections::{BTreeMap, HashMap};
+
+/// One term of a morph expression: a (canonical) pattern plus a signed
+/// multiset of maps from the query into it.
+#[derive(Clone, Debug)]
+pub struct Term {
+    pub pattern: Pattern,
+    /// `f → signed multiplicity`
+    pub maps: HashMap<VertexMap, i64>,
+}
+
+impl Term {
+    /// Total signed coefficient (`Σ c` over maps) — for counting
+    /// aggregations this is the coefficient shown in the paper's Fig. 4.
+    pub fn coefficient(&self) -> i64 {
+        self.maps.values().sum()
+    }
+}
+
+/// A morph expression for a query pattern.
+#[derive(Clone, Debug)]
+pub struct MorphExpr {
+    pub query: Pattern,
+    pub terms: BTreeMap<CanonKey, Term>,
+}
+
+impl MorphExpr {
+    /// The trivial expression `a(M(p)) = a(M(p))` (no morphing).
+    pub fn direct(query: &Pattern) -> MorphExpr {
+        let mut e = MorphExpr {
+            query: query.clone(),
+            terms: BTreeMap::new(),
+        };
+        let n = query.num_vertices();
+        let (canon, sigma) = canonical_form_with_iso(query);
+        debug_assert_eq!(sigma.len(), n);
+        e.add_map(canon, sigma, 1);
+        e
+    }
+
+    /// Theorem 3.1: for an edge-induced query `p^E`,
+    /// `M(p^E) = M(p^V) ∪ ⋃_{q^E ⊃n p^E} M(q^V) ∘ φ(p^E, q^E)`.
+    ///
+    /// All right-hand patterns are vertex-induced (cliques included).
+    pub fn theorem_3_1(query: &Pattern) -> MorphExpr {
+        assert!(
+            query.is_edge_induced(),
+            "Theorem 3.1 morphs edge-induced patterns, got {query:?}"
+        );
+        let mut e = MorphExpr {
+            query: query.clone(),
+            terms: BTreeMap::new(),
+        };
+        // M(p^V) term, identity map
+        let pv = query.vertex_induced();
+        let (canon, sigma) = canonical_form_with_iso(&pv);
+        e.add_map(canon, sigma, 1);
+        // superpattern terms
+        for q in superpatterns(query) {
+            let qv = q.vertex_induced();
+            let (canon, sigma) = canonical_form_with_iso(&qv);
+            for f in phi_coset_reps(query, &qv) {
+                // f : V(p) → V(q); compose with σ : V(q) → V(canon)
+                let composed: VertexMap = f.iter().map(|&x| sigma[x]).collect();
+                e.add_map(canon.clone(), composed, 1);
+            }
+        }
+        e
+    }
+
+    /// Corollary 3.1: for a vertex-induced query `p^V`,
+    /// `M(p^V) = M(p^E) \ ⋃_{q^E ⊃n p^E} M(q^V) ∘ φ(p^E, q^E)` —
+    /// expressed with signed terms (the union is disjoint, so subtraction
+    /// is exact for additive aggregation values).
+    pub fn corollary_3_1(query: &Pattern) -> MorphExpr {
+        assert!(
+            query.is_vertex_induced(),
+            "Corollary 3.1 morphs vertex-induced patterns, got {query:?}"
+        );
+        let pe = query.edge_induced();
+        let mut e = MorphExpr {
+            query: query.clone(),
+            terms: BTreeMap::new(),
+        };
+        let (canon, sigma) = canonical_form_with_iso(&pe);
+        e.add_map(canon, sigma, 1);
+        for q in superpatterns(&pe) {
+            let qv = q.vertex_induced();
+            let (canon, sigma) = canonical_form_with_iso(&qv);
+            for f in phi_coset_reps(&pe, &qv) {
+                let composed: VertexMap = f.iter().map(|&x| sigma[x]).collect();
+                e.add_map(canon.clone(), composed, -1);
+            }
+        }
+        e
+    }
+
+    /// Add a signed map to the term for `pattern` (which must already be in
+    /// canonical form). Cancelling entries are removed.
+    pub fn add_map(&mut self, pattern: Pattern, f: VertexMap, c: i64) {
+        let key = pattern.canonical_key();
+        let term = self.terms.entry(key).or_insert_with(|| Term {
+            pattern,
+            maps: HashMap::new(),
+        });
+        let e = term.maps.entry(f).or_insert(0);
+        *e += c;
+        if *e == 0 {
+            let dead: Vec<_> = term
+                .maps
+                .iter()
+                .filter(|(_, &c)| c == 0)
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in dead {
+                term.maps.remove(&k);
+            }
+        }
+        if self.terms.get(&key).is_some_and(|t| t.maps.is_empty()) {
+            self.terms.remove(&key);
+        }
+    }
+
+    /// Substitute `sub` (an expression for the pattern keyed `key` in this
+    /// expression) into this expression: the term is removed and replaced by
+    /// the composition of its maps with `sub`'s terms.
+    ///
+    /// `sub.query` must be isomorphic to this expression's term pattern —
+    /// and, because terms store canonical representatives, `sub.query` must
+    /// *be* that canonical representative for the maps to compose correctly.
+    pub fn substitute(&mut self, key: CanonKey, sub: &MorphExpr) {
+        let Some(term) = self.terms.remove(&key) else {
+            return;
+        };
+        debug_assert_eq!(
+            sub.query.canonical_key(),
+            key,
+            "substituted expression must be for the term's pattern"
+        );
+        for (f, c) in &term.maps {
+            for sterm in sub.terms.values() {
+                for (g, c2) in &sterm.maps {
+                    // f : V(p) → V(q); g : V(q) → V(r); g∘f : V(p) → V(r)
+                    let composed: VertexMap = f.iter().map(|&x| g[x]).collect();
+                    self.add_map(sterm.pattern.clone(), composed, c * c2);
+                }
+            }
+        }
+    }
+
+    /// Fully expand to an **edge-induced basis**: every non-clique
+    /// vertex-induced term is recursively replaced via Corollary 3.1.
+    /// (Cliques are simultaneously edge-induced; they stay.)
+    pub fn expand_to_edge_basis(&mut self) {
+        loop {
+            let next = self.terms.iter().find_map(|(k, t)| {
+                (t.pattern.is_vertex_induced() && !t.pattern.is_clique()).then_some(*k)
+            });
+            let Some(key) = next else { break };
+            let pat = self.terms[&key].pattern.clone();
+            let sub = MorphExpr::corollary_3_1(&pat);
+            // re-canonicalize sub.query == pat (already canonical rep)
+            self.substitute(key, &sub);
+        }
+    }
+
+    /// The distinct patterns that must be matched to evaluate this
+    /// expression.
+    pub fn base_patterns(&self) -> Vec<Pattern> {
+        self.terms.values().map(|t| t.pattern.clone()).collect()
+    }
+
+    /// Evaluate under aggregation `agg`, given full-match-set values for
+    /// every base pattern (keyed by canonical key).
+    pub fn evaluate<A: Aggregation>(
+        &self,
+        agg: &A,
+        values: &HashMap<CanonKey, A::Value>,
+    ) -> A::Value {
+        let mut acc = agg.identity();
+        for (key, term) in &self.terms {
+            let v = values
+                .get(key)
+                .unwrap_or_else(|| panic!("missing base value for {:?}", term.pattern));
+            for (f, &c) in &term.maps {
+                let permuted = agg.permute(v, f);
+                acc = agg.combine(acc, agg.scale(&permuted, c));
+            }
+        }
+        acc
+    }
+
+    /// Counting-only shortcut: evaluate with per-pattern *map* counts.
+    pub fn evaluate_counts(&self, counts: &HashMap<CanonKey, i128>) -> i128 {
+        let mut total = 0i128;
+        for (key, term) in &self.terms {
+            let v = counts
+                .get(key)
+                .unwrap_or_else(|| panic!("missing count for {:?}", term.pattern));
+            total += v * term.coefficient() as i128;
+        }
+        total
+    }
+
+    /// Pretty-print as an equation over pattern descriptions (Fig. 4 style).
+    pub fn describe(&self) -> String {
+        let mut s = format!("a({:?}) =", self.query);
+        let mut first = true;
+        for term in self.terms.values() {
+            let c = term.coefficient();
+            if first {
+                s.push(' ');
+                first = false;
+            } else {
+                s.push_str(if c >= 0 { " + " } else { " " });
+            }
+            if c >= 0 && c != 1 {
+                s.push_str(&format!("{c}·"));
+            } else if c < 0 {
+                s.push_str(&format!("- {}·", -c));
+            }
+            s.push_str(&format!("a({:?})", term.pattern));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    #[test]
+    fn theorem_terms_for_cycle4() {
+        // PR-E2 (Fig. 4): EI C4 = VI C4 + VI diamond + 3·K4 (unique-match
+        // coefficients). In *map space* the coefficients are left-coset
+        // counts |φ| / |Aut(q)|: diamond 8/4 = 2, K4 24/24 = 1.
+        let e = MorphExpr::theorem_3_1(&catalog::cycle(4));
+        assert_eq!(e.terms.len(), 3);
+        let pv_key = catalog::cycle(4).vertex_induced().canonical_key();
+        assert_eq!(e.terms[&pv_key].coefficient(), 1);
+        let k4_key = catalog::clique(4).canonical_key();
+        assert_eq!(e.terms[&k4_key].coefficient(), 1);
+        let d_key = catalog::diamond().vertex_induced().canonical_key();
+        assert_eq!(e.terms[&d_key].coefficient(), 2);
+    }
+
+    #[test]
+    fn unique_match_coefficients_match_figure4() {
+        // Converting map-space coefficients to unique-match space
+        // (multiply by |Aut(q)| / |Aut(p)|) recovers the paper's Fig. 4:
+        // K4 coefficient 3, diamond coefficient 1.
+        let e = MorphExpr::theorem_3_1(&catalog::cycle(4));
+        let aut_p = crate::pattern::iso::automorphisms(&catalog::cycle(4)).len() as i64;
+        let k4 = catalog::clique(4);
+        let aut_k4 = crate::pattern::iso::automorphisms(&k4).len() as i64;
+        assert_eq!(
+            e.terms[&k4.canonical_key()].coefficient() * aut_k4 / aut_p,
+            3
+        );
+        let dia = catalog::diamond().vertex_induced();
+        let aut_d = crate::pattern::iso::automorphisms(&dia).len() as i64;
+        assert_eq!(
+            e.terms[&dia.canonical_key()].coefficient() * aut_d / aut_p,
+            1
+        );
+    }
+
+    #[test]
+    fn corollary_negates() {
+        let e = MorphExpr::corollary_3_1(&catalog::cycle(4).vertex_induced());
+        let pe_key = catalog::cycle(4).canonical_key();
+        assert_eq!(e.terms[&pe_key].coefficient(), 1);
+        let k4_key = catalog::clique(4).canonical_key();
+        assert_eq!(e.terms[&k4_key].coefficient(), -1);
+        let d_key = catalog::diamond().vertex_induced().canonical_key();
+        assert_eq!(e.terms[&d_key].coefficient(), -2);
+    }
+
+    #[test]
+    fn edge_basis_expansion_terminates_and_is_edge_induced() {
+        for i in 1..=7 {
+            let p = catalog::paper_pattern(i).vertex_induced();
+            let mut e = MorphExpr::corollary_3_1(&p);
+            e.expand_to_edge_basis();
+            for t in e.terms.values() {
+                assert!(
+                    t.pattern.is_edge_induced(),
+                    "p{i}: non-edge-induced term {:?}",
+                    t.pattern
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clique_query_direct_only() {
+        let e = MorphExpr::theorem_3_1(&catalog::clique(4));
+        assert_eq!(e.terms.len(), 1);
+        assert_eq!(e.terms.values().next().unwrap().coefficient(), 1);
+    }
+
+    #[test]
+    fn describe_is_readable() {
+        let e = MorphExpr::theorem_3_1(&catalog::cycle(4));
+        let s = e.describe();
+        assert!(s.contains('+'), "{s}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PATTERN MORPHING — the paper's contribution.
+//!
+//! [`algebra`] implements the structure-aware algebra over patterns
+//! (Theorem 3.1, Corollary 3.1, Theorem 3.2); [`engine`] turns query sets
+//! into morph plans and executes them against a data graph; [`optimizer`]
+//! is the cost-based PMR optimizer of §4.1 that picks the cheapest
+//! alternative pattern set per query and data graph.
+
+pub mod algebra;
+pub mod engine;
+pub mod optimizer;
+
+pub use algebra::{MorphExpr, Term};
+pub use engine::{execute, plan_queries, MorphPlan, Policy};

@@ -1,0 +1,257 @@
+//! Pattern canonicalization.
+//!
+//! Two patterns are isomorphic (same edges, anti-edges and labels up to
+//! vertex renaming) iff their canonical keys are equal. Patterns have ≤ 8
+//! vertices, so we canonicalize by exact minimization over vertex
+//! permutations, pruned by vertex invariants (degree, anti-degree, label):
+//! only permutations mapping vertices to same-invariant vertices are
+//! considered.
+
+use super::{Pattern, MAX_PATTERN_VERTICES};
+
+/// Canonical key: `(n, packed pair codes, packed labels)`.
+///
+/// Pair `(u,v)`, `u<v`, contributes 2 bits: `01` edge, `10` anti-edge,
+/// `00` none. With n ≤ 8 there are ≤ 28 pairs → 56 bits; labels are hashed
+/// into a second word.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct CanonKey {
+    pub n: u8,
+    pub pairs: u64,
+    pub labels: u64,
+}
+
+/// Encode a pattern under the identity permutation.
+fn encode(p: &Pattern, perm: &[usize]) -> (u64, u64) {
+    let n = p.num_vertices();
+    let mut pairs = 0u64;
+    let mut idx = 0;
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let code = if p.has_edge(perm[u], perm[v]) {
+                1u64
+            } else if p.has_anti_edge(perm[u], perm[v]) {
+                2u64
+            } else {
+                0u64
+            };
+            pairs |= code << (2 * idx);
+            idx += 1;
+        }
+    }
+    let mut labels = 0u64;
+    if p.is_labeled() {
+        for v in 0..n {
+            // labels are small in practice (≤ 38 in the paper's datasets);
+            // 8 bits each is enough for patterns; larger labels fold.
+            labels |= ((p.label(perm[v]) as u64) & 0xFF) << (8 * v);
+        }
+    }
+    (pairs, labels)
+}
+
+/// Vertex invariant used to prune the permutation search.
+fn invariant(p: &Pattern, v: usize) -> u64 {
+    ((p.degree(v) as u64) << 40) | ((p.anti(v).len() as u64) << 32) | p.label(v) as u64
+}
+
+/// Compute the canonical key of a pattern (exact, invariant-pruned search).
+pub fn canonical_key(p: &Pattern) -> CanonKey {
+    let n = p.num_vertices();
+    let invs: Vec<u64> = (0..n).map(|v| invariant(p, v)).collect();
+
+    let mut best: Option<(u64, u64)> = None;
+    let mut perm = [0usize; MAX_PATTERN_VERTICES];
+    let mut used = [false; MAX_PATTERN_VERTICES];
+
+    // Backtracking over permutations: position i gets vertex cand only if
+    // its invariant class matches the smallest available ordering — we
+    // enumerate all, pruning only by invariant multiset equality implicitly
+    // (all permutations of same-invariant vertices are tried).
+    fn rec(
+        p: &Pattern,
+        invs: &[u64],
+        pos: usize,
+        perm: &mut [usize; MAX_PATTERN_VERTICES],
+        used: &mut [bool; MAX_PATTERN_VERTICES],
+        best: &mut Option<(u64, u64)>,
+    ) {
+        let n = p.num_vertices();
+        if pos == n {
+            let code = encode(p, &perm[..n]);
+            if best.is_none() || code < best.unwrap() {
+                *best = Some(code);
+            }
+            return;
+        }
+        // order candidates by invariant so the search tends to hit the
+        // minimum early (pure heuristic; correctness is exhaustiveness)
+        let mut cands: Vec<usize> = (0..n).filter(|&v| !used[v]).collect();
+        cands.sort_by_key(|&v| invs[v]);
+        for v in cands {
+            perm[pos] = v;
+            used[v] = true;
+            rec(p, invs, pos + 1, perm, used, best);
+            used[v] = false;
+        }
+    }
+
+    rec(p, &invs, 0, &mut perm, &mut used, &mut best);
+    let (pairs, labels) = best.unwrap();
+    CanonKey {
+        n: n as u8,
+        pairs,
+        labels,
+    }
+}
+
+/// Are two patterns isomorphic (edges + anti-edges + labels)?
+pub fn isomorphic(p: &Pattern, q: &Pattern) -> bool {
+    p.num_vertices() == q.num_vertices()
+        && p.num_edges() == q.num_edges()
+        && p.num_anti_edges() == q.num_anti_edges()
+        && p.canonical_key() == q.canonical_key()
+}
+
+/// Return the canonical representative (a relabeled copy realizing the key).
+pub fn canonical_form(p: &Pattern) -> Pattern {
+    canonical_form_with_iso(p).0
+}
+
+/// Canonical representative together with the isomorphism
+/// `σ : V(p) → V(canon)` (as a vertex map: `σ[v]` = canonical vertex for
+/// `p`'s vertex `v`). Needed by the morphing algebra to re-express
+/// pattern-to-pattern maps against canonical representatives.
+pub fn canonical_form_with_iso(p: &Pattern) -> (Pattern, Vec<usize>) {
+    let n = p.num_vertices();
+    let target = canonical_key(p);
+    // find a permutation realizing the key (re-run the search, stop at match)
+    let mut perm_out: Option<Vec<usize>> = None;
+    let mut perm = vec![0usize; n];
+    let mut used = vec![false; n];
+    fn rec(
+        p: &Pattern,
+        target: &CanonKey,
+        pos: usize,
+        perm: &mut Vec<usize>,
+        used: &mut Vec<bool>,
+        out: &mut Option<Vec<usize>>,
+    ) {
+        if out.is_some() {
+            return;
+        }
+        let n = p.num_vertices();
+        if pos == n {
+            let (pairs, labels) = encode(p, perm);
+            if pairs == target.pairs && labels == target.labels {
+                *out = Some(perm.clone());
+            }
+            return;
+        }
+        for v in 0..n {
+            if !used[v] {
+                perm[pos] = v;
+                used[v] = true;
+                rec(p, target, pos + 1, perm, used, out);
+                used[v] = false;
+            }
+        }
+    }
+    rec(p, &target, 0, &mut perm, &mut used, &mut perm_out);
+    let perm = perm_out.expect("canonical permutation must exist");
+    // canon vertex v corresponds to p vertex perm[v] ⇒ σ = perm⁻¹
+    let mut sigma = vec![0usize; n];
+    for (v, &pv) in perm.iter().enumerate() {
+        sigma[pv] = v;
+    }
+    (p.permuted(&perm), sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn path4_a() -> Pattern {
+        Pattern::from_edges(4, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    fn path4_b() -> Pattern {
+        Pattern::from_edges(4, &[(2, 0), (0, 3), (3, 1)])
+    }
+
+    #[test]
+    fn isomorphic_paths() {
+        assert!(isomorphic(&path4_a(), &path4_b()));
+        assert_eq!(path4_a().canonical_key(), path4_b().canonical_key());
+    }
+
+    #[test]
+    fn non_isomorphic_distinguished() {
+        let star = Pattern::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        assert!(!isomorphic(&path4_a(), &star));
+    }
+
+    #[test]
+    fn anti_edges_matter() {
+        let e = Pattern::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let v = e.vertex_induced();
+        assert!(!isomorphic(&e, &v));
+    }
+
+    #[test]
+    fn labels_matter() {
+        let a = Pattern::from_edges(2, &[(0, 1)]).with_labels(&[1, 2]);
+        let b = Pattern::from_edges(2, &[(0, 1)]).with_labels(&[2, 1]);
+        let c = Pattern::from_edges(2, &[(0, 1)]).with_labels(&[1, 1]);
+        assert!(isomorphic(&a, &b), "label-swapped edge is isomorphic");
+        assert!(!isomorphic(&a, &c));
+    }
+
+    #[test]
+    fn canonical_form_is_isomorphic_and_stable() {
+        let p = path4_b().vertex_induced();
+        let c = canonical_form(&p);
+        assert!(isomorphic(&p, &c));
+        assert_eq!(c.canonical_key(), p.canonical_key());
+        // idempotent
+        assert_eq!(canonical_form(&c), c);
+    }
+
+    /// Property: canonical key is invariant under random permutation.
+    #[test]
+    fn prop_key_permutation_invariant() {
+        proptest::check(0xC0DE, 60, |rng: &mut Rng| {
+            let p = random_pattern(rng);
+            let perm = rng.permutation(p.num_vertices());
+            let q = p.permuted(&perm);
+            assert_eq!(
+                p.canonical_key(),
+                q.canonical_key(),
+                "p={p:?} q={q:?} perm={perm:?}"
+            );
+        });
+    }
+
+    /// Random pattern generator shared by canon/iso property tests.
+    pub(crate) fn random_pattern(rng: &mut Rng) -> Pattern {
+        let n = 2 + rng.below_usize(5); // 2..=6
+        let mut p = Pattern::empty(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                let r = rng.f64();
+                if r < 0.45 {
+                    p.add_edge(u, v);
+                } else if r < 0.65 {
+                    p.add_anti_edge(u, v);
+                }
+            }
+        }
+        if rng.chance(0.4) {
+            let labels: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+            p = p.with_labels(&labels);
+        }
+        p
+    }
+}

@@ -1,0 +1,173 @@
+//! Named patterns used throughout the paper and its evaluation (Fig. 7).
+//!
+//! The paper's Figure 7 lists evaluation patterns `p1..p7`; the figure
+//! artwork is not machine-readable, so the mapping below is reconstructed
+//! from the surrounding text and tables (Table 1 names the 4-cycle, chordal
+//! 4-cycle and 5-cycle; Fig. 6 names `p1` = tailed triangle, `p2` = 4-cycle,
+//! `p3` = chordal 4-cycle, `p4` = 4-clique; Table 4's alternative sets are
+//! consistent with this mapping). `p5`/`p6` are 5-vertex patterns chosen as
+//! the house and gem — representative sparse/dense 5-vertex queries with
+//! non-trivial superpattern lattices; see DESIGN.md §5.
+
+use super::Pattern;
+
+/// Path on `n` vertices (`n-1` edges): `0-1-…-(n-1)`.
+pub fn path(n: usize) -> Pattern {
+    Pattern::from_edges(n, &(0..n - 1).map(|i| (i, i + 1)).collect::<Vec<_>>())
+}
+
+/// Cycle on `n` vertices.
+pub fn cycle(n: usize) -> Pattern {
+    let mut es: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+    es.push((n - 1, 0));
+    Pattern::from_edges(n, &es)
+}
+
+/// Clique on `n` vertices.
+pub fn clique(n: usize) -> Pattern {
+    let es: Vec<(usize, usize)> = (0..n)
+        .flat_map(|u| ((u + 1)..n).map(move |v| (u, v)))
+        .collect();
+    Pattern::from_edges(n, &es)
+}
+
+/// Star on `n` vertices: center `0`, leaves `1..n`.
+pub fn star(n: usize) -> Pattern {
+    Pattern::from_edges(n, &(1..n).map(|v| (0, v)).collect::<Vec<_>>())
+}
+
+/// Triangle (3-clique).
+pub fn triangle() -> Pattern {
+    clique(3)
+}
+
+/// Tailed triangle: triangle `0-1-2` with pendant `3` attached to `2`.
+pub fn tailed_triangle() -> Pattern {
+    Pattern::from_edges(4, &[(0, 1), (1, 2), (2, 0), (2, 3)])
+}
+
+/// Chordal 4-cycle (diamond): 4-cycle `0-1-2-3` plus chord `0-2`.
+pub fn diamond() -> Pattern {
+    Pattern::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)])
+}
+
+/// House: square `0-1-2-3` with roof apex `4` on edge `0-1`.
+pub fn house() -> Pattern {
+    Pattern::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)])
+}
+
+/// Gem: path `0-1-2-3` plus apex `4` adjacent to all path vertices.
+pub fn gem() -> Pattern {
+    Pattern::from_edges(5, &[(0, 1), (1, 2), (2, 3), (0, 4), (1, 4), (2, 4), (3, 4)])
+}
+
+/// The paper's evaluation pattern `p<i>` (edge-induced form; apply
+/// [`Pattern::vertex_induced`] for the `p^V` variants).
+pub fn paper_pattern(i: usize) -> Pattern {
+    match i {
+        1 => tailed_triangle(),
+        2 => cycle(4),
+        3 => diamond(),
+        4 => clique(4),
+        5 => house(),
+        6 => gem(),
+        7 => cycle(5),
+        _ => panic!("paper patterns are p1..p7, got p{i}"),
+    }
+}
+
+/// The motif set of size `n`: all connected unlabeled patterns, in the
+/// vertex-induced form used by motif counting.
+pub fn motifs_vertex_induced(n: usize) -> Vec<Pattern> {
+    super::gen::connected_patterns(n)
+        .into_iter()
+        .map(|p| p.vertex_induced())
+        .collect()
+}
+
+/// Look up a pattern by name (CLI convenience).
+pub fn by_name(name: &str) -> Option<Pattern> {
+    let (base, induced) = match name.strip_suffix("-vi") {
+        Some(b) => (b, true),
+        None => (name, false),
+    };
+    let p = match base {
+        "triangle" | "k3" => triangle(),
+        "wedge" | "path3" => path(3),
+        "path4" => path(4),
+        "star4" | "claw" => star(4),
+        "cycle4" | "c4" => cycle(4),
+        "diamond" | "chordal4" => diamond(),
+        "tailed-triangle" | "tailed" => tailed_triangle(),
+        "clique4" | "k4" => clique(4),
+        "cycle5" | "c5" => cycle(5),
+        "house" => house(),
+        "gem" => gem(),
+        "clique5" | "k5" => clique(5),
+        _ => {
+            if let Some(num) = base.strip_prefix('p') {
+                let i: usize = num.parse().ok()?;
+                if (1..=7).contains(&i) {
+                    paper_pattern(i)
+                } else {
+                    return None;
+                }
+            } else {
+                return None;
+            }
+        }
+    };
+    Some(if induced { p.vertex_induced() } else { p })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        assert_eq!(path(4).num_edges(), 3);
+        assert_eq!(cycle(5).num_edges(), 5);
+        assert_eq!(clique(5).num_edges(), 10);
+        assert_eq!(star(4).num_edges(), 3);
+        assert_eq!(tailed_triangle().num_edges(), 4);
+        assert_eq!(diamond().num_edges(), 5);
+        assert_eq!(house().num_edges(), 6);
+        assert_eq!(gem().num_edges(), 7);
+    }
+
+    #[test]
+    fn all_connected() {
+        for i in 1..=7 {
+            assert!(paper_pattern(i).is_connected(), "p{i}");
+        }
+    }
+
+    #[test]
+    fn motif_sets() {
+        assert_eq!(motifs_vertex_induced(3).len(), 2);
+        assert_eq!(motifs_vertex_induced(4).len(), 6);
+        assert_eq!(motifs_vertex_induced(5).len(), 21);
+        for m in motifs_vertex_induced(4) {
+            assert!(m.is_vertex_induced());
+        }
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert!(by_name("cycle4").unwrap().is_edge_induced());
+        assert!(by_name("cycle4-vi").unwrap().is_vertex_induced());
+        assert_eq!(
+            by_name("p2").unwrap().canonical_key(),
+            cycle(4).canonical_key()
+        );
+        assert!(by_name("nonsense").is_none());
+        assert!(by_name("p9").is_none());
+    }
+
+    #[test]
+    fn diamond_is_chordal_cycle() {
+        // diamond contains C4 as subpattern
+        assert!(crate::pattern::iso::is_subpattern(&cycle(4), &diamond()));
+    }
+}

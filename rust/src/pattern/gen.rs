@@ -1,0 +1,189 @@
+//! Pattern-set generation: all connected patterns of a given size (motif
+//! sets) and the **non-isomorphic superpattern lattice** `q ⊃n p` that
+//! drives the Match Conversion Theorem.
+
+use super::canon::CanonKey;
+use super::Pattern;
+use std::collections::HashMap;
+
+/// All connected unlabeled edge-induced patterns on `n` vertices, deduped up
+/// to isomorphism. (3 → 2 patterns, 4 → 6, 5 → 21, 6 → 112.)
+///
+/// Enumerates the `2^C(n,2)` edge masks and dedupes by canonical key, so it
+/// is intended for `n ≤ 6` (the paper's motif sizes are 3–5).
+pub fn connected_patterns(n: usize) -> Vec<Pattern> {
+    assert!((2..=6).contains(&n), "connected_patterns supports 2..=6, got {n}");
+    let pairs: Vec<(usize, usize)> = (0..n)
+        .flat_map(|u| ((u + 1)..n).map(move |v| (u, v)))
+        .collect();
+    let mut seen: HashMap<CanonKey, ()> = HashMap::new();
+    let mut out = Vec::new();
+    for mask in 0u32..(1u32 << pairs.len()) {
+        if (mask.count_ones() as usize) < n - 1 {
+            continue; // connectivity needs ≥ n-1 edges
+        }
+        let mut p = Pattern::empty(n);
+        for (i, &(u, v)) in pairs.iter().enumerate() {
+            if (mask >> i) & 1 == 1 {
+                p.add_edge(u, v);
+            }
+        }
+        if !p.is_connected() {
+            continue;
+        }
+        let key = p.canonical_key();
+        if seen.insert(key, ()).is_none() {
+            out.push(super::canon::canonical_form(&p));
+        }
+    }
+    // deterministic order: by edge count, then canonical key
+    out.sort_by_key(|p| (p.num_edges(), p.canonical_key()));
+    out
+}
+
+/// All **strict** non-isomorphic superpatterns of `p` on the same vertex
+/// set (`q ⊃n p` in the paper): every edge-superset of `E(p)` up to the
+/// clique, deduped up to isomorphism. Anti-edges of `p` are ignored — the
+/// lattice is defined over the edge-induced skeleton. Labels (if any) are
+/// preserved on the fixed vertex set and participate in the isomorphism
+/// dedup.
+pub fn superpatterns(p: &Pattern) -> Vec<Pattern> {
+    let base = p.edge_induced();
+    let n = base.num_vertices();
+    let pairs: Vec<(usize, usize)> = (0..n)
+        .flat_map(|u| ((u + 1)..n).map(move |v| (u, v)))
+        .filter(|&(u, v)| !base.has_edge(u, v))
+        .collect();
+    let mut seen: HashMap<CanonKey, ()> = HashMap::new();
+    seen.insert(base.canonical_key(), ());
+    let mut out = Vec::new();
+    // pairs.len() ≤ C(8,2)=28, but realistic patterns have few open pairs;
+    // enumerate all non-empty subsets of added edges.
+    let total = 1u32 << pairs.len();
+    for mask in 1..total {
+        let mut q = base.clone();
+        for (i, &(u, v)) in pairs.iter().enumerate() {
+            if (mask >> i) & 1 == 1 {
+                q.add_edge(u, v);
+            }
+        }
+        let key = q.canonical_key();
+        if seen.insert(key, ()).is_none() {
+            out.push(q);
+        }
+    }
+    out.sort_by_key(|q| (q.num_edges(), q.canonical_key()));
+    out
+}
+
+/// Memoized superpattern lattice, used heavily by the morphing engine.
+#[derive(Default)]
+pub struct SuperpatternCache {
+    cache: HashMap<CanonKey, Vec<Pattern>>,
+}
+
+impl SuperpatternCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&mut self, p: &Pattern) -> &[Pattern] {
+        let key = p.edge_induced().canonical_key();
+        self.cache
+            .entry(key)
+            .or_insert_with(|| superpatterns(p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    #[test]
+    fn motif_counts_match_oeis() {
+        // numbers of connected graphs on n nodes: 1, 2, 6, 21, 112
+        assert_eq!(connected_patterns(2).len(), 1);
+        assert_eq!(connected_patterns(3).len(), 2);
+        assert_eq!(connected_patterns(4).len(), 6);
+        assert_eq!(connected_patterns(5).len(), 21);
+        assert_eq!(connected_patterns(6).len(), 112);
+    }
+
+    #[test]
+    fn generated_patterns_are_edge_induced_and_connected() {
+        for p in connected_patterns(4) {
+            assert!(p.is_connected());
+            assert!(p.is_edge_induced());
+            assert_eq!(p.num_vertices(), 4);
+        }
+    }
+
+    #[test]
+    fn superpatterns_of_cycle4() {
+        // C4 + {1 chord} = diamond; + {2 chords} = K4 → exactly 2
+        let sups = superpatterns(&catalog::cycle(4));
+        assert_eq!(sups.len(), 2);
+        assert_eq!(sups[0].num_edges(), 5); // diamond
+        assert_eq!(sups[1].num_edges(), 6); // K4
+    }
+
+    #[test]
+    fn superpatterns_of_clique_empty() {
+        assert!(superpatterns(&catalog::clique(4)).is_empty());
+        assert!(superpatterns(&catalog::clique(5)).is_empty());
+    }
+
+    #[test]
+    fn superpatterns_of_tailed_triangle() {
+        // tailed triangle (4v, 4e) → diamond (5e), K4 (6e); adding the one
+        // of the two open pairs gives diamond either way (iso), both gives K4
+        let sups = superpatterns(&catalog::tailed_triangle());
+        assert_eq!(sups.len(), 2);
+    }
+
+    #[test]
+    fn superpatterns_ignore_anti_edges() {
+        let c4v = catalog::cycle(4).vertex_induced();
+        let sups = superpatterns(&c4v);
+        assert_eq!(sups.len(), 2);
+        assert!(sups.iter().all(|q| q.is_edge_induced()));
+    }
+
+    #[test]
+    fn superpatterns_of_path3() {
+        // path 0-1-2 → triangle only
+        let sups = superpatterns(&catalog::path(3));
+        assert_eq!(sups.len(), 1);
+        assert!(sups[0].is_clique());
+    }
+
+    #[test]
+    fn labeled_superpatterns_keep_labels() {
+        let p = catalog::path(3).with_labels(&[1, 2, 3]);
+        let sups = superpatterns(&p);
+        assert_eq!(sups.len(), 1);
+        assert_eq!(sups[0].labels_vec(), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn labeled_dedup_distinguishes_labelings() {
+        // path 0-1-2 labels (1,1,2): adding edge 0-2 gives triangle(1,1,2);
+        // with labels (1,2,1) → triangle(1,2,1) ≅ triangle(1,1,2). Only one
+        // superpattern each, but they are isomorphic across the two bases.
+        let a = superpatterns(&catalog::path(3).with_labels(&[1, 1, 2]));
+        let b = superpatterns(&catalog::path(3).with_labels(&[1, 2, 1]));
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        assert_eq!(a[0].canonical_key(), b[0].canonical_key());
+    }
+
+    #[test]
+    fn cache_returns_same() {
+        let mut c = SuperpatternCache::new();
+        let p = catalog::cycle(4);
+        let a = c.get(&p).to_vec();
+        let b = c.get(&p).to_vec();
+        assert_eq!(a.len(), b.len());
+    }
+}

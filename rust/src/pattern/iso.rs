@@ -1,0 +1,275 @@
+//! Subgraph isomorphisms **between patterns**: the `φ(p, q)` sets of the
+//! paper (§3.2.1) and pattern automorphism groups.
+//!
+//! A subgraph isomorphism from pattern `p` to pattern `q` is an injective
+//! map `f : V(p) → V(q)` such that
+//! * `(u,v) ∈ E(p) ⇒ (f(u), f(v)) ∈ E(q)`,
+//! * `(u,v) ∈ A(p) ⇒ (f(u), f(v)) ∈ A(q)` (anti-edges map to anti-edges),
+//! * labels are preserved when both patterns are labeled.
+//!
+//! For the morphing equations, `p` and `q` always have the same number of
+//! vertices, so each `f` is a permutation; `|φ(p^E, q^E)|` becomes the
+//! coefficient of `M(q^V)` in the Match Conversion Theorem.
+
+use super::Pattern;
+
+/// A map `f : V(p) → V(q)` as a dense vector: `f[u] = image of u`.
+pub type VertexMap = Vec<usize>;
+
+/// Enumerate all subgraph isomorphisms from `p` into `q`.
+pub fn sub_isomorphisms(p: &Pattern, q: &Pattern) -> Vec<VertexMap> {
+    let np = p.num_vertices();
+    let nq = q.num_vertices();
+    let mut out = Vec::new();
+    if np > nq {
+        return out;
+    }
+    let labeled = p.is_labeled() && q.is_labeled();
+    let mut f = vec![usize::MAX; np];
+    let mut used = vec![false; nq];
+
+    fn feasible(p: &Pattern, q: &Pattern, f: &[usize], u: usize, img: usize, labeled: bool) -> bool {
+        if labeled && p.label(u) != q.label(img) {
+            return false;
+        }
+        // degree pruning: u's edges/antis must fit within img's
+        if p.degree(u) > q.degree(img) || p.anti(u).len() > q.anti(img).len() {
+            return false;
+        }
+        // check constraints against already-mapped vertices
+        for w in 0..u {
+            let fw = f[w];
+            if p.has_edge(u, w) && !q.has_edge(img, fw) {
+                return false;
+            }
+            if p.has_anti_edge(u, w) && !q.has_anti_edge(img, fw) {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn rec(
+        p: &Pattern,
+        q: &Pattern,
+        u: usize,
+        f: &mut Vec<usize>,
+        used: &mut Vec<bool>,
+        labeled: bool,
+        out: &mut Vec<VertexMap>,
+    ) {
+        let np = p.num_vertices();
+        if u == np {
+            out.push(f.clone());
+            return;
+        }
+        for img in 0..q.num_vertices() {
+            if !used[img] && feasible(p, q, f, u, img, labeled) {
+                f[u] = img;
+                used[img] = true;
+                rec(p, q, u + 1, f, used, labeled, out);
+                used[img] = false;
+                f[u] = usize::MAX;
+            }
+        }
+    }
+
+    rec(p, q, 0, &mut f, &mut used, labeled, &mut out);
+    out
+}
+
+/// `|φ(p, q)|` without materializing the maps.
+pub fn phi_count(p: &Pattern, q: &Pattern) -> usize {
+    // For the pattern sizes in play (≤8), enumerating is cheap; keep one
+    // code path to avoid divergence bugs.
+    sub_isomorphisms(p, q).len()
+}
+
+/// The automorphism group of a pattern (as vertex maps). `φ(p, p)` — every
+/// edge/anti-edge-preserving bijection of a finite structure onto itself is
+/// an automorphism.
+pub fn automorphisms(p: &Pattern) -> Vec<VertexMap> {
+    sub_isomorphisms(p, p)
+}
+
+/// Left-coset representatives of `φ(p, q)` modulo `Aut(q)`:
+/// `f₁ ~ f₂  ⟺  f₁ = α ∘ f₂` for some `α ∈ Aut(q)`.
+///
+/// These are the maps the Match Conversion Theorem needs: because `M(q)` is
+/// closed under post-composition with `Aut(q)`, the sets `M(q) ∘ f` over
+/// coset representatives are **disjoint** and their union is the full
+/// `M(q) ∘ φ(p, q)` — so summing `a(M(q)) ∘* f` over representatives counts
+/// every converted match exactly once. (The paper's Figure 6 draws exactly
+/// these representatives — e.g. *three* subgraph isomorphisms from the
+/// 4-cycle into the 4-clique, not the raw `24` vertex maps.)
+pub fn phi_coset_reps(p: &Pattern, q: &Pattern) -> Vec<VertexMap> {
+    let all = sub_isomorphisms(p, q);
+    if all.is_empty() {
+        return all;
+    }
+    let auts = automorphisms(q);
+    let mut reps: Vec<VertexMap> = Vec::new();
+    let mut seen: std::collections::HashSet<VertexMap> = std::collections::HashSet::new();
+    for f in all {
+        if seen.contains(&f) {
+            continue;
+        }
+        // mark the whole orbit {α ∘ f}
+        for a in &auts {
+            let g: VertexMap = f.iter().map(|&x| a[x]).collect();
+            seen.insert(g);
+        }
+        reps.push(f);
+    }
+    reps
+}
+
+/// Orbits of the automorphism group: vertices in the same orbit are
+/// structurally equivalent. Used for symmetry breaking (plan layer) and MNI
+/// domains (FSM support). Returns `orbit_id[v]`, ids dense from 0 in order
+/// of first appearance.
+pub fn orbits(p: &Pattern) -> Vec<usize> {
+    let n = p.num_vertices();
+    let auts = automorphisms(p);
+    let mut orbit = vec![usize::MAX; n];
+    let mut next = 0;
+    for v in 0..n {
+        if orbit[v] != usize::MAX {
+            continue;
+        }
+        orbit[v] = next;
+        for a in &auts {
+            // v can map to a[v]
+            let img = a[v];
+            if orbit[img] == usize::MAX {
+                orbit[img] = next;
+            }
+        }
+        next += 1;
+    }
+    orbit
+}
+
+/// Is `p` a subpattern of `q` (∃ a subgraph isomorphism p → q)?
+pub fn is_subpattern(p: &Pattern, q: &Pattern) -> bool {
+    !sub_isomorphisms(p, q).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+    use crate::util::factorial;
+
+    #[test]
+    fn phi_cycle4_into_clique4_is_3() {
+        // paper Fig. 6: three subgraph isomorphisms from the edge-induced
+        // 4-cycle into the 4-clique... per *unique* matches; raw map count
+        // is |Aut(C4)| * 3 = 8 * 3 = 24
+        let c4 = catalog::cycle(4);
+        let k4 = catalog::clique(4);
+        assert_eq!(phi_count(&c4, &k4), 24);
+        // unique embeddings = phi / |Aut(C4)|
+        assert_eq!(automorphisms(&c4).len(), 8);
+    }
+
+    #[test]
+    fn phi_tailed_triangle_into_diamond() {
+        // paper Fig. 6: φ(p1^E, p3^V) has four subgraph isomorphisms from
+        // the edge-induced tailed triangle into the vertex-induced chordal
+        // 4-cycle — as unique embeddings; raw maps = 4 * |Aut(tailed)| = 4.
+        // |Aut(tailed triangle)| = 1 (all four vertices structurally
+        // distinct? no: the two triangle vertices not on the tail swap) = 2.
+        let tt = catalog::tailed_triangle();
+        assert_eq!(automorphisms(&tt).len(), 2);
+        let dia_e = catalog::diamond();
+        assert_eq!(phi_count(&tt, &dia_e), 4 * 2 / 2 * 2); // 8 raw maps
+    }
+
+    #[test]
+    fn automorphism_group_sizes() {
+        assert_eq!(automorphisms(&catalog::clique(4)).len(), factorial(4) as usize);
+        assert_eq!(automorphisms(&catalog::cycle(5)).len(), 10);
+        assert_eq!(automorphisms(&catalog::path(4)).len(), 2);
+        assert_eq!(automorphisms(&catalog::star(4)).len(), 6); // 3! leaves
+    }
+
+    #[test]
+    fn anti_edges_constrain_phi() {
+        // Edge-induced C4 maps into K4; vertex-induced C4 does NOT
+        // (its anti-edges cannot map to K4's edges).
+        let c4v = catalog::cycle(4).vertex_induced();
+        let k4 = catalog::clique(4);
+        assert_eq!(phi_count(&c4v, &k4), 0);
+        // but it maps into itself
+        assert_eq!(phi_count(&c4v, &c4v), 8);
+    }
+
+    #[test]
+    fn labels_constrain_phi() {
+        let e_ab = Pattern::from_edges(2, &[(0, 1)]).with_labels(&[1, 2]);
+        let tri = Pattern::from_edges(3, &[(0, 1), (1, 2), (2, 0)]).with_labels(&[1, 2, 2]);
+        // edge (1,2)-labeled maps: 0→v with label 1 (only vertex 0), 1→{1,2}
+        assert_eq!(phi_count(&e_ab, &tri), 2);
+    }
+
+    #[test]
+    fn orbits_of_tailed_triangle() {
+        // vertices: 0-1-2 triangle, 3 pendant on 2 (see catalog) —
+        // orbit classes: {0,1} (swap), {2}, {3}
+        let tt = catalog::tailed_triangle();
+        let o = orbits(&tt);
+        assert_eq!(o[0], o[1]);
+        assert_ne!(o[0], o[2]);
+        assert_ne!(o[2], o[3]);
+    }
+
+    #[test]
+    fn orbits_of_cycle_all_equal() {
+        let o = orbits(&catalog::cycle(4));
+        assert!(o.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn coset_reps_cycle4_to_clique4() {
+        // the paper's "three subgraph isomorphisms" from C4 into K4
+        let c4 = catalog::cycle(4);
+        let k4 = catalog::clique(4);
+        assert_eq!(phi_coset_reps(&c4, &k4).len(), 24 / 24);
+        // ... as LEFT cosets mod Aut(K4) there is 1; the figure's 3 are the
+        // unique 4-cycle subgraphs = |φ| / |Aut(C4)| = 24/8
+        assert_eq!(phi_count(&c4, &k4) / automorphisms(&c4).len(), 3);
+    }
+
+    #[test]
+    fn coset_reps_cycle4_to_diamond() {
+        let c4 = catalog::cycle(4);
+        let dia = catalog::diamond().vertex_induced();
+        // φ_raw = 8 (one 4-cycle in the diamond), |Aut(diamond)| = 4
+        assert_eq!(phi_count(&c4, &dia), 8);
+        assert_eq!(automorphisms(&dia).len(), 4);
+        assert_eq!(phi_coset_reps(&c4, &dia).len(), 2);
+    }
+
+    #[test]
+    fn coset_reps_partition_phi() {
+        // |reps| * |Aut(q)| = |φ| (free action)
+        for (p, q) in [
+            (catalog::path(3), catalog::triangle()),
+            (catalog::tailed_triangle(), catalog::diamond()),
+            (catalog::cycle(4), catalog::clique(4)),
+            (catalog::path(4), catalog::cycle(4)),
+        ] {
+            let reps = phi_coset_reps(&p, &q).len();
+            assert_eq!(reps * automorphisms(&q).len(), phi_count(&p, &q), "{p:?}→{q:?}");
+        }
+    }
+
+    #[test]
+    fn subpattern_relation() {
+        assert!(is_subpattern(&catalog::path(3), &catalog::cycle(4)));
+        assert!(!is_subpattern(&catalog::clique(4), &catalog::cycle(4)));
+        // smaller into larger
+        assert!(is_subpattern(&catalog::path(2), &catalog::clique(4)));
+    }
+}

@@ -1,0 +1,391 @@
+//! Pattern algebra: the query-side graph representation.
+//!
+//! A *pattern* (paper §2) is a small simple connected graph with optional
+//! vertex labels and optional **anti-edges** — pairs of vertices that must
+//! *not* be adjacent in a match. Anti-edges encode vertex-induced semantics:
+//!
+//! * an **edge-induced** pattern `p^E` has no anti-edges;
+//! * a **vertex-induced** pattern `p^V` has anti-edges between every
+//!   non-adjacent vertex pair;
+//! * cliques are simultaneously both.
+//!
+//! Patterns are tiny (≤ [`MAX_PATTERN_VERTICES`] vertices) so adjacency is
+//! stored as per-vertex [`SmallSet`] bit masks and all pattern-level
+//! algorithms (canonicalization, isomorphism, superpattern enumeration) are
+//! exact brute-force with invariant pruning.
+
+pub mod canon;
+pub mod catalog;
+pub mod gen;
+pub mod iso;
+pub mod parse;
+
+use crate::graph::Label;
+use crate::util::bitset::SmallSet;
+
+/// Maximum number of vertices in a pattern. The paper uses ≤ 5; we allow 8
+/// (40320 permutations — still trivially brute-forceable).
+pub const MAX_PATTERN_VERTICES: usize = 8;
+
+/// A query pattern: edges, anti-edges and optional labels.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Pattern {
+    n: usize,
+    /// adjacency masks (edges)
+    adj: [SmallSet; MAX_PATTERN_VERTICES],
+    /// anti-adjacency masks (anti-edges)
+    anti: [SmallSet; MAX_PATTERN_VERTICES],
+    /// vertex labels; `None` = unlabeled pattern
+    labels: Option<[Label; MAX_PATTERN_VERTICES]>,
+}
+
+impl Pattern {
+    /// Empty pattern on `n` vertices (no edges yet).
+    pub fn empty(n: usize) -> Pattern {
+        assert!(
+            (1..=MAX_PATTERN_VERTICES).contains(&n),
+            "pattern size {n} out of range"
+        );
+        Pattern {
+            n,
+            adj: [SmallSet::empty(); MAX_PATTERN_VERTICES],
+            anti: [SmallSet::empty(); MAX_PATTERN_VERTICES],
+            labels: None,
+        }
+    }
+
+    /// Edge-induced pattern from an edge list.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Pattern {
+        let mut p = Pattern::empty(n);
+        for &(u, v) in edges {
+            p.add_edge(u, v);
+        }
+        p
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        (0..self.n).map(|v| self.adj[v].len()).sum::<usize>() / 2
+    }
+
+    /// Number of anti-edges.
+    pub fn num_anti_edges(&self) -> usize {
+        (0..self.n).map(|v| self.anti[v].len()).sum::<usize>() / 2
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u < self.n && v < self.n && u != v, "bad edge ({u},{v})");
+        assert!(!self.anti[u].contains(v), "({u},{v}) already an anti-edge");
+        self.adj[u].insert(v);
+        self.adj[v].insert(u);
+    }
+
+    pub fn add_anti_edge(&mut self, u: usize, v: usize) {
+        assert!(u < self.n && v < self.n && u != v, "bad anti-edge ({u},{v})");
+        assert!(!self.adj[u].contains(v), "({u},{v}) already an edge");
+        self.anti[u].insert(v);
+        self.anti[v].insert(u);
+    }
+
+    pub fn remove_edge(&mut self, u: usize, v: usize) {
+        self.adj[u].remove(v);
+        self.adj[v].remove(u);
+    }
+
+    /// Set all vertex labels at once.
+    pub fn with_labels(mut self, labels: &[Label]) -> Pattern {
+        assert_eq!(labels.len(), self.n);
+        let mut arr = [0; MAX_PATTERN_VERTICES];
+        arr[..self.n].copy_from_slice(labels);
+        self.labels = Some(arr);
+        self
+    }
+
+    #[inline]
+    pub fn is_labeled(&self) -> bool {
+        self.labels.is_some()
+    }
+
+    /// Label of vertex `v` (0 if unlabeled).
+    #[inline]
+    pub fn label(&self, v: usize) -> Label {
+        self.labels.map_or(0, |l| l[v])
+    }
+
+    pub fn labels_vec(&self) -> Option<Vec<Label>> {
+        self.labels.map(|l| l[..self.n].to_vec())
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].contains(v)
+    }
+
+    #[inline]
+    pub fn has_anti_edge(&self, u: usize, v: usize) -> bool {
+        self.anti[u].contains(v)
+    }
+
+    /// Neighbor mask of `v` (edges).
+    #[inline]
+    pub fn adj(&self, v: usize) -> SmallSet {
+        self.adj[v]
+    }
+
+    /// Anti-neighbor mask of `v`.
+    #[inline]
+    pub fn anti(&self, v: usize) -> SmallSet {
+        self.anti[v]
+    }
+
+    /// Degree of `v` (edges only).
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    /// Edge list `(u < v)`.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut es = Vec::with_capacity(self.num_edges());
+        for u in 0..self.n {
+            for v in self.adj[u].iter() {
+                if u < v {
+                    es.push((u, v));
+                }
+            }
+        }
+        es
+    }
+
+    /// Anti-edge list `(u < v)`.
+    pub fn anti_edges(&self) -> Vec<(usize, usize)> {
+        let mut es = Vec::new();
+        for u in 0..self.n {
+            for v in self.anti[u].iter() {
+                if u < v {
+                    es.push((u, v));
+                }
+            }
+        }
+        es
+    }
+
+    /// Non-adjacent, non-anti pairs `(u < v)` — candidates for edge addition
+    /// (superpattern enumeration) or anti-edge completion.
+    pub fn open_pairs(&self) -> Vec<(usize, usize)> {
+        let mut ps = Vec::new();
+        for u in 0..self.n {
+            for v in (u + 1)..self.n {
+                if !self.has_edge(u, v) && !self.has_anti_edge(u, v) {
+                    ps.push((u, v));
+                }
+            }
+        }
+        ps
+    }
+
+    /// Is the (edge-)graph connected?
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = SmallSet::empty();
+        let mut stack = vec![0usize];
+        seen.insert(0);
+        while let Some(v) = stack.pop() {
+            for u in self.adj[v].iter() {
+                if !seen.contains(u) {
+                    seen.insert(u);
+                    stack.push(u);
+                }
+            }
+        }
+        seen.len() == self.n
+    }
+
+    /// Is every vertex pair adjacent? (cliques are both E/I and V/I)
+    pub fn is_clique(&self) -> bool {
+        self.num_edges() == self.n * (self.n - 1) / 2
+    }
+
+    /// Purely edge-induced (no anti-edges)?
+    pub fn is_edge_induced(&self) -> bool {
+        self.num_anti_edges() == 0
+    }
+
+    /// Fully vertex-induced (every non-edge is an anti-edge)?
+    pub fn is_vertex_induced(&self) -> bool {
+        self.num_edges() + self.num_anti_edges() == self.n * (self.n - 1) / 2
+    }
+
+    /// The edge-induced variant `p^E`: same edges, anti-edges dropped.
+    pub fn edge_induced(&self) -> Pattern {
+        let mut p = self.clone();
+        p.anti = [SmallSet::empty(); MAX_PATTERN_VERTICES];
+        p
+    }
+
+    /// The vertex-induced variant `p^V`: anti-edges on every non-edge.
+    pub fn vertex_induced(&self) -> Pattern {
+        let mut p = self.edge_induced();
+        for u in 0..self.n {
+            for v in (u + 1)..self.n {
+                if !p.has_edge(u, v) {
+                    p.add_anti_edge(u, v);
+                }
+            }
+        }
+        p
+    }
+
+    /// Relabel vertices according to permutation `perm` (vertex `v` of the
+    /// result is vertex `perm[v]` of `self`).
+    pub fn permuted(&self, perm: &[usize]) -> Pattern {
+        debug_assert_eq!(perm.len(), self.n);
+        let mut p = Pattern::empty(self.n);
+        for u in 0..self.n {
+            for v in (u + 1)..self.n {
+                if self.has_edge(perm[u], perm[v]) {
+                    p.add_edge(u, v);
+                }
+                if self.has_anti_edge(perm[u], perm[v]) {
+                    p.add_anti_edge(u, v);
+                }
+            }
+        }
+        if let Some(l) = self.labels {
+            let mut arr = [0; MAX_PATTERN_VERTICES];
+            for v in 0..self.n {
+                arr[v] = l[perm[v]];
+            }
+            p.labels = Some(arr);
+        }
+        p
+    }
+
+    /// Canonical key (see [`canon`]): equal iff patterns are isomorphic
+    /// (respecting edges, anti-edges and labels).
+    pub fn canonical_key(&self) -> canon::CanonKey {
+        canon::canonical_key(self)
+    }
+
+    /// Human-readable one-line description, e.g. `[4v: 0-1 1-2 2-3 3-0 | anti: 0-2 1-3]`.
+    pub fn describe(&self) -> String {
+        let mut s = format!("[{}v:", self.n);
+        for (u, v) in self.edges() {
+            s.push_str(&format!(" {u}-{v}"));
+        }
+        let anti = self.anti_edges();
+        if !anti.is_empty() {
+            s.push_str(" | anti:");
+            for (u, v) in anti {
+                s.push_str(&format!(" {u}-{v}"));
+            }
+        }
+        if let Some(l) = self.labels {
+            s.push_str(" | labels:");
+            for v in 0..self.n {
+                s.push_str(&format!(" {}", l[v]));
+            }
+        }
+        s.push(']');
+        s
+    }
+}
+
+impl std::fmt::Debug for Pattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cycle4() -> Pattern {
+        Pattern::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)])
+    }
+
+    #[test]
+    fn basic_counts() {
+        let p = cycle4();
+        assert_eq!(p.num_vertices(), 4);
+        assert_eq!(p.num_edges(), 4);
+        assert_eq!(p.num_anti_edges(), 0);
+        assert!(p.is_connected());
+        assert!(!p.is_clique());
+        assert!(p.is_edge_induced());
+        assert!(!p.is_vertex_induced());
+    }
+
+    #[test]
+    fn vertex_induced_closure() {
+        let p = cycle4().vertex_induced();
+        assert_eq!(p.num_anti_edges(), 2);
+        assert!(p.has_anti_edge(0, 2));
+        assert!(p.has_anti_edge(1, 3));
+        assert!(p.is_vertex_induced());
+        assert!(!p.is_edge_induced());
+        // round trip
+        assert_eq!(p.edge_induced(), cycle4());
+    }
+
+    #[test]
+    fn clique_is_both() {
+        let k4 = Pattern::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert!(k4.is_clique());
+        assert!(k4.is_edge_induced());
+        assert!(k4.is_vertex_induced());
+        assert_eq!(k4.vertex_induced(), k4);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let p = Pattern::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!p.is_connected());
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let p = Pattern::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).with_labels(&[5, 6, 7, 8]);
+        let perm = [2, 0, 3, 1];
+        let q = p.permuted(&perm);
+        // q has edge (u,v) iff p has (perm[u], perm[v])
+        assert_eq!(q.has_edge(1, 0), p.has_edge(0, 2));
+        assert_eq!(q.label(0), 7);
+        // inverse permutation recovers p
+        let mut inv = [0usize; 4];
+        for (i, &pi) in perm.iter().enumerate() {
+            inv[pi] = i;
+        }
+        assert_eq!(q.permuted(&inv), p);
+    }
+
+    #[test]
+    fn open_pairs_excludes_edges_and_antis() {
+        let mut p = cycle4();
+        p.add_anti_edge(0, 2);
+        assert_eq!(p.open_pairs(), vec![(1, 3)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn edge_conflicts_with_anti() {
+        let mut p = Pattern::empty(3);
+        p.add_anti_edge(0, 1);
+        p.add_edge(0, 1);
+    }
+
+    #[test]
+    fn describe_readable() {
+        let d = cycle4().vertex_induced().describe();
+        assert!(d.contains("anti:"), "{d}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Textual pattern format for the CLI and config files.
+//!
+//! Grammar (whitespace-insensitive):
+//!
+//! ```text
+//! pattern   := name | spec
+//! name      := catalog name, e.g. "cycle4", "p3", "diamond-vi"
+//! spec      := edges [";anti:" edges] [";labels:" ints] [";vi"]
+//! edges     := pair ("," pair)*
+//! pair      := int "-" int
+//! ```
+//!
+//! Examples: `0-1,1-2,2-0` (triangle), `0-1,1-2,2-3,3-0;anti:0-2,1-3`
+//! (explicit vertex-induced 4-cycle), `0-1,1-2,2-3,3-0;vi` (same).
+
+use super::{catalog, Pattern};
+use anyhow::{bail, Context, Result};
+
+fn parse_pairs(s: &str) -> Result<Vec<(usize, usize)>> {
+    s.split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            let (a, b) = tok
+                .split_once('-')
+                .with_context(|| format!("expected 'u-v', got {tok:?}"))?;
+            let u: usize = a.trim().parse().with_context(|| format!("bad vertex {a:?}"))?;
+            let v: usize = b.trim().parse().with_context(|| format!("bad vertex {b:?}"))?;
+            if u == v {
+                bail!("self loop {u}-{v} not allowed in patterns");
+            }
+            Ok((u, v))
+        })
+        .collect()
+}
+
+/// Parse a pattern string (catalog name or explicit spec).
+pub fn parse(input: &str) -> Result<Pattern> {
+    let input = input.trim();
+    if let Some(p) = catalog::by_name(input) {
+        return Ok(p);
+    }
+    let mut edges: Option<Vec<(usize, usize)>> = None;
+    let mut anti: Vec<(usize, usize)> = Vec::new();
+    let mut labels: Option<Vec<u32>> = None;
+    let mut vi = false;
+    for (i, part) in input.split(';').enumerate() {
+        let part = part.trim();
+        if i == 0 {
+            edges = Some(parse_pairs(part).context("parsing edge list")?);
+        } else if let Some(rest) = part.strip_prefix("anti:") {
+            anti = parse_pairs(rest).context("parsing anti-edge list")?;
+        } else if let Some(rest) = part.strip_prefix("labels:") {
+            labels = Some(
+                rest.split(',')
+                    .map(|t| t.trim().parse::<u32>().context("bad label"))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        } else if part == "vi" {
+            vi = true;
+        } else {
+            bail!("unknown pattern clause {part:?}");
+        }
+    }
+    let edges = edges.context("empty pattern spec")?;
+    let n = edges
+        .iter()
+        .chain(anti.iter())
+        .map(|&(u, v)| u.max(v) + 1)
+        .max()
+        .unwrap_or(0)
+        .max(labels.as_ref().map_or(0, |l| l.len()));
+    if n == 0 {
+        bail!("pattern has no vertices");
+    }
+    let mut p = Pattern::from_edges(n, &edges);
+    for (u, v) in anti {
+        p.add_anti_edge(u, v);
+    }
+    if let Some(l) = labels {
+        if l.len() != n {
+            bail!("expected {n} labels, got {}", l.len());
+        }
+        p = p.with_labels(&l);
+    }
+    if vi {
+        if p.num_anti_edges() > 0 {
+            bail!(";vi cannot be combined with explicit anti-edges");
+        }
+        p = p.vertex_induced();
+    }
+    if !p.is_connected() {
+        bail!("pattern must be connected: {}", p.describe());
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    #[test]
+    fn parses_catalog_names() {
+        assert_eq!(
+            parse("cycle4").unwrap().canonical_key(),
+            catalog::cycle(4).canonical_key()
+        );
+    }
+
+    #[test]
+    fn parses_explicit_triangle() {
+        let p = parse("0-1,1-2,2-0").unwrap();
+        assert!(p.is_clique());
+        assert_eq!(p.num_vertices(), 3);
+    }
+
+    #[test]
+    fn parses_anti_edges() {
+        let p = parse("0-1,1-2,2-3,3-0;anti:0-2,1-3").unwrap();
+        assert!(p.is_vertex_induced());
+        assert_eq!(
+            p.canonical_key(),
+            catalog::cycle(4).vertex_induced().canonical_key()
+        );
+    }
+
+    #[test]
+    fn vi_shorthand() {
+        let a = parse("0-1,1-2,2-3,3-0;vi").unwrap();
+        let b = parse("0-1,1-2,2-3,3-0;anti:0-2,1-3").unwrap();
+        assert_eq!(a.canonical_key(), b.canonical_key());
+    }
+
+    #[test]
+    fn parses_labels() {
+        let p = parse("0-1,1-2;labels:4,5,4").unwrap();
+        assert!(p.is_labeled());
+        assert_eq!(p.label(1), 5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("0-0").is_err());
+        assert!(parse("0-1;bogus:2").is_err());
+        assert!(parse("0-1,2-3").is_err(), "disconnected");
+        assert!(parse("0-1;labels:1").is_err(), "label count mismatch");
+        assert!(parse("0-1,1-2;anti:0-2;vi").is_err(), "vi + explicit anti");
+    }
+
+    #[test]
+    fn roundtrip_describe_isomorphism() {
+        let p = parse("0-1,1-2,2-3,3-0,0-2").unwrap();
+        assert_eq!(p.canonical_key(), catalog::diamond().canonical_key());
+    }
+}

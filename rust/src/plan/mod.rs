@@ -1,0 +1,217 @@
+//! Matching-plan compiler: turns a [`Pattern`] into an executable
+//! exploration plan, Peregrine-style.
+//!
+//! A plan fixes a *matching order* over pattern vertices and, for each
+//! level, the set operations that compute the candidate data vertices:
+//! intersections of adjacency lists for pattern edges to already-mapped
+//! vertices, set differences for anti-edges, a label filter, and
+//! symmetry-breaking `<` constraints so that each unique subgraph is
+//! matched exactly once (see [`symmetry`]).
+
+pub mod cost;
+pub mod symmetry;
+
+use crate::graph::Label;
+use crate::pattern::{iso, Pattern};
+
+/// Per-level operations of a matching plan.
+#[derive(Clone, Debug)]
+pub struct Level {
+    /// Positions `j < i` (in matching order) whose mapped vertex's adjacency
+    /// list must be intersected (pattern edge).
+    pub intersect: Vec<usize>,
+    /// Positions `j < i` whose adjacency must be subtracted (anti-edge).
+    pub subtract: Vec<usize>,
+    /// Required label (`None` = unlabeled pattern or any label).
+    pub label: Option<Label>,
+    /// Positions `j < i` with symmetry constraint `m[j] < m[i]`.
+    pub greater_than: Vec<usize>,
+    /// Positions `j < i` with symmetry constraint `m[j] > m[i]`.
+    pub less_than: Vec<usize>,
+}
+
+/// A compiled matching plan for one pattern.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The pattern this plan matches.
+    pub pattern: Pattern,
+    /// `order[i]` = pattern vertex explored at level `i`.
+    pub order: Vec<usize>,
+    /// Per-level ops, aligned with `order`.
+    pub levels: Vec<Level>,
+    /// |Aut(p)| — with symmetry breaking each unique subgraph yields exactly
+    /// one canonical match; multiply by this to recover map counts.
+    pub aut_count: usize,
+}
+
+impl Plan {
+    /// Compile a plan with symmetry breaking enabled.
+    pub fn compile(pattern: &Pattern) -> Plan {
+        Plan::compile_opts(pattern, true)
+    }
+
+    /// Compile, optionally without symmetry breaking (then every
+    /// automorphic image of a subgraph is produced — used by tests and by
+    /// the MNI aggregation which needs per-position domains).
+    pub fn compile_opts(pattern: &Pattern, break_symmetry: bool) -> Plan {
+        assert!(pattern.is_connected(), "cannot plan a disconnected pattern");
+        let n = pattern.num_vertices();
+        let order = choose_order(pattern);
+        // pos_of[v] = level index of pattern vertex v
+        let mut pos_of = vec![usize::MAX; n];
+        for (i, &v) in order.iter().enumerate() {
+            pos_of[v] = i;
+        }
+
+        let conds = if break_symmetry {
+            symmetry::breaking_conditions(pattern)
+        } else {
+            Vec::new()
+        };
+
+        let mut levels = Vec::with_capacity(n);
+        for (i, &v) in order.iter().enumerate() {
+            let mut intersect = Vec::new();
+            let mut subtract = Vec::new();
+            for j in 0..i {
+                let u = order[j];
+                if pattern.has_edge(u, v) {
+                    intersect.push(j);
+                }
+                if pattern.has_anti_edge(u, v) {
+                    subtract.push(j);
+                }
+            }
+            // symmetry conditions (a < b) between pattern vertices: applied
+            // at the later of the two levels
+            let mut greater_than = Vec::new();
+            let mut less_than = Vec::new();
+            for &(a, b) in &conds {
+                // constraint: m[a] < m[b]
+                if b == v && pos_of[a] < i {
+                    greater_than.push(pos_of[a]);
+                }
+                if a == v && pos_of[b] < i {
+                    less_than.push(pos_of[b]);
+                }
+            }
+            levels.push(Level {
+                intersect,
+                subtract,
+                label: if pattern.is_labeled() {
+                    Some(pattern.label(v))
+                } else {
+                    None
+                },
+                greater_than,
+                less_than,
+            });
+        }
+
+        debug_assert!(
+            levels.iter().skip(1).all(|l| !l.intersect.is_empty()),
+            "matching order must keep the prefix edge-connected: {pattern:?} order={order:?}"
+        );
+
+        Plan {
+            pattern: pattern.clone(),
+            order,
+            levels,
+            aut_count: iso::automorphisms(pattern).len(),
+        }
+    }
+}
+
+/// Choose a matching order: start from the highest-degree pattern vertex,
+/// then greedily take the vertex with the most edges into the chosen prefix
+/// (ties: higher pattern degree, then more anti-edges into the prefix —
+/// pruning earlier is cheaper). Every prefix stays edge-connected, which the
+/// executor requires.
+fn choose_order(p: &Pattern) -> Vec<usize> {
+    let n = p.num_vertices();
+    let mut order = Vec::with_capacity(n);
+    let mut in_prefix = vec![false; n];
+    let first = (0..n)
+        .max_by_key(|&v| (p.degree(v), p.anti(v).len()))
+        .unwrap();
+    order.push(first);
+    in_prefix[first] = true;
+    while order.len() < n {
+        let next = (0..n)
+            .filter(|&v| !in_prefix[v])
+            .max_by_key(|&v| {
+                let edges_in = order.iter().filter(|&&u| p.has_edge(u, v)).count();
+                let antis_in = order.iter().filter(|&&u| p.has_anti_edge(u, v)).count();
+                (edges_in, p.degree(v), antis_in)
+            })
+            .unwrap();
+        // connectivity of the pattern guarantees edges_in ≥ 1 for some v
+        order.push(next);
+        in_prefix[next] = true;
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    #[test]
+    fn order_is_edge_connected_prefix() {
+        for i in 1..=7 {
+            let p = catalog::paper_pattern(i);
+            let plan = Plan::compile(&p);
+            for (lvl, l) in plan.levels.iter().enumerate().skip(1) {
+                assert!(
+                    !l.intersect.is_empty(),
+                    "p{i} level {lvl} has no edge into prefix"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vertex_induced_plans_have_subtractions() {
+        let p = catalog::cycle(4).vertex_induced();
+        let plan = Plan::compile(&p);
+        let subs: usize = plan.levels.iter().map(|l| l.subtract.len()).sum();
+        assert_eq!(subs, 2, "C4^V has 2 anti-edges");
+        let edge_plan = Plan::compile(&catalog::cycle(4));
+        let esubs: usize = edge_plan.levels.iter().map(|l| l.subtract.len()).sum();
+        assert_eq!(esubs, 0);
+    }
+
+    #[test]
+    fn clique_plan_fully_constrained() {
+        let plan = Plan::compile(&catalog::clique(4));
+        assert_eq!(plan.aut_count, 24);
+        // with symmetry breaking a clique is a strictly increasing chain
+        let total_ord: usize = plan
+            .levels
+            .iter()
+            .map(|l| l.greater_than.len() + l.less_than.len())
+            .sum();
+        assert!(total_ord >= 3, "clique needs a total order, got {total_ord}");
+    }
+
+    #[test]
+    fn labels_propagate_to_levels() {
+        let p = catalog::path(3).with_labels(&[7, 8, 9]);
+        let plan = Plan::compile(&p);
+        for (i, &v) in plan.order.iter().enumerate() {
+            assert_eq!(plan.levels[i].label, Some(p.label(v)));
+        }
+    }
+
+    #[test]
+    fn no_symmetry_opt_out() {
+        let plan = Plan::compile_opts(&catalog::clique(3), false);
+        let total_ord: usize = plan
+            .levels
+            .iter()
+            .map(|l| l.greater_than.len() + l.less_than.len())
+            .sum();
+        assert_eq!(total_ord, 0);
+    }
+}

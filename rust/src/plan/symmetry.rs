@@ -1,0 +1,149 @@
+//! Symmetry breaking à la Grochow–Kellis [17], as used by Peregrine.
+//!
+//! Without it, a subgraph with `|Aut(p)|` automorphisms is discovered that
+//! many times. We impose a partial order on pattern vertices such that
+//! exactly one representative of each automorphism class satisfies all
+//! `m[a] < m[b]` conditions (comparisons are on data-vertex IDs).
+//!
+//! Construction: repeatedly take the smallest vertex `v` whose orbit under
+//! the current (pointwise-stabilized) automorphism group is non-trivial,
+//! emit conditions `v < u` for every other `u` in that orbit, then restrict
+//! the group to the stabilizer of `v`. Terminates because each step strictly
+//! shrinks the group.
+
+use crate::pattern::iso::{self, VertexMap};
+use crate::pattern::Pattern;
+
+/// Compute symmetry-breaking conditions `(a, b)` meaning `m[a] < m[b]`.
+pub fn breaking_conditions(p: &Pattern) -> Vec<(usize, usize)> {
+    let n = p.num_vertices();
+    let mut group: Vec<VertexMap> = iso::automorphisms(p);
+    let mut conds = Vec::new();
+    loop {
+        if group.len() <= 1 {
+            break;
+        }
+        // orbit of each vertex under the current group
+        let mut orbit_of_v: Option<(usize, Vec<usize>)> = None;
+        for v in 0..n {
+            let mut orbit: Vec<usize> = group.iter().map(|a| a[v]).collect();
+            orbit.sort_unstable();
+            orbit.dedup();
+            if orbit.len() > 1 {
+                orbit_of_v = Some((v, orbit));
+                break;
+            }
+        }
+        let Some((v, orbit)) = orbit_of_v else { break };
+        for &u in &orbit {
+            if u != v {
+                conds.push((v, u));
+            }
+        }
+        // stabilizer of v
+        group.retain(|a| a[v] == v);
+    }
+    conds
+}
+
+/// Verify (test helper): exactly one automorphic image of any injective map
+/// satisfies the conditions. Checks the defining property on the pattern's
+/// own automorphism group acting on `0..n` ids.
+#[cfg(test)]
+fn satisfies(conds: &[(usize, usize)], m: &[usize]) -> bool {
+    conds.iter().all(|&(a, b)| m[a] < m[b])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+    use crate::util::proptest;
+
+    /// For every pattern: among all |Aut| images m∘a of a random injective
+    /// map m, exactly one satisfies the conditions.
+    fn assert_canonical_unique(p: &Pattern) {
+        let auts = iso::automorphisms(p);
+        let conds = breaking_conditions(p);
+        let n = p.num_vertices();
+        // try several injective maps into a large id space
+        let mut rng = crate::util::rng::Rng::new(0xABCD + n as u64);
+        for _ in 0..30 {
+            let ids = rng.sample_distinct(1000, n);
+            let mut count = 0;
+            for a in &auts {
+                // image of position v is ids[a[v]]
+                let m: Vec<usize> = (0..n).map(|v| ids[a[v]]).collect();
+                if satisfies(&conds, &m) {
+                    count += 1;
+                }
+            }
+            assert_eq!(
+                count, 1,
+                "pattern {p:?}: {count} of {} automorphic images satisfy conds {conds:?}",
+                auts.len()
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_unique_for_paper_patterns() {
+        for i in 1..=7 {
+            assert_canonical_unique(&catalog::paper_pattern(i));
+        }
+    }
+
+    #[test]
+    fn canonical_unique_for_vertex_induced() {
+        for i in 1..=7 {
+            assert_canonical_unique(&catalog::paper_pattern(i).vertex_induced());
+        }
+    }
+
+    #[test]
+    fn canonical_unique_for_motifs() {
+        for m in catalog::motifs_vertex_induced(4) {
+            assert_canonical_unique(&m);
+        }
+        for m in crate::pattern::gen::connected_patterns(5) {
+            assert_canonical_unique(&m);
+        }
+    }
+
+    #[test]
+    fn asymmetric_pattern_no_conditions() {
+        // a pattern with trivial automorphism group needs no conditions
+        // (path with distinct labels)
+        let p = catalog::path(3).with_labels(&[1, 2, 3]);
+        assert!(breaking_conditions(&p).is_empty());
+    }
+
+    #[test]
+    fn clique_gets_total_order() {
+        let conds = breaking_conditions(&catalog::clique(4));
+        // n-1 + n-2 + ... = 6 conditions for K4
+        assert_eq!(conds.len(), 6);
+    }
+
+    #[test]
+    fn prop_random_patterns_canonical_unique() {
+        proptest::check(0x5E7, 40, |rng| {
+            // random connected pattern
+            let n = 3 + rng.below_usize(3);
+            let mut p = Pattern::empty(n);
+            // random spanning path first for connectivity
+            let perm = rng.permutation(n);
+            for w in perm.windows(2) {
+                p.add_edge(w[0], w[1]);
+            }
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    if !p.has_edge(u, v) && rng.chance(0.35) {
+                        p.add_edge(u, v);
+                    }
+                }
+            }
+            assert_canonical_unique(&p);
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! Dense census backend: the coordinator-facing wrapper around the AOT
+//! census executables.
+//!
+//! The backend owns one compiled executable per artifact size and serves
+//! motif-census requests for (sub)graphs that fit a padded adjacency block.
+//! It is the Layer-1/2 counterpart of the sparse Rust matcher — the same
+//! morphing equations evaluated by dense linear algebra — and doubles as an
+//! independent cross-check oracle in the integration tests.
+
+use crate::graph::{DataGraph, VertexId};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Output layout of the census vector — must match `model.OUTPUTS`.
+pub const CENSUS_OUTPUTS: [&str; 11] = [
+    "vertices",
+    "edges",
+    "wedge_vi",
+    "triangle",
+    "star4_vi",
+    "path4_vi",
+    "tailed_triangle_vi",
+    "cycle4_vi",
+    "diamond_vi",
+    "clique4",
+    "cycle5_e",
+];
+
+/// Parsed census result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CensusResult {
+    pub values: Vec<f64>,
+}
+
+impl CensusResult {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        CENSUS_OUTPUTS
+            .iter()
+            .position(|&o| o == name)
+            .map(|i| self.values[i])
+    }
+
+    /// Vertex-induced 4-motif counts in census order
+    /// (star, path, tailed, cycle, diamond, clique) — see
+    /// [`census_motifs4`] for the corresponding patterns.
+    pub fn motifs4(&self) -> [f64; 6] {
+        [
+            self.values[4],
+            self.values[5],
+            self.values[6],
+            self.values[7],
+            self.values[8],
+            self.values[9],
+        ]
+    }
+}
+
+/// The vertex-induced 4-motifs in the census output order.
+pub fn census_motifs4() -> [crate::pattern::Pattern; 6] {
+    use crate::pattern::catalog;
+    [
+        catalog::star(4).vertex_induced(),
+        catalog::path(4).vertex_induced(),
+        catalog::tailed_triangle().vertex_induced(),
+        catalog::cycle(4).vertex_induced(),
+        catalog::diamond().vertex_induced(),
+        catalog::clique(4),
+    ]
+}
+
+/// The vertex-induced 3-motifs in the census output order.
+pub fn census_motifs3() -> [crate::pattern::Pattern; 2] {
+    use crate::pattern::catalog;
+    [catalog::path(3).vertex_induced(), catalog::triangle()]
+}
+
+/// The dense census backend.
+pub struct CensusBackend {
+    runtime: super::Runtime,
+    sizes: Vec<usize>,
+    executables: Vec<super::Executable>,
+}
+
+impl CensusBackend {
+    /// Load all `census_<N>.hlo.txt` artifacts from `dir` (ascending N).
+    pub fn load(dir: &Path) -> Result<CensusBackend> {
+        let runtime = super::Runtime::cpu()?;
+        let mut found: Vec<(usize, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifacts dir {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            if let Some(num) = name
+                .strip_prefix("census_")
+                .and_then(|s| s.strip_suffix(".hlo.txt"))
+            {
+                found.push((num.parse().context("artifact size suffix")?, path));
+            }
+        }
+        if found.is_empty() {
+            bail!(
+                "no census_<N>.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        found.sort();
+        let mut sizes = Vec::new();
+        let mut executables = Vec::new();
+        for (n, path) in found {
+            executables.push(runtime.load_hlo_text(&path)?);
+            sizes.push(n);
+        }
+        Ok(CensusBackend {
+            runtime,
+            sizes,
+            executables,
+        })
+    }
+
+    /// Largest graph the backend can census.
+    pub fn max_size(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Census of a whole graph (must fit the largest artifact).
+    pub fn census_graph(&self, g: &DataGraph) -> Result<CensusResult> {
+        let block: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+        self.census_block(g, &block)
+    }
+
+    /// Census of the subgraph induced by `block`.
+    pub fn census_block(&self, g: &DataGraph, block: &[VertexId]) -> Result<CensusResult> {
+        let k = block.len();
+        let idx = self
+            .sizes
+            .iter()
+            .position(|&n| n >= k)
+            .with_context(|| format!("graph with {k} vertices exceeds artifact size {}", self.max_size()))?;
+        let n = self.sizes[idx];
+        let dense = g.densify(block);
+        // pad k×k into n×n
+        let mut a = vec![0f64; n * n];
+        for i in 0..k {
+            for j in 0..k {
+                a[i * n + j] = dense[i * k + j] as f64;
+            }
+        }
+        let out = self.executables[idx].run_f64(&[(&a, &[n as i64, n as i64])])?;
+        if out.len() != CENSUS_OUTPUTS.len() {
+            bail!(
+                "census output length {} != expected {}",
+                out.len(),
+                CENSUS_OUTPUTS.len()
+            );
+        }
+        Ok(CensusResult { values: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::morph::Policy;
+
+    fn backend() -> Option<CensusBackend> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("census_64.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(CensusBackend::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn dense_census_agrees_with_sparse_matcher() {
+        let Some(be) = backend() else { return };
+        let g = erdos_renyi(48, 140, 77);
+        let dense = be.census_graph(&g).unwrap();
+        let sparse = crate::apps::count_motifs(&g, 4, Policy::Off, 2);
+        let got = dense.motifs4();
+        for (i, m) in super::census_motifs4().iter().enumerate() {
+            assert_eq!(
+                got[i].round() as u64,
+                sparse.get(m).unwrap(),
+                "motif {i} ({m:?}) dense vs sparse"
+            );
+        }
+        assert_eq!(dense.get("edges").unwrap() as usize, g.num_edges());
+    }
+
+    #[test]
+    fn census_block_subgraph() {
+        let Some(be) = backend() else { return };
+        let g = erdos_renyi(200, 900, 78);
+        let block: Vec<u32> = (0..50).collect();
+        let r = be.census_block(&g, &block).unwrap();
+        assert!(r.get("edges").unwrap() >= 0.0);
+        assert!(r.get("vertices").unwrap() <= 50.0);
+    }
+
+    #[test]
+    fn oversized_graph_rejected() {
+        let Some(be) = backend() else { return };
+        let g = erdos_renyi(be.max_size() + 1, 600, 79);
+        assert!(be.census_graph(&g).is_err());
+    }
+}

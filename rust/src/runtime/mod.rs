@@ -1,0 +1,110 @@
+//! PJRT runtime: loads the AOT-compiled census artifacts (HLO text produced
+//! by `python/compile/aot.py`) and executes them from the Rust side.
+//!
+//! Python never runs on the query path: `make artifacts` lowers the Layer-2
+//! JAX model once; this module compiles the HLO with the PJRT CPU client at
+//! startup and serves census requests from the mining coordinator.
+
+mod census;
+
+pub use census::{census_motifs3, census_motifs4, CensusBackend, CensusResult, CENSUS_OUTPUTS};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled PJRT executable loaded from HLO text.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text module.
+    ///
+    /// HLO *text* is the interchange format: jax ≥ 0.5 serialized protos use
+    /// 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see /opt/xla-example/README.md).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with f64 input buffers (each given as flat data + dims),
+    /// returning the flattened f64 output of the 1-tuple result.
+    pub fn run_f64(&self, inputs: &[(&[f64], &[i64])]) -> Result<Vec<f64>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        out.to_vec::<f64>().context("reading f64 output")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("census_64.hlo.txt").exists().then_some(p)
+    }
+
+    #[test]
+    fn runtime_loads_and_runs_census() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        let exe = rt.load_hlo_text(&dir.join("census_64.hlo.txt")).unwrap();
+        // K4 in the top-left corner of a 64×64 zero matrix
+        let n = 64usize;
+        let mut a = vec![0f64; n * n];
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    a[i * n + j] = 1.0;
+                }
+            }
+        }
+        let out = exe.run_f64(&[(&a, &[n as i64, n as i64])]).unwrap();
+        // OUTPUTS: [vertices, edges, wedge_vi, triangle, star4_vi, path4_vi,
+        //           tailed_vi, cycle4_vi, diamond_vi, clique4, cycle5_e]
+        assert_eq!(out[0], 4.0, "vertices");
+        assert_eq!(out[1], 6.0, "edges");
+        assert_eq!(out[3], 4.0, "triangles");
+        assert_eq!(out[9], 1.0, "clique4");
+        assert_eq!(out[7], 0.0, "cycle4_vi");
+    }
+}

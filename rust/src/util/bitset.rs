@@ -1,0 +1,203 @@
+//! Bitset helpers.
+//!
+//! [`SmallSet`] is a `u64`-backed set over indices `< 64` used for pattern
+//! vertices (patterns have ≤ 8 vertices, so a single word is plenty).
+//! [`DynBitset`] is a growable bitset used over data-graph vertices (MNI
+//! domains, visited marks).
+
+/// Fixed-capacity set over `0..64`, backed by one `u64`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct SmallSet(pub u64);
+
+impl SmallSet {
+    #[inline]
+    pub fn empty() -> Self {
+        SmallSet(0)
+    }
+
+    /// Set of all indices `0..n`.
+    #[inline]
+    pub fn full(n: usize) -> Self {
+        debug_assert!(n <= 64);
+        if n == 64 {
+            SmallSet(!0)
+        } else {
+            SmallSet((1u64 << n) - 1)
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        self.0 |= 1u64 << i;
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        self.0 &= !(1u64 << i);
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        (self.0 >> i) & 1 == 1
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    #[inline]
+    pub fn union(&self, o: &Self) -> Self {
+        SmallSet(self.0 | o.0)
+    }
+
+    #[inline]
+    pub fn intersect(&self, o: &Self) -> Self {
+        SmallSet(self.0 & o.0)
+    }
+
+    #[inline]
+    pub fn minus(&self, o: &Self) -> Self {
+        SmallSet(self.0 & !o.0)
+    }
+
+    /// Iterate set indices in increasing order.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        let mut bits = self.0;
+        std::iter::from_fn(move || {
+            if bits == 0 {
+                None
+            } else {
+                let i = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                Some(i)
+            }
+        })
+    }
+}
+
+impl std::fmt::Debug for SmallSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_set().entries(self.iter()).finish()
+    }
+}
+
+impl FromIterator<usize> for SmallSet {
+    fn from_iter<T: IntoIterator<Item = usize>>(iter: T) -> Self {
+        let mut s = SmallSet::empty();
+        for i in iter {
+            s.insert(i);
+        }
+        s
+    }
+}
+
+/// Growable bitset over `0..n`.
+#[derive(Clone, Debug, Default)]
+pub struct DynBitset {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl DynBitset {
+    pub fn new(n: usize) -> Self {
+        DynBitset {
+            words: vec![0; n.div_ceil(64)],
+            len: n,
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear_bit(&mut self, i: usize) {
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Reset all bits to zero, keeping capacity.
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Iterate set indices in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let i = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + i)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smallset_ops() {
+        let a: SmallSet = [0, 2, 5].into_iter().collect();
+        let b: SmallSet = [2, 3].into_iter().collect();
+        assert_eq!(a.len(), 3);
+        assert!(a.contains(2) && !a.contains(1));
+        assert_eq!(a.intersect(&b).iter().collect::<Vec<_>>(), vec![2]);
+        assert_eq!(a.union(&b).len(), 4);
+        assert_eq!(a.minus(&b).iter().collect::<Vec<_>>(), vec![0, 5]);
+        assert_eq!(SmallSet::full(3).iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(SmallSet::full(64).len(), 64);
+    }
+
+    #[test]
+    fn smallset_remove() {
+        let mut s = SmallSet::full(4);
+        s.remove(1);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn dynbitset_ops() {
+        let mut b = DynBitset::new(200);
+        b.set(0);
+        b.set(63);
+        b.set(64);
+        b.set(199);
+        assert_eq!(b.count(), 4);
+        assert!(b.get(63) && b.get(64) && !b.get(65));
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![0, 63, 64, 199]);
+        b.clear_bit(63);
+        assert_eq!(b.count(), 3);
+        b.clear();
+        assert_eq!(b.count(), 0);
+        assert_eq!(b.capacity(), 200);
+    }
+}

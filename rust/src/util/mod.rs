@@ -1,0 +1,54 @@
+//! Small self-contained utilities: deterministic RNG, timers, a tiny
+//! property-testing harness, and bitset helpers.
+//!
+//! The build environment is offline with a minimal vendored crate set, so we
+//! provide our own replacements for `rand` ([`rng`]), `proptest`
+//! ([`proptest`]) and `criterion`-style timing ([`timer`]).
+
+pub mod bitset;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+/// Binomial coefficient C(n, k) as u64 (saturating; fine for mining counts
+/// of small k).
+pub fn choose(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..k {
+        num = num.saturating_mul((n - i) as u128);
+        den *= (i + 1) as u128;
+    }
+    (num / den) as u64
+}
+
+/// Factorial for small n (pattern sizes ≤ 8 ⇒ fits easily in u64).
+pub fn factorial(n: u64) -> u64 {
+    (1..=n).product::<u64>().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_basics() {
+        assert_eq!(choose(4, 2), 6);
+        assert_eq!(choose(5, 0), 1);
+        assert_eq!(choose(5, 5), 1);
+        assert_eq!(choose(3, 4), 0);
+        assert_eq!(choose(10, 3), 120);
+    }
+
+    #[test]
+    fn factorial_basics() {
+        assert_eq!(factorial(0), 1);
+        assert_eq!(factorial(1), 1);
+        assert_eq!(factorial(5), 120);
+        assert_eq!(factorial(8), 40320);
+    }
+}

@@ -1,0 +1,166 @@
+//! Lightweight timing + phase breakdown instrumentation.
+//!
+//! Used by the coordinator to attribute execution time to *matching* vs
+//! *aggregation* (the Figure-2 breakdown in the paper) and by the bench
+//! harness in place of criterion (not available offline).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulating phase profile: named buckets of wall time.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseProfile {
+    entries: Vec<(String, Duration)>,
+}
+
+impl PhaseProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name` (creating it if needed).
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.entries.push((name.to_string(), d));
+        }
+    }
+
+    /// Time a closure and attribute it to `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let r = f();
+        self.add(name, t.elapsed());
+        r
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, Duration)] {
+        &self.entries
+    }
+
+    /// Merge another profile into this one.
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for (n, d) in &other.entries {
+            self.add(n, *d);
+        }
+    }
+}
+
+/// Benchmark runner: median-of-runs with warmup, criterion-lite.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub runs: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 1, runs: 3 }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, runs: usize) -> Self {
+        BenchRunner { warmup, runs }
+    }
+
+    /// Run `f` with warmup, return (median_secs, min_secs, max_secs).
+    pub fn measure<T>(&self, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<f64> = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs.max(1) {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            times.push(t.secs());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats {
+            median: times[times.len() / 2],
+            min: times[0],
+            max: *times.last().unwrap(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_accumulates() {
+        let mut p = PhaseProfile::new();
+        p.add("match", Duration::from_millis(5));
+        p.add("match", Duration::from_millis(7));
+        p.add("agg", Duration::from_millis(3));
+        assert_eq!(p.get("match"), Duration::from_millis(12));
+        assert_eq!(p.total(), Duration::from_millis(15));
+    }
+
+    #[test]
+    fn profile_time_closure() {
+        let mut p = PhaseProfile::new();
+        let v = p.time("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(p.get("work") > Duration::ZERO);
+    }
+
+    #[test]
+    fn profile_merge() {
+        let mut a = PhaseProfile::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseProfile::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn bench_runner_runs() {
+        let stats = BenchRunner::new(0, 3).measure(|| (0..1000).sum::<u64>());
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+}

@@ -1,0 +1,221 @@
+//! Integration tests for the morphing theory — the strongest form of the
+//! paper's claims, checked as *match-set* equalities (not just counts) on
+//! random graphs, plus aggregation conversion for enumeration and MNI.
+
+use morphmine::agg::{aggregate_pattern, CountAgg, EnumerateAgg, MniAgg};
+use morphmine::graph::generators::{assign_labels, barabasi_albert, erdos_renyi};
+use morphmine::morph::{self, MorphExpr, Policy};
+use morphmine::pattern::{catalog, gen, Pattern};
+use morphmine::plan::cost::CostParams;
+use morphmine::util::proptest;
+use morphmine::util::timer::PhaseProfile;
+use std::collections::HashMap;
+
+/// Theorem 3.1 as a SET equality: M(p^E) == M(p^V) ⊎ ⋃ M(q^V)∘φ.
+/// Evaluated through the enumeration aggregation, which materializes the
+/// (signed) match multisets — so any overlap or multiplicity error fails.
+#[test]
+fn theorem_3_1_match_set_equality() {
+    proptest::check(0x7E0, 12, |rng| {
+        let n = 14 + rng.below_usize(12);
+        let m = 2 * n + rng.below_usize(2 * n);
+        let g = erdos_renyi(n, m, rng.next_u64());
+        for q in [
+            catalog::cycle(4),
+            catalog::tailed_triangle(),
+            catalog::path(4),
+            catalog::star(4),
+        ] {
+            let expr = MorphExpr::theorem_3_1(&q);
+            let mut values = HashMap::new();
+            for b in expr.base_patterns() {
+                values.insert(
+                    b.canonical_key(),
+                    aggregate_pattern(&g, &b, &EnumerateAgg, 1),
+                );
+            }
+            let converted = expr.evaluate(&EnumerateAgg, &values);
+            converted.assert_consistent();
+            let direct = aggregate_pattern(&g, &q, &EnumerateAgg, 1);
+            assert_eq!(
+                converted.matches(),
+                direct.matches(),
+                "match sets differ for {q:?}"
+            );
+        }
+    });
+}
+
+/// Corollary 3.1 as a SET equality with exact cancellation.
+#[test]
+fn corollary_3_1_match_set_equality() {
+    proptest::check(0xC0B, 10, |rng| {
+        let n = 12 + rng.below_usize(10);
+        let m = 2 * n + rng.below_usize(2 * n);
+        let g = erdos_renyi(n, m, rng.next_u64());
+        for q in [
+            catalog::cycle(4).vertex_induced(),
+            catalog::tailed_triangle().vertex_induced(),
+            catalog::star(4).vertex_induced(),
+        ] {
+            let mut expr = MorphExpr::corollary_3_1(&q);
+            expr.expand_to_edge_basis();
+            let mut values = HashMap::new();
+            for b in expr.base_patterns() {
+                values.insert(
+                    b.canonical_key(),
+                    aggregate_pattern(&g, &b, &EnumerateAgg, 1),
+                );
+            }
+            let converted = expr.evaluate(&EnumerateAgg, &values);
+            converted.assert_consistent(); // no negative residue
+            let direct = aggregate_pattern(&g, &q, &EnumerateAgg, 1);
+            assert_eq!(converted.matches(), direct.matches(), "{q:?}");
+        }
+    });
+}
+
+/// Theorem 3.2 for the MNI aggregation: morphed MNI tables equal direct
+/// ones (domains and support), on labeled graphs.
+#[test]
+fn aggregation_conversion_mni_tables() {
+    proptest::check(0x311A, 8, |rng| {
+        let n = 16 + rng.below_usize(12);
+        let g = assign_labels(
+            erdos_renyi(n, 3 * n, rng.next_u64()),
+            2,
+            1.2,
+            rng.next_u64(),
+        );
+        // labeled path and triangle queries
+        let labels: Vec<u32> = (0..3).map(|_| rng.below(2) as u32).collect();
+        for base in [catalog::path(3), catalog::triangle()] {
+            let q = base.with_labels(&labels);
+            let qv = q.vertex_induced();
+            for query in [q, qv] {
+                if query.is_clique() && query.num_anti_edges() > 0 {
+                    continue;
+                }
+                let agg = MniAgg {
+                    n: query.num_vertices(),
+                };
+                let direct = aggregate_pattern(&g, &query, &agg, 1);
+                let expr = morph::engine::naive_expr(&query);
+                let mut values = HashMap::new();
+                for b in expr.base_patterns() {
+                    values.insert(b.canonical_key(), aggregate_pattern(&g, &b, &agg, 1));
+                }
+                let converted = expr.evaluate(&agg, &values);
+                converted.assert_consistent();
+                assert_eq!(converted.support(), direct.support(), "{query:?}");
+                for v in 0..query.num_vertices() {
+                    assert_eq!(converted.domain(v), direct.domain(v), "{query:?} col {v}");
+                }
+            }
+        }
+    });
+}
+
+/// All 5-vertex motifs: counting equivalence across policies (heavier
+/// lattice: up to 21 superpatterns).
+#[test]
+fn five_vertex_morphing_counts() {
+    let g = erdos_renyi(35, 140, 99);
+    let queries: Vec<Pattern> = vec![
+        catalog::house().vertex_induced(),
+        catalog::gem().vertex_induced(),
+        catalog::cycle(5).vertex_induced(),
+        catalog::house(),
+        catalog::cycle(5),
+        catalog::path(5),
+    ];
+    let off = morph::engine::count_queries(&g, &queries, Policy::Off, 2);
+    let naive = morph::engine::count_queries(&g, &queries, Policy::Naive, 2);
+    let cost = morph::engine::count_queries(&g, &queries, Policy::CostBased, 2);
+    assert_eq!(off, naive);
+    assert_eq!(off, cost);
+}
+
+/// Morphing on heavy-tailed graphs (the regime where it pays off).
+#[test]
+fn morphing_on_powerlaw_graphs() {
+    let g = barabasi_albert(400, 5, 0xBA);
+    let motifs = catalog::motifs_vertex_induced(4);
+    let off = morph::engine::count_queries(&g, &motifs, Policy::Off, 2);
+    let naive = morph::engine::count_queries(&g, &motifs, Policy::Naive, 2);
+    assert_eq!(off, naive);
+}
+
+/// A mixed query set (edge- and vertex-induced, shared superpatterns) plans
+/// a deduplicated base and converts every query correctly.
+#[test]
+fn mixed_query_set_shares_bases() {
+    let g = erdos_renyi(60, 260, 0x517);
+    let queries = vec![
+        catalog::cycle(4),
+        catalog::cycle(4).vertex_induced(),
+        catalog::diamond(),
+        catalog::diamond().vertex_induced(),
+        catalog::clique(4),
+    ];
+    let plan = morph::plan_queries(&queries, Policy::Naive, None, &CostParams::counting());
+    // naive: C4^E → {C4^V, dia^V, K4}; C4^V → {C4^E, dia^E, K4};
+    // dia^E → {dia^V, K4}; dia^V → {dia^E, K4}; K4 → {K4}
+    // shared base set must contain K4 exactly once
+    let k4 = catalog::clique(4).canonical_key();
+    assert_eq!(
+        plan.base.iter().filter(|p| p.canonical_key() == k4).count(),
+        1
+    );
+    let mut profile = PhaseProfile::new();
+    let values = morph::execute(&g, &plan, &CountAgg, 2, &mut profile);
+    let direct = morph::engine::count_queries(&g, &queries, Policy::Off, 2);
+    for ((q, &maps), want) in queries.iter().zip(values.iter()).zip(direct) {
+        let aut = morphmine::pattern::iso::automorphisms(q).len() as i128;
+        assert_eq!((maps / aut) as u64, want, "{q:?}");
+    }
+}
+
+/// Labeled morphing: superpatterns carry labels; φ respects them.
+#[test]
+fn labeled_pattern_morphing() {
+    proptest::check(0x1AB, 10, |rng| {
+        let n = 20 + rng.below_usize(15);
+        let g = assign_labels(
+            erdos_renyi(n, 3 * n, rng.next_u64()),
+            3,
+            1.3,
+            rng.next_u64(),
+        );
+        let labels: Vec<u32> = (0..4).map(|_| rng.below(3) as u32).collect();
+        let q = catalog::cycle(4).with_labels(&labels);
+        for query in [q.clone(), q.vertex_induced()] {
+            let off = morph::engine::count_queries(&g, &[query.clone()], Policy::Off, 1);
+            let naive = morph::engine::count_queries(&g, &[query.clone()], Policy::Naive, 1);
+            assert_eq!(off, naive, "{query:?}");
+        }
+    });
+}
+
+/// The superpattern lattice of every 4-vertex motif is exactly the set of
+/// denser 4-vertex motifs it embeds into (cross-validates gen::superpatterns
+/// against φ).
+#[test]
+fn superpattern_lattice_consistency() {
+    let motifs = gen::connected_patterns(4);
+    for p in &motifs {
+        let sups = gen::superpatterns(p);
+        for q in &motifs {
+            let embeds = morphmine::pattern::iso::phi_count(p, q) > 0;
+            let denser = q.num_edges() > p.num_edges();
+            let in_lattice = sups
+                .iter()
+                .any(|s| s.canonical_key() == q.canonical_key());
+            assert_eq!(
+                in_lattice,
+                embeds && denser,
+                "p={p:?} q={q:?} (embeds={embeds}, denser={denser})"
+            );
+        }
+    }
+}
