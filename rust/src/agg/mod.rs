@@ -64,6 +64,51 @@ pub fn aggregate_pattern<A: Aggregation>(
     symmetrize(pattern, agg, &canon)
 }
 
+/// Aggregate a whole base pattern set over full match sets `M(p_i, G)` in
+/// **one fused traversal** of the data graph: runs the shared-prefix trie
+/// executor ([`crate::exec::fused`]) once, accumulating per-pattern values,
+/// then symmetrizes each over its pattern's automorphism group. Returns
+/// values aligned with [`crate::plan::fused::FusedPlan::plans`].
+pub fn aggregate_patterns_fused<A: Aggregation>(
+    graph: &DataGraph,
+    fused: &crate::plan::fused::FusedPlan,
+    agg: &A,
+    threads: usize,
+) -> Vec<A::Value> {
+    let n_pat = fused.num_patterns();
+    let (vals, _) = crate::exec::fused::par_fused_run(
+        graph,
+        fused,
+        threads,
+        || {
+            let accs: Vec<A::Value> = (0..n_pat).map(|_| agg.identity()).collect();
+            let scratch = vec![0 as VertexId; crate::pattern::MAX_PATTERN_VERTICES];
+            (accs, scratch)
+        },
+        |(accs, scratch), i, m| {
+            // positions → pattern vertices, through pattern i's own order
+            let order = &fused.plans[i].order;
+            for (pos, &pv) in order.iter().enumerate() {
+                scratch[pv] = m[pos];
+            }
+            agg.accumulate(&mut accs[i], &scratch[..order.len()]);
+        },
+        |(a, s), (b, _)| {
+            (
+                a.into_iter()
+                    .zip(b)
+                    .map(|(x, y)| agg.combine(x, y))
+                    .collect(),
+                s,
+            )
+        },
+    );
+    vals.into_iter()
+        .zip(&fused.plans)
+        .map(|(v, plan)| symmetrize(&plan.pattern, agg, &v))
+        .collect()
+}
+
 /// Aggregate over canonical (symmetry-broken) matches only.
 pub fn aggregate_canonical<A: Aggregation>(
     graph: &DataGraph,
@@ -114,6 +159,21 @@ mod tests {
         let full = aggregate_pattern(&g, &p, &CountAgg, 2);
         // 4 triangles × |Aut| = 6 maps each
         assert_eq!(full, 24);
+    }
+
+    #[test]
+    fn fused_aggregation_matches_per_pattern() {
+        let g = crate::graph::generators::erdos_renyi(50, 200, 31);
+        let base = vec![catalog::path(3), catalog::triangle(), catalog::cycle(4)];
+        let fused = crate::plan::fused::FusedPlan::build(
+            &base,
+            None,
+            &crate::plan::cost::CostParams::counting(),
+        );
+        let vals = aggregate_patterns_fused(&g, &fused, &CountAgg, 2);
+        for (i, p) in base.iter().enumerate() {
+            assert_eq!(vals[i], aggregate_pattern(&g, p, &CountAgg, 1), "{p:?}");
+        }
     }
 
     #[test]

@@ -27,6 +27,8 @@ pub struct FsmConfig {
     pub policy: Policy,
     /// Worker threads.
     pub threads: usize,
+    /// Fuse each level's base pattern set into one traversal (default on).
+    pub fused: bool,
 }
 
 /// FSM output.
@@ -183,7 +185,11 @@ fn compute_supports(
                     morph::plan_queries(&queries, cfg.policy, stats_ref, &CostParams::mni(size))
                 });
                 let agg = MniAgg { n: size };
-                let tables = morph::execute(graph, &plan, &agg, cfg.threads, profile);
+                let opts = morph::ExecOpts {
+                    threads: cfg.threads,
+                    fused: cfg.fused,
+                };
+                let tables = morph::execute_opts(graph, &plan, &agg, opts, profile);
                 for (t, &i) in tables.iter().zip(&idxs) {
                     t.assert_consistent();
                     result[i] = t.support();
@@ -210,6 +216,7 @@ mod tests {
             support,
             policy,
             threads: 2,
+            fused: true,
         }
     }
 
@@ -227,6 +234,7 @@ mod tests {
                 support: 1,
                 policy: Policy::Off,
                 threads: 1,
+                fused: true,
             },
         );
         assert_eq!(r.frequent.len(), 1);
@@ -254,6 +262,26 @@ mod tests {
     }
 
     #[test]
+    fn fsm_fused_toggle_agrees() {
+        let g = labeled_graph(63);
+        let on = cfg(3, Policy::Naive);
+        let mut off = cfg(3, Policy::Naive);
+        off.fused = false;
+        let ra = fsm(&g, &on);
+        let rb = fsm(&g, &off);
+        let norm = |r: &FsmResult| {
+            let mut v: Vec<(CanonKey, u64)> = r
+                .frequent
+                .iter()
+                .map(|(p, s)| (p.canonical_key(), *s))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(norm(&ra), norm(&rb));
+    }
+
+    #[test]
     fn fsm_antimonotone_levels_shrink_with_support() {
         let g = labeled_graph(62);
         let lo = fsm(&g, &cfg(2, Policy::Off));
@@ -275,6 +303,7 @@ mod tests {
                 support: 1,
                 policy: Policy::Off,
                 threads: 1,
+                fused: true,
             },
         );
         assert_eq!(r.frequent[0].1, 1);
@@ -299,6 +328,7 @@ mod tests {
                 support: 5,
                 policy: Policy::Off,
                 threads: 1,
+                fused: true,
             },
         );
         // frequent 3-edge patterns must include the mono-label triangle

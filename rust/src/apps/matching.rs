@@ -22,12 +22,23 @@ pub struct MatchResult {
     pub equations: Vec<String>,
 }
 
-/// Count matches of `queries` under `policy`.
+/// Count matches of `queries` under `policy` (fused co-execution of the
+/// alternative pattern set by default).
 pub fn match_patterns(
     graph: &DataGraph,
     queries: &[Pattern],
     policy: Policy,
     threads: usize,
+) -> MatchResult {
+    match_patterns_opts(graph, queries, policy, morph::ExecOpts::new(threads))
+}
+
+/// [`match_patterns`] with explicit execution options (fused on/off).
+pub fn match_patterns_opts(
+    graph: &DataGraph,
+    queries: &[Pattern],
+    policy: Policy,
+    opts: morph::ExecOpts,
 ) -> MatchResult {
     let mut profile = PhaseProfile::new();
     let stats;
@@ -40,7 +51,7 @@ pub fn match_patterns(
     let plan = profile.time("plan", || {
         morph::plan_queries(queries, policy, stats_ref, &CostParams::counting())
     });
-    let values = morph::execute(graph, &plan, &CountAgg, threads, &mut profile);
+    let values = morph::execute_opts(graph, &plan, &CountAgg, opts, &mut profile);
     let counts = values
         .iter()
         .zip(queries)

@@ -13,5 +13,5 @@ pub use approx::{approx_motifs, ApproxMotifCounts};
 pub use cliques::count_cliques;
 pub use fsm::{fsm, FsmConfig, FsmResult};
 pub use incremental::IncrementalMotifCounter;
-pub use matching::{match_patterns, MatchResult};
-pub use motifs::{count_motifs, MotifCounts};
+pub use matching::{match_patterns, match_patterns_opts, MatchResult};
+pub use motifs::{count_motifs, count_motifs_opts, MotifCounts};

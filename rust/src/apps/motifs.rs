@@ -40,12 +40,23 @@ impl MotifCounts {
 }
 
 /// Count all motifs with `size` vertices (3 ≤ size ≤ 5 in the paper; 6 is
-/// supported but the motif set grows to 112 patterns).
+/// supported but the motif set grows to 112 patterns). The base pattern
+/// set is matched with fused co-execution by default.
 pub fn count_motifs(
     graph: &DataGraph,
     size: usize,
     policy: Policy,
     threads: usize,
+) -> MotifCounts {
+    count_motifs_opts(graph, size, policy, morph::ExecOpts::new(threads))
+}
+
+/// [`count_motifs`] with explicit execution options (fused on/off).
+pub fn count_motifs_opts(
+    graph: &DataGraph,
+    size: usize,
+    policy: Policy,
+    opts: morph::ExecOpts,
 ) -> MotifCounts {
     let motifs = catalog::motifs_vertex_induced(size);
     let mut profile = PhaseProfile::new();
@@ -63,7 +74,7 @@ pub fn count_motifs(
     let plan = profile.time("plan", || {
         morph::plan_queries(&motifs, policy, stats_ref, &CostParams::counting())
     });
-    let values = morph::execute(graph, &plan, &crate::agg::CountAgg, threads, &mut profile);
+    let values = morph::execute_opts(graph, &plan, &crate::agg::CountAgg, opts, &mut profile);
 
     let counts = values
         .into_iter()
@@ -126,6 +137,34 @@ mod tests {
         );
         // and there are exactly 6 of them (one per 4-motif topology)
         assert_eq!(naive.base.len(), 6);
+    }
+
+    #[test]
+    fn fused_toggle_agrees() {
+        let g = erdos_renyi(60, 260, 44);
+        for policy in [Policy::Off, Policy::Naive] {
+            let on = count_motifs_opts(
+                &g,
+                4,
+                policy,
+                morph::ExecOpts {
+                    threads: 2,
+                    fused: true,
+                },
+            );
+            let off = count_motifs_opts(
+                &g,
+                4,
+                policy,
+                morph::ExecOpts {
+                    threads: 2,
+                    fused: false,
+                },
+            );
+            for ((p, a), (_, b)) in on.counts.iter().zip(off.counts.iter()) {
+                assert_eq!(a, b, "{policy:?} {p:?}");
+            }
+        }
     }
 
     #[test]

@@ -12,14 +12,19 @@
 //! * **A4 — incremental vs batch recount** on an update stream.
 //! * **A5 — approximate counting + exact morphing conversion**: estimator
 //!   error across sample budgets.
+//! * **A6 — fused multi-pattern co-execution**: one shared-prefix trie
+//!   traversal for the whole base set vs one sweep per pattern (reports
+//!   wall time, first-level traversal counts and trie sharing; written to
+//!   `BENCH_fused.json`, path overridable via `MM_FUSED_JSON`).
 
 use crate::apps;
 use crate::exec;
 use crate::graph::generators::{Dataset, Scale};
 use crate::graph::{DynGraph, GraphStats};
-use crate::morph::Policy;
-use crate::pattern::catalog;
+use crate::morph::{self, Policy};
+use crate::pattern::{catalog, Pattern};
 use crate::plan::cost::{estimate, CostParams};
+use crate::plan::fused::FusedPlan;
 use crate::plan::Plan;
 use crate::util::timer::Timer;
 use anyhow::Result;
@@ -231,6 +236,77 @@ pub fn ablation_approx(scale: Scale, threads: usize) -> Result<()> {
     Ok(())
 }
 
+/// A6: fused multi-pattern co-execution vs per-pattern sweeps.
+///
+/// Matches the whole base pattern set through the fused plan trie in one
+/// traversal and compares against one `par_count_matches` sweep per
+/// pattern. Counts are asserted equal; the fused path must do strictly
+/// fewer first-level traversals. Results are appended to a JSON report
+/// (`BENCH_fused.json`, or `MM_FUSED_JSON` if set).
+pub fn ablation_fused(scale: Scale, threads: usize) -> Result<()> {
+    println!("\n### A6 — fused co-execution vs per-pattern sweeps\n");
+    println!("| graph | base set | per-pattern (s) | fused (s) | speedup | L0 sweeps | trie nodes / plan levels |");
+    println!("|-------|----------|-----------------|-----------|---------|-----------|--------------------------|");
+    let mut rows: Vec<String> = Vec::new();
+    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
+        let g = d.generate(scale);
+        let sets: [(&str, Vec<Pattern>); 2] = [
+            (
+                "4-motif naive base",
+                morph::plan_queries(
+                    &catalog::motifs_vertex_induced(4),
+                    Policy::Naive,
+                    None,
+                    &CostParams::counting(),
+                )
+                .base,
+            ),
+            ("4-motif V/I set", catalog::motifs_vertex_induced(4)),
+        ];
+        for (name, base) in sets {
+            let plans: Vec<Plan> = base.iter().map(Plan::compile).collect();
+            let fused = FusedPlan::build(&base, None, &CostParams::counting());
+            let (per, t_per) = time(|| {
+                plans
+                    .iter()
+                    .map(|p| exec::parallel::par_count_matches(&g, p, threads))
+                    .collect::<Vec<u64>>()
+            });
+            let (fu, t_fused) =
+                time(|| exec::fused::fused_count_matches(&g, &fused, threads));
+            assert_eq!(per, fu, "{name}/{}: fused counts must equal per-pattern", d.code());
+            let sweeps_per = plans.len();
+            let sweeps_fused = fused.first_level_traversals();
+            assert!(
+                sweeps_fused < sweeps_per,
+                "fused must do strictly fewer first-level traversals ({sweeps_fused} vs {sweeps_per})"
+            );
+            let speedup = t_per / t_fused.max(1e-9);
+            println!(
+                "| {} | {name} | {t_per:.3} | {t_fused:.3} | {speedup:.2}× | {sweeps_per}→{sweeps_fused} | {}/{} |",
+                d.code(),
+                fused.nodes.len(),
+                fused.total_plan_levels(),
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{}\", \"set\": \"{name}\", \"patterns\": {}, \"per_pattern_s\": {t_per:.6}, \"fused_s\": {t_fused:.6}, \"speedup\": {speedup:.3}, \"first_level_sweeps_per_pattern\": {sweeps_per}, \"first_level_sweeps_fused\": {sweeps_fused}, \"trie_nodes\": {}, \"plan_levels\": {}}}",
+                d.code(),
+                base.len(),
+                fused.nodes.len(),
+                fused.total_plan_levels(),
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"experiment\": \"fused_vs_per_pattern\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let out = std::env::var("MM_FUSED_JSON").unwrap_or_else(|_| "BENCH_fused.json".into());
+    std::fs::write(&out, json)?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
 /// Run all ablations.
 pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     println!("\n## Ablations\n");
@@ -238,7 +314,8 @@ pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     ablation_intersections()?;
     ablation_cost_model(scale, threads)?;
     ablation_incremental(scale, threads)?;
-    ablation_approx(scale, threads)
+    ablation_approx(scale, threads)?;
+    ablation_fused(scale, threads)
 }
 
 #[cfg(test)]
@@ -251,5 +328,17 @@ mod tests {
         // |Aut| relation internally)
         ablation_intersections().unwrap();
         ablation_cost_model(Scale::Tiny, 2).unwrap();
+    }
+
+    #[test]
+    fn fused_ablation_smoke() {
+        // asserts fused == per-pattern internally; JSON goes to a temp path
+        let out = std::env::temp_dir().join("mm_bench_fused_smoke.json");
+        std::env::set_var("MM_FUSED_JSON", &out);
+        let r = ablation_fused(Scale::Tiny, 2);
+        std::env::remove_var("MM_FUSED_JSON");
+        r.unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("fused_vs_per_pattern"));
     }
 }

@@ -51,6 +51,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
         "table4" => table4(scale),
         "fig2" => fig2(scale, threads),
         "fig5" => fig5(scale, threads),
+        "fused" => ablations::ablation_fused(scale, threads),
         "ablations" => ablations::run_all(scale, threads),
         "all" => {
             table2(scale)?;
@@ -62,7 +63,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
             ablations::run_all(scale, threads)
         }
         other => bail!(
-            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|ablations|all)"
+            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|ablations|all)"
         ),
     }
 }
@@ -186,6 +187,7 @@ pub fn run_table3_cell(
                         support,
                         policy,
                         threads,
+                        fused: true,
                     },
                 )
             });
@@ -285,6 +287,7 @@ pub fn fig2(scale: Scale, threads: usize) -> Result<()> {
                     support,
                     policy: Policy::Off,
                     threads,
+                    fused: true,
                 },
             )
         });

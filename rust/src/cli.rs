@@ -1,13 +1,13 @@
 //! Hand-rolled CLI (clap is not available offline).
 //!
 //! ```text
-//! morphmine motifs  --graph <spec> [--size 4] [--pmr off|naive|cost] [--threads N]
-//! morphmine match   --graph <spec> --patterns <p1,p2,…> [--pmr …] [--explain]
-//! morphmine fsm     --graph <spec> [--edges 3] [--support 100] [--pmr …]
+//! morphmine motifs  --graph <spec> [--size 4] [--pmr off|naive|cost] [--threads N] [--fused on|off]
+//! morphmine match   --graph <spec> --patterns <p1,p2,…> [--pmr …] [--fused …] [--explain]
+//! morphmine fsm     --graph <spec> [--edges 3] [--support 100] [--pmr …] [--fused …]
 //! morphmine cliques --graph <spec> [--k 4]
 //! morphmine census  --graph <spec> [--artifacts artifacts]
 //! morphmine gen     --dataset mico[:scale] --out <path>
-//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5] [--scale tiny|small|medium]
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
 //! ```
 //!
@@ -77,6 +77,14 @@ fn policy_of(args: &Args) -> Result<Policy> {
     Policy::parse(&s).with_context(|| format!("bad --pmr {s:?} (off|naive|cost)"))
 }
 
+fn fused_of(args: &Args) -> Result<bool> {
+    match args.get("fused") {
+        None | Some("on") | Some("true") => Ok(true),
+        Some("off") | Some("false") => Ok(false),
+        Some(other) => bail!("bad --fused {other:?} (on|off)"),
+    }
+}
+
 fn coordinator_of(args: &Args) -> Result<Coordinator> {
     let spec = args
         .get("graph")
@@ -86,6 +94,7 @@ fn coordinator_of(args: &Args) -> Result<Coordinator> {
         policy: policy_of(args)?,
         threads: args.parse_num("threads", crate::exec::parallel::default_threads())?,
         artifacts_dir: None,
+        fused: fused_of(args)?,
         ..Config::default()
     };
     if let Some(dir) = args.get("artifacts") {
@@ -242,6 +251,13 @@ mod tests {
     #[test]
     fn run_motifs_smoke() {
         run(argv("motifs --graph mico:tiny --size 3 --pmr naive --threads 2")).unwrap();
+    }
+
+    #[test]
+    fn run_motifs_fused_toggle() {
+        run(argv("motifs --graph mico:tiny --size 3 --pmr naive --threads 2 --fused off")).unwrap();
+        run(argv("motifs --graph mico:tiny --size 3 --pmr naive --threads 2 --fused on")).unwrap();
+        assert!(run(argv("motifs --graph mico:tiny --fused maybe")).is_err());
     }
 
     #[test]

@@ -24,6 +24,8 @@ pub struct Config {
     /// Use the dense XLA backend for whole-graph motif censuses when the
     /// graph fits an artifact.
     pub allow_dense: bool,
+    /// Fuse multi-pattern base sets into one shared-prefix traversal.
+    pub fused: bool,
 }
 
 impl Default for Config {
@@ -33,6 +35,7 @@ impl Default for Config {
             policy: Policy::CostBased,
             artifacts_dir: None,
             allow_dense: true,
+            fused: true,
         }
     }
 }
@@ -55,10 +58,19 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Create a coordinator; loads census artifacts if configured.
+    /// Create a coordinator; loads census artifacts if configured. A dense
+    /// backend that fails to load (e.g. the offline `xla` stub, or missing
+    /// artifacts) is reported and the coordinator falls back to the sparse
+    /// matcher rather than failing construction.
     pub fn new(graph: DataGraph, config: Config) -> Result<Coordinator> {
         let census = match &config.artifacts_dir {
-            Some(dir) if config.allow_dense => Some(CensusBackend::load(dir)?),
+            Some(dir) if config.allow_dense => match CensusBackend::load(dir) {
+                Ok(be) => Some(be),
+                Err(e) => {
+                    eprintln!("dense backend unavailable, using sparse matcher: {e:#}");
+                    None
+                }
+            },
             _ => None,
         };
         Ok(Coordinator {
@@ -122,14 +134,22 @@ impl Coordinator {
             ));
         }
         Ok((
-            apps::count_motifs(&self.graph, size, self.config.policy, self.config.threads),
+            apps::count_motifs_opts(&self.graph, size, self.config.policy, self.exec_opts()),
             Backend::Sparse,
         ))
     }
 
+    /// Execution options derived from the config.
+    fn exec_opts(&self) -> crate::morph::ExecOpts {
+        crate::morph::ExecOpts {
+            threads: self.config.threads,
+            fused: self.config.fused,
+        }
+    }
+
     /// Pattern matching through the morphing engine.
     pub fn match_patterns(&self, queries: &[crate::pattern::Pattern]) -> MatchResult {
-        apps::match_patterns(&self.graph, queries, self.config.policy, self.config.threads)
+        apps::match_patterns_opts(&self.graph, queries, self.config.policy, self.exec_opts())
     }
 
     /// Frequent subgraph mining.
@@ -141,6 +161,7 @@ impl Coordinator {
                 support,
                 policy: self.config.policy,
                 threads: self.config.threads,
+                fused: self.config.fused,
             },
         )
     }
@@ -154,7 +175,7 @@ impl Coordinator {
     pub fn describe(&self) -> String {
         let s = self.stats();
         format!(
-            "{}: |V|={} |E|={} maxdeg={} avgdeg={:.1} labels={} policy={:?} threads={} dense={}",
+            "{}: |V|={} |E|={} maxdeg={} avgdeg={:.1} labels={} policy={:?} threads={} fused={} dense={}",
             self.graph.name(),
             s.num_vertices,
             s.num_edges,
@@ -163,6 +184,7 @@ impl Coordinator {
             self.graph.num_labels(),
             self.config.policy,
             self.config.threads,
+            self.config.fused,
             self.census.is_some(),
         )
     }

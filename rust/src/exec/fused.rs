@@ -1,0 +1,388 @@
+//! Fused trie executor: matches a whole base pattern set in **one**
+//! data-graph traversal by walking the shared-prefix plan trie built by
+//! [`crate::plan::fused::FusedPlan`].
+//!
+//! Exploration per node is identical to [`super::Executor`] — sorted
+//! intersections/differences through the [`super::intersect`] kernels,
+//! per-depth candidate buffer pools, the single-edge fast path, label and
+//! injectivity filters, symmetry-breaking windows — but interior levels are
+//! computed once and reused by every pattern routed through them. Complete
+//! matches are delivered per pattern through [`FusedVisitor`]. The parallel
+//! driver mirrors [`super::parallel`]'s chunked atomic-cursor work stealing.
+
+use super::intersect;
+use super::parallel::CHUNK;
+use crate::graph::{DataGraph, VertexId};
+use crate::plan::fused::FusedPlan;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Receives every match the fused executor finds. `pattern` indexes into
+/// [`FusedPlan::plans`]; `m` is indexed by that plan's *matching-order
+/// position* (use `plans[pattern].order` to map back to pattern vertices).
+pub trait FusedVisitor {
+    fn visit(&mut self, pattern: usize, m: &[VertexId]);
+}
+
+impl<F: FnMut(usize, &[VertexId])> FusedVisitor for F {
+    fn visit(&mut self, pattern: usize, m: &[VertexId]) {
+        self(pattern, m)
+    }
+}
+
+/// Sequential fused executor state (one per thread).
+pub struct FusedExecutor<'g> {
+    graph: &'g DataGraph,
+    /// candidate buffers, one per depth
+    bufs: Vec<Vec<VertexId>>,
+    /// scratch for intermediate set ops
+    scratch: Vec<VertexId>,
+    /// current partial match (by depth)
+    partial: Vec<VertexId>,
+}
+
+impl<'g> FusedExecutor<'g> {
+    pub fn new(graph: &'g DataGraph, fused: &FusedPlan) -> Self {
+        let depth = fused.max_depth().max(1);
+        FusedExecutor {
+            graph,
+            bufs: (0..depth).map(|_| Vec::new()).collect(),
+            scratch: Vec::new(),
+            partial: vec![0; depth],
+        }
+    }
+
+    /// Explore the whole graph sequentially.
+    pub fn run(&mut self, fused: &FusedPlan, visitor: &mut impl FusedVisitor) {
+        for v in 0..self.graph.num_vertices() as VertexId {
+            self.run_from(fused, v, visitor);
+        }
+    }
+
+    /// Explore all matches of every fused pattern rooted at `v0`.
+    pub fn run_from(&mut self, fused: &FusedPlan, v0: VertexId, visitor: &mut impl FusedVisitor) {
+        for &r in &fused.roots {
+            let node = &fused.nodes[r];
+            if let Some(lab) = node.level.label {
+                if self.graph.label(v0) != lab {
+                    continue;
+                }
+            }
+            self.partial[0] = v0;
+            for &p in &node.emit {
+                // single-vertex patterns complete at the root
+                visitor.visit(p, &self.partial[..1]);
+            }
+            if self.graph.degree(v0) == 0 {
+                continue; // every child level intersects an adjacency list
+            }
+            for &c in &node.children {
+                self.descend(fused, c, 1, visitor);
+            }
+        }
+    }
+
+    fn descend(
+        &mut self,
+        fused: &FusedPlan,
+        node_idx: usize,
+        depth: usize,
+        visitor: &mut impl FusedVisitor,
+    ) {
+        let graph: &'g DataGraph = self.graph;
+        let l = &fused.nodes[node_idx].level;
+        debug_assert!(!l.intersect.is_empty());
+
+        // symmetry-breaking bounds: candidates must lie in (lo, hi)
+        let mut lo: Option<VertexId> = None;
+        for &j in &l.greater_than {
+            lo = Some(lo.map_or(self.partial[j], |b| b.max(self.partial[j])));
+        }
+        let mut hi: Option<VertexId> = None;
+        for &j in &l.less_than {
+            hi = Some(hi.map_or(self.partial[j], |b| b.min(self.partial[j])));
+        }
+
+        // Single-edge fast path — same as `Executor::descend`: iterate the
+        // sorted adjacency list directly, no buffer copy.
+        if l.intersect.len() == 1 && l.subtract.is_empty() {
+            let adj = graph.neighbors(self.partial[l.intersect[0]]);
+            let start = lo.map_or(0, |b| adj.partition_point(|&x| x <= b));
+            let end = hi.map_or(adj.len(), |b| adj.partition_point(|&x| x < b));
+            for idx in start..end {
+                let v = adj[idx];
+                if let Some(lab) = l.label {
+                    if graph.label(v) != lab {
+                        continue;
+                    }
+                }
+                if self.partial[..depth].contains(&v) {
+                    continue;
+                }
+                self.partial[depth] = v;
+                self.emit_and_recurse(fused, node_idx, depth, visitor);
+            }
+            return;
+        }
+
+        // General path: intersections (smallest adjacency list first),
+        // bound trims, then differences — shared once for every pattern
+        // routed through this node.
+        {
+            let mut buf = std::mem::take(&mut self.bufs[depth]);
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let seed = l
+                .intersect
+                .iter()
+                .copied()
+                .min_by_key(|&j| graph.degree(self.partial[j]))
+                .unwrap();
+            buf.clear();
+            buf.extend_from_slice(graph.neighbors(self.partial[seed]));
+            for &j in &l.intersect {
+                if j == seed {
+                    continue;
+                }
+                let adj = graph.neighbors(self.partial[j]);
+                scratch.clear();
+                intersect::intersect_into(&buf, adj, &mut scratch);
+                std::mem::swap(&mut buf, &mut scratch);
+            }
+            // trim to the symmetry-breaking window FIRST: differences then
+            // scan a smaller candidate list (matches `Executor::descend`)
+            if let Some(b) = lo {
+                intersect::retain_greater(&mut buf, b);
+            }
+            if let Some(b) = hi {
+                intersect::retain_less(&mut buf, b);
+            }
+            for &j in &l.subtract {
+                let adj = graph.neighbors(self.partial[j]);
+                scratch.clear();
+                intersect::difference_into(&buf, adj, &mut scratch);
+                std::mem::swap(&mut buf, &mut scratch);
+            }
+            self.bufs[depth] = buf;
+            self.scratch = scratch;
+        }
+
+        let cand_len = self.bufs[depth].len();
+        for idx in 0..cand_len {
+            let v = self.bufs[depth][idx];
+            if let Some(lab) = l.label {
+                if graph.label(v) != lab {
+                    continue;
+                }
+            }
+            if self.partial[..depth].contains(&v) {
+                continue;
+            }
+            self.partial[depth] = v;
+            self.emit_and_recurse(fused, node_idx, depth, visitor);
+        }
+    }
+
+    /// After assigning `partial[depth]`: report patterns completed at this
+    /// node, then explore its children one level deeper.
+    fn emit_and_recurse(
+        &mut self,
+        fused: &FusedPlan,
+        node_idx: usize,
+        depth: usize,
+        visitor: &mut impl FusedVisitor,
+    ) {
+        let node = &fused.nodes[node_idx];
+        for &p in &node.emit {
+            visitor.visit(p, &self.partial[..=depth]);
+        }
+        for &c in &node.children {
+            self.descend(fused, c, depth + 1, visitor);
+        }
+    }
+}
+
+/// Run a per-thread fused visitor in parallel and reduce the results —
+/// the fused counterpart of [`super::parallel::par_run`], with the same
+/// chunked atomic-cursor work stealing over first-level vertices.
+pub fn par_fused_run<A, R>(
+    graph: &DataGraph,
+    fused: &FusedPlan,
+    threads: usize,
+    make: impl Fn() -> A + Sync,
+    visit: impl Fn(&mut A, usize, &[VertexId]) + Sync,
+    reduce: R,
+) -> A
+where
+    A: Send,
+    R: Fn(A, A) -> A,
+{
+    let n = graph.num_vertices() as u32;
+    let cursor = AtomicU32::new(0);
+    let threads = threads.max(1);
+    let results = std::sync::Mutex::new(Vec::with_capacity(threads));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut acc = make();
+                let mut ex = FusedExecutor::new(graph, fused);
+                let mut vis = |i: usize, m: &[VertexId]| visit(&mut acc, i, m);
+                loop {
+                    let start = cursor.fetch_add(CHUNK, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + CHUNK).min(n);
+                    for v in start..end {
+                        ex.run_from(fused, v, &mut vis);
+                    }
+                }
+                results.lock().unwrap().push(acc);
+            });
+        }
+    });
+    let accs = results.into_inner().unwrap();
+    let mut it = accs.into_iter();
+    let first = it.next().expect("at least one worker");
+    it.fold(first, reduce)
+}
+
+/// Canonical (symmetry-broken) match counts of every fused pattern, in
+/// [`FusedPlan::plans`] order — the set-at-once counterpart of running
+/// [`super::count_matches`] per pattern, in a single traversal.
+pub fn fused_count_matches(graph: &DataGraph, fused: &FusedPlan, threads: usize) -> Vec<u64> {
+    par_fused_run(
+        graph,
+        fused,
+        threads,
+        || vec![0u64; fused.num_patterns()],
+        |acc, i, _m| acc[i] += 1,
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+            a
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::count_matches;
+    use crate::graph::generators::erdos_renyi;
+    use crate::graph::GraphBuilder;
+    use crate::morph::{self, Policy};
+    use crate::pattern::{catalog, gen, Pattern};
+    use crate::plan::cost::CostParams;
+    use crate::plan::Plan;
+    use crate::util::proptest;
+
+    fn naive_base(size: usize) -> Vec<Pattern> {
+        morph::plan_queries(
+            &catalog::motifs_vertex_induced(size),
+            Policy::Naive,
+            None,
+            &CostParams::counting(),
+        )
+        .base
+    }
+
+    fn check_against_per_pattern(g: &crate::graph::DataGraph, base: &[Pattern], threads: usize) {
+        let fused = FusedPlan::build(base, None, &CostParams::counting());
+        let counts = fused_count_matches(g, &fused, threads);
+        for (i, p) in base.iter().enumerate() {
+            assert_eq!(
+                counts[i],
+                count_matches(g, &Plan::compile(p)),
+                "{p:?} on {}v/{}e ({})",
+                g.num_vertices(),
+                g.num_edges(),
+                fused.describe()
+            );
+        }
+    }
+
+    #[test]
+    fn fused_counts_equal_per_pattern_on_random_graphs() {
+        // satellite property test: full 3- and 4-motif base sets (naive-PMR
+        // edge-induced bases AND the direct vertex-induced sets, which
+        // exercise the subtract ops) against per-pattern `count_matches`
+        proptest::check(0xF05D, 20, |rng| {
+            let n = 10 + rng.below_usize(14);
+            let m = n + rng.below_usize(3 * n);
+            let g = erdos_renyi(n, m, rng.next_u64());
+            for base in [
+                naive_base(3),
+                naive_base(4),
+                catalog::motifs_vertex_induced(3),
+                catalog::motifs_vertex_induced(4),
+            ] {
+                check_against_per_pattern(&g, &base, 1);
+            }
+        });
+    }
+
+    #[test]
+    fn fused_parallel_equals_sequential() {
+        let g = erdos_renyi(600, 3000, 17);
+        let base = gen::connected_patterns(4);
+        let fused = FusedPlan::build(&base, None, &CostParams::counting());
+        let mut seq = vec![0u64; base.len()];
+        {
+            let mut ex = FusedExecutor::new(&g, &fused);
+            let mut vis = |i: usize, _m: &[VertexId]| seq[i] += 1;
+            ex.run(&fused, &mut vis);
+        }
+        for threads in [1, 2, 4] {
+            assert_eq!(fused_count_matches(&g, &fused, threads), seq, "x{threads}");
+        }
+    }
+
+    #[test]
+    fn fused_labeled_matching() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (2, 0), (2, 3), (3, 4)])
+            .labels(vec![0, 1, 0, 1, 0])
+            .build("lab");
+        let base = vec![
+            Pattern::from_edges(2, &[(0, 1)]).with_labels(&[0, 1]),
+            catalog::path(3).with_labels(&[0, 1, 0]),
+            catalog::triangle().with_labels(&[0, 1, 0]),
+        ];
+        check_against_per_pattern(&g, &base, 2);
+    }
+
+    #[test]
+    fn fused_single_vertex_and_mixed_sizes() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)])
+            .num_vertices(6) // two isolated vertices
+            .build("k4+2");
+        let base = vec![
+            Pattern::empty(1),
+            catalog::path(3),
+            catalog::triangle(),
+            catalog::clique(4),
+        ];
+        check_against_per_pattern(&g, &base, 1);
+    }
+
+    #[test]
+    fn fused_match_positions_follow_plan_order() {
+        // wedge on a path graph: the center position must map to the data
+        // center, exactly as the per-pattern executor reports it
+        let g = GraphBuilder::new().edges(&[(5, 6), (6, 7)]).num_vertices(8).build("p");
+        let base = vec![catalog::path(3)];
+        let fused = FusedPlan::build(&base, None, &CostParams::counting());
+        let mut centers = Vec::new();
+        let mut ex = FusedExecutor::new(&g, &fused);
+        let order = fused.plans[0].order.clone();
+        let mut vis = |i: usize, m: &[VertexId]| {
+            assert_eq!(i, 0);
+            // position of pattern vertex 1 (the wedge center)
+            let pos = order.iter().position(|&pv| pv == 1).unwrap();
+            centers.push(m[pos]);
+        };
+        ex.run(&fused, &mut vis);
+        assert_eq!(centers, vec![6]);
+    }
+}

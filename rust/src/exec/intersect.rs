@@ -67,7 +67,12 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
     } else {
         let (mut i, mut j) = (0, 0);
         while i < a.len() {
-            if j >= b.len() || a[i] < b[j] {
+            if j >= b.len() {
+                // b exhausted: the rest of a survives — bulk-copy the tail
+                out.extend_from_slice(&a[i..]);
+                return;
+            }
+            if a[i] < b[j] {
                 out.push(a[i]);
                 i += 1;
             } else if a[i] > b[j] {
@@ -138,6 +143,14 @@ mod tests {
         assert_eq!(out, vec![1, 3]);
         difference_into(&[1, 2], &[], &mut out);
         assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn difference_tail_bulk_copied() {
+        // b exhausts midway through a: the tail of a must survive intact
+        let mut out = Vec::new();
+        difference_into(&[1, 2, 3, 10, 11, 12], &[2, 3], &mut out);
+        assert_eq!(out, vec![1, 10, 11, 12]);
     }
 
     #[test]

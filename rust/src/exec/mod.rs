@@ -6,6 +6,7 @@
 //! same exploration style as Peregrine. The parallel driver partitions the
 //! first level across threads ([`parallel`]).
 
+pub mod fused;
 pub mod intersect;
 pub mod parallel;
 
@@ -76,13 +77,6 @@ impl<'g> Executor<'g> {
 
     /// Explore the whole graph sequentially.
     pub fn run(&mut self, plan: &Plan, visitor: &mut impl MatchVisitor) {
-        if plan.levels.len() == 1 {
-            // degenerate single-vertex pattern
-            for v in 0..self.graph.num_vertices() as VertexId {
-                self.run_from(plan, v, visitor);
-            }
-            return;
-        }
         for v in 0..self.graph.num_vertices() as VertexId {
             self.run_from(plan, v, visitor);
         }

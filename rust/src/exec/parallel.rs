@@ -8,8 +8,9 @@ use crate::graph::{DataGraph, VertexId};
 use crate::plan::Plan;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
-/// Number of first-level vertices claimed per cursor fetch.
-const CHUNK: u32 = 64;
+/// Number of first-level vertices claimed per cursor fetch (shared with the
+/// fused driver in [`super::fused`]).
+pub(crate) const CHUNK: u32 = 64;
 
 /// Default worker count: all available parallelism.
 pub fn default_threads() -> usize {

@@ -118,6 +118,35 @@ impl GraphStats {
         }
     }
 
+    /// Stats of a nominal mid-size, mildly skewed mining graph (≈100k
+    /// vertices, avg degree 20, size-biased degree 80, clustering 0.1).
+    ///
+    /// Used when a *relative* ranking is needed but no data graph is in
+    /// scope — e.g. the fused set-planner scoring matching orders
+    /// policy-independently. Only ratios between plan costs matter, so a
+    /// plausible fixed shape is enough.
+    pub fn synthetic() -> GraphStats {
+        let n = 100_000.0;
+        let m = 1_000_000.0;
+        let deg_sum = 2.0 * m;
+        let wedges = 4.0e7;
+        let density = 2.0 * m / (n * (n - 1.0));
+        GraphStats {
+            num_vertices: n as usize,
+            num_edges: m as usize,
+            max_degree: 1000,
+            avg_degree: deg_sum / n,
+            deg_sum,
+            deg_sq_sum: 80.0 * deg_sum, // size-biased degree Σd²/Σd = 80
+            wedges,
+            density,
+            edge_prob: density,
+            avg_intersection: 2.0 * wedges / (n * n),
+            clustering: 0.1,
+            label_freq: Vec::new(),
+        }
+    }
+
     /// Frequency of `label` (1.0 for unlabeled graphs — no selectivity).
     pub fn label_prob(&self, label: u32) -> f64 {
         if self.label_freq.is_empty() {

@@ -13,6 +13,14 @@
 //!   aggregation framework (counting / enumeration / MNI support), the
 //!   morphing engine with its cost-based optimizer, and the applications
 //!   (motif counting, FSM, pattern matching, clique finding).
+//!
+//!   Multi-pattern base sets are matched by **fused co-execution** by
+//!   default: [`plan::fused`] merges the per-pattern matching plans into a
+//!   shared-prefix trie (choosing matching orders that maximize shared
+//!   connected prefixes via the [`plan::cost`] prefix-sharing term), and
+//!   [`exec::fused`] walks that trie in a single data-graph traversal —
+//!   one first-level sweep for the whole morphed base set instead of one
+//!   per pattern. Toggle with `--fused on|off` / [`morph::ExecOpts`].
 //! * **Layer 2 (python/compile/model.py)** — a dense adjacency-matrix motif
 //!   census written in JAX, AOT-lowered to HLO and executed from Rust via
 //!   PJRT ([`runtime`]). It encodes the same morphing equations in dense

@@ -4,11 +4,12 @@
 
 use super::algebra::MorphExpr;
 use super::optimizer;
-use crate::agg::{aggregate_pattern, Aggregation};
+use crate::agg::{aggregate_pattern, aggregate_patterns_fused, Aggregation};
 use crate::graph::{DataGraph, GraphStats};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
 use crate::plan::cost::CostParams;
+use crate::plan::fused::FusedPlan;
 use crate::util::timer::PhaseProfile;
 use std::collections::HashMap;
 
@@ -116,11 +117,34 @@ pub fn naive_expr(q: &Pattern) -> MorphExpr {
     }
 }
 
-/// Execute a morph plan: match every base pattern once (full-match-set
-/// aggregation), then convert per query via Theorem 3.2.
+/// How a morph plan's base set is matched — see [`execute_opts`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecOpts {
+    /// Worker threads for the matcher.
+    pub threads: usize,
+    /// Fuse the base pattern set into one shared-prefix trie traversal
+    /// ([`FusedPlan`]) instead of one full sweep per base pattern. Ignored
+    /// (per-pattern path) when the base set has fewer than two patterns.
+    pub fused: bool,
+}
+
+impl ExecOpts {
+    /// Default options: fused co-execution on.
+    pub fn new(threads: usize) -> ExecOpts {
+        ExecOpts {
+            threads,
+            fused: true,
+        }
+    }
+}
+
+/// Execute a morph plan: match every base pattern (full-match-set
+/// aggregation), then convert per query via Theorem 3.2. Matching defaults
+/// to fused co-execution — see [`execute_opts`].
 ///
 /// Phase timings are accumulated into `profile` under `"match"` and
-/// `"convert"` (the Figure-2 breakdown).
+/// `"convert"` (the Figure-2 breakdown), plus `"fuse"` for set-plan
+/// construction on the fused path.
 pub fn execute<A: Aggregation>(
     graph: &DataGraph,
     plan: &MorphPlan,
@@ -128,10 +152,39 @@ pub fn execute<A: Aggregation>(
     threads: usize,
     profile: &mut PhaseProfile,
 ) -> Vec<A::Value> {
+    execute_opts(graph, plan, agg, ExecOpts::new(threads), profile)
+}
+
+/// [`execute`] with explicit execution options.
+///
+/// With `opts.fused` and a multi-pattern base set, the base patterns are
+/// compiled into one prefix-sharing plan trie and matched in a **single
+/// traversal** of the data graph (the fused path is policy-independent:
+/// it applies to whatever base set the morph plan produced). Otherwise
+/// each base pattern is matched with its own sweep.
+pub fn execute_opts<A: Aggregation>(
+    graph: &DataGraph,
+    plan: &MorphPlan,
+    agg: &A,
+    opts: ExecOpts,
+    profile: &mut PhaseProfile,
+) -> Vec<A::Value> {
     let mut values: HashMap<CanonKey, A::Value> = HashMap::new();
-    for p in &plan.base {
-        let v = profile.time("match", || aggregate_pattern(graph, p, agg, threads));
-        values.insert(p.canonical_key(), v);
+    if opts.fused && plan.base.len() > 1 {
+        let fused = profile.time("fuse", || {
+            FusedPlan::build(&plan.base, None, &CostParams::counting())
+        });
+        let vals = profile.time("match", || {
+            aggregate_patterns_fused(graph, &fused, agg, opts.threads)
+        });
+        for (p, v) in plan.base.iter().zip(vals) {
+            values.insert(p.canonical_key(), v);
+        }
+    } else {
+        for p in &plan.base {
+            let v = profile.time("match", || aggregate_pattern(graph, p, agg, opts.threads));
+            values.insert(p.canonical_key(), v);
+        }
     }
     plan.exprs
         .iter()
@@ -259,6 +312,44 @@ mod tests {
         let _ = execute(&g, &plan, &crate::agg::CountAgg, 1, &mut prof);
         assert!(prof.get("match") > std::time::Duration::ZERO);
         assert!(prof.get("convert") > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn fused_execute_matches_per_pattern_path() {
+        let g = erdos_renyi(60, 240, 26);
+        let plan = plan_queries(
+            &catalog::motifs_vertex_induced(4),
+            Policy::Naive,
+            None,
+            &CostParams::counting(),
+        );
+        assert!(plan.base.len() > 1);
+        let mut prof_fused = PhaseProfile::new();
+        let mut prof_per = PhaseProfile::new();
+        let agg = crate::agg::CountAgg;
+        let fused = execute_opts(
+            &g,
+            &plan,
+            &agg,
+            ExecOpts {
+                threads: 2,
+                fused: true,
+            },
+            &mut prof_fused,
+        );
+        let per = execute_opts(
+            &g,
+            &plan,
+            &agg,
+            ExecOpts {
+                threads: 2,
+                fused: false,
+            },
+            &mut prof_per,
+        );
+        assert_eq!(fused, per);
+        assert!(prof_fused.get("fuse") > std::time::Duration::ZERO);
+        assert_eq!(prof_per.get("fuse"), std::time::Duration::ZERO);
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod engine;
 pub mod optimizer;
 
 pub use algebra::{MorphExpr, Term};
-pub use engine::{execute, plan_queries, MorphPlan, Policy};
+pub use engine::{execute, execute_opts, plan_queries, ExecOpts, MorphPlan, Policy};

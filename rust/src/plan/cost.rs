@@ -69,9 +69,22 @@ impl CostParams {
 ///
 /// Returns abstract work units; comparable across plans on the same graph.
 pub fn estimate(plan: &Plan, stats: &GraphStats, params: &CostParams) -> f64 {
+    level_costs(plan, stats, params).iter().sum()
+}
+
+/// Per-level work attribution of [`estimate`]: `out[i]` is the expected
+/// set-operation work at level `i`, with the match-emit + aggregation cost
+/// of complete matches folded into the last level (so the vector sums to
+/// [`estimate`]).
+///
+/// This is the **prefix-sharing term** of the fused set-planner
+/// ([`super::fused`]): levels an order candidate shares with an existing
+/// plan-trie prefix are executed once for the whole pattern set, so their
+/// cost is subtracted from the candidate's score.
+pub fn level_costs(plan: &Plan, stats: &GraphStats, params: &CostParams) -> Vec<f64> {
     let n = stats.num_vertices as f64;
     if n == 0.0 {
-        return 0.0;
+        return vec![0.0; plan.levels.len()];
     }
     let d = stats.avg_degree.max(1e-9);
     // Size-biased degree (Σd² / Σd): exploration reaches vertices through
@@ -91,8 +104,7 @@ pub fn estimate(plan: &Plan, stats: &GraphStats, params: &CostParams) -> f64 {
     let shrink = (closed / db).min(1.0);
 
     let mut partials = 1.0; // expected partial matches before level 0
-    let mut work = 0.0;
-    let mut sym_divisor = 1.0; // accumulated symmetry-breaking reduction
+    let mut out = Vec::with_capacity(plan.levels.len());
 
     for (i, level) in plan.levels.iter().enumerate() {
         // candidate-set size before constraints
@@ -131,12 +143,11 @@ pub fn estimate(plan: &Plan, stats: &GraphStats, params: &CostParams) -> f64 {
             let sub_work = (level.subtract.len() as f64) * cand * params.subtract_unit;
             partials * (inter_work + sub_work)
         };
-        work += level_work;
+        out.push(level_work);
 
         // symmetry constraints halve the surviving candidates each (on
         // average, for uniform ids)
         let sym_keep = 0.5f64.powi((level.greater_than.len() + level.less_than.len()) as i32);
-        sym_divisor *= sym_keep;
 
         let next = if i == 0 {
             n * label_p * sym_keep
@@ -146,10 +157,11 @@ pub fn estimate(plan: &Plan, stats: &GraphStats, params: &CostParams) -> f64 {
         partials = next.max(0.0);
     }
 
-    // final matches emit + aggregate
-    work += partials * (params.match_emit + params.agg_per_match);
-    let _ = sym_divisor;
-    work
+    // final matches emit + aggregate, attributed to the deepest level
+    if let Some(last) = out.last_mut() {
+        *last += partials * (params.match_emit + params.agg_per_match);
+    }
+    out
 }
 
 /// Convenience: estimated number of (canonical) matches of the plan's
@@ -239,6 +251,25 @@ mod tests {
         let m1 = estimate_matches(&plan, &stats(&g1));
         let m2 = estimate_matches(&plan, &stats(&g2));
         assert!(m2 > m1 * 8.0, "triangles grow ~d^3: {m1} -> {m2}");
+    }
+
+    #[test]
+    fn level_costs_sum_to_estimate() {
+        let g = erdos_renyi(1000, 5_000, 6);
+        let s = stats(&g);
+        for p in [
+            catalog::triangle(),
+            catalog::cycle(4).vertex_induced(),
+            catalog::clique(4),
+        ] {
+            let plan = Plan::compile(&p);
+            let lv = level_costs(&plan, &s, &CostParams::counting());
+            assert_eq!(lv.len(), plan.levels.len());
+            let sum: f64 = lv.iter().sum();
+            let est = estimate(&plan, &s, &CostParams::counting());
+            assert!((sum - est).abs() <= 1e-9 * est.max(1.0), "{sum} vs {est}");
+            assert!(lv.iter().all(|&c| c >= 0.0), "{lv:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Set-plan compiler: fuses the matching plans of a whole base pattern set
+//! into a **prefix-sharing trie** so the executor matches every pattern in
+//! one data-graph traversal instead of one sweep per pattern.
+//!
+//! Pattern morphing's base sets share substructure by construction — the
+//! morphed 4-motif set shares wedge/triangle prefixes across essentially
+//! every pattern — so exploring those prefixes once amortizes the dominant
+//! intersection cost across the set (the inter-pattern analogue of the
+//! paper's intra-query reuse; cf. the Geo query-rewrite framework in
+//! PAPERS.md).
+//!
+//! Construction:
+//! 1. For each pattern, enumerate candidate matching orders (every order
+//!    whose prefixes stay edge-connected, capped per size).
+//! 2. Score each candidate with [`cost::level_costs`], discounting the
+//!    levels it shares with the trie built so far — the prefix-sharing
+//!    term. Shared levels run once for the whole set, so a candidate pays
+//!    only for its unshared suffix.
+//! 3. Insert the cheapest candidate; patterns are inserted largest-first so
+//!    big plans anchor the trie and smaller ones nest into their prefixes.
+//!
+//! Interior nodes hold one [`Level`] of set operations (shared verbatim by
+//! every pattern routed through them); each pattern's plan terminates at
+//! the node where its final level lives, recorded in `emit`. The trie is
+//! walked by [`crate::exec::fused::FusedExecutor`].
+
+use super::cost::{self, CostParams};
+use super::{symmetry, Level, Plan};
+use crate::graph::GraphStats;
+use crate::pattern::Pattern;
+use std::cmp::Reverse;
+
+/// Cap on enumerated candidate orders per pattern. Small patterns are
+/// enumerated exhaustively; for ≥7 vertices only the default (greedy)
+/// order is used — at that size per-pattern cost dwarfs prefix savings.
+fn order_cap(n: usize) -> usize {
+    match n {
+        0..=5 => 128,
+        6 => 48,
+        _ => 1,
+    }
+}
+
+/// One node of the fused plan trie: a level of set operations shared by
+/// every pattern whose chosen plan routes through it.
+#[derive(Clone, Debug)]
+pub struct FusedNode {
+    /// Set operations of this level (identical for all sharing patterns).
+    pub level: Level,
+    /// Nodes of the next level reached from this one.
+    pub children: Vec<usize>,
+    /// Patterns (indices into [`FusedPlan::plans`]) whose plan's final
+    /// level is this node — a full match of that pattern is complete here.
+    pub emit: Vec<usize>,
+}
+
+/// A fused multi-pattern plan: per-pattern [`Plan`]s plus the shared trie.
+#[derive(Clone, Debug)]
+pub struct FusedPlan {
+    /// Per-pattern plans, aligned with the input pattern slice.
+    pub plans: Vec<Plan>,
+    /// Flat node storage; `roots` and `children` index into it.
+    pub nodes: Vec<FusedNode>,
+    /// Depth-0 nodes — one per distinct level-0 op set, so a single root
+    /// (= a single first-level sweep) for unlabeled pattern sets.
+    pub roots: Vec<usize>,
+}
+
+impl FusedPlan {
+    /// Build a fused plan for `patterns`. `stats` steers the order scoring
+    /// when available; without them a [`GraphStats::synthetic`] shape is
+    /// used, so fusing is independent of the morphing policy.
+    pub fn build(
+        patterns: &[Pattern],
+        stats: Option<&GraphStats>,
+        params: &CostParams,
+    ) -> FusedPlan {
+        let synthetic;
+        let stats = match stats {
+            Some(s) => s,
+            None => {
+                synthetic = GraphStats::synthetic();
+                &synthetic
+            }
+        };
+        let mut fused = FusedPlan {
+            plans: Vec::new(),
+            nodes: Vec::new(),
+            roots: Vec::new(),
+        };
+        let mut chosen: Vec<Option<Plan>> = vec![None; patterns.len()];
+        // biggest patterns first: their long plans anchor the trie
+        let mut insert_order: Vec<usize> = (0..patterns.len()).collect();
+        insert_order.sort_by_key(|&i| {
+            (
+                Reverse(patterns[i].num_vertices()),
+                patterns[i].canonical_key(),
+            )
+        });
+        for &i in &insert_order {
+            let mut best: Option<(f64, Plan)> = None;
+            for plan in candidate_plans(&patterns[i]) {
+                let costs = cost::level_costs(&plan, stats, params);
+                let total: f64 = costs.iter().sum();
+                let shared = fused.shared_prefix_len(&plan.levels);
+                let saved: f64 = costs[..shared].iter().sum();
+                let score = total - saved;
+                let better = match &best {
+                    None => true,
+                    Some((b, _)) => score < *b,
+                };
+                if better {
+                    best = Some((score, plan));
+                }
+            }
+            let (_, plan) = best.expect("at least the default-order candidate");
+            fused.insert(i, &plan);
+            chosen[i] = Some(plan);
+        }
+        fused.plans = chosen
+            .into_iter()
+            .map(|p| p.expect("every pattern planned"))
+            .collect();
+        fused
+    }
+
+    /// Longest trie prefix whose level ops match `levels` exactly.
+    fn shared_prefix_len(&self, levels: &[Level]) -> usize {
+        let mut cur: Option<usize> = None;
+        let mut len = 0;
+        for level in levels {
+            let next = {
+                let slot = match cur {
+                    None => &self.roots,
+                    Some(p) => &self.nodes[p].children,
+                };
+                slot.iter().copied().find(|&c| self.nodes[c].level == *level)
+            };
+            match next {
+                Some(c) => {
+                    cur = Some(c);
+                    len += 1;
+                }
+                None => break,
+            }
+        }
+        len
+    }
+
+    /// Route `plan` through the trie, reusing equal-op prefixes and
+    /// creating nodes for the unshared suffix.
+    fn insert(&mut self, pattern_idx: usize, plan: &Plan) {
+        let mut cur: Option<usize> = None;
+        for level in &plan.levels {
+            let found = {
+                let slot = match cur {
+                    None => &self.roots,
+                    Some(p) => &self.nodes[p].children,
+                };
+                slot.iter().copied().find(|&c| self.nodes[c].level == *level)
+            };
+            let node = match found {
+                Some(c) => c,
+                None => {
+                    let id = self.nodes.len();
+                    self.nodes.push(FusedNode {
+                        level: level.clone(),
+                        children: Vec::new(),
+                        emit: Vec::new(),
+                    });
+                    match cur {
+                        None => self.roots.push(id),
+                        Some(p) => self.nodes[p].children.push(id),
+                    }
+                    id
+                }
+            };
+            cur = Some(node);
+        }
+        self.nodes[cur.expect("plans have at least one level")]
+            .emit
+            .push(pattern_idx);
+    }
+
+    /// Number of fused patterns.
+    pub fn num_patterns(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// How many whole-graph first-level sweeps the fused executor performs
+    /// (the per-pattern path performs one per pattern).
+    pub fn first_level_traversals(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Total levels across the per-pattern plans — what the per-pattern
+    /// path executes.
+    pub fn total_plan_levels(&self) -> usize {
+        self.plans.iter().map(|p| p.levels.len()).sum()
+    }
+
+    /// Plan levels eliminated by trie sharing.
+    pub fn shared_levels(&self) -> usize {
+        self.total_plan_levels() - self.nodes.len()
+    }
+
+    /// Deepest plan length (executor buffer count).
+    pub fn max_depth(&self) -> usize {
+        self.plans.iter().map(|p| p.levels.len()).max().unwrap_or(0)
+    }
+
+    /// One-line sharing summary for reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "fused {} patterns: {} trie nodes for {} plan levels ({} shared), {} first-level sweep(s)",
+            self.num_patterns(),
+            self.nodes.len(),
+            self.total_plan_levels(),
+            self.shared_levels(),
+            self.first_level_traversals(),
+        )
+    }
+}
+
+/// Candidate plans for one pattern: the default greedy order first, then
+/// every edge-connected order up to the size cap. Symmetry conditions and
+/// |Aut| are order-independent — computed once, reused by every candidate.
+fn candidate_plans(p: &Pattern) -> Vec<Plan> {
+    let default = Plan::compile(p);
+    let conds = symmetry::breaking_conditions(p);
+    let aut_count = default.aut_count;
+    let mut plans = Vec::with_capacity(8);
+    for order in connected_orders(p, order_cap(p.num_vertices())) {
+        if order == default.order {
+            continue;
+        }
+        plans.push(Plan::with_order_and_conds(p, order, &conds, aut_count));
+    }
+    plans.insert(0, default);
+    plans
+}
+
+/// Enumerate matching orders whose every prefix is edge-connected, in
+/// lexicographic vertex order, stopping at `cap`.
+fn connected_orders(p: &Pattern, cap: usize) -> Vec<Vec<usize>> {
+    fn rec(p: &Pattern, order: &mut Vec<usize>, out: &mut Vec<Vec<usize>>, cap: usize) {
+        if out.len() >= cap {
+            return;
+        }
+        let n = p.num_vertices();
+        if order.len() == n {
+            out.push(order.clone());
+            return;
+        }
+        for v in 0..n {
+            if order.contains(&v) {
+                continue;
+            }
+            if !order.is_empty() && !order.iter().any(|&u| p.has_edge(u, v)) {
+                continue;
+            }
+            order.push(v);
+            rec(p, order, out, cap);
+            order.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(p, &mut Vec::with_capacity(p.num_vertices()), &mut out, cap);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::{catalog, gen};
+
+    fn counting() -> CostParams {
+        CostParams::counting()
+    }
+
+    #[test]
+    fn motif_base_set_shares_one_root() {
+        // the 6 connected 4-vertex edge-induced patterns — the naive-PMR
+        // base set for 4-motif counting
+        let base = gen::connected_patterns(4);
+        assert_eq!(base.len(), 6);
+        let fused = FusedPlan::build(&base, None, &counting());
+        assert_eq!(fused.num_patterns(), 6);
+        assert_eq!(
+            fused.first_level_traversals(),
+            1,
+            "unlabeled sets share the level-0 sweep: {}",
+            fused.describe()
+        );
+        assert!(
+            fused.shared_levels() > 0,
+            "4-motif plans must share interior levels: {}",
+            fused.describe()
+        );
+        assert!(fused.nodes.len() < fused.total_plan_levels());
+    }
+
+    #[test]
+    fn plans_stay_aligned_with_input_order() {
+        let base = vec![
+            catalog::cycle(4),
+            catalog::triangle(),
+            catalog::clique(4),
+            catalog::path(3),
+        ];
+        let fused = FusedPlan::build(&base, None, &counting());
+        for (p, plan) in base.iter().zip(&fused.plans) {
+            assert_eq!(p.canonical_key(), plan.pattern.canonical_key());
+            assert_eq!(plan.order.len(), p.num_vertices());
+        }
+    }
+
+    #[test]
+    fn every_pattern_emits_exactly_once() {
+        let base = catalog::motifs_vertex_induced(4);
+        let fused = FusedPlan::build(&base, None, &counting());
+        let mut seen = vec![0usize; base.len()];
+        for node in &fused.nodes {
+            for &i in &node.emit {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "emits: {seen:?}");
+    }
+
+    #[test]
+    fn emit_depth_matches_plan_length() {
+        let base = vec![catalog::triangle(), catalog::path(3), Pattern::empty(1)];
+        let fused = FusedPlan::build(&base, None, &counting());
+        // walk the trie, recording each emit's depth
+        fn walk(f: &FusedPlan, node: usize, depth: usize, out: &mut Vec<(usize, usize)>) {
+            for &i in &f.nodes[node].emit {
+                out.push((i, depth + 1));
+            }
+            for &c in &f.nodes[node].children {
+                walk(f, c, depth + 1, out);
+            }
+        }
+        let mut emits = Vec::new();
+        for &r in &fused.roots {
+            walk(&fused, r, 0, &mut emits);
+        }
+        assert_eq!(emits.len(), base.len());
+        for (i, depth) in emits {
+            assert_eq!(depth, fused.plans[i].levels.len(), "pattern {i}");
+        }
+    }
+
+    #[test]
+    fn labeled_level0_splits_roots() {
+        let a = Pattern::from_edges(2, &[(0, 1)]).with_labels(&[0, 1]);
+        let b = Pattern::from_edges(2, &[(0, 1)]).with_labels(&[2, 3]);
+        let fused = FusedPlan::build(&[a, b], None, &counting());
+        assert_eq!(fused.first_level_traversals(), 2);
+    }
+
+    #[test]
+    fn connected_orders_are_connected_and_capped() {
+        let p = catalog::tailed_triangle();
+        let orders = connected_orders(&p, 1000);
+        assert!(!orders.is_empty());
+        for o in &orders {
+            for i in 1..o.len() {
+                assert!(
+                    o[..i].iter().any(|&u| p.has_edge(u, o[i])),
+                    "disconnected prefix in {o:?}"
+                );
+            }
+        }
+        let capped = connected_orders(&p, 3);
+        assert_eq!(capped.len(), 3);
+    }
+}

@@ -9,13 +9,18 @@
 //! matched exactly once (see [`symmetry`]).
 
 pub mod cost;
+pub mod fused;
 pub mod symmetry;
 
 use crate::graph::Label;
 use crate::pattern::{iso, Pattern};
 
 /// Per-level operations of a matching plan.
-#[derive(Clone, Debug)]
+///
+/// Equality compares the full op set (intersections, subtractions, label,
+/// symmetry bounds) — two plans whose leading levels are equal can share
+/// those levels' candidate computation in a fused plan trie ([`fused`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Level {
     /// Positions `j < i` (in matching order) whose mapped vertex's adjacency
     /// list must be intersected (pattern edge).
@@ -54,20 +59,40 @@ impl Plan {
     /// automorphic image of a subgraph is produced — used by tests and by
     /// the MNI aggregation which needs per-position domains).
     pub fn compile_opts(pattern: &Pattern, break_symmetry: bool) -> Plan {
-        assert!(pattern.is_connected(), "cannot plan a disconnected pattern");
-        let n = pattern.num_vertices();
-        let order = choose_order(pattern);
-        // pos_of[v] = level index of pattern vertex v
-        let mut pos_of = vec![usize::MAX; n];
-        for (i, &v) in order.iter().enumerate() {
-            pos_of[v] = i;
-        }
+        Plan::compile_with_order(pattern, choose_order(pattern), break_symmetry)
+    }
 
+    /// Compile with an explicit matching order (`order[i]` = pattern vertex
+    /// explored at level `i`; every prefix must stay edge-connected). The
+    /// fused set-planner ([`fused`]) uses this to trade the locally-cheapest
+    /// order for cross-pattern prefix sharing.
+    pub fn compile_with_order(pattern: &Pattern, order: Vec<usize>, break_symmetry: bool) -> Plan {
         let conds = if break_symmetry {
             symmetry::breaking_conditions(pattern)
         } else {
             Vec::new()
         };
+        let aut_count = iso::automorphisms(pattern).len();
+        Plan::with_order_and_conds(pattern, order, &conds, aut_count)
+    }
+
+    /// Compile with precomputed symmetry conditions and |Aut| — both are
+    /// order-independent pattern properties, so the fused set-planner can
+    /// score many candidate orders of one pattern without recomputing them.
+    pub(crate) fn with_order_and_conds(
+        pattern: &Pattern,
+        order: Vec<usize>,
+        conds: &[(usize, usize)],
+        aut_count: usize,
+    ) -> Plan {
+        assert!(pattern.is_connected(), "cannot plan a disconnected pattern");
+        let n = pattern.num_vertices();
+        assert_eq!(order.len(), n, "order must cover every pattern vertex");
+        // pos_of[v] = level index of pattern vertex v
+        let mut pos_of = vec![usize::MAX; n];
+        for (i, &v) in order.iter().enumerate() {
+            pos_of[v] = i;
+        }
 
         let mut levels = Vec::with_capacity(n);
         for (i, &v) in order.iter().enumerate() {
@@ -86,7 +111,7 @@ impl Plan {
             // at the later of the two levels
             let mut greater_than = Vec::new();
             let mut less_than = Vec::new();
-            for &(a, b) in &conds {
+            for &(a, b) in conds {
                 // constraint: m[a] < m[b]
                 if b == v && pos_of[a] < i {
                     greater_than.push(pos_of[a]);
@@ -117,7 +142,7 @@ impl Plan {
             pattern: pattern.clone(),
             order,
             levels,
-            aut_count: iso::automorphisms(pattern).len(),
+            aut_count,
         }
     }
 }
@@ -202,6 +227,19 @@ mod tests {
         for (i, &v) in plan.order.iter().enumerate() {
             assert_eq!(plan.levels[i].label, Some(p.label(v)));
         }
+    }
+
+    #[test]
+    fn compile_with_explicit_order() {
+        let p = catalog::tailed_triangle();
+        // 2 is the degree-3 vertex; [2, 0, 1, 3] keeps every prefix connected
+        let plan = Plan::compile_with_order(&p, vec![2, 0, 1, 3], true);
+        assert_eq!(plan.order, vec![2, 0, 1, 3]);
+        for l in plan.levels.iter().skip(1) {
+            assert!(!l.intersect.is_empty());
+        }
+        // |Aut| is a pattern property, not an order property
+        assert_eq!(plan.aut_count, Plan::compile(&p).aut_count);
     }
 
     #[test]

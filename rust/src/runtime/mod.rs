@@ -6,6 +6,12 @@
 //! startup and serves census requests from the mining coordinator.
 
 mod census;
+/// Offline stand-in for the `xla` crate (see the module docs in
+/// `xla_stub.rs`): same API surface, every entry point errors at
+/// `PjRtClient::cpu`. Remove this declaration and add the real dependency
+/// when `xla_extension` is available.
+#[path = "xla_stub.rs"]
+mod xla;
 
 pub use census::{census_motifs3, census_motifs4, CensusBackend, CensusResult, CENSUS_OUTPUTS};
 

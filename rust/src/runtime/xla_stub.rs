@@ -1,0 +1,97 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The dense census backend is written against the `xla` crate's PJRT API,
+//! but that crate (and its `xla_extension` native library) is not available
+//! in this build environment. This module mirrors the handful of types and
+//! methods [`super`] uses so the crate always compiles; every entry point
+//! fails at [`PjRtClient::cpu`] with a clear error, which the coordinator
+//! surfaces as "dense backend unavailable" and falls back to the sparse
+//! matcher. Swap this module for the real crate by deleting the `mod xla`
+//! declaration in `runtime/mod.rs` and adding the dependency.
+
+/// Error raised by every stubbed PJRT entry point.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT runtime unavailable: built with the offline xla stub (no xla_extension library)"
+            .to_string(),
+    )
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f64]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end checks of fused multi-pattern co-execution: the fused trie
+//! executor must produce exactly the counts of the per-pattern path for
+//! whole morphed base sets, across policies, applications and aggregations.
+
+use morphmine::apps;
+use morphmine::exec::count_matches;
+use morphmine::exec::fused::fused_count_matches;
+use morphmine::graph::generators::{assign_labels, erdos_renyi};
+use morphmine::morph::{self, Policy};
+use morphmine::pattern::catalog;
+use morphmine::plan::cost::CostParams;
+use morphmine::plan::fused::FusedPlan;
+use morphmine::plan::Plan;
+
+#[test]
+fn fused_base_set_counts_equal_individual_plans() {
+    let g = erdos_renyi(120, 540, 91);
+    for size in [3, 4] {
+        let base = morph::plan_queries(
+            &catalog::motifs_vertex_induced(size),
+            Policy::Naive,
+            None,
+            &CostParams::counting(),
+        )
+        .base;
+        let fused = FusedPlan::build(&base, None, &CostParams::counting());
+        assert!(
+            fused.first_level_traversals() < base.len(),
+            "{}",
+            fused.describe()
+        );
+        let counts = fused_count_matches(&g, &fused, 2);
+        for (i, p) in base.iter().enumerate() {
+            assert_eq!(counts[i], count_matches(&g, &Plan::compile(p)), "{p:?}");
+        }
+    }
+}
+
+#[test]
+fn motif_counts_invariant_under_fusing() {
+    let g = erdos_renyi(70, 300, 92);
+    for policy in [Policy::Off, Policy::Naive, Policy::CostBased] {
+        let on = apps::count_motifs_opts(
+            &g,
+            4,
+            policy,
+            morph::ExecOpts {
+                threads: 2,
+                fused: true,
+            },
+        );
+        let off = apps::count_motifs_opts(
+            &g,
+            4,
+            policy,
+            morph::ExecOpts {
+                threads: 2,
+                fused: false,
+            },
+        );
+        for ((p, a), (_, b)) in on.counts.iter().zip(off.counts.iter()) {
+            assert_eq!(a, b, "{policy:?} {p:?}");
+        }
+    }
+}
+
+#[test]
+fn match_patterns_invariant_under_fusing() {
+    let g = erdos_renyi(80, 340, 93);
+    let queries = vec![
+        catalog::cycle(4),
+        catalog::diamond().vertex_induced(),
+        catalog::tailed_triangle(),
+        catalog::house().vertex_induced(),
+    ];
+    let on = apps::match_patterns_opts(
+        &g,
+        &queries,
+        Policy::Naive,
+        morph::ExecOpts {
+            threads: 2,
+            fused: true,
+        },
+    );
+    let off = apps::match_patterns_opts(
+        &g,
+        &queries,
+        Policy::Naive,
+        morph::ExecOpts {
+            threads: 2,
+            fused: false,
+        },
+    );
+    assert_eq!(on.counts, off.counts);
+}
+
+#[test]
+fn fsm_invariant_under_fusing() {
+    let g = assign_labels(erdos_renyi(60, 220, 94), 3, 1.3, 95);
+    let run = |fused: bool| {
+        apps::fsm(
+            &g,
+            &apps::FsmConfig {
+                max_edges: 3,
+                support: 3,
+                policy: Policy::Naive,
+                threads: 2,
+                fused,
+            },
+        )
+    };
+    let on = run(true);
+    let off = run(false);
+    let norm = |r: &apps::FsmResult| {
+        let mut v: Vec<_> = r
+            .frequent
+            .iter()
+            .map(|(p, s)| (p.canonical_key(), *s))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(norm(&on), norm(&off));
+}
