@@ -48,6 +48,15 @@ pub fn fsm(graph: &DataGraph, cfg: &FsmConfig) -> FsmResult {
     assert!(cfg.max_edges >= 1);
     let mut profile = PhaseProfile::new();
 
+    // graph statistics are level-invariant: compute once and share across
+    // every level's cost-based PMR and fused order selection (the Off
+    // policy matches per pattern and needs neither)
+    let stats = if cfg.policy == Policy::CostBased || (cfg.fused && cfg.policy != Policy::Off) {
+        Some(profile.time("stats", || GraphStats::compute(graph, 2000, 0xF53)))
+    } else {
+        None
+    };
+
     // ---- level 1: frequent single edges -------------------------------
     let mut edge_domains: HashMap<(Label, Label), (HashMap<VertexId, ()>, HashMap<VertexId, ()>)> =
         HashMap::new();
@@ -95,7 +104,7 @@ pub fn fsm(graph: &DataGraph, cfg: &FsmConfig) -> FsmResult {
         cand_list.sort_by_key(|p| p.canonical_key());
 
         // support computation (optionally morphed)
-        let supports = compute_supports(graph, &cand_list, cfg, &mut profile);
+        let supports = compute_supports(graph, &cand_list, cfg, stats.as_ref(), &mut profile);
         let mut next: Vec<(Pattern, u64)> = cand_list
             .into_iter()
             .zip(supports)
@@ -141,10 +150,13 @@ fn extensions(p: &Pattern, num_labels: u32) -> Vec<Pattern> {
 }
 
 /// MNI supports for a candidate list, through the morphing engine.
+/// `stats` are the caller's level-invariant graph statistics (shared by
+/// cost-based PMR and fused order selection).
 fn compute_supports(
     graph: &DataGraph,
     cands: &[Pattern],
     cfg: &FsmConfig,
+    stats: Option<&GraphStats>,
     profile: &mut PhaseProfile,
 ) -> Vec<u64> {
     if cands.is_empty() {
@@ -172,10 +184,8 @@ fn compute_supports(
             for (i, p) in cands.iter().enumerate() {
                 by_size.entry(p.num_vertices()).or_default().push(i);
             }
-            let stats;
             let stats_ref = if cfg.policy == Policy::CostBased {
-                stats = profile.time("stats", || GraphStats::compute(graph, 2000, 0xF53));
-                Some(&stats)
+                stats
             } else {
                 None
             };
@@ -185,10 +195,10 @@ fn compute_supports(
                     morph::plan_queries(&queries, cfg.policy, stats_ref, &CostParams::mni(size))
                 });
                 let agg = MniAgg { n: size };
-                let opts = morph::ExecOpts {
-                    threads: cfg.threads,
-                    fused: cfg.fused,
-                };
+                let mut opts = morph::ExecOpts::new(cfg.threads).with_fused(cfg.fused);
+                if let Some(s) = stats {
+                    opts = opts.with_stats(s.clone());
+                }
                 let tables = morph::execute_opts(graph, &plan, &agg, opts, profile);
                 for (t, &i) in tables.iter().zip(&idxs) {
                     t.assert_consistent();

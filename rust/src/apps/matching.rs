@@ -41,10 +41,15 @@ pub fn match_patterns_opts(
     opts: morph::ExecOpts,
 ) -> MatchResult {
     let mut profile = PhaseProfile::new();
-    let stats;
+    // one stats instance serves cost-based PMR and fused order selection:
+    // reuse the caller's (e.g. the coordinator's cached stats), else
+    // compute once and let it ride along in the options
+    let mut opts = opts;
+    if policy == Policy::CostBased && opts.stats.is_none() {
+        opts.stats = Some(profile.time("stats", || GraphStats::compute(graph, 2000, 0x3A7C4)));
+    }
     let stats_ref = if policy == Policy::CostBased {
-        stats = profile.time("stats", || GraphStats::compute(graph, 2000, 0x3A7C4));
-        Some(&stats)
+        opts.stats.as_ref()
     } else {
         None
     };
@@ -70,7 +75,9 @@ pub fn match_patterns_opts(
 }
 
 /// Enumerate unique matches (as sorted vertex sets per unique subgraph) of a
-/// single query. Materializes all matches — small graphs only.
+/// single query, reported in **original** vertex IDs (the inverse of any
+/// degree-ordered relabeling applied at graph build time). Materializes all
+/// matches — small graphs only.
 pub fn enumerate_pattern(
     graph: &DataGraph,
     query: &Pattern,
@@ -94,7 +101,17 @@ pub fn enumerate_pattern(
     let values = morph::execute(graph, &plan, &EnumerateAgg, threads, &mut profile);
     let ms = &values[0];
     ms.assert_consistent();
-    ms.unique_subgraphs()
+    let mut subs: Vec<Vec<VertexId>> = ms
+        .unique_subgraphs()
+        .into_iter()
+        .map(|s| {
+            let mut orig: Vec<VertexId> = s.iter().map(|&v| graph.original_id(v)).collect();
+            orig.sort_unstable();
+            orig
+        })
+        .collect();
+    subs.sort();
+    subs
 }
 
 #[cfg(test)]

@@ -61,12 +61,16 @@ pub fn count_motifs_opts(
     let motifs = catalog::motifs_vertex_induced(size);
     let mut profile = PhaseProfile::new();
 
-    let stats;
-    let stats_ref = if policy == Policy::CostBased {
-        stats = profile.time("stats", || {
+    // one stats instance serves cost-based PMR and fused order selection:
+    // reuse the caller's when supplied, else compute once
+    let mut opts = opts;
+    if policy == Policy::CostBased && opts.stats.is_none() {
+        opts.stats = Some(profile.time("stats", || {
             crate::graph::GraphStats::compute(graph, 2000, 0x3077F)
-        });
-        Some(&stats)
+        }));
+    }
+    let stats_ref = if policy == Policy::CostBased {
+        opts.stats.as_ref()
     } else {
         None
     };
@@ -143,24 +147,8 @@ mod tests {
     fn fused_toggle_agrees() {
         let g = erdos_renyi(60, 260, 44);
         for policy in [Policy::Off, Policy::Naive] {
-            let on = count_motifs_opts(
-                &g,
-                4,
-                policy,
-                morph::ExecOpts {
-                    threads: 2,
-                    fused: true,
-                },
-            );
-            let off = count_motifs_opts(
-                &g,
-                4,
-                policy,
-                morph::ExecOpts {
-                    threads: 2,
-                    fused: false,
-                },
-            );
+            let on = count_motifs_opts(&g, 4, policy, morph::ExecOpts::new(2));
+            let off = count_motifs_opts(&g, 4, policy, morph::ExecOpts::new(2).with_fused(false));
             for ((p, a), (_, b)) in on.counts.iter().zip(off.counts.iter()) {
                 assert_eq!(a, b, "{policy:?} {p:?}");
             }

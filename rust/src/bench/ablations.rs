@@ -13,14 +13,22 @@
 //! * **A5 — approximate counting + exact morphing conversion**: estimator
 //!   error across sample budgets.
 //! * **A6 — fused multi-pattern co-execution**: one shared-prefix trie
-//!   traversal for the whole base set vs one sweep per pattern (reports
-//!   wall time, first-level traversal counts and trie sharing; written to
+//!   traversal for the whole base set vs one sweep per pattern, across
+//!   counting, MNI and enumeration aggregations (reports wall time,
+//!   first-level traversal counts and trie sharing; written to
 //!   `BENCH_fused.json`, path overridable via `MM_FUSED_JSON`).
+//! * **A7 — kernel tiers × graph representation**: scalar vs SIMD set
+//!   kernels and original vs degree-relabeled vertex order vs the full
+//!   hybrid (relabeled + hub bitmap) representation, on power-law and
+//!   uniform generator graphs (written to `BENCH_kernels.json`, path
+//!   overridable via `MM_KERNELS_JSON`).
 
+use crate::agg::{aggregate_pattern, aggregate_patterns_fused, EnumerateAgg, MniAgg};
 use crate::apps;
 use crate::exec;
-use crate::graph::generators::{Dataset, Scale};
-use crate::graph::{DynGraph, GraphStats};
+use crate::exec::intersect::{force_tier, simd_active, Tier};
+use crate::graph::generators::{erdos_renyi, Dataset, Scale};
+use crate::graph::{DataGraph, DynGraph, GraphBuilder, GraphStats, VertexId};
 use crate::morph::{self, Policy};
 use crate::pattern::{catalog, Pattern};
 use crate::plan::cost::{estimate, CostParams};
@@ -236,60 +244,204 @@ pub fn ablation_approx(scale: Scale, threads: usize) -> Result<()> {
     Ok(())
 }
 
-/// A6: fused multi-pattern co-execution vs per-pattern sweeps.
-///
-/// Matches the whole base pattern set through the fused plan trie in one
-/// traversal and compares against one `par_count_matches` sweep per
-/// pattern. Counts are asserted equal; the fused path must do strictly
-/// fewer first-level traversals. Results are appended to a JSON report
-/// (`BENCH_fused.json`, or `MM_FUSED_JSON` if set).
-pub fn ablation_fused(scale: Scale, threads: usize) -> Result<()> {
-    println!("\n### A6 — fused co-execution vs per-pattern sweeps\n");
-    println!("| graph | base set | per-pattern (s) | fused (s) | speedup | L0 sweeps | trie nodes / plan levels |");
-    println!("|-------|----------|-----------------|-----------|---------|-----------|--------------------------|");
-    let mut rows: Vec<String> = Vec::new();
-    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
-        let g = d.generate(scale);
-        let sets: [(&str, Vec<Pattern>); 2] = [
-            (
-                "4-motif naive base",
-                morph::plan_queries(
-                    &catalog::motifs_vertex_induced(4),
-                    Policy::Naive,
-                    None,
-                    &CostParams::counting(),
-                )
-                .base,
-            ),
-            ("4-motif V/I set", catalog::motifs_vertex_induced(4)),
-        ];
-        for (name, base) in sets {
+/// One A6 comparison: fused vs per-pattern for a base set under one
+/// aggregation mode. Returns `(per_pattern_s, fused_s)`; results are
+/// asserted equal between the two paths.
+fn fused_vs_per_pattern(
+    g: &DataGraph,
+    base: &[Pattern],
+    fused: &FusedPlan,
+    mode: &str,
+    threads: usize,
+) -> (f64, f64) {
+    match mode {
+        "counting" => {
             let plans: Vec<Plan> = base.iter().map(Plan::compile).collect();
-            let fused = FusedPlan::build(&base, None, &CostParams::counting());
             let (per, t_per) = time(|| {
                 plans
                     .iter()
-                    .map(|p| exec::parallel::par_count_matches(&g, p, threads))
+                    .map(|p| exec::parallel::par_count_matches(g, p, threads))
                     .collect::<Vec<u64>>()
             });
-            let (fu, t_fused) =
-                time(|| exec::fused::fused_count_matches(&g, &fused, threads));
-            assert_eq!(per, fu, "{name}/{}: fused counts must equal per-pattern", d.code());
-            let sweeps_per = plans.len();
+            let (fu, t_fused) = time(|| exec::fused::fused_count_matches(g, fused, threads));
+            assert_eq!(per, fu, "fused counts must equal per-pattern");
+            (t_per, t_fused)
+        }
+        "mni" => {
+            let (per, t_per) = time(|| {
+                base.iter()
+                    .map(|p| {
+                        let agg = MniAgg {
+                            n: p.num_vertices(),
+                        };
+                        aggregate_pattern(g, p, &agg, threads).support()
+                    })
+                    .collect::<Vec<u64>>()
+            });
+            let (fu, t_fused) = time(|| {
+                // MniWidthAgg lets patterns of mixed sizes share the fused
+                // traversal; values come back aligned with the base slice
+                aggregate_patterns_fused(g, fused, &MniWidthAgg, threads)
+                    .into_iter()
+                    .map(|t| t.support())
+                    .collect::<Vec<u64>>()
+            });
+            assert_eq!(per, fu, "fused MNI supports must equal per-pattern");
+            (t_per, t_fused)
+        }
+        "enumerate" => {
+            let (per, t_per) = time(|| {
+                base.iter()
+                    .map(|p| {
+                        let v = aggregate_pattern(g, p, &EnumerateAgg, threads);
+                        v.assert_consistent();
+                        v.positive_len()
+                    })
+                    .collect::<Vec<u64>>()
+            });
+            let (fu, t_fused) = time(|| {
+                aggregate_patterns_fused(g, fused, &EnumerateAgg, threads)
+                    .into_iter()
+                    .map(|v| {
+                        v.assert_consistent();
+                        v.positive_len()
+                    })
+                    .collect::<Vec<u64>>()
+            });
+            assert_eq!(per, fu, "fused enumerations must equal per-pattern");
+            (t_per, t_fused)
+        }
+        other => unreachable!("unknown A6 mode {other}"),
+    }
+}
+
+/// MNI aggregation whose width follows each match (patterns of mixed sizes
+/// share one fused traversal; `accumulate` sees pattern-vertex indexing).
+struct MniWidthAgg;
+
+impl crate::agg::Aggregation for MniWidthAgg {
+    type Value = crate::agg::mni::MniTable;
+
+    fn identity(&self) -> Self::Value {
+        crate::agg::mni::MniTable::default()
+    }
+
+    fn accumulate(&self, acc: &mut Self::Value, m: &[VertexId]) {
+        // width-resize, then delegate to the production aggregation so the
+        // multiset semantics live in exactly one place (agg/mni.rs)
+        if acc.columns.len() < m.len() {
+            acc.columns.resize_with(m.len(), Default::default);
+        }
+        MniAgg { n: m.len() }.accumulate(acc, m);
+    }
+
+    fn combine(&self, mut a: Self::Value, mut b: Self::Value) -> Self::Value {
+        let w = a.columns.len().max(b.columns.len());
+        a.columns.resize_with(w, Default::default);
+        b.columns.resize_with(w, Default::default);
+        MniAgg { n: w }.combine(a, b)
+    }
+
+    fn permute(&self, v: &Self::Value, f: &[usize]) -> Self::Value {
+        // a zero-match value has no columns yet: treat missing as empty
+        crate::agg::mni::MniTable {
+            columns: f
+                .iter()
+                .map(|&fq| v.columns.get(fq).cloned().unwrap_or_default())
+                .collect(),
+        }
+    }
+
+    fn scale(&self, v: &Self::Value, c: i64) -> Self::Value {
+        MniAgg {
+            n: v.columns.len(),
+        }
+        .scale(v, c)
+    }
+}
+
+/// A6: fused multi-pattern co-execution vs per-pattern sweeps, across
+/// aggregations.
+///
+/// Matches the whole base pattern set through the fused plan trie in one
+/// traversal and compares against one sweep per pattern, for counting
+/// (4-motif sets at `scale`), MNI tables (3-motif sets at `scale`) and full
+/// enumeration (3-motif V/I set at tiny scale — it materializes every
+/// match). Results are asserted equal path-for-path; the fused path must do
+/// strictly fewer first-level traversals. A JSON report goes to
+/// `BENCH_fused.json` (or `MM_FUSED_JSON`).
+pub fn ablation_fused(scale: Scale, threads: usize) -> Result<()> {
+    let out = std::env::var("MM_FUSED_JSON").unwrap_or_else(|_| "BENCH_fused.json".into());
+    ablation_fused_to(scale, threads, std::path::Path::new(&out))
+}
+
+/// [`ablation_fused`] with an explicit JSON output path (tests use this to
+/// avoid mutating the process environment, which is UB under concurrent
+/// `getenv` on glibc).
+pub fn ablation_fused_to(scale: Scale, threads: usize, out: &std::path::Path) -> Result<()> {
+    println!("\n### A6 — fused co-execution vs per-pattern sweeps\n");
+    println!("| graph | agg | base set | per-pattern (s) | fused (s) | speedup | L0 sweeps | trie nodes / plan levels |");
+    println!("|-------|-----|----------|-----------------|-----------|---------|-----------|--------------------------|");
+    let naive_base = |size: usize| {
+        morph::plan_queries(
+            &catalog::motifs_vertex_induced(size),
+            Policy::Naive,
+            None,
+            &CostParams::counting(),
+        )
+        .base
+    };
+    // (mode, set name, scale override, base set, datasets)
+    let jobs: Vec<(&str, &str, Scale, Vec<Pattern>)> = vec![
+        ("counting", "4-motif naive base", scale, naive_base(4)),
+        ("counting", "4-motif V/I set", scale, catalog::motifs_vertex_induced(4)),
+        ("mni", "3-motif naive base", scale, naive_base(3)),
+        ("mni", "3-motif V/I set", scale, catalog::motifs_vertex_induced(3)),
+        // enumeration materializes every match: pin to tiny scale
+        (
+            "enumerate",
+            "3-motif V/I set (tiny)",
+            Scale::Tiny,
+            catalog::motifs_vertex_induced(3),
+        ),
+    ];
+    let mut rows: Vec<String> = Vec::new();
+    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
+        // generate each dataset (and its stats) once per scale; jobs pinned
+        // to another scale (enumeration) build their own copy below
+        let g_at_scale = d.generate(scale);
+        let stats_at_scale = GraphStats::compute(&g_at_scale, 2000, 0xA6);
+        for (mode, name, job_scale, base) in &jobs {
+            if *mode == "enumerate" && d != Dataset::MicoSim {
+                continue; // materializing every match: one dataset suffices
+            }
+            let (g_other, stats_other);
+            let (g, gstats) = if *job_scale == scale {
+                (&g_at_scale, &stats_at_scale)
+            } else {
+                g_other = d.generate(*job_scale);
+                stats_other = GraphStats::compute(&g_other, 2000, 0xA6);
+                (&g_other, &stats_other)
+            };
+            // build the fused plan the way the production path does: order
+            // selection scored against this graph's real statistics
+            let fused = FusedPlan::build(base, Some(gstats), &CostParams::counting());
+            let sweeps_per = base.len();
             let sweeps_fused = fused.first_level_traversals();
             assert!(
                 sweeps_fused < sweeps_per,
                 "fused must do strictly fewer first-level traversals ({sweeps_fused} vs {sweeps_per})"
             );
+            let (t_per, t_fused) = fused_vs_per_pattern(g, base, &fused, *mode, threads);
             let speedup = t_per / t_fused.max(1e-9);
             println!(
-                "| {} | {name} | {t_per:.3} | {t_fused:.3} | {speedup:.2}× | {sweeps_per}→{sweeps_fused} | {}/{} |",
+                "| {} | {mode} | {name} | {t_per:.3} | {t_fused:.3} | {speedup:.2}× | {sweeps_per}→{sweeps_fused} | {}/{} |",
                 d.code(),
                 fused.nodes.len(),
                 fused.total_plan_levels(),
             );
             rows.push(format!(
-                "    {{\"graph\": \"{}\", \"set\": \"{name}\", \"patterns\": {}, \"per_pattern_s\": {t_per:.6}, \"fused_s\": {t_fused:.6}, \"speedup\": {speedup:.3}, \"first_level_sweeps_per_pattern\": {sweeps_per}, \"first_level_sweeps_fused\": {sweeps_fused}, \"trie_nodes\": {}, \"plan_levels\": {}}}",
+                "    {{\"graph\": \"{}\", \"agg\": \"{mode}\", \"set\": \"{name}\", \"patterns\": {}, \"per_pattern_s\": {t_per:.6}, \"fused_s\": {t_fused:.6}, \"speedup\": {speedup:.3}, \"first_level_sweeps_per_pattern\": {sweeps_per}, \"first_level_sweeps_fused\": {sweeps_fused}, \"trie_nodes\": {}, \"plan_levels\": {}}}",
                 d.code(),
                 base.len(),
                 fused.nodes.len(),
@@ -301,9 +453,144 @@ pub fn ablation_fused(scale: Scale, threads: usize) -> Result<()> {
         "{{\n  \"experiment\": \"fused_vs_per_pattern\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
         rows.join(",\n")
     );
-    let out = std::env::var("MM_FUSED_JSON").unwrap_or_else(|_| "BENCH_fused.json".into());
-    std::fs::write(&out, json)?;
-    println!("\nwrote {out}");
+    std::fs::write(out, json)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}
+
+/// Rebuild a graph's edge set under a chosen vertex order / adjacency
+/// representation (the A7 configurations).
+fn rebuild(g: &DataGraph, shuffle_seed: Option<u64>, degree_order: bool, hubs: bool) -> DataGraph {
+    let n = g.num_vertices();
+    // optional scrambling models arbitrary input order ("original" order —
+    // the generator already emits degree-ordered ids, so un-order them)
+    let perm: Vec<VertexId> = match shuffle_seed {
+        Some(seed) => {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            rng.permutation(n).into_iter().map(|v| v as VertexId).collect()
+        }
+        None => (0..n as VertexId).collect(),
+    };
+    let mut edges = Vec::with_capacity(g.num_edges());
+    for v in 0..n as VertexId {
+        for &u in g.neighbors(v) {
+            if v < u {
+                edges.push((perm[v as usize], perm[u as usize]));
+            }
+        }
+    }
+    let mut b = GraphBuilder::new()
+        .edges(&edges)
+        .num_vertices(n)
+        .degree_ordered(degree_order)
+        .hub_bitmaps(hubs);
+    if g.is_labeled() {
+        let mut labels = vec![0; n];
+        for v in 0..n as VertexId {
+            labels[perm[v as usize] as usize] = g.label(v);
+        }
+        b = b.labels(labels);
+    }
+    b.build(g.name())
+}
+
+/// A7: kernel tiers × graph representation.
+///
+/// Counts a fixed workload (triangle, 4-clique, vertex-induced 4-cycle, and
+/// the fused 4-motif naive base) under five configurations: the scrambled
+/// "original" vertex order with sorted lists and scalar kernels (baseline),
+/// then SIMD kernels, degree-ordered relabeling, and the full hybrid
+/// (relabeled + hub bitmap rows) stack. All counts are asserted equal —
+/// the representations are isomorphic. JSON goes to `BENCH_kernels.json`
+/// (or `MM_KERNELS_JSON`).
+pub fn ablation_kernels(scale: Scale, threads: usize) -> Result<()> {
+    let out = std::env::var("MM_KERNELS_JSON").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    ablation_kernels_to(scale, threads, std::path::Path::new(&out))
+}
+
+/// [`ablation_kernels`] with an explicit JSON output path (see
+/// [`ablation_fused_to`] for why tests avoid the env override).
+pub fn ablation_kernels_to(scale: Scale, threads: usize, out: &std::path::Path) -> Result<()> {
+    println!("\n### A7 — kernel tiers × representation (match times, s)\n");
+    println!("simd available: {}", simd_active());
+    // power-law generator graph (the paper's regime) + uniform ER control
+    let powerlaw = Dataset::MicoSim.generate(scale).without_hub_bitmaps();
+    let uniform = erdos_renyi(powerlaw.num_vertices(), powerlaw.num_edges(), 0xA7);
+    let graphs: [(&str, &DataGraph); 2] = [("powerlaw", &powerlaw), ("uniform", &uniform)];
+
+    // (config name, scramble, relabel, hubs, tier)
+    let configs: [(&str, Option<u64>, bool, bool, Option<Tier>); 5] = [
+        ("orig+list+scalar", Some(0x5EED), false, false, Some(Tier::Scalar)),
+        ("orig+list+simd", Some(0x5EED), false, false, None),
+        ("relabel+list+simd", None, true, false, None),
+        ("relabel+hybrid+scalar", None, true, true, Some(Tier::Scalar)),
+        ("relabel+hybrid+simd", None, true, true, None),
+    ];
+
+    println!("\n| graph | config | triangle | clique4 | cycle4^V | fused 4-motif base |");
+    println!("|-------|--------|----------|---------|----------|--------------------|");
+    let base = morph::plan_queries(
+        &catalog::motifs_vertex_induced(4),
+        Policy::Naive,
+        None,
+        &CostParams::counting(),
+    )
+    .base;
+    let patterns = [
+        ("triangle", catalog::triangle()),
+        ("clique4", catalog::clique(4)),
+        ("cycle4_vi", catalog::cycle(4).vertex_induced()),
+    ];
+    // per-pattern plans are stats-free: compile once for all configs
+    let plans: Vec<Plan> = patterns.iter().map(|(_, p)| Plan::compile(p)).collect();
+    let mut rows: Vec<String> = Vec::new();
+    for (gname, g) in graphs {
+        let mut reference: Option<(Vec<u64>, Vec<u64>)> = None;
+        for (cname, scramble, relabel, hubs, tier) in &configs {
+            let variant = rebuild(g, *scramble, *relabel, *hubs);
+            // fused order selection sees each variant's own statistics —
+            // exactly what the production fused path executes (hub rows and
+            // relabeling change the stats, hence possibly the chosen orders)
+            let vstats = GraphStats::compute(&variant, 2000, 0xA7);
+            let fused = FusedPlan::build(&base, Some(&vstats), &CostParams::counting());
+            force_tier(*tier);
+            let mut pat_counts = Vec::new();
+            let mut pat_times = Vec::new();
+            for plan in &plans {
+                let (c, t) = time(|| exec::parallel::par_count_matches(&variant, plan, threads));
+                pat_counts.push(c);
+                pat_times.push(t);
+            }
+            let (fused_counts, t_fused) =
+                time(|| exec::fused::fused_count_matches(&variant, &fused, threads));
+            force_tier(None);
+            match &reference {
+                None => reference = Some((pat_counts.clone(), fused_counts.clone())),
+                Some((rp, rf)) => {
+                    assert_eq!(rp, &pat_counts, "{gname}/{cname}: counts must be invariant");
+                    assert_eq!(rf, &fused_counts, "{gname}/{cname}: fused must be invariant");
+                }
+            }
+            println!(
+                "| {gname} | {cname} | {:.3} | {:.3} | {:.3} | {t_fused:.3} |",
+                pat_times[0], pat_times[1], pat_times[2]
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{gname}\", \"config\": \"{cname}\", \"triangle_s\": {:.6}, \"clique4_s\": {:.6}, \"cycle4_vi_s\": {:.6}, \"fused_base_s\": {t_fused:.6}, \"total_s\": {:.6}}}",
+                pat_times[0],
+                pat_times[1],
+                pat_times[2],
+                pat_times[0] + pat_times[1] + pat_times[2] + t_fused,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"experiment\": \"kernel_tiers_x_representation\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"simd_available\": {},\n  \"baseline\": \"orig+list+scalar\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        simd_active(),
+        rows.join(",\n")
+    );
+    std::fs::write(out, json)?;
+    println!("\nwrote {}", out.display());
     Ok(())
 }
 
@@ -315,7 +602,8 @@ pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     ablation_cost_model(scale, threads)?;
     ablation_incremental(scale, threads)?;
     ablation_approx(scale, threads)?;
-    ablation_fused(scale, threads)
+    ablation_fused(scale, threads)?;
+    ablation_kernels(scale, threads)
 }
 
 #[cfg(test)]
@@ -332,13 +620,24 @@ mod tests {
 
     #[test]
     fn fused_ablation_smoke() {
-        // asserts fused == per-pattern internally; JSON goes to a temp path
+        // asserts fused == per-pattern internally (counting, MNI and
+        // enumeration modes); explicit temp output path — no env mutation
         let out = std::env::temp_dir().join("mm_bench_fused_smoke.json");
-        std::env::set_var("MM_FUSED_JSON", &out);
-        let r = ablation_fused(Scale::Tiny, 2);
-        std::env::remove_var("MM_FUSED_JSON");
-        r.unwrap();
+        ablation_fused_to(Scale::Tiny, 2, &out).unwrap();
         let body = std::fs::read_to_string(&out).unwrap();
         assert!(body.contains("fused_vs_per_pattern"));
+        assert!(body.contains("\"agg\": \"mni\""));
+        assert!(body.contains("\"agg\": \"enumerate\""));
+    }
+
+    #[test]
+    fn kernels_ablation_smoke() {
+        // asserts counts invariant across all representation × tier
+        // configurations internally; explicit temp output path
+        let out = std::env::temp_dir().join("mm_bench_kernels_smoke.json");
+        ablation_kernels_to(Scale::Tiny, 2, &out).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("kernel_tiers_x_representation"));
+        assert!(body.contains("relabel+hybrid+simd"));
     }
 }

@@ -9,6 +9,8 @@
 //! | `table4`   | Table 4 — chosen alternative sets | [`table4`] |
 //! | `fig2`     | Fig. 2 — match vs aggregation     | [`fig2`] |
 //! | `fig5`     | Fig. 4/5 — morphing equations     | [`fig5`] |
+//! | `fused`    | A6 — fused co-execution ablation  | [`ablations::ablation_fused`] |
+//! | `kernels`  | A7 — kernel tiers × representation | [`ablations::ablation_kernels`] |
 //!
 //! Reports are printed as markdown; EXPERIMENTS.md records a run.
 
@@ -52,6 +54,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
         "fig2" => fig2(scale, threads),
         "fig5" => fig5(scale, threads),
         "fused" => ablations::ablation_fused(scale, threads),
+        "kernels" => ablations::ablation_kernels(scale, threads),
         "ablations" => ablations::run_all(scale, threads),
         "all" => {
             table2(scale)?;
@@ -63,7 +66,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
             ablations::run_all(scale, threads)
         }
         other => bail!(
-            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|ablations|all)"
+            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|ablations|all)"
         ),
     }
 }

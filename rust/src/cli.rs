@@ -7,7 +7,7 @@
 //! morphmine cliques --graph <spec> [--k 4]
 //! morphmine census  --graph <spec> [--artifacts artifacts]
 //! morphmine gen     --dataset mico[:scale] --out <path>
-//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|ablations] [--scale tiny|small|medium]
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
 //! ```
 //!

@@ -139,12 +139,13 @@ impl Coordinator {
         ))
     }
 
-    /// Execution options derived from the config.
+    /// Execution options derived from the config. The coordinator's shared
+    /// [`GraphStats`] ride along so fused order selection and cost-based
+    /// PMR price plans with the same model.
     fn exec_opts(&self) -> crate::morph::ExecOpts {
-        crate::morph::ExecOpts {
-            threads: self.config.threads,
-            fused: self.config.fused,
-        }
+        crate::morph::ExecOpts::new(self.config.threads)
+            .with_fused(self.config.fused)
+            .with_stats(self.stats().clone())
     }
 
     /// Pattern matching through the morphing engine.

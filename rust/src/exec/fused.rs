@@ -2,15 +2,15 @@
 //! data-graph traversal by walking the shared-prefix plan trie built by
 //! [`crate::plan::fused::FusedPlan`].
 //!
-//! Exploration per node is identical to [`super::Executor`] — sorted
-//! intersections/differences through the [`super::intersect`] kernels,
-//! per-depth candidate buffer pools, the single-edge fast path, label and
-//! injectivity filters, symmetry-breaking windows — but interior levels are
-//! computed once and reused by every pattern routed through them. Complete
-//! matches are delivered per pattern through [`FusedVisitor`]. The parallel
-//! driver mirrors [`super::parallel`]'s chunked atomic-cursor work stealing.
+//! Exploration per node runs through the same shared level kernel as
+//! [`super::Executor`] ([`super::kernel`]: windowed tiered set ops, the
+//! single-edge fast path, label and injectivity filters) — but interior
+//! levels are computed once and reused by every pattern routed through
+//! them. Complete matches are delivered per pattern through
+//! [`FusedVisitor`]. The parallel driver mirrors [`super::parallel`]'s
+//! chunked atomic-cursor work stealing.
 
-use super::intersect;
+use super::kernel;
 use super::parallel::CHUNK;
 use crate::graph::{DataGraph, VertexId};
 use crate::plan::fused::FusedPlan;
@@ -90,94 +90,35 @@ impl<'g> FusedExecutor<'g> {
     ) {
         let graph: &'g DataGraph = self.graph;
         let l = &fused.nodes[node_idx].level;
-        debug_assert!(!l.intersect.is_empty());
 
-        // symmetry-breaking bounds: candidates must lie in (lo, hi)
-        let mut lo: Option<VertexId> = None;
-        for &j in &l.greater_than {
-            lo = Some(lo.map_or(self.partial[j], |b| b.max(self.partial[j])));
-        }
-        let mut hi: Option<VertexId> = None;
-        for &j in &l.less_than {
-            hi = Some(hi.map_or(self.partial[j], |b| b.min(self.partial[j])));
-        }
-
-        // Single-edge fast path — same as `Executor::descend`: iterate the
-        // sorted adjacency list directly, no buffer copy.
-        if l.intersect.len() == 1 && l.subtract.is_empty() {
-            let adj = graph.neighbors(self.partial[l.intersect[0]]);
-            let start = lo.map_or(0, |b| adj.partition_point(|&x| x <= b));
-            let end = hi.map_or(adj.len(), |b| adj.partition_point(|&x| x < b));
-            for idx in start..end {
-                let v = adj[idx];
-                if let Some(lab) = l.label {
-                    if graph.label(v) != lab {
+        // per-level set ops in the shared kernel — computed once here and
+        // reused by every pattern routed through this trie node
+        let mut buf = std::mem::take(&mut self.bufs[depth]);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let cands = kernel::candidates(graph, l, &self.partial[..depth], &mut buf, &mut scratch);
+        self.scratch = scratch;
+        match cands {
+            kernel::Cands::Adj(adj) => {
+                self.bufs[depth] = buf;
+                for &v in adj {
+                    if !kernel::accept(graph, l, &self.partial[..depth], v) {
                         continue;
                     }
-                }
-                if self.partial[..depth].contains(&v) {
-                    continue;
-                }
-                self.partial[depth] = v;
-                self.emit_and_recurse(fused, node_idx, depth, visitor);
-            }
-            return;
-        }
-
-        // General path: intersections (smallest adjacency list first),
-        // bound trims, then differences — shared once for every pattern
-        // routed through this node.
-        {
-            let mut buf = std::mem::take(&mut self.bufs[depth]);
-            let mut scratch = std::mem::take(&mut self.scratch);
-            let seed = l
-                .intersect
-                .iter()
-                .copied()
-                .min_by_key(|&j| graph.degree(self.partial[j]))
-                .unwrap();
-            buf.clear();
-            buf.extend_from_slice(graph.neighbors(self.partial[seed]));
-            for &j in &l.intersect {
-                if j == seed {
-                    continue;
-                }
-                let adj = graph.neighbors(self.partial[j]);
-                scratch.clear();
-                intersect::intersect_into(&buf, adj, &mut scratch);
-                std::mem::swap(&mut buf, &mut scratch);
-            }
-            // trim to the symmetry-breaking window FIRST: differences then
-            // scan a smaller candidate list (matches `Executor::descend`)
-            if let Some(b) = lo {
-                intersect::retain_greater(&mut buf, b);
-            }
-            if let Some(b) = hi {
-                intersect::retain_less(&mut buf, b);
-            }
-            for &j in &l.subtract {
-                let adj = graph.neighbors(self.partial[j]);
-                scratch.clear();
-                intersect::difference_into(&buf, adj, &mut scratch);
-                std::mem::swap(&mut buf, &mut scratch);
-            }
-            self.bufs[depth] = buf;
-            self.scratch = scratch;
-        }
-
-        let cand_len = self.bufs[depth].len();
-        for idx in 0..cand_len {
-            let v = self.bufs[depth][idx];
-            if let Some(lab) = l.label {
-                if graph.label(v) != lab {
-                    continue;
+                    self.partial[depth] = v;
+                    self.emit_and_recurse(fused, node_idx, depth, visitor);
                 }
             }
-            if self.partial[..depth].contains(&v) {
-                continue;
+            kernel::Cands::Buffered => {
+                // `buf` is a local: deeper levels use their own buffers
+                for &v in &buf {
+                    if !kernel::accept(graph, l, &self.partial[..depth], v) {
+                        continue;
+                    }
+                    self.partial[depth] = v;
+                    self.emit_and_recurse(fused, node_idx, depth, visitor);
+                }
+                self.bufs[depth] = buf;
             }
-            self.partial[depth] = v;
-            self.emit_and_recurse(fused, node_idx, depth, visitor);
         }
     }
 

@@ -1,13 +1,105 @@
 //! Sorted-set kernels: the inner loop of the matching engine.
 //!
-//! Adjacency lists are sorted `u32` slices. Intersections use galloping when
-//! sizes are skewed (hub lists vs. leaf lists differ by orders of magnitude
-//! in the power-law graphs the paper mines).
+//! Adjacency lists are sorted, strictly increasing `u32` slices. Every
+//! public entry point dispatches across three tiers:
+//!
+//! 1. **galloping** — when operand sizes are skewed (hub lists vs. leaf
+//!    lists differ by orders of magnitude in the power-law graphs the paper
+//!    mines), binary-search the small list into the large one;
+//! 2. **SIMD** — in the merge regime on `x86_64`, wide-compare + compress
+//!    blocks (AVX2 8×8, else SSSE3 4×4), selected by runtime feature
+//!    detection; the scalar path is always compiled and the property tests
+//!    assert tier-for-tier equality;
+//! 3. **scalar** — branch-reduced two-pointer merge, the portable baseline
+//!    and the only tier on non-x86 targets.
+//!
+//! Hub *bitmap* operands are a fourth tier living one level up: the shared
+//! exploration kernel ([`super::kernel`]) routes set ops whose operand is a
+//! hub adjacency list through the O(1)-membership rows of
+//! [`crate::graph::bitmap`] instead of these list kernels.
+//!
+//! Dispatch control: `MORPHMINE_NO_SIMD=1` (read once) disables tier 2 for
+//! the whole process — CI runs the test suite both ways; [`force_tier`]
+//! narrows dispatch at runtime for benchmarks ([`Tier::Scalar`] pins the
+//! portable merge, [`Tier::Simd`] re-enables auto detection).
 
 use crate::graph::VertexId;
+use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Threshold size ratio above which galloping beats linear merge.
+/// Threshold size ratio above which galloping beats merging.
 const GALLOP_RATIO: usize = 16;
+
+/// Minimum small-operand length for the SIMD tier to pay for itself.
+const SIMD_MIN: usize = 16;
+
+/// Kernel tier override for benchmarks and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Pin the portable scalar merge (galloping still applies to skewed
+    /// operands — it is a strategy, not an instruction set).
+    Scalar,
+    /// Allow the SIMD tier wherever the CPU supports it (the default).
+    Simd,
+}
+
+/// `0` = auto, `1` = forced scalar, `2` = forced simd (== auto on capable
+/// CPUs, scalar elsewhere).
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// Force the dispatch tier process-wide (`None` restores auto detection).
+/// Every tier computes identical results; this only steers performance.
+pub fn force_tier(t: Option<Tier>) {
+    let v = match t {
+        None => 0,
+        Some(Tier::Scalar) => 1,
+        Some(Tier::Simd) => 2,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+/// SIMD capability actually available to this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SimdLevel {
+    None,
+    #[cfg(target_arch = "x86_64")]
+    Ssse3,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+/// Runtime-detected SIMD level, honoring `MORPHMINE_NO_SIMD` (read once).
+fn detected_level() -> SimdLevel {
+    static LEVEL: std::sync::OnceLock<SimdLevel> = std::sync::OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if std::env::var_os("MORPHMINE_NO_SIMD").is_some_and(|v| v != "0" && !v.is_empty()) {
+            return SimdLevel::None;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return SimdLevel::Avx2;
+            }
+            if std::arch::is_x86_feature_detected!("ssse3") {
+                return SimdLevel::Ssse3;
+            }
+        }
+        SimdLevel::None
+    })
+}
+
+/// The level dispatch will use right now (forced tier applied).
+fn active_level() -> SimdLevel {
+    if FORCED.load(Ordering::Relaxed) == 1 {
+        SimdLevel::None
+    } else {
+        detected_level()
+    }
+}
+
+/// Whether the SIMD tier is live (reported by the kernels ablation).
+pub fn simd_active() -> bool {
+    active_level() != SimdLevel::None
+}
 
 /// `out = a ∩ b` (clears `out`).
 pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
@@ -16,38 +108,27 @@ pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     if small.is_empty() {
         return;
     }
-    if large.len() / small.len().max(1) >= GALLOP_RATIO {
-        // galloping: binary-search each small element in the large list
-        let mut lo = 0;
-        for &x in small {
-            match large[lo..].binary_search(&x) {
-                Ok(i) => {
-                    out.push(x);
-                    lo += i + 1;
-                }
-                Err(i) => {
-                    lo += i;
-                    if lo >= large.len() {
-                        break;
-                    }
-                }
+    if large.len() / small.len() >= GALLOP_RATIO {
+        gallop_intersect(small, large, out);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if small.len() >= SIMD_MIN {
+        match active_level() {
+            SimdLevel::Avx2 => {
+                // SAFETY: avx2 presence checked by `detected_level`
+                unsafe { x86::intersect_avx2(small, large, out) };
+                return;
             }
-        }
-    } else {
-        // linear merge
-        let (mut i, mut j) = (0, 0);
-        while i < small.len() && j < large.len() {
-            match small[i].cmp(&large[j]) {
-                std::cmp::Ordering::Less => i += 1,
-                std::cmp::Ordering::Greater => j += 1,
-                std::cmp::Ordering::Equal => {
-                    out.push(small[i]);
-                    i += 1;
-                    j += 1;
-                }
+            SimdLevel::Ssse3 => {
+                // SAFETY: ssse3 presence checked by `detected_level`
+                unsafe { x86::intersect_ssse3(small, large, out) };
+                return;
             }
+            SimdLevel::None => {}
         }
     }
+    merge_intersect(small, large, 0, 0, out);
 }
 
 /// `out = a \ b` (clears `out`).
@@ -64,44 +145,295 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
                 out.push(x);
             }
         }
-    } else {
-        let (mut i, mut j) = (0, 0);
-        while i < a.len() {
-            if j >= b.len() {
-                // b exhausted: the rest of a survives — bulk-copy the tail
-                out.extend_from_slice(&a[i..]);
+        return;
+    }
+    // When a dwarfs b, the scalar merge wins: it exhausts b quickly and
+    // bulk-copies the surviving tail of a in one memcpy, where the SIMD
+    // membership loop would still push every element of a individually.
+    #[cfg(target_arch = "x86_64")]
+    if b.len() >= SIMD_MIN && a.len() / b.len() < GALLOP_RATIO {
+        match active_level() {
+            SimdLevel::Avx2 => {
+                // SAFETY: avx2 presence checked by `detected_level`
+                unsafe { x86::difference_avx2(a, b, out) };
                 return;
             }
-            if a[i] < b[j] {
-                out.push(a[i]);
-                i += 1;
-            } else if a[i] > b[j] {
-                j += 1;
-            } else {
-                i += 1;
-                j += 1;
+            SimdLevel::Ssse3 => {
+                // SAFETY: ssse3 (⊇ sse2) presence checked by `detected_level`
+                unsafe { x86::difference_sse2(a, b, out) };
+                return;
+            }
+            SimdLevel::None => {}
+        }
+    }
+    merge_difference(a, b, out);
+}
+
+/// Galloping intersection: binary-search each small element in the large
+/// list, restarting past the previous hit.
+fn gallop_intersect(small: &[VertexId], large: &[VertexId], out: &mut Vec<VertexId>) {
+    let mut lo = 0;
+    for &x in small {
+        match large[lo..].binary_search(&x) {
+            Ok(i) => {
+                out.push(x);
+                lo += i + 1;
+            }
+            Err(i) => {
+                lo += i;
+                if lo >= large.len() {
+                    break;
+                }
             }
         }
     }
 }
 
-/// Retain elements of `v` strictly greater than `bound` (lists are sorted:
-/// binary search + drain the prefix). Used for symmetry-breaking filters.
-pub fn retain_greater(v: &mut Vec<VertexId>, bound: VertexId) {
-    let cut = v.partition_point(|&x| x <= bound);
-    v.drain(..cut);
+/// Branch-reduced scalar merge intersection from positions `(i, j)` — also
+/// the tail finisher for the SIMD block loops.
+fn merge_intersect(
+    a: &[VertexId],
+    b: &[VertexId],
+    mut i: usize,
+    mut j: usize,
+    out: &mut Vec<VertexId>,
+) {
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            out.push(x);
+        }
+        // strictly sorted inputs: advance whichever side is not ahead
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+    }
 }
 
-/// Retain elements strictly less than `bound`.
-pub fn retain_less(v: &mut Vec<VertexId>, bound: VertexId) {
-    let cut = v.partition_point(|&x| x < bound);
-    v.truncate(cut);
+/// Scalar merge difference with bulk tail copy once `b` is exhausted.
+fn merge_difference(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() {
+        if j >= b.len() {
+            // b exhausted: the rest of a survives — bulk-copy the tail
+            out.extend_from_slice(&a[i..]);
+            return;
+        }
+        let (x, y) = (a[i], b[j]);
+        if x < y {
+            out.push(x);
+            i += 1;
+        } else if x > y {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
 }
 
-/// Remove one element by value if present (injectivity filter).
-pub fn remove_value(v: &mut Vec<VertexId>, x: VertexId) {
-    if let Ok(i) = v.binary_search(&x) {
-        v.remove(i);
+/// x86 wide-compare + compress kernels. All functions require the inputs to
+/// be strictly increasing (no duplicates) — guaranteed by the CSR
+/// invariants — and produce exactly the scalar tiers' output.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Byte-shuffle masks compacting the matched 32-bit lanes of a 128-bit
+    /// vector: entry `m` moves lane `k` (for each set bit `k` of `m`, in
+    /// ascending order) to the front. Unused bytes are `0x80` (zeroed by
+    /// `pshufb`, then ignored — only the first `popcount(m)` lanes are
+    /// copied out).
+    const fn sse_compress_table() -> [[u8; 16]; 16] {
+        let mut t = [[0x80u8; 16]; 16];
+        let mut m = 0;
+        while m < 16 {
+            let mut out_byte = 0;
+            let mut lane = 0;
+            while lane < 4 {
+                if m & (1 << lane) != 0 {
+                    let mut b = 0;
+                    while b < 4 {
+                        t[m][out_byte] = (lane * 4 + b) as u8;
+                        out_byte += 1;
+                        b += 1;
+                    }
+                }
+                lane += 1;
+            }
+            m += 1;
+        }
+        t
+    }
+
+    static SSE_COMPRESS: [[u8; 16]; 16] = sse_compress_table();
+
+    /// Lane-index vectors compacting the matched 32-bit lanes of a 256-bit
+    /// vector via `vpermd`: entry `m` lists the set bits of `m` ascending.
+    const fn avx_compress_table() -> [[u32; 8]; 256] {
+        let mut t = [[0u32; 8]; 256];
+        let mut m = 0;
+        while m < 256 {
+            let mut o = 0;
+            let mut lane = 0;
+            while lane < 8 {
+                if m & (1 << lane) != 0 {
+                    t[m][o] = lane as u32;
+                    o += 1;
+                }
+                lane += 1;
+            }
+            m += 1;
+        }
+        t
+    }
+
+    static AVX_COMPRESS: [[u32; 8]; 256] = avx_compress_table();
+
+    /// `vpermd` index vectors rotating the 8 lanes left by `r + 1`:
+    /// `ROTATE[r][k] = (k + r + 1) % 8`.
+    const fn avx_rotate_table() -> [[u32; 8]; 7] {
+        let mut t = [[0u32; 8]; 7];
+        let mut r = 0;
+        while r < 7 {
+            let mut k = 0;
+            while k < 8 {
+                t[r][k] = ((k + r + 1) % 8) as u32;
+                k += 1;
+            }
+            r += 1;
+        }
+        t
+    }
+
+    static AVX_ROTATE: [[u32; 8]; 7] = avx_rotate_table();
+
+    /// SSSE3 4×4 block intersection: compare each block of `a` against all
+    /// four rotations of a block of `b`, compress the matched `a` lanes.
+    ///
+    /// # Safety
+    /// Requires SSSE3 (and baseline SSE2) at runtime.
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn intersect_ssse3(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let mut i = 0usize;
+        let mut j = 0usize;
+        let na = a.len() / 4 * 4;
+        let nb = b.len() / 4 * 4;
+        while i < na && j < nb {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(j) as *const __m128i);
+            let a_max = *a.get_unchecked(i + 3);
+            let b_max = *b.get_unchecked(j + 3);
+            // all-pairs equality via the 4 rotations of vb
+            let rot1 = _mm_shuffle_epi32::<0b00_11_10_01>(vb); // [1,2,3,0]
+            let rot2 = _mm_shuffle_epi32::<0b01_00_11_10>(vb); // [2,3,0,1]
+            let rot3 = _mm_shuffle_epi32::<0b10_01_00_11>(vb); // [3,0,1,2]
+            let hit = _mm_or_si128(
+                _mm_or_si128(_mm_cmpeq_epi32(va, vb), _mm_cmpeq_epi32(va, rot1)),
+                _mm_or_si128(_mm_cmpeq_epi32(va, rot2), _mm_cmpeq_epi32(va, rot3)),
+            );
+            let mask = _mm_movemask_ps(_mm_castsi128_ps(hit)) as usize;
+            if mask != 0 {
+                let shuf =
+                    _mm_loadu_si128(SSE_COMPRESS.get_unchecked(mask).as_ptr() as *const __m128i);
+                let packed = _mm_shuffle_epi8(va, shuf);
+                let mut tmp = [0u32; 4];
+                _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, packed);
+                out.extend_from_slice(&tmp[..mask.count_ones() as usize]);
+            }
+            // advance the block(s) whose max cannot match anything ahead
+            i += ((a_max <= b_max) as usize) * 4;
+            j += ((b_max <= a_max) as usize) * 4;
+        }
+        super::merge_intersect(a, b, i, j, out);
+    }
+
+    /// AVX2 8×8 block intersection: compare each block of `a` against all
+    /// eight rotations of a block of `b`, compress the matched `a` lanes
+    /// with `vpermd`.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intersect_avx2(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let mut i = 0usize;
+        let mut j = 0usize;
+        let na = a.len() / 8 * 8;
+        let nb = b.len() / 8 * 8;
+        while i < na && j < nb {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+            let a_max = *a.get_unchecked(i + 7);
+            let b_max = *b.get_unchecked(j + 7);
+            let mut hit = _mm256_cmpeq_epi32(va, vb);
+            for rot in &AVX_ROTATE {
+                let idx = _mm256_loadu_si256(rot.as_ptr() as *const __m256i);
+                let rb = _mm256_permutevar8x32_epi32(vb, idx);
+                hit = _mm256_or_si256(hit, _mm256_cmpeq_epi32(va, rb));
+            }
+            let mask = _mm256_movemask_ps(_mm256_castsi256_ps(hit)) as usize;
+            if mask != 0 {
+                let idx_ptr = AVX_COMPRESS.get_unchecked(mask).as_ptr() as *const __m256i;
+                let packed = _mm256_permutevar8x32_epi32(va, _mm256_loadu_si256(idx_ptr));
+                let mut tmp = [0u32; 8];
+                _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, packed);
+                out.extend_from_slice(&tmp[..mask.count_ones() as usize]);
+            }
+            i += ((a_max <= b_max) as usize) * 8;
+            j += ((b_max <= a_max) as usize) * 8;
+        }
+        super::merge_intersect(a, b, i, j, out);
+    }
+
+    /// SSE2 blocked membership difference: skip 4-wide blocks of `b` below
+    /// each candidate, then one wide compare decides membership.
+    ///
+    /// # Safety
+    /// Requires SSE2 at runtime (implied by ssse3 detection).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn difference_sse2(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let mut j = 0usize;
+        let nb = b.len() / 4 * 4;
+        for &x in a {
+            while j < nb && *b.get_unchecked(j + 3) < x {
+                j += 4;
+            }
+            let found = if j < nb {
+                // block max ≥ x and all earlier blocks < x: any match is here
+                let vb = _mm_loadu_si128(b.as_ptr().add(j) as *const __m128i);
+                let eq = _mm_cmpeq_epi32(_mm_set1_epi32(x as i32), vb);
+                _mm_movemask_ps(_mm_castsi128_ps(eq)) != 0
+            } else {
+                b.get_unchecked(j..).binary_search(&x).is_ok()
+            };
+            if !found {
+                out.push(x);
+            }
+        }
+    }
+
+    /// AVX2 blocked membership difference (8-wide blocks).
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn difference_avx2(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let mut j = 0usize;
+        let nb = b.len() / 8 * 8;
+        for &x in a {
+            while j < nb && *b.get_unchecked(j + 7) < x {
+                j += 8;
+            }
+            let found = if j < nb {
+                let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+                let eq = _mm256_cmpeq_epi32(_mm256_set1_epi32(x as i32), vb);
+                _mm256_movemask_ps(_mm256_castsi256_ps(eq)) != 0
+            } else {
+                b.get_unchecked(j..).binary_search(&x).is_ok()
+            };
+            if !found {
+                out.push(x);
+            }
+        }
     }
 }
 
@@ -109,6 +441,7 @@ pub fn remove_value(v: &mut Vec<VertexId>, x: VertexId) {
 mod tests {
     use super::*;
     use crate::util::proptest;
+    use crate::util::rng::Rng;
 
     fn naive_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
         a.iter().filter(|x| b.contains(x)).copied().collect()
@@ -116,6 +449,36 @@ mod tests {
 
     fn naive_difference(a: &[u32], b: &[u32]) -> Vec<u32> {
         a.iter().filter(|x| !b.contains(x)).copied().collect()
+    }
+
+    /// Strictly-sorted random list with adversarial shapes: dense runs of
+    /// consecutive values (exercise every block lane), strided gaps, and
+    /// values colliding at block boundaries.
+    fn adversarial_list(rng: &mut Rng, max_len: usize, universe: u64) -> Vec<u32> {
+        let mut v: Vec<u32> = Vec::new();
+        while v.len() < max_len {
+            match rng.below(4) {
+                0 => {
+                    // dense run
+                    let start = rng.below(universe) as u32;
+                    let run = rng.below(20) as u32 + 1;
+                    v.extend(start..start.saturating_add(run));
+                }
+                1 => {
+                    // strided
+                    let start = rng.below(universe) as u32;
+                    let stride = rng.below(7) as u32 + 1;
+                    for k in 0..rng.below(16) as u32 {
+                        v.push(start.saturating_add(k * stride));
+                    }
+                }
+                _ => v.push(rng.below(universe) as u32),
+            }
+        }
+        v.truncate(max_len);
+        v.sort_unstable();
+        v.dedup();
+        v
     }
 
     #[test]
@@ -154,26 +517,7 @@ mod tests {
     }
 
     #[test]
-    fn retain_filters() {
-        let mut v = vec![1, 4, 6, 9, 12];
-        retain_greater(&mut v, 6);
-        assert_eq!(v, vec![9, 12]);
-        let mut v = vec![1, 4, 6, 9, 12];
-        retain_less(&mut v, 6);
-        assert_eq!(v, vec![1, 4]);
-    }
-
-    #[test]
-    fn remove_value_works() {
-        let mut v = vec![1, 4, 6];
-        remove_value(&mut v, 4);
-        assert_eq!(v, vec![1, 6]);
-        remove_value(&mut v, 5);
-        assert_eq!(v, vec![1, 6]);
-    }
-
-    #[test]
-    fn prop_against_naive() {
+    fn prop_dispatch_against_naive() {
         proptest::check(0x1A7, 200, |rng| {
             let mut a: Vec<u32> = (0..rng.below(60)).map(|_| rng.below(100) as u32).collect();
             let mut b: Vec<u32> = (0..rng.below(1500)).map(|_| rng.below(2000) as u32).collect();
@@ -189,5 +533,82 @@ mod tests {
             difference_into(&a, &b, &mut out);
             assert_eq!(out, naive_difference(&a, &b));
         });
+    }
+
+    /// Satellite property test: every kernel tier agrees with the naive set
+    /// ops on adversarial skewed inputs (dense runs, strides, block-boundary
+    /// collisions, heavily unequal lengths).
+    #[test]
+    fn prop_all_tiers_agree_on_adversarial_inputs() {
+        proptest::check(0x7153, 150, |rng| {
+            let la = 1 + rng.below_usize(400);
+            let lb = 1 + rng.below_usize(400);
+            let universe = 1 + rng.below(3000);
+            let a = adversarial_list(rng, la, universe);
+            let b = adversarial_list(rng, lb, universe);
+            let want_i = naive_intersect(&a, &b);
+            let want_d = naive_difference(&a, &b);
+
+            // scalar tier, both argument orders
+            let mut out = Vec::new();
+            merge_intersect(&a, &b, 0, 0, &mut out);
+            assert_eq!(out, want_i, "scalar merge");
+            out.clear();
+            merge_difference(&a, &b, &mut out);
+            assert_eq!(out, want_d, "scalar difference");
+
+            // galloping tier
+            out.clear();
+            gallop_intersect(&a, &b, &mut out);
+            assert_eq!(out, want_i, "gallop");
+
+            // SIMD tiers (when the CPU has them)
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("ssse3") {
+                    out.clear();
+                    unsafe { x86::intersect_ssse3(&a, &b, &mut out) };
+                    assert_eq!(out, want_i, "ssse3 intersect\na={a:?}\nb={b:?}");
+                    out.clear();
+                    unsafe { x86::difference_sse2(&a, &b, &mut out) };
+                    assert_eq!(out, want_d, "sse2 difference\na={a:?}\nb={b:?}");
+                }
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    out.clear();
+                    unsafe { x86::intersect_avx2(&a, &b, &mut out) };
+                    assert_eq!(out, want_i, "avx2 intersect\na={a:?}\nb={b:?}");
+                    out.clear();
+                    unsafe { x86::difference_avx2(&a, &b, &mut out) };
+                    assert_eq!(out, want_d, "avx2 difference\na={a:?}\nb={b:?}");
+                }
+            }
+
+            // dispatch under both forced tiers (restored afterwards). Other
+            // tests may observe the temporary override, but every tier
+            // computes identical results, so nothing else can fail from it
+            // (which is also why no test asserts on `simd_active`).
+            for tier in [Some(Tier::Scalar), Some(Tier::Simd), None] {
+                force_tier(tier);
+                intersect_into(&a, &b, &mut out);
+                assert_eq!(out, want_i, "dispatch {tier:?}");
+                difference_into(&a, &b, &mut out);
+                assert_eq!(out, want_d, "dispatch {tier:?}");
+            }
+            force_tier(None);
+        });
+        force_tier(None);
+    }
+
+    #[test]
+    fn simd_blocks_with_equal_maxes_advance_both() {
+        // a and b share block maxima exactly at block boundaries — the
+        // advance-both case of the block loop
+        let a: Vec<u32> = (0..64).collect();
+        let b: Vec<u32> = (0..64).collect();
+        let mut out = Vec::new();
+        intersect_into(&a, &b, &mut out);
+        assert_eq!(out, a);
+        difference_into(&a, &b, &mut out);
+        assert!(out.is_empty());
     }
 }

@@ -1,0 +1,281 @@
+//! Shared per-level exploration kernel — the one place that turns a plan
+//! [`Level`] into candidate data vertices.
+//!
+//! Both executors ([`super::Executor`] per-pattern and
+//! [`super::fused::FusedExecutor`] trie-fused) route every per-level set
+//! operation through [`candidates`], so kernel improvements land in both
+//! paths at once. The executors keep only their own recursion/emit logic.
+//!
+//! # Tier-dispatch contract
+//!
+//! For a level `l` with the partial match `partial` (indexed by
+//! matching-order position, `partial[..depth]` assigned):
+//!
+//! 1. **Window first.** Symmetry-breaking bounds are folded into one open
+//!    interval `(lo, hi)`; with degree-ordered relabeling these windows
+//!    align with adjacency-list *prefixes*, so each operand list is cut to
+//!    the window with `partition_point` **before** any merge work.
+//! 2. **Fast path.** A single edge constraint with no anti-edges iterates
+//!    the windowed adjacency slice directly — zero copies
+//!    ([`Cands::Adj`]).
+//! 3. **General path.** A 2-way intersection whose operands are both hubs
+//!    collapses to one **word-wise AND** over their bitmap rows, clamped to
+//!    the window. Otherwise the candidate buffer seeds from the windowed
+//!    smallest-degree operand, and every further operand applies in one of
+//!    two tiers: a **hub bitmap row** (O(1) membership per candidate,
+//!    [`crate::graph::bitmap`]) when the operand vertex carries one, or the
+//!    **sorted-list kernels** of [`super::intersect`], which themselves
+//!    dispatch gallop / SIMD / scalar. Intersections run before
+//!    differences, mirroring the candidate-shrinking order the cost model
+//!    assumes.
+//!
+//! The contract guaranteed to both executors: the produced candidate set is
+//! exactly `⋂ N(partial[j]) \ ⋃ N(partial[k])` restricted to the window,
+//! sorted ascending — independent of which tiers served the operands.
+//! Label and injectivity filtering stay with the caller ([`accept`]), as
+//! they depend on per-executor emit semantics.
+
+use super::intersect;
+use crate::graph::{bitmap, DataGraph, VertexId};
+use crate::plan::Level;
+
+/// Candidate source produced by [`candidates`].
+pub enum Cands<'g> {
+    /// Fast path: iterate this graph-owned sorted slice directly.
+    Adj(&'g [VertexId]),
+    /// General path: candidates were materialized into the buffer passed to
+    /// [`candidates`].
+    Buffered,
+}
+
+/// Fold a level's symmetry-breaking constraints into one open interval
+/// `(lo, hi)`: candidates must satisfy `lo < v < hi`.
+#[inline]
+pub fn window(l: &Level, partial: &[VertexId]) -> (Option<VertexId>, Option<VertexId>) {
+    let mut lo: Option<VertexId> = None;
+    for &j in &l.greater_than {
+        lo = Some(lo.map_or(partial[j], |b| b.max(partial[j])));
+    }
+    let mut hi: Option<VertexId> = None;
+    for &j in &l.less_than {
+        hi = Some(hi.map_or(partial[j], |b| b.min(partial[j])));
+    }
+    (lo, hi)
+}
+
+/// Cut a sorted slice to the open window `(lo, hi)` with two binary
+/// searches — after degree-ordered relabeling this is where most
+/// symmetry-breaking pruning happens, before any merge work.
+#[inline]
+fn window_slice(adj: &[VertexId], lo: Option<VertexId>, hi: Option<VertexId>) -> &[VertexId] {
+    let start = lo.map_or(0, |b| adj.partition_point(|&x| x <= b));
+    let end = hi.map_or(adj.len(), |b| adj.partition_point(|&x| x < b));
+    &adj[start..end.max(start)]
+}
+
+/// Compute the candidate set of `l` given `partial`. Returns
+/// [`Cands::Adj`] (borrowed from `graph`, nothing written) on the fast
+/// path, or fills `buf` (using `scratch` for intermediates) and returns
+/// [`Cands::Buffered`].
+pub fn candidates<'g>(
+    graph: &'g DataGraph,
+    l: &Level,
+    partial: &[VertexId],
+    buf: &mut Vec<VertexId>,
+    scratch: &mut Vec<VertexId>,
+) -> Cands<'g> {
+    debug_assert!(!l.intersect.is_empty());
+    let (lo, hi) = window(l, partial);
+
+    // Fast path: a single edge constraint and no anti-edges — iterate the
+    // (windowed, sorted) adjacency list directly, no buffer copy. This is
+    // the hottest loop for path/star-shaped levels (the last level of most
+    // edge-induced plans).
+    if l.intersect.len() == 1 && l.subtract.is_empty() {
+        return Cands::Adj(window_slice(
+            graph.neighbors(partial[l.intersect[0]]),
+            lo,
+            hi,
+        ));
+    }
+
+    // Word-wise tier: a 2-way intersection whose operands are both hubs
+    // reduces to one AND sweep over the bitmap rows (clamped to the
+    // window) — the heaviest merge case in power-law graphs.
+    let hub_pair = l.intersect.len() == 2
+        && match (
+            graph.hub_row(partial[l.intersect[0]]),
+            graph.hub_row(partial[l.intersect[1]]),
+        ) {
+            (Some(r0), Some(r1)) => {
+                bitmap::intersect_rows_into(r0, r1, lo, hi, buf);
+                true
+            }
+            _ => false,
+        };
+
+    if !hub_pair {
+        // General path: seed from the windowed smallest adjacency list,
+        // then per-operand tier dispatch (hub bitmap row vs sorted-list
+        // kernels).
+        let seed = l
+            .intersect
+            .iter()
+            .copied()
+            .min_by_key(|&j| graph.degree(partial[j]))
+            .unwrap();
+        buf.clear();
+        buf.extend_from_slice(window_slice(graph.neighbors(partial[seed]), lo, hi));
+        for &j in &l.intersect {
+            if j == seed {
+                continue;
+            }
+            if buf.is_empty() {
+                break;
+            }
+            let u = partial[j];
+            if let Some(row) = graph.hub_row(u) {
+                bitmap::intersect_row_into(buf, row, scratch);
+            } else {
+                intersect::intersect_into(buf, window_slice(graph.neighbors(u), lo, hi), scratch);
+            }
+            std::mem::swap(buf, scratch);
+        }
+    }
+    for &j in &l.subtract {
+        if buf.is_empty() {
+            break;
+        }
+        let u = partial[j];
+        if let Some(row) = graph.hub_row(u) {
+            bitmap::difference_row_into(buf, row, scratch);
+        } else {
+            intersect::difference_into(buf, graph.neighbors(u), scratch);
+        }
+        std::mem::swap(buf, scratch);
+    }
+    Cands::Buffered
+}
+
+/// Per-candidate filter shared by both executors: label match plus
+/// injectivity against the already-assigned prefix (levels are small, a
+/// linear scan is cheapest).
+#[inline]
+pub fn accept(graph: &DataGraph, l: &Level, prefix: &[VertexId], v: VertexId) -> bool {
+    if let Some(lab) = l.label {
+        if graph.label(v) != lab {
+            return false;
+        }
+    }
+    !prefix.contains(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::pattern::catalog;
+    use crate::plan::Plan;
+
+    fn level_of(plan: &Plan, i: usize) -> &Level {
+        &plan.levels[i]
+    }
+
+    #[test]
+    fn fast_path_returns_windowed_slice() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (0, 4)])
+            .build("star");
+        let plan = Plan::compile(&catalog::path(3)); // center then two leaves
+        // level 1: single intersect against the center, no subtract
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        let partial = vec![0u32, 0, 0];
+        match candidates(&g, level_of(&plan, 1), &partial, &mut buf, &mut scratch) {
+            Cands::Adj(s) => assert_eq!(s, &[1, 2, 3, 4]),
+            Cands::Buffered => panic!("single-edge level must take the fast path"),
+        }
+    }
+
+    #[test]
+    fn window_trims_before_merge() {
+        // wedge level 2 has a symmetry bound (leaf ids ordered); candidates
+        // must already respect it when produced
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (0, 4)])
+            .build("star");
+        let plan = Plan::compile(&catalog::path(3));
+        let l2 = level_of(&plan, 2);
+        let has_bound = !l2.greater_than.is_empty() || !l2.less_than.is_empty();
+        assert!(has_bound, "wedge endpoints must carry a symmetry bound");
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        // center at 0, first leaf at 3
+        let partial = vec![0u32, 3, 0];
+        let cands: Vec<u32> = match candidates(&g, l2, &partial, &mut buf, &mut scratch) {
+            Cands::Adj(s) => s.to_vec(),
+            Cands::Buffered => buf.clone(),
+        };
+        for &v in &cands {
+            if !l2.greater_than.is_empty() {
+                assert!(v > 3, "bound violated: {v}");
+            } else {
+                assert!(v < 3, "bound violated: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_and_list_paths_agree() {
+        // clique level over a graph with two genuine hubs: the kernel must
+        // produce identical candidates with and without the bitmap index,
+        // covering both the membership tier and the word-wise hub-pair tier
+        let mut edges: Vec<(u32, u32)> = (2..=100).flat_map(|v| [(0, v), (1, v)]).collect();
+        edges.extend([(0, 1), (2, 3), (3, 4), (4, 5)]);
+        let g = GraphBuilder::new().edges(&edges).build("hubby");
+        assert!(g.hub_count() >= 2, "test graph must have two hubs");
+        let stripped = g.without_hub_bitmaps();
+        let plan = Plan::compile(&catalog::triangle());
+        let l = &plan.levels[2]; // intersects both earlier positions
+        assert!(l.intersect.len() >= 2);
+        let mut buf_a = Vec::new();
+        let mut buf_b = Vec::new();
+        let mut scratch = Vec::new();
+        for first in [0u32, 1, 3] {
+            for second in [1u32, 2, 3, 4] {
+                if first == second {
+                    continue;
+                }
+                let partial = vec![first, second, 0];
+                let a = match candidates(&g, l, &partial, &mut buf_a, &mut scratch) {
+                    Cands::Adj(s) => s.to_vec(),
+                    Cands::Buffered => buf_a.clone(),
+                };
+                let b = match candidates(&stripped, l, &partial, &mut buf_b, &mut scratch) {
+                    Cands::Adj(s) => s.to_vec(),
+                    Cands::Buffered => buf_b.clone(),
+                };
+                assert_eq!(a, b, "hub vs list candidates for ({first},{second})");
+            }
+        }
+    }
+
+    #[test]
+    fn accept_filters_labels_and_injectivity() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2)])
+            .labels(vec![0, 1, 0])
+            .build("lab");
+        let p = catalog::path(3).with_labels(&[0, 1, 0]);
+        let plan = Plan::compile(&p);
+        // find the level requiring label 0
+        let l = plan
+            .levels
+            .iter()
+            .find(|l| l.label == Some(0))
+            .expect("labeled level");
+        assert!(accept(&g, l, &[1], 2));
+        assert!(!accept(&g, l, &[1], 1), "injectivity");
+        assert!(!accept(&g, l, &[0], 1), "wrong label");
+    }
+}

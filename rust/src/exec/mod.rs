@@ -1,13 +1,15 @@
 //! Matching-engine executor: runs a compiled [`Plan`] over a [`DataGraph`].
 //!
-//! Backtracking exploration with per-level candidate buffers; candidates are
-//! produced by sorted intersections (pattern edges), sorted differences
-//! (anti-edges), label filtering and symmetry-breaking ID comparisons — the
+//! Backtracking exploration with per-level candidate buffers; candidates
+//! come from the shared level kernel ([`kernel`]): windowed intersections
+//! (pattern edges), differences (anti-edges) across the gallop/SIMD/bitmap
+//! tiers, plus label filtering and symmetry-breaking ID comparisons — the
 //! same exploration style as Peregrine. The parallel driver partitions the
 //! first level across threads ([`parallel`]).
 
 pub mod fused;
 pub mod intersect;
+pub mod kernel;
 pub mod parallel;
 
 use crate::graph::{DataGraph, VertexId};
@@ -89,99 +91,35 @@ impl<'g> Executor<'g> {
         }
         let graph: &'g DataGraph = self.graph;
         let l = &plan.levels[level];
-        debug_assert!(!l.intersect.is_empty());
 
-        // symmetry-breaking bounds: candidates must lie in (lo, hi)
-        let mut lo: Option<VertexId> = None;
-        for &j in &l.greater_than {
-            lo = Some(lo.map_or(self.partial[j], |b| b.max(self.partial[j])));
-        }
-        let mut hi: Option<VertexId> = None;
-        for &j in &l.less_than {
-            hi = Some(hi.map_or(self.partial[j], |b| b.min(self.partial[j])));
-        }
-
-        // Fast path: a single edge constraint and no anti-edges — iterate
-        // the (sorted) adjacency list directly, no buffer copy. This is the
-        // hottest loop for path/star-shaped levels (the last level of most
-        // edge-induced plans).
-        if l.intersect.len() == 1 && l.subtract.is_empty() {
-            let adj = graph.neighbors(self.partial[l.intersect[0]]);
-            let start = lo.map_or(0, |b| adj.partition_point(|&x| x <= b));
-            let end = hi.map_or(adj.len(), |b| adj.partition_point(|&x| x < b));
-            for idx in start..end {
-                let v = adj[idx];
-                if let Some(lab) = l.label {
-                    if graph.label(v) != lab {
+        // all per-level set operations run in the shared kernel; buffers are
+        // taken out so the kernel borrows nothing from `self`
+        let mut buf = std::mem::take(&mut self.bufs[level]);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let cands = kernel::candidates(graph, l, &self.partial[..level], &mut buf, &mut scratch);
+        self.scratch = scratch;
+        match cands {
+            kernel::Cands::Adj(adj) => {
+                self.bufs[level] = buf;
+                for &v in adj {
+                    if !kernel::accept(graph, l, &self.partial[..level], v) {
                         continue;
                     }
-                }
-                // injectivity: level is small (≤ 7), linear scan is cheapest
-                if self.partial[..level].contains(&v) {
-                    continue;
-                }
-                self.partial[level] = v;
-                self.descend(plan, level + 1, visitor);
-            }
-            return;
-        }
-
-        // General path: intersections (smallest adjacency list first),
-        // differences, then bound trims.
-        {
-            let mut buf = std::mem::take(&mut self.bufs[level]);
-            let mut scratch = std::mem::take(&mut self.scratch);
-            // seed from the smallest adjacency list — galloping benefits
-            let seed = l
-                .intersect
-                .iter()
-                .copied()
-                .min_by_key(|&j| graph.degree(self.partial[j]))
-                .unwrap();
-            buf.clear();
-            buf.extend_from_slice(graph.neighbors(self.partial[seed]));
-            for &j in &l.intersect {
-                if j == seed {
-                    continue;
-                }
-                let adj = graph.neighbors(self.partial[j]);
-                scratch.clear();
-                intersect::intersect_into(&buf, adj, &mut scratch);
-                std::mem::swap(&mut buf, &mut scratch);
-            }
-            // trim to the symmetry-breaking window FIRST: differences then
-            // scan a smaller candidate list (perf iteration 2, see
-            // EXPERIMENTS.md §Perf)
-            if let Some(b) = lo {
-                intersect::retain_greater(&mut buf, b);
-            }
-            if let Some(b) = hi {
-                intersect::retain_less(&mut buf, b);
-            }
-            for &j in &l.subtract {
-                let adj = graph.neighbors(self.partial[j]);
-                scratch.clear();
-                intersect::difference_into(&buf, adj, &mut scratch);
-                std::mem::swap(&mut buf, &mut scratch);
-            }
-            self.bufs[level] = buf;
-            self.scratch = scratch;
-        }
-
-        // label + injectivity filter + recurse
-        let cand_len = self.bufs[level].len();
-        for idx in 0..cand_len {
-            let v = self.bufs[level][idx];
-            if let Some(lab) = l.label {
-                if graph.label(v) != lab {
-                    continue;
+                    self.partial[level] = v;
+                    self.descend(plan, level + 1, visitor);
                 }
             }
-            if self.partial[..level].contains(&v) {
-                continue;
+            kernel::Cands::Buffered => {
+                // `buf` is a local: deeper levels use their own buffers
+                for &v in &buf {
+                    if !kernel::accept(graph, l, &self.partial[..level], v) {
+                        continue;
+                    }
+                    self.partial[level] = v;
+                    self.descend(plan, level + 1, visitor);
+                }
+                self.bufs[level] = buf;
             }
-            self.partial[level] = v;
-            self.descend(plan, level + 1, visitor);
         }
     }
 }
@@ -195,8 +133,10 @@ pub fn count_matches(graph: &DataGraph, plan: &Plan) -> u64 {
 }
 
 /// Enumerate matches in *pattern-vertex order* (not matching order):
-/// `out[k]` maps pattern vertex `k` to a data vertex. Use only on small
-/// graphs/tests — materializes everything.
+/// `out[k]` maps pattern vertex `k` to a data vertex, reported in
+/// **original** vertex IDs (the inverse of any degree-ordered relabeling
+/// applied at graph build time). Use only on small graphs/tests —
+/// materializes everything.
 pub fn enumerate_matches(graph: &DataGraph, plan: &Plan) -> Vec<Vec<VertexId>> {
     let mut out = Vec::new();
     let order = plan.order.clone();
@@ -205,7 +145,7 @@ pub fn enumerate_matches(graph: &DataGraph, plan: &Plan) -> Vec<Vec<VertexId>> {
     let mut vis = |m: &[VertexId]| {
         let mut by_pattern = vec![0 as VertexId; n];
         for (pos, &pv) in order.iter().enumerate() {
-            by_pattern[pv] = m[pos];
+            by_pattern[pv] = graph.original_id(m[pos]);
         }
         out.push(by_pattern);
     };

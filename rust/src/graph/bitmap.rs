@@ -1,0 +1,249 @@
+//! Dense bitmap adjacency rows for hub vertices — the "hybrid" half of the
+//! hybrid CSR representation.
+//!
+//! Power-law graphs concentrate a large fraction of all edge endpoints on a
+//! few hub vertices. Set operations against a hub's adjacency list dominate
+//! the matching inner loop, and a sorted-list merge touches the whole list.
+//! A bitmap row gives O(1) membership instead, so intersecting a candidate
+//! buffer with a hub operand costs O(|buf|) regardless of the hub's degree.
+//!
+//! Invariants (checked by [`crate::graph::DataGraph::check_invariants`]):
+//! * a bitmap row exists only for vertices selected by [`hub_threshold`]
+//!   (top-degree vertices, capped at [`MAX_HUB_ROWS`]);
+//! * row `r` of hub `h` has bit `u` set **iff** `u` appears in the sorted
+//!   CSR adjacency list of `h` — the CSR list remains authoritative and is
+//!   kept for every vertex, hubs included;
+//! * rows are `ceil(n / 64)` words, bits beyond `n` are zero.
+
+use super::VertexId;
+
+/// Upper bound on bitmap rows (memory cap: `MAX_HUB_ROWS * n / 8` bytes).
+pub const MAX_HUB_ROWS: usize = 256;
+
+/// Minimum degree for a vertex to get a bitmap row: the row costs `n` bits,
+/// so demand the sorted list be within a factor 64 of that (`deg >= n/64`),
+/// and never bother below 64 neighbors where merges are already cheap.
+pub fn hub_threshold(num_vertices: usize) -> usize {
+    (num_vertices / 64).max(64)
+}
+
+/// Bitmap adjacency rows for the hub vertices of one data graph.
+#[derive(Clone, Debug)]
+pub struct HubBitmaps {
+    /// Words per row: `ceil(n / 64)`.
+    words_per_row: usize,
+    /// `row_of[v]` = row index of `v`, or `u32::MAX` if `v` is not a hub.
+    row_of: Vec<u32>,
+    /// `hubs[r]` = vertex owning row `r` (descending degree).
+    hubs: Vec<VertexId>,
+    /// Row-major bit storage, `hubs.len() * words_per_row` words.
+    bits: Vec<u64>,
+}
+
+/// A borrowed bitmap row: O(1) membership for one hub's neighborhood.
+#[derive(Clone, Copy, Debug)]
+pub struct HubRow<'a> {
+    words: &'a [u64],
+}
+
+impl HubRow<'_> {
+    /// Whether `v` is a neighbor of the row's hub.
+    #[inline]
+    pub fn contains(&self, v: VertexId) -> bool {
+        let w = (v >> 6) as usize;
+        debug_assert!(w < self.words.len());
+        (self.words[w] >> (v & 63)) & 1 == 1
+    }
+
+    /// Raw words (for word-wise AND/ANDNOT between two hub rows).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        self.words
+    }
+}
+
+impl HubBitmaps {
+    /// Build rows for the top-degree vertices of a CSR graph. Returns `None`
+    /// when no vertex qualifies (small or degree-flat graphs).
+    pub fn build(offsets: &[usize], neighbors: &[VertexId]) -> Option<HubBitmaps> {
+        let n = offsets.len() - 1;
+        let min_deg = hub_threshold(n);
+        let mut hubs: Vec<VertexId> = (0..n as VertexId)
+            .filter(|&v| offsets[v as usize + 1] - offsets[v as usize] >= min_deg)
+            .collect();
+        if hubs.is_empty() {
+            return None;
+        }
+        // keep the heaviest rows under the memory cap; deterministic order
+        hubs.sort_by_key(|&v| {
+            (
+                std::cmp::Reverse(offsets[v as usize + 1] - offsets[v as usize]),
+                v,
+            )
+        });
+        hubs.truncate(MAX_HUB_ROWS);
+
+        let words_per_row = n.div_ceil(64);
+        let mut row_of = vec![u32::MAX; n];
+        let mut bits = vec![0u64; hubs.len() * words_per_row];
+        for (r, &h) in hubs.iter().enumerate() {
+            row_of[h as usize] = r as u32;
+            let row = &mut bits[r * words_per_row..(r + 1) * words_per_row];
+            for &u in &neighbors[offsets[h as usize]..offsets[h as usize + 1]] {
+                row[(u >> 6) as usize] |= 1u64 << (u & 63);
+            }
+        }
+        Some(HubBitmaps {
+            words_per_row,
+            row_of,
+            hubs,
+            bits,
+        })
+    }
+
+    /// Bitmap row of `v`, if `v` is a hub.
+    #[inline]
+    pub fn row(&self, v: VertexId) -> Option<HubRow<'_>> {
+        let r = *self.row_of.get(v as usize)?;
+        if r == u32::MAX {
+            return None;
+        }
+        let start = r as usize * self.words_per_row;
+        Some(HubRow {
+            words: &self.bits[start..start + self.words_per_row],
+        })
+    }
+
+    /// The hub vertices owning rows, heaviest first.
+    pub fn hubs(&self) -> &[VertexId] {
+        &self.hubs
+    }
+
+    /// Number of bitmap rows.
+    pub fn num_rows(&self) -> usize {
+        self.hubs.len()
+    }
+}
+
+/// `out = a ∩ b` where `b` is a hub bitmap row: per-element O(1) membership.
+pub fn intersect_row_into(a: &[VertexId], b: HubRow<'_>, out: &mut Vec<VertexId>) {
+    out.clear();
+    out.extend(a.iter().copied().filter(|&x| b.contains(x)));
+}
+
+/// `out = a ∩ b ∩ (lo, hi)` where **both** operands are hub bitmap rows:
+/// word-wise AND over the two rows, emitting set bits inside the open
+/// window. This is the heaviest intersection case (two hub adjacency
+/// lists) reduced to `n/64` word ops.
+pub fn intersect_rows_into(
+    a: HubRow<'_>,
+    b: HubRow<'_>,
+    lo: Option<VertexId>,
+    hi: Option<VertexId>,
+    out: &mut Vec<VertexId>,
+) {
+    out.clear();
+    let (aw, bw) = (a.words(), b.words());
+    debug_assert_eq!(aw.len(), bw.len());
+    let words = aw.len();
+    let start_bit = lo.map_or(0, |v| v as usize + 1);
+    let end_bit = hi.map_or(words * 64, |v| v as usize);
+    if start_bit >= end_bit {
+        return;
+    }
+    let start_w = start_bit >> 6;
+    let end_w = ((end_bit + 63) >> 6).min(words);
+    for w in start_w..end_w {
+        let mut bits = aw[w] & bw[w];
+        if w == start_w {
+            bits &= !0u64 << (start_bit & 63);
+        }
+        if w == end_bit >> 6 && (end_bit & 63) != 0 {
+            bits &= (1u64 << (end_bit & 63)) - 1;
+        }
+        while bits != 0 {
+            let t = bits.trailing_zeros() as usize;
+            out.push((w * 64 + t) as VertexId);
+            bits &= bits - 1;
+        }
+    }
+}
+
+/// `out = a \ b` where `b` is a hub bitmap row.
+pub fn difference_row_into(a: &[VertexId], b: HubRow<'_>, out: &mut Vec<VertexId>) {
+    out.clear();
+    out.extend(a.iter().copied().filter(|&x| !b.contains(x)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// A star graph whose center qualifies as a hub (degree ≥ 64).
+    fn star(leaves: usize) -> crate::graph::DataGraph {
+        let edges: Vec<(u32, u32)> = (1..=leaves as u32).map(|v| (0, v)).collect();
+        GraphBuilder::new().edges(&edges).build("star")
+    }
+
+    #[test]
+    fn star_center_gets_a_row() {
+        let g = star(100);
+        assert_eq!(g.hub_count(), 1);
+        let row = g.hub_row(0).expect("center is a hub");
+        for v in 1..=100u32 {
+            assert!(row.contains(v));
+        }
+        assert!(!row.contains(0));
+        assert!(g.hub_row(1).is_none(), "leaves are not hubs");
+    }
+
+    #[test]
+    fn small_graphs_have_no_rows() {
+        let g = star(10);
+        assert_eq!(g.hub_count(), 0);
+        assert!(g.hub_row(0).is_none());
+    }
+
+    #[test]
+    fn row_ops_match_sorted_ops() {
+        let g = star(80);
+        let row = g.hub_row(0).unwrap();
+        let cands: Vec<u32> = vec![0, 1, 5, 77, 80, 81];
+        let mut out = Vec::new();
+        intersect_row_into(&cands, row, &mut out);
+        assert_eq!(out, vec![1, 5, 77, 80]);
+        difference_row_into(&cands, row, &mut out);
+        assert_eq!(out, vec![0, 81]);
+    }
+
+    #[test]
+    fn word_wise_and_respects_window() {
+        // two hubs sharing 70 neighbors: 0 and 1 both connected to 2..=71
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for v in 2..=71u32 {
+            edges.push((0, v));
+            edges.push((1, v));
+        }
+        edges.push((0, 72)); // only hub 0
+        let g = GraphBuilder::new().edges(&edges).build("two-hubs");
+        let (r0, r1) = (g.hub_row(0).unwrap(), g.hub_row(1).unwrap());
+        let mut out = Vec::new();
+        intersect_rows_into(r0, r1, None, None, &mut out);
+        assert_eq!(out, (2..=71u32).collect::<Vec<_>>());
+        // open window (10, 65): strictly between
+        intersect_rows_into(r0, r1, Some(10), Some(65), &mut out);
+        assert_eq!(out, (11..=64u32).collect::<Vec<_>>());
+        // window at word boundaries
+        intersect_rows_into(r0, r1, Some(63), Some(64), &mut out);
+        assert!(out.is_empty());
+        intersect_rows_into(r0, r1, Some(62), None, &mut out);
+        assert_eq!(out, (63..=71u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn threshold_scales_with_graph_size() {
+        assert_eq!(hub_threshold(1000), 64);
+        assert_eq!(hub_threshold(64_000), 1000);
+    }
+}

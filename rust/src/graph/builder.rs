@@ -1,18 +1,35 @@
 //! Graph construction: dedupe, symmetrize, sort, optional degree-based
 //! vertex renaming (Peregrine normalizes IDs so that higher-degree vertices
 //! get smaller IDs, which improves the effectiveness of ID-order symmetry
-//! breaking).
+//! breaking and aligns symmetry windows with adjacency-list prefixes).
+//!
+//! The rename is recorded as a [`Relabeling`] on the built [`DataGraph`],
+//! so user-facing outputs (enumeration, IO) can map engine IDs back to the
+//! input IDs.
 
+use super::relabel::Relabeling;
 use super::{csr::DataGraph, Label, VertexId};
 
 /// Builder for [`DataGraph`]: accepts an arbitrary multiset of (possibly
 /// duplicated, self-looped, unordered) edges and produces a clean CSR.
-#[derive(Default)]
 pub struct GraphBuilder {
     edges: Vec<(VertexId, VertexId)>,
     labels: Option<Vec<Label>>,
     n_hint: usize,
     degree_order: bool,
+    hub_bitmaps: bool,
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        GraphBuilder {
+            edges: Vec::new(),
+            labels: None,
+            n_hint: 0,
+            degree_order: false,
+            hub_bitmaps: true,
+        }
+    }
 }
 
 impl GraphBuilder {
@@ -44,10 +61,17 @@ impl GraphBuilder {
         self
     }
 
-    /// Rename vertices so higher-degree vertices receive smaller IDs
-    /// (improves symmetry-breaking pruning; used for benchmark datasets).
+    /// Rename vertices so higher-degree vertices receive smaller IDs. The
+    /// old↔new map is kept on the graph ([`DataGraph::original_id`]).
     pub fn degree_ordered(mut self, yes: bool) -> Self {
         self.degree_order = yes;
+        self
+    }
+
+    /// Build dense bitmap rows for hub vertices (default on; the kernels
+    /// ablation turns it off to measure the sorted-list-only layout).
+    pub fn hub_bitmaps(mut self, yes: bool) -> Self {
+        self.hub_bitmaps = yes;
         self
     }
 
@@ -58,6 +82,7 @@ impl GraphBuilder {
             labels,
             n_hint,
             degree_order,
+            hub_bitmaps,
         } = self;
 
         // drop self loops, normalize direction
@@ -78,23 +103,18 @@ impl GraphBuilder {
             .max(n_hint)
             .max(labels.as_ref().map_or(0, |l| l.len()));
 
-        // optional degree-ordered rename
-        let (edges, labels) = if degree_order {
+        // optional degree-ordered rename, recorded on the graph
+        let (edges, labels, relabel) = if degree_order {
             let mut deg = vec![0usize; n];
             for &(u, v) in &edges {
                 deg[u as usize] += 1;
                 deg[v as usize] += 1;
             }
-            let mut order: Vec<VertexId> = (0..n as VertexId).collect();
-            order.sort_by_key(|&v| std::cmp::Reverse(deg[v as usize]));
-            let mut rename = vec![0 as VertexId; n];
-            for (new_id, &old_id) in order.iter().enumerate() {
-                rename[old_id as usize] = new_id as VertexId;
-            }
+            let r = Relabeling::degree_descending(&deg);
             let edges: Vec<_> = edges
                 .iter()
                 .map(|&(u, v)| {
-                    let (a, b) = (rename[u as usize], rename[v as usize]);
+                    let (a, b) = (r.new_id(u), r.new_id(v));
                     if a < b {
                         (a, b)
                     } else {
@@ -105,13 +125,13 @@ impl GraphBuilder {
             let labels = labels.map(|l| {
                 let mut nl = vec![0; n];
                 for (old, &lab) in l.iter().enumerate() {
-                    nl[rename[old] as usize] = lab;
+                    nl[r.new_id(old as VertexId) as usize] = lab;
                 }
                 nl
             });
-            (edges, labels)
+            (edges, labels, Some(r))
         } else {
-            (edges, labels)
+            (edges, labels, None)
         };
 
         // CSR
@@ -141,7 +161,14 @@ impl GraphBuilder {
             l
         });
 
-        DataGraph::from_parts(offsets, neighbors, labels, name.to_string())
+        DataGraph::from_parts_opts(
+            offsets,
+            neighbors,
+            labels,
+            name.to_string(),
+            relabel,
+            hub_bitmaps,
+        )
     }
 }
 
@@ -161,10 +188,7 @@ mod tests {
 
     #[test]
     fn isolated_vertices_via_hint() {
-        let g = GraphBuilder::new()
-            .edge(0, 1)
-            .num_vertices(5)
-            .build("g");
+        let g = GraphBuilder::new().edge(0, 1).num_vertices(5).build("g");
         assert_eq!(g.num_vertices(), 5);
         assert_eq!(g.degree(4), 0);
     }
@@ -200,5 +224,33 @@ mod tests {
             .degree_ordered(true)
             .build("g");
         assert_eq!(g.label(0), 1, "hub label must follow the rename");
+    }
+
+    #[test]
+    fn degree_order_records_original_ids() {
+        let g = GraphBuilder::new()
+            .edges(&[(3, 0), (3, 1), (3, 2), (3, 4)])
+            .degree_ordered(true)
+            .build("g");
+        assert_eq!(g.original_id(0), 3, "engine hub 0 was input vertex 3");
+        let r = g.relabeling().expect("relabeling recorded");
+        assert!(r.check());
+        assert_eq!(r.new_id(3), 0);
+        // neighbors of the hub map back to the original leaf ids
+        let mut orig: Vec<u32> = g.neighbors(0).iter().map(|&u| g.original_id(u)).collect();
+        orig.sort_unstable();
+        assert_eq!(orig, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn hub_bitmaps_toggle() {
+        let edges: Vec<(u32, u32)> = (1..=90).map(|v| (0, v)).collect();
+        let on = GraphBuilder::new().edges(&edges).build("g");
+        assert_eq!(on.hub_count(), 1);
+        let off = GraphBuilder::new()
+            .edges(&edges)
+            .hub_bitmaps(false)
+            .build("g");
+        assert_eq!(off.hub_count(), 0);
     }
 }

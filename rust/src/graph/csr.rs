@@ -1,15 +1,38 @@
-//! Compressed-sparse-row data graph with sorted adjacency lists.
+//! Compressed-sparse-row data graph with sorted adjacency lists, optionally
+//! extended to a **hybrid adjacency**: dense bitmap rows for hub vertices
+//! alongside the sorted lists.
 //!
 //! This is the substrate the matching engine explores. Invariants:
 //! * undirected simple graph: every edge appears in both endpoint lists,
 //!   no self loops, no duplicates;
-//! * each adjacency list is sorted ascending — required by the galloping
+//! * each adjacency list is sorted ascending — required by the tiered
 //!   intersection/difference kernels in [`crate::exec::intersect`];
 //! * optional vertex labels, dense in `0..num_labels`.
+//!
+//! # Hybrid-adjacency invariants
+//!
+//! The sorted CSR list is authoritative and exists for **every** vertex;
+//! the bitmap rows of [`super::bitmap::HubBitmaps`] are a redundant index
+//! over the heaviest lists:
+//! * `hub_row(v).is_some()` only for top-degree vertices (see
+//!   [`super::bitmap::hub_threshold`]); any vertex may be queried;
+//! * when a row exists, `row.contains(u) == neighbors(v).contains(&u)` for
+//!   all `u` — kernels may use whichever side is cheaper (`common_neighbors`
+//!   style membership loops should prefer the row: O(1) per probe instead
+//!   of a binary search over a list that can span millions of entries);
+//! * rows are rebuilt whenever the CSR parts change; there is no partial
+//!   update path (the graph is immutable).
+//!
+//! When the graph was built with degree-ordered relabeling
+//! ([`super::relabel::Relabeling`]), the engine-facing IDs are the
+//! *relabeled* ones (hubs at 0, 1, …) and [`DataGraph::original_id`] maps
+//! back to the input IDs for user-facing output.
 
+use super::bitmap::{HubBitmaps, HubRow};
+use super::relabel::Relabeling;
 use super::{Label, VertexId};
 
-/// An immutable undirected data graph in CSR form.
+/// An immutable undirected data graph in hybrid CSR form.
 #[derive(Clone, Debug)]
 pub struct DataGraph {
     offsets: Vec<usize>,
@@ -17,28 +40,56 @@ pub struct DataGraph {
     labels: Option<Vec<Label>>,
     num_labels: u32,
     name: String,
+    /// Old↔new ID map when the build relabeled vertices (`None` = identity).
+    relabel: Option<Relabeling>,
+    /// Bitmap rows for hub vertices (`None` = no vertex qualifies or the
+    /// builder disabled them).
+    hubs: Option<HubBitmaps>,
 }
 
 impl DataGraph {
     /// Build from parts. `neighbors[offsets[v]..offsets[v+1]]` must be the
-    /// sorted neighbor list of `v`. Prefer [`crate::graph::GraphBuilder`].
+    /// sorted neighbor list of `v`. Hub bitmap rows are derived
+    /// automatically. Prefer [`crate::graph::GraphBuilder`].
     pub fn from_parts(
         offsets: Vec<usize>,
         neighbors: Vec<VertexId>,
         labels: Option<Vec<Label>>,
         name: String,
     ) -> Self {
+        Self::from_parts_opts(offsets, neighbors, labels, name, None, true)
+    }
+
+    /// [`DataGraph::from_parts`] with an explicit relabeling record and a
+    /// switch for the hub bitmap index (the kernels ablation measures the
+    /// list-only representation against the hybrid one).
+    pub fn from_parts_opts(
+        offsets: Vec<usize>,
+        neighbors: Vec<VertexId>,
+        labels: Option<Vec<Label>>,
+        name: String,
+        relabel: Option<Relabeling>,
+        hub_bitmaps: bool,
+    ) -> Self {
         debug_assert!(!offsets.is_empty());
         let num_labels = labels
             .as_ref()
             .map(|l| l.iter().copied().max().map_or(0, |m| m + 1))
             .unwrap_or(0);
+        let hubs = if hub_bitmaps {
+            HubBitmaps::build(&offsets, &neighbors)
+        } else {
+            None
+        };
+        let relabel = relabel.filter(|r| !r.is_identity());
         let g = DataGraph {
             offsets,
             neighbors,
             labels,
             num_labels,
             name,
+            relabel,
+            hubs,
         };
         debug_assert!(g.check_invariants());
         g
@@ -68,15 +119,64 @@ impl DataGraph {
         self.offsets[v as usize + 1] - self.offsets[v as usize]
     }
 
-    /// Whether `(u, v)` is an edge (binary search; lists are sorted).
+    /// Whether `(u, v)` is an edge. Hub rows answer in O(1); otherwise a
+    /// binary search over the smaller sorted list.
     #[inline]
     pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        if let Some(row) = self.hub_row(u) {
+            return row.contains(v);
+        }
+        if let Some(row) = self.hub_row(v) {
+            return row.contains(u);
+        }
         let (a, b) = if self.degree(u) <= self.degree(v) {
             (u, v)
         } else {
             (v, u)
         };
         self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Bitmap row of `v`, if `v` is a hub in the hybrid representation.
+    #[inline]
+    pub fn hub_row(&self, v: VertexId) -> Option<HubRow<'_>> {
+        self.hubs.as_ref().and_then(|h| h.row(v))
+    }
+
+    /// Number of hub vertices carrying bitmap rows.
+    pub fn hub_count(&self) -> usize {
+        self.hubs.as_ref().map_or(0, |h| h.num_rows())
+    }
+
+    /// The hub vertices carrying bitmap rows, heaviest first.
+    pub fn hub_vertices(&self) -> &[VertexId] {
+        match &self.hubs {
+            Some(h) => h.hubs(),
+            None => &[],
+        }
+    }
+
+    /// The relabeling applied at build time, if any.
+    pub fn relabeling(&self) -> Option<&Relabeling> {
+        self.relabel.as_ref()
+    }
+
+    /// Original (input) ID of engine vertex `v` — identity unless the graph
+    /// was built with degree-ordered relabeling.
+    #[inline]
+    pub fn original_id(&self, v: VertexId) -> VertexId {
+        match &self.relabel {
+            Some(r) => r.old_id(v),
+            None => v,
+        }
+    }
+
+    /// A copy of this graph without the hub bitmap index (kernels ablation:
+    /// sorted lists only).
+    pub fn without_hub_bitmaps(&self) -> DataGraph {
+        let mut g = self.clone();
+        g.hubs = None;
+        g
     }
 
     /// Label of `v` (0 for unlabeled graphs).
@@ -110,7 +210,7 @@ impl DataGraph {
             .unwrap_or(0)
     }
 
-    /// Verify CSR invariants (debug builds / tests).
+    /// Verify CSR + hybrid-adjacency invariants (debug builds / tests).
     pub fn check_invariants(&self) -> bool {
         let n = self.num_vertices();
         if *self.offsets.last().unwrap() != self.neighbors.len() {
@@ -118,6 +218,11 @@ impl DataGraph {
         }
         if let Some(l) = &self.labels {
             if l.len() != n {
+                return false;
+            }
+        }
+        if let Some(r) = &self.relabel {
+            if r.len() != n || !r.check() {
                 return false;
             }
         }
@@ -137,25 +242,43 @@ impl DataGraph {
                     return false;
                 }
             }
+            // hub rows must agree with the sorted list exactly
+            if let Some(row) = self.hub_row(v) {
+                let mut count = 0usize;
+                for u in 0..n as VertexId {
+                    if row.contains(u) {
+                        count += 1;
+                        if ns.binary_search(&u).is_err() {
+                            return false;
+                        }
+                    }
+                }
+                if count != ns.len() {
+                    return false;
+                }
+            }
         }
         true
     }
 
     /// Densify a vertex subset into a 0/1 adjacency matrix of size
     /// `block.len() × block.len()` (row-major f32) — feed for the XLA dense
-    /// census backend.
+    /// census backend. Uses a position vector indexed by vertex ID (not a
+    /// hash map): the census backend calls this per block, and large blocks
+    /// made hashing the hot spot.
     pub fn densify(&self, block: &[VertexId]) -> Vec<f32> {
         let k = block.len();
         let mut a = vec![0f32; k * k];
-        // position of each block vertex
-        let mut pos = std::collections::HashMap::with_capacity(k);
+        // position of each block vertex, indexed by vertex id
+        let mut pos = vec![u32::MAX; self.num_vertices()];
         for (i, &v) in block.iter().enumerate() {
-            pos.insert(v, i);
+            pos[v as usize] = i as u32;
         }
         for (i, &v) in block.iter().enumerate() {
             for &u in self.neighbors(v) {
-                if let Some(&j) = pos.get(&u) {
-                    a[i * k + j] = 1.0;
+                let j = pos[u as usize];
+                if j != u32::MAX {
+                    a[i * k + j as usize] = 1.0;
                 }
             }
         }
@@ -186,6 +309,8 @@ mod tests {
         assert!(!g.has_edge(0, 3));
         assert!(!g.is_labeled());
         assert_eq!(g.max_degree(), 3);
+        assert_eq!(g.original_id(2), 2, "identity without relabeling");
+        assert!(g.relabeling().is_none());
     }
 
     #[test]
@@ -195,14 +320,27 @@ mod tests {
     }
 
     #[test]
+    fn hub_rows_answer_has_edge() {
+        let edges: Vec<(u32, u32)> = (1..=100).map(|v| (0, v)).collect();
+        let g = GraphBuilder::new().edges(&edges).build("star");
+        assert_eq!(g.hub_count(), 1);
+        assert_eq!(g.hub_vertices(), &[0]);
+        assert!(g.has_edge(0, 57));
+        assert!(g.has_edge(57, 0));
+        assert!(!g.has_edge(1, 2));
+        assert!(g.check_invariants());
+        let stripped = g.without_hub_bitmaps();
+        assert_eq!(stripped.hub_count(), 0);
+        assert!(stripped.has_edge(0, 57), "list path still works");
+        assert!(stripped.check_invariants());
+    }
+
+    #[test]
     fn densify_block() {
         let g = triangle_plus_tail();
         let a = g.densify(&[0, 1, 2]);
         // triangle on the block: all off-diagonal ones
-        assert_eq!(
-            a,
-            vec![0., 1., 1., 1., 0., 1., 1., 1., 0.]
-        );
+        assert_eq!(a, vec![0., 1., 1., 1., 0., 1., 1., 1., 0.]);
         let a2 = g.densify(&[0, 3]);
         assert_eq!(a2, vec![0., 0., 0., 0.]);
     }

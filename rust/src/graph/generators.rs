@@ -111,7 +111,11 @@ pub fn rmat(scale: u32, m: usize, probs: (f64, f64, f64, f64), seed: u64) -> Dat
         if u == v {
             continue;
         }
-        let key = if u < v { (u as VertexId, v as VertexId) } else { (v as VertexId, u as VertexId) };
+        let key = if u < v {
+            (u as VertexId, v as VertexId)
+        } else {
+            (v as VertexId, u as VertexId)
+        };
         if seen.insert(key) {
             edges.push(key);
         }

@@ -5,6 +5,10 @@
 //! v <id> <label>      (optional labeled-vertex lines)
 //! e <u> <v>           (edge lines; plain "<u> <v>" also accepted)
 //! ```
+//!
+//! Loaded graphs are degree-order relabeled for the matching engine (hubs
+//! get the smallest IDs); the old↔new map is kept on the [`DataGraph`] so
+//! [`save_text`] and user-facing outputs report the file's original IDs.
 
 use super::{DataGraph, GraphBuilder, Label, VertexId};
 use anyhow::{bail, Context, Result};
@@ -46,9 +50,9 @@ pub fn load_text(path: &Path) -> Result<DataGraph> {
                 edges.push((u, v));
             }
             tok => {
-                let u: VertexId = tok
-                    .parse()
-                    .with_context(|| format!("line {}: expected vertex id, got {tok:?}", lineno + 1))?;
+                let u: VertexId = tok.parse().with_context(|| {
+                    format!("line {}: expected vertex id, got {tok:?}", lineno + 1)
+                })?;
                 let v: VertexId = it
                     .next()
                     .with_context(|| format!("line {}: missing second endpoint", lineno + 1))?
@@ -64,7 +68,7 @@ pub fn load_text(path: &Path) -> Result<DataGraph> {
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "graph".into());
-    let mut b = GraphBuilder::new().edges(&edges);
+    let mut b = GraphBuilder::new().edges(&edges).degree_ordered(true);
     if !labels.is_empty() {
         let n = labels
             .iter()
@@ -81,21 +85,29 @@ pub fn load_text(path: &Path) -> Result<DataGraph> {
     Ok(b.build(&name))
 }
 
-/// Save a graph in the text format above.
+/// Save a graph in the text format above, reporting **original** vertex IDs
+/// (the inverse of the degree-ordered relabeling applied at build time, when
+/// there is one).
 pub fn save_text(g: &DataGraph, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating graph file {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    writeln!(w, "# morphmine graph: {} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges())?;
+    writeln!(
+        w,
+        "# morphmine graph: {} |V|={} |E|={}",
+        g.name(),
+        g.num_vertices(),
+        g.num_edges()
+    )?;
     if g.is_labeled() {
         for v in 0..g.num_vertices() as VertexId {
-            writeln!(w, "v {} {}", v, g.label(v))?;
+            writeln!(w, "v {} {}", g.original_id(v), g.label(v))?;
         }
     }
     for v in 0..g.num_vertices() as VertexId {
         for &u in g.neighbors(v) {
             if v < u {
-                writeln!(w, "e {v} {u}")?;
+                writeln!(w, "e {} {}", g.original_id(v), g.original_id(u))?;
             }
         }
     }
@@ -134,8 +146,11 @@ mod tests {
         let g2 = load_text(&p).unwrap();
         assert_eq!(g.num_vertices(), g2.num_vertices());
         assert_eq!(g.num_edges(), g2.num_edges());
-        for v in 0..g.num_vertices() as u32 {
-            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        // loading relabels by degree; compare through the original-id map
+        for v2 in 0..g2.num_vertices() as u32 {
+            let mut back: Vec<u32> = g2.neighbors(v2).iter().map(|&u| g2.original_id(u)).collect();
+            back.sort_unstable();
+            assert_eq!(back, g.neighbors(g2.original_id(v2)));
         }
     }
 
@@ -148,9 +163,29 @@ mod tests {
         save_text(&g, &p).unwrap();
         let g2 = load_text(&p).unwrap();
         assert!(g2.is_labeled());
-        for v in 0..g.num_vertices() as u32 {
-            assert_eq!(g.label(v), g2.label(v));
+        for v2 in 0..g2.num_vertices() as u32 {
+            assert_eq!(g.label(g2.original_id(v2)), g2.label(v2));
         }
+    }
+
+    #[test]
+    fn save_reports_original_ids() {
+        // engine ids are relabeled after load; the file written back must be
+        // in the same id space as the input file
+        let dir = std::env::temp_dir().join("morphmine_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g4.txt");
+        // star centered at 9: the loader renames 9 to engine id 0
+        std::fs::write(&p, "e 9 1\ne 9 2\ne 9 3\n").unwrap();
+        let g = load_text(&p).unwrap();
+        assert_eq!(g.degree(0), 3, "hub relabeled to id 0");
+        assert_eq!(g.original_id(0), 9);
+        let p2 = dir.join("g4_out.txt");
+        save_text(&g, &p2).unwrap();
+        let body = std::fs::read_to_string(&p2).unwrap();
+        assert!(body.contains("9"), "original hub id must appear: {body}");
+        let g2 = load_text(&p2).unwrap();
+        assert_eq!(g2.original_id(0), 9, "roundtrip keeps original ids");
     }
 
     #[test]

@@ -6,16 +6,19 @@
 //! synthesizes stand-ins with matched degree skew, density and label
 //! cardinality (see DESIGN.md §5). All mining code is dataset-agnostic.
 
+pub mod bitmap;
 mod builder;
 mod csr;
 pub mod dynamic;
 pub mod generators;
 pub mod io;
+pub mod relabel;
 pub mod stats;
 
 pub use builder::GraphBuilder;
 pub use csr::DataGraph;
 pub use dynamic::DynGraph;
+pub use relabel::Relabeling;
 pub use stats::GraphStats;
 
 /// Vertex identifier in a data graph.

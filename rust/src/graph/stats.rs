@@ -27,6 +27,14 @@ pub struct GraphStats {
     pub clustering: f64,
     /// Per-label vertex frequency (empty for unlabeled graphs).
     pub label_freq: Vec<f64>,
+    /// Number of hub vertices carrying dense bitmap rows in the hybrid
+    /// adjacency (0 when the graph has none).
+    pub hub_count: usize,
+    /// Probability that a random edge endpoint is a hub — i.e. the chance
+    /// that a set-op operand at depth ≥ 1 is served by an O(1)-membership
+    /// bitmap row instead of a sorted-list merge. Feeds the cost model's
+    /// hub discount ([`crate::plan::cost`]).
+    pub hub_edge_fraction: f64,
 }
 
 impl GraphStats {
@@ -91,6 +99,14 @@ impl GraphStats {
             0.0
         };
 
+        let hub_count = g.hub_count();
+        let hub_deg_sum: f64 = g.hub_vertices().iter().map(|&h| g.degree(h) as f64).sum();
+        let hub_edge_fraction = if deg_sum > 0.0 {
+            hub_deg_sum / deg_sum
+        } else {
+            0.0
+        };
+
         let label_freq = if g.is_labeled() {
             let mut hist = vec![0f64; g.num_labels() as usize];
             for v in 0..n as VertexId {
@@ -115,6 +131,8 @@ impl GraphStats {
             avg_intersection,
             clustering,
             label_freq,
+            hub_count,
+            hub_edge_fraction,
         }
     }
 
@@ -144,6 +162,10 @@ impl GraphStats {
             avg_intersection: 2.0 * wedges / (n * n),
             clustering: 0.1,
             label_freq: Vec::new(),
+            // the synthetic shape is hub-free: no discount, so rankings
+            // computed without a real graph stay conservative
+            hub_count: 0,
+            hub_edge_fraction: 0.0,
         }
     }
 
@@ -190,6 +212,20 @@ mod tests {
         let sum: f64 = s.label_freq.iter().sum();
         assert!((sum - 1.0).abs() < 1e-9);
         assert!((s.label_prob(0) - s.label_freq[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hub_fraction_reflects_hybrid_index() {
+        // star: the center is a hub holding half of all edge endpoints
+        let edges: Vec<(u32, u32)> = (1..=100).map(|v| (0, v)).collect();
+        let g = GraphBuilder::new().edges(&edges).build("star");
+        let s = GraphStats::compute(&g, 100, 3);
+        assert_eq!(s.hub_count, 1);
+        assert!((s.hub_edge_fraction - 0.5).abs() < 1e-9, "{}", s.hub_edge_fraction);
+        // stripped index reports no hub coverage
+        let s2 = GraphStats::compute(&g.without_hub_bitmaps(), 100, 3);
+        assert_eq!(s2.hub_count, 0);
+        assert_eq!(s2.hub_edge_fraction, 0.0);
     }
 
     #[test]

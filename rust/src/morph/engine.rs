@@ -118,7 +118,7 @@ pub fn naive_expr(q: &Pattern) -> MorphExpr {
 }
 
 /// How a morph plan's base set is matched — see [`execute_opts`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug)]
 pub struct ExecOpts {
     /// Worker threads for the matcher.
     pub threads: usize,
@@ -126,6 +126,17 @@ pub struct ExecOpts {
     /// ([`FusedPlan`]) instead of one full sweep per base pattern. Ignored
     /// (per-pattern path) when the base set has fewer than two patterns.
     pub fused: bool,
+    /// Real data-graph statistics steering fused matching-order selection.
+    /// Callers that already computed stats for cost-based PMR pass the same
+    /// instance so both decisions share one cost model; `None` means
+    /// [`execute_opts`] computes them from the graph on the fused path.
+    pub stats: Option<GraphStats>,
+}
+
+impl Default for ExecOpts {
+    fn default() -> ExecOpts {
+        ExecOpts::new(crate::exec::parallel::default_threads())
+    }
 }
 
 impl ExecOpts {
@@ -134,7 +145,20 @@ impl ExecOpts {
         ExecOpts {
             threads,
             fused: true,
+            stats: None,
         }
+    }
+
+    /// Toggle fused co-execution.
+    pub fn with_fused(mut self, fused: bool) -> ExecOpts {
+        self.fused = fused;
+        self
+    }
+
+    /// Attach graph statistics (shared with the PMR cost model).
+    pub fn with_stats(mut self, stats: GraphStats) -> ExecOpts {
+        self.stats = Some(stats);
+        self
     }
 }
 
@@ -162,6 +186,11 @@ pub fn execute<A: Aggregation>(
 /// traversal** of the data graph (the fused path is policy-independent:
 /// it applies to whatever base set the morph plan produced). Otherwise
 /// each base pattern is matched with its own sweep.
+///
+/// Fused matching-order selection is scored against **real** graph
+/// statistics: `opts.stats` when the caller already computed them (e.g.
+/// for cost-based PMR — both decisions then share one cost model), or a
+/// fresh [`GraphStats::compute`] otherwise (timed under `"stats"`).
 pub fn execute_opts<A: Aggregation>(
     graph: &DataGraph,
     plan: &MorphPlan,
@@ -171,8 +200,16 @@ pub fn execute_opts<A: Aggregation>(
 ) -> Vec<A::Value> {
     let mut values: HashMap<CanonKey, A::Value> = HashMap::new();
     if opts.fused && plan.base.len() > 1 {
+        let computed;
+        let stats = match opts.stats.as_ref() {
+            Some(s) => s,
+            None => {
+                computed = profile.time("stats", || GraphStats::compute(graph, 2000, 0xF0D5));
+                &computed
+            }
+        };
         let fused = profile.time("fuse", || {
-            FusedPlan::build(&plan.base, None, &CostParams::counting())
+            FusedPlan::build(&plan.base, Some(stats), &CostParams::counting())
         });
         let vals = profile.time("match", || {
             aggregate_patterns_fused(graph, &fused, agg, opts.threads)
@@ -210,7 +247,12 @@ pub fn count_queries(
     };
     let plan = plan_queries(queries, policy, stats_ref, &CostParams::counting());
     let mut profile = PhaseProfile::new();
-    let vals = execute(graph, &plan, &crate::agg::CountAgg, threads, &mut profile);
+    let mut opts = ExecOpts::new(threads);
+    if let Some(s) = stats_ref {
+        // PMR and fused order selection share the one cost model
+        opts = opts.with_stats(s.clone());
+    }
+    let vals = execute_opts(graph, &plan, &crate::agg::CountAgg, opts, &mut profile);
     vals.iter()
         .zip(queries)
         .map(|(&maps, q)| {
@@ -327,24 +369,12 @@ mod tests {
         let mut prof_fused = PhaseProfile::new();
         let mut prof_per = PhaseProfile::new();
         let agg = crate::agg::CountAgg;
-        let fused = execute_opts(
-            &g,
-            &plan,
-            &agg,
-            ExecOpts {
-                threads: 2,
-                fused: true,
-            },
-            &mut prof_fused,
-        );
+        let fused = execute_opts(&g, &plan, &agg, ExecOpts::new(2), &mut prof_fused);
         let per = execute_opts(
             &g,
             &plan,
             &agg,
-            ExecOpts {
-                threads: 2,
-                fused: false,
-            },
+            ExecOpts::new(2).with_fused(false),
             &mut prof_per,
         );
         assert_eq!(fused, per);

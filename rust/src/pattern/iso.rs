@@ -28,7 +28,14 @@ pub fn sub_isomorphisms(p: &Pattern, q: &Pattern) -> Vec<VertexMap> {
     let mut f = vec![usize::MAX; np];
     let mut used = vec![false; nq];
 
-    fn feasible(p: &Pattern, q: &Pattern, f: &[usize], u: usize, img: usize, labeled: bool) -> bool {
+    fn feasible(
+        p: &Pattern,
+        q: &Pattern,
+        f: &[usize],
+        u: usize,
+        img: usize,
+        labeled: bool,
+    ) -> bool {
         if labeled && p.label(u) != q.label(img) {
             return false;
         }

@@ -8,6 +8,12 @@
 //! It is a *relative* model: its only job is to rank alternative pattern
 //! sets for the morphing optimizer, mirroring how the paper's cost-based
 //! PMR picks different alternative sets per data graph.
+//!
+//! The same model (and the same [`GraphStats`] instance, threaded through
+//! [`crate::morph::ExecOpts`]) also scores matching orders for the fused
+//! set-planner, and it knows about the hybrid representation: operands
+//! served by hub bitmap rows are discounted via
+//! [`GraphStats::hub_edge_fraction`].
 
 use super::Plan;
 use crate::graph::GraphStats;
@@ -136,11 +142,20 @@ pub fn level_costs(plan: &Plan, stats: &GraphStats, params: &CostParams) -> Vec<
         // each intersection scans ~min(list) with galloping ≈ cand·log-ish;
         // model as cand * units. Differences scan the candidate list once
         // per subtracted adjacency (binary searches): cand * subtract_unit.
+        // Hub bitmaps: operands that are hub vertices are served by O(1)
+        // membership rows instead of merges, so every operand beyond the
+        // seeding one (and every subtraction) is discounted by the chance
+        // its vertex is a hub (`hub_edge_fraction` — 0 without the hybrid
+        // index, keeping the model faithful to the executing representation).
+        let hub_mult = (1.0 - 0.5 * stats.hub_edge_fraction).max(0.5);
         let level_work = if i == 0 {
             n * params.intersect_unit
         } else {
-            let inter_work = (k as f64) * d.min(cand * 4.0).max(1.0) * params.intersect_unit;
-            let sub_work = (level.subtract.len() as f64) * cand * params.subtract_unit;
+            let extra_ops = (k as f64 - 1.0).max(0.0);
+            let inter_work =
+                (1.0 + extra_ops * hub_mult) * d.min(cand * 4.0).max(1.0) * params.intersect_unit;
+            let sub_work =
+                (level.subtract.len() as f64) * cand * params.subtract_unit * hub_mult;
             partials * (inter_work + sub_work)
         };
         out.push(level_work);
@@ -270,6 +285,25 @@ mod tests {
             assert!((sum - est).abs() <= 1e-9 * est.max(1.0), "{sum} vs {est}");
             assert!(lv.iter().all(|&c| c >= 0.0), "{lv:?}");
         }
+    }
+
+    #[test]
+    fn hub_bitmaps_discount_set_op_work() {
+        // same graph with and without the hybrid index: the model must
+        // price hub-served operands cheaper, and only then
+        let g = barabasi_albert(3000, 8, 9);
+        let with = stats(&g);
+        assert!(with.hub_count > 0, "BA graph should have hub rows");
+        assert!(with.hub_edge_fraction > 0.0);
+        let without = stats(&g.without_hub_bitmaps());
+        assert_eq!(without.hub_edge_fraction, 0.0);
+        let plan = Plan::compile(&catalog::triangle());
+        let c_with = estimate(&plan, &with, &CostParams::counting());
+        let c_without = estimate(&plan, &without, &CostParams::counting());
+        assert!(
+            c_with < c_without,
+            "hub discount must lower cost: {c_with} vs {c_without}"
+        );
     }
 
     #[test]

@@ -133,7 +133,9 @@ impl Plan {
             });
         }
 
-        debug_assert!(
+        // hard error, not debug-only: a disconnected prefix would otherwise
+        // surface as an opaque unwrap panic deep in the exploration kernel
+        assert!(
             levels.iter().skip(1).all(|l| !l.intersect.is_empty()),
             "matching order must keep the prefix edge-connected: {pattern:?} order={order:?}"
         );

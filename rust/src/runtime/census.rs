@@ -140,7 +140,9 @@ impl CensusBackend {
             .sizes
             .iter()
             .position(|&n| n >= k)
-            .with_context(|| format!("graph with {k} vertices exceeds artifact size {}", self.max_size()))?;
+            .with_context(|| {
+                format!("graph with {k} vertices exceeds artifact size {}", self.max_size())
+            })?;
         let n = self.sizes[idx];
         let dense = g.densify(block);
         // pad k×k into n×n

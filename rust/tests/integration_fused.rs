@@ -40,24 +40,9 @@ fn fused_base_set_counts_equal_individual_plans() {
 fn motif_counts_invariant_under_fusing() {
     let g = erdos_renyi(70, 300, 92);
     for policy in [Policy::Off, Policy::Naive, Policy::CostBased] {
-        let on = apps::count_motifs_opts(
-            &g,
-            4,
-            policy,
-            morph::ExecOpts {
-                threads: 2,
-                fused: true,
-            },
-        );
-        let off = apps::count_motifs_opts(
-            &g,
-            4,
-            policy,
-            morph::ExecOpts {
-                threads: 2,
-                fused: false,
-            },
-        );
+        let on = apps::count_motifs_opts(&g, 4, policy, morph::ExecOpts::new(2));
+        let off =
+            apps::count_motifs_opts(&g, 4, policy, morph::ExecOpts::new(2).with_fused(false));
         for ((p, a), (_, b)) in on.counts.iter().zip(off.counts.iter()) {
             assert_eq!(a, b, "{policy:?} {p:?}");
         }
@@ -73,23 +58,12 @@ fn match_patterns_invariant_under_fusing() {
         catalog::tailed_triangle(),
         catalog::house().vertex_induced(),
     ];
-    let on = apps::match_patterns_opts(
-        &g,
-        &queries,
-        Policy::Naive,
-        morph::ExecOpts {
-            threads: 2,
-            fused: true,
-        },
-    );
+    let on = apps::match_patterns_opts(&g, &queries, Policy::Naive, morph::ExecOpts::new(2));
     let off = apps::match_patterns_opts(
         &g,
         &queries,
         Policy::Naive,
-        morph::ExecOpts {
-            threads: 2,
-            fused: false,
-        },
+        morph::ExecOpts::new(2).with_fused(false),
     );
     assert_eq!(on.counts, off.counts);
 }

@@ -1,0 +1,134 @@
+//! End-to-end checks of the hybrid representation + tiered kernels:
+//! degree-ordered relabeling must be count-invariant (the relabeled graph
+//! is isomorphic to the original), hub bitmap rows must agree with the
+//! sorted lists, and the fused path must equal the per-pattern path on the
+//! relabeled hybrid representation.
+
+use morphmine::exec::fused::fused_count_matches;
+use morphmine::exec::{count_matches, enumerate_matches};
+use morphmine::graph::generators::{barabasi_albert, erdos_renyi};
+use morphmine::graph::{DataGraph, GraphBuilder, VertexId};
+use morphmine::morph::{self, Policy};
+use morphmine::pattern::catalog;
+use morphmine::plan::cost::CostParams;
+use morphmine::plan::fused::FusedPlan;
+use morphmine::plan::Plan;
+use morphmine::util::proptest;
+
+/// Rebuild `g`'s edge set with degree-ordered relabeling (hybrid index on).
+fn relabeled_hybrid(g: &DataGraph) -> DataGraph {
+    let mut edges = Vec::with_capacity(g.num_edges());
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            if v < u {
+                edges.push((v, u));
+            }
+        }
+    }
+    GraphBuilder::new()
+        .edges(&edges)
+        .num_vertices(g.num_vertices())
+        .degree_ordered(true)
+        .build("relabeled")
+}
+
+/// Satellite property test: the relabeled graph is isomorphic to the
+/// original — 3-/4-motif base-set counts are identical on random ER and
+/// power-law graphs, per-pattern and fused.
+#[test]
+fn relabeled_graph_is_isomorphic_on_random_graphs() {
+    proptest::check(0x5E1A, 12, |rng| {
+        let n = 30 + rng.below_usize(40);
+        let m = 2 * n + rng.below_usize(3 * n);
+        let graphs = [
+            erdos_renyi(n, m, rng.next_u64()),
+            barabasi_albert(n, 2 + rng.below_usize(4), rng.next_u64()),
+        ];
+        for g in graphs {
+            let r = relabeled_hybrid(&g);
+            assert!(r.check_invariants());
+            for size in [3, 4] {
+                let base = morph::plan_queries(
+                    &catalog::motifs_vertex_induced(size),
+                    Policy::Naive,
+                    None,
+                    &CostParams::counting(),
+                )
+                .base;
+                // per-pattern counts invariant under relabeling
+                for p in &base {
+                    let plan = Plan::compile(p);
+                    assert_eq!(
+                        count_matches(&g, &plan),
+                        count_matches(&r, &plan),
+                        "{p:?} on {}v/{}e",
+                        g.num_vertices(),
+                        g.num_edges()
+                    );
+                }
+                // fused == per-pattern on the relabeled hybrid representation
+                let fused = FusedPlan::build(&base, None, &CostParams::counting());
+                let counts = fused_count_matches(&r, &fused, 2);
+                for (i, p) in base.iter().enumerate() {
+                    assert_eq!(counts[i], count_matches(&r, &Plan::compile(p)), "{p:?}");
+                }
+            }
+        }
+    });
+}
+
+/// Hub bitmap rows must not change any count, including patterns with
+/// anti-edges (the difference tier) on graphs with genuine hubs.
+#[test]
+fn hub_bitmaps_are_count_invariant() {
+    // BA graphs at this size have vertices above the hub threshold
+    let g = barabasi_albert(2000, 8, 0x4B);
+    assert!(g.hub_count() > 0, "test needs hub rows to exercise");
+    let stripped = g.without_hub_bitmaps();
+    for p in [
+        catalog::triangle(),
+        catalog::clique(4),
+        catalog::cycle(4),
+        catalog::cycle(4).vertex_induced(),
+        catalog::tailed_triangle().vertex_induced(),
+        catalog::star(4).vertex_induced(),
+    ] {
+        let plan = Plan::compile(&p);
+        assert_eq!(
+            count_matches(&g, &plan),
+            count_matches(&stripped, &plan),
+            "{p:?}"
+        );
+    }
+}
+
+/// Mining through the apps layer is invariant under the full hybrid stack.
+#[test]
+fn motif_counts_invariant_under_relabeled_hybrid() {
+    let g = erdos_renyi(80, 400, 0x1B);
+    let r = relabeled_hybrid(&g);
+    for policy in [Policy::Off, Policy::Naive, Policy::CostBased] {
+        let a = morphmine::apps::count_motifs(&g, 4, policy, 2);
+        let b = morphmine::apps::count_motifs(&r, 4, policy, 2);
+        for ((p, x), (_, y)) in a.counts.iter().zip(b.counts.iter()) {
+            assert_eq!(x, y, "{policy:?} {p:?}");
+        }
+    }
+}
+
+/// Enumeration reports original vertex IDs after relabeling.
+#[test]
+fn enumeration_reports_original_ids() {
+    // path 7-8-9: vertex 9 is the center and gets relabeled to engine id 0
+    let g = GraphBuilder::new()
+        .edges(&[(9, 7), (9, 8)])
+        .degree_ordered(true)
+        .build("p3");
+    assert_eq!(g.original_id(0), 9);
+    let ms = enumerate_matches(&g, &Plan::compile(&catalog::path(3)));
+    assert_eq!(ms.len(), 1);
+    assert_eq!(ms[0][1], 9, "pattern center must map to original id 9");
+    let mut ends = vec![ms[0][0], ms[0][2]];
+    ends.sort_unstable();
+    assert_eq!(ends, vec![7, 8]);
+}
