@@ -51,6 +51,16 @@ impl IncrementalMotifCounter {
         &self.graph
     }
 
+    /// Graph epoch after the updates applied so far (delegates to
+    /// [`DynGraph::version`]; no-op inserts/removes leave it unchanged).
+    /// The service layer keys its result cache by this value, so streaming
+    /// updates through this counter and batch queries through
+    /// [`crate::service::Service`] can never mix counts from different
+    /// graph states.
+    pub fn version(&self) -> u64 {
+        self.graph.version()
+    }
+
     /// Current counts, aligned with [`Self::motifs`].
     pub fn counts(&self) -> Vec<(Pattern, u64)> {
         self.motifs
@@ -275,6 +285,7 @@ mod tests {
         let g0 = erdos_renyi(10, 20, 3);
         let mut inc = IncrementalMotifCounter::new(DynGraph::from_data_graph(&g0), 3, 1);
         let before = inc.counts();
+        let v0 = inc.version();
         // inserting an existing edge / removing a non-edge: no change
         let (u, v) = (0u32, *g0.neighbors(0).first().expect("vertex 0 has neighbors"));
         assert!(!inc.insert_edge(u, v));
@@ -284,5 +295,9 @@ mod tests {
             .unwrap();
         assert!(!inc.remove_edge(non.0, non.1));
         assert_eq!(before, inc.counts());
+        assert_eq!(inc.version(), v0, "no-op updates must not bump the epoch");
+        // an applied update does bump it
+        assert!(inc.insert_edge(non.0, non.1));
+        assert_eq!(inc.version(), v0 + 1);
     }
 }

@@ -22,6 +22,14 @@
 //!   hybrid (relabeled + hub bitmap) representation, on power-law and
 //!   uniform generator graphs (written to `BENCH_kernels.json`, path
 //!   overridable via `MM_KERNELS_JSON`).
+//! * **A8 — service-layer result cache**: cold vs warm vs
+//!   overlapping-batch throughput through `morphmine`'s batched query
+//!   service (written to `BENCH_service.json`, path overridable via
+//!   `MM_SERVICE_JSON`).
+//!
+//! JSON reports go through [`write_rows_json`]: a payload with zero
+//! measured rows (a placeholder) is loudly warned about and never
+//! overwrites a file that already holds measured rows.
 
 use crate::agg::{aggregate_pattern, aggregate_patterns_fused, EnumerateAgg, MniAgg};
 use crate::apps;
@@ -41,6 +49,45 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t = Timer::start();
     let r = f();
     (r, t.secs())
+}
+
+/// Does `path` already hold a JSON report with at least one measured row
+/// (`"rows": [ { … ] ` with content)? String-level check — the bench JSON
+/// is machine-written, and the crate has no JSON parser offline.
+fn existing_measured_rows(path: &std::path::Path) -> bool {
+    let Ok(body) = std::fs::read_to_string(path) else {
+        return false;
+    };
+    match body.find("\"rows\"") {
+        Some(i) => match body[i..].find('[') {
+            Some(j) => body[i + j + 1..].trim_start().starts_with('{'),
+            None => false,
+        },
+        None => false,
+    }
+}
+
+/// Write a bench JSON report, guarding measured data against placeholders:
+/// a payload with `n_rows == 0` never overwrites a file that already holds
+/// measured rows (warn + keep), and writing a fresh placeholder warns so
+/// the emptiness is impossible to miss in logs.
+fn write_rows_json(out: &std::path::Path, json: &str, n_rows: usize) -> Result<()> {
+    if n_rows == 0 {
+        if existing_measured_rows(out) {
+            eprintln!(
+                "warning: {} already holds measured rows; refusing to overwrite with a placeholder",
+                out.display()
+            );
+            return Ok(());
+        }
+        eprintln!(
+            "warning: writing placeholder with zero measured rows to {}",
+            out.display()
+        );
+    }
+    std::fs::write(out, json)?;
+    println!("\nwrote {} ({n_rows} rows)", out.display());
+    Ok(())
 }
 
 /// A1: symmetry breaking on/off.
@@ -453,9 +500,7 @@ pub fn ablation_fused_to(scale: Scale, threads: usize, out: &std::path::Path) ->
         "{{\n  \"experiment\": \"fused_vs_per_pattern\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
         rows.join(",\n")
     );
-    std::fs::write(out, json)?;
-    println!("\nwrote {}", out.display());
-    Ok(())
+    write_rows_json(out, &json, rows.len())
 }
 
 /// Rebuild a graph's edge set under a chosen vertex order / adjacency
@@ -589,9 +634,97 @@ pub fn ablation_kernels_to(scale: Scale, threads: usize, out: &std::path::Path) 
         simd_active(),
         rows.join(",\n")
     );
-    std::fs::write(out, json)?;
-    println!("\nwrote {}", out.display());
-    Ok(())
+    write_rows_json(out, &json, rows.len())
+}
+
+/// A8: service-layer result cache — cold vs warm vs overlapping batches.
+pub fn ablation_service(scale: Scale, threads: usize) -> Result<()> {
+    let out = std::env::var("MM_SERVICE_JSON").unwrap_or_else(|_| "BENCH_service.json".into());
+    ablation_service_to(scale, threads, std::path::Path::new(&out))
+}
+
+/// [`ablation_service`] with an explicit JSON output path (see
+/// [`ablation_fused_to`] for why tests avoid the env override).
+///
+/// Three measured phases per dataset, one service instance each:
+/// * **cold** — a motif + match batch against an empty store (every base
+///   executes);
+/// * **warm** — the identical batch again (must execute **zero** bases,
+///   asserted);
+/// * **overlap** — a different batch whose morph plan shares part of its
+///   base set with the cold batch (must execute strictly fewer bases than
+///   it references, asserted); results are cross-checked against a cold
+///   service.
+pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) -> Result<()> {
+    use crate::service::{Service, ServiceConfig};
+    println!("\n### A8 — service result cache (batch latencies, s)\n");
+    println!("| graph | batch | elapsed | bases | cached | executed | speedup vs cold |");
+    println!("|-------|-------|---------|-------|--------|----------|-----------------|");
+    let batch_a = ["motifs:4", "match:cycle4,diamond-vi"];
+    let batch_b = ["match:cycle4,tailed,star4-vi", "cliques:4"];
+    let mut rows: Vec<String> = Vec::new();
+    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
+        let config = ServiceConfig {
+            workers: 2,
+            threads,
+            policy: Policy::Naive, // deterministic alternative sets
+            fused: true,
+            cache_bytes: 64 << 20,
+        };
+        let svc = Service::start(d.generate(scale), config.clone());
+        let (cold, t_cold) = time(|| svc.call(&batch_a).expect("cold batch"));
+        assert_eq!(cold.stats.cached_bases, 0, "first batch sees an empty store");
+        let (warm, t_warm) = time(|| svc.call(&batch_a).expect("warm batch"));
+        assert_eq!(
+            warm.stats.executed_bases, 0,
+            "warm batch over a previously-seen pattern set must execute zero bases"
+        );
+        assert_eq!(cold.results, warm.results, "cache must not change answers");
+        let (overlap, t_overlap) = time(|| svc.call(&batch_b).expect("overlap batch"));
+        assert!(
+            overlap.stats.cached_bases > 0,
+            "overlapping batch must reuse bases: {:?}",
+            overlap.stats
+        );
+        assert!(
+            overlap.stats.executed_bases < overlap.stats.total_bases,
+            "only the missing bases may execute: {:?}",
+            overlap.stats
+        );
+        // cross-check the partially-cached answers against a cold service
+        let fresh = Service::start(d.generate(scale), config);
+        let direct = fresh.call(&batch_b).expect("verification batch");
+        assert_eq!(direct.results, overlap.results, "{}: partial reuse must be exact", d.code());
+
+        for (name, t, r) in [
+            ("cold", t_cold, &cold),
+            ("warm", t_warm, &warm),
+            ("overlap", t_overlap, &overlap),
+        ] {
+            let s = r.stats;
+            let speedup = t_cold / t.max(1e-9);
+            println!(
+                "| {} | {name} | {t:.3} | {} | {} | {} | {speedup:.2}× |",
+                d.code(),
+                s.total_bases,
+                s.cached_bases,
+                s.executed_bases
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{}\", \"batch\": \"{name}\", \"elapsed_s\": {t:.6}, \"total_bases\": {}, \"cached_bases\": {}, \"executed_bases\": {}, \"coalesced_bases\": {}, \"speedup_vs_cold\": {speedup:.3}}}",
+                d.code(),
+                s.total_bases,
+                s.cached_bases,
+                s.executed_bases,
+                s.coalesced_bases,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"experiment\": \"service_result_cache\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    write_rows_json(out, &json, rows.len())
 }
 
 /// Run all ablations.
@@ -603,7 +736,8 @@ pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     ablation_incremental(scale, threads)?;
     ablation_approx(scale, threads)?;
     ablation_fused(scale, threads)?;
-    ablation_kernels(scale, threads)
+    ablation_kernels(scale, threads)?;
+    ablation_service(scale, threads)
 }
 
 #[cfg(test)]
@@ -639,5 +773,38 @@ mod tests {
         let body = std::fs::read_to_string(&out).unwrap();
         assert!(body.contains("kernel_tiers_x_representation"));
         assert!(body.contains("relabel+hybrid+simd"));
+    }
+
+    #[test]
+    fn service_ablation_smoke() {
+        // asserts warm-zero-execution and partial-reuse exactness inside
+        let out = std::env::temp_dir().join("mm_bench_service_smoke.json");
+        ablation_service_to(Scale::Tiny, 2, &out).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("service_result_cache"));
+        assert!(body.contains("\"batch\": \"warm\""));
+        assert!(body.contains("\"batch\": \"overlap\""));
+        assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
+    }
+
+    #[test]
+    fn placeholder_never_clobbers_measured_rows() {
+        let out = std::env::temp_dir().join("mm_bench_guard.json");
+        let measured = "{\n  \"rows\": [\n    {\"a\": 1}\n  ]\n}\n";
+        std::fs::write(&out, measured).unwrap();
+        assert!(existing_measured_rows(&out));
+        // a placeholder write must refuse and keep the measured content
+        write_rows_json(&out, "{\n  \"rows\": []\n}\n", 0).unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), measured);
+        // a measured write replaces it
+        let newer = "{\n  \"rows\": [\n    {\"b\": 2}\n  ]\n}\n";
+        write_rows_json(&out, newer, 1).unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), newer);
+        // placeholders may land on placeholder (or missing) files
+        let fresh = std::env::temp_dir().join("mm_bench_guard_fresh.json");
+        let _ = std::fs::remove_file(&fresh);
+        write_rows_json(&fresh, "{\n  \"rows\": []\n}\n", 0).unwrap();
+        assert!(!existing_measured_rows(&fresh));
+        write_rows_json(&fresh, "{\n  \"rows\": []\n}\n", 0).unwrap();
     }
 }

@@ -11,6 +11,7 @@
 //! | `fig5`     | Fig. 4/5 — morphing equations     | [`fig5`] |
 //! | `fused`    | A6 — fused co-execution ablation  | [`ablations::ablation_fused`] |
 //! | `kernels`  | A7 — kernel tiers × representation | [`ablations::ablation_kernels`] |
+//! | `service`  | A8 — service result cache (cold/warm/overlap) | [`ablations::ablation_service`] |
 //!
 //! Reports are printed as markdown; EXPERIMENTS.md records a run.
 
@@ -55,6 +56,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
         "fig5" => fig5(scale, threads),
         "fused" => ablations::ablation_fused(scale, threads),
         "kernels" => ablations::ablation_kernels(scale, threads),
+        "service" => ablations::ablation_service(scale, threads),
         "ablations" => ablations::run_all(scale, threads),
         "all" => {
             table2(scale)?;
@@ -66,7 +68,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
             ablations::run_all(scale, threads)
         }
         other => bail!(
-            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|ablations|all)"
+            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|ablations|all)"
         ),
     }
 }

@@ -7,17 +7,27 @@
 //! morphmine cliques --graph <spec> [--k 4]
 //! morphmine census  --graph <spec> [--artifacts artifacts]
 //! morphmine gen     --dataset mico[:scale] --out <path>
-//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|ablations] [--scale tiny|small|medium]
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--assert-warm-hits]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64]
 //! ```
 //!
 //! Graph specs: dataset names (`mico`, `patents`, `youtube`, `orkut`,
 //! optionally `:tiny|:small|:medium`) or a path to an edge-list file.
+//!
+//! `batch` runs one query batch (`;`-separated query texts) through the
+//! result-cache service, `--repeat` re-submitting it to demonstrate warm
+//! throughput; `--assert-warm-hits` exits nonzero unless the final repeat
+//! was fully cache-served (the CI smoke leg). `serve` is the interactive
+//! loop: one batch per stdin line, `+ u v` / `- u v` applies an edge
+//! update (bumping the cache epoch), `quit` exits.
 
 use crate::coordinator::{Config, Coordinator};
 use crate::graph::io::load_spec;
 use crate::morph::Policy;
-use anyhow::{bail, Context, Result};
+use crate::service::{BatchResponse, Service, ServiceConfig};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 
 /// Parsed flags: `--key value` pairs plus positional subcommand.
@@ -83,6 +93,35 @@ fn fused_of(args: &Args) -> Result<bool> {
         Some("off") | Some("false") => Ok(false),
         Some(other) => bail!("bad --fused {other:?} (on|off)"),
     }
+}
+
+fn service_of(args: &Args) -> Result<Service> {
+    let spec = args
+        .get("graph")
+        .context("missing --graph <dataset[:scale] | path>")?;
+    let graph = load_spec(spec)?;
+    let config = ServiceConfig {
+        workers: args.parse_num("workers", 2usize)?,
+        threads: args.parse_num("threads", crate::exec::parallel::default_threads())?,
+        policy: policy_of(args)?,
+        fused: fused_of(args)?,
+        cache_bytes: args.parse_num("cache-mb", 64usize)? << 20,
+    };
+    Ok(Service::start(graph, config))
+}
+
+fn print_batch(r: &BatchResponse) {
+    let s = &r.stats;
+    println!(
+        "epoch={}  bases: total={} cached={} executed={} coalesced={}",
+        r.epoch, s.total_bases, s.cached_bases, s.executed_bases, s.coalesced_bases
+    );
+    for q in &r.results {
+        for (p, n) in &q.counts {
+            println!("{n:>16}  {p:?}   [{}]", q.query);
+        }
+    }
+    print_profile(&r.profile);
 }
 
 fn coordinator_of(args: &Args) -> Result<Coordinator> {
@@ -201,6 +240,101 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             let threads = args.parse_num("threads", crate::exec::parallel::default_threads())?;
             crate::bench::run_experiment(&exp, scale, threads)?;
         }
+        "batch" => {
+            let svc = service_of(&args)?;
+            let spec = args.get("queries").context("missing --queries q1;q2;…")?;
+            let texts: Vec<&str> = spec
+                .split(';')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .collect();
+            ensure!(!texts.is_empty(), "--queries must name at least one query");
+            let repeat = args.parse_num("repeat", 1usize)?.max(1);
+            let mut last = None;
+            for round in 1..=repeat {
+                let t = crate::util::timer::Timer::start();
+                let r = svc.call(&texts)?;
+                println!("batch {round}/{repeat}: elapsed {:.3}s", t.secs());
+                print_batch(&r);
+                last = Some(r.stats);
+            }
+            let m = svc.store_metrics();
+            println!(
+                "store: hits={} misses={} inserts={} evictions={} invalidations={} bytes={}",
+                m.hits, m.misses, m.inserts, m.evictions, m.invalidations, m.bytes
+            );
+            if args.get("assert-warm-hits").is_some() {
+                let s = last.expect("at least one round ran");
+                ensure!(
+                    repeat >= 2,
+                    "--assert-warm-hits needs --repeat ≥ 2 (a warm round to check)"
+                );
+                ensure!(
+                    s.executed_bases == 0 && s.cached_bases + s.coalesced_bases > 0,
+                    "warm batch was not cache-served: {s:?}"
+                );
+                ensure!(m.hits > 0, "store reported zero hits: {m:?}");
+                println!("warm-cache assertion passed ({} hits)", m.hits);
+            }
+        }
+        "serve" => {
+            let svc = service_of(&args)?;
+            println!(
+                "morphmine service ready (epoch {}). One batch per line, queries separated by ';'",
+                svc.epoch()
+            );
+            println!("  e.g. `motifs:4;match:cycle4,diamond-vi` — `+ u v` / `- u v` applies an edge update, `quit` exits");
+            let stdin = std::io::stdin();
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if stdin.read_line(&mut line)? == 0 {
+                    break; // EOF
+                }
+                let text = line.trim();
+                if text.is_empty() {
+                    continue;
+                }
+                if text == "quit" || text == "exit" {
+                    break;
+                }
+                if let Some(rest) = text.strip_prefix('+').or_else(|| text.strip_prefix('-')) {
+                    let insert = text.starts_with('+');
+                    let mut it = rest.split_whitespace();
+                    match (
+                        it.next().and_then(|s| s.parse::<u32>().ok()),
+                        it.next().and_then(|s| s.parse::<u32>().ok()),
+                    ) {
+                        (Some(u), Some(v)) if u != v => {
+                            let applied = if insert {
+                                svc.insert_edge(u, v)
+                            } else {
+                                svc.remove_edge(u, v)
+                            };
+                            match applied {
+                                Ok(applied) => println!(
+                                    "{} edge ({u},{v}): applied={applied} epoch={}",
+                                    if insert { "insert" } else { "remove" },
+                                    svc.epoch()
+                                ),
+                                Err(e) => eprintln!("error: {e:#}"),
+                            }
+                        }
+                        _ => eprintln!("usage: +|- <u> <v> (two distinct vertex ids)"),
+                    }
+                    continue;
+                }
+                let texts: Vec<&str> = text
+                    .split(';')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                match svc.call(&texts) {
+                    Ok(r) => print_batch(&r),
+                    Err(e) => eprintln!("error: {e:#}"),
+                }
+            }
+        }
         "info" => {
             let c = coordinator_of(&args)?;
             println!("{}", c.describe());
@@ -211,7 +345,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             );
         }
         "help" | "--help" | "-h" => {
-            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info");
+            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info | batch | serve");
         }
         other => bail!("unknown command {other:?} — try `morphmine help`"),
     }
@@ -280,5 +414,22 @@ mod tests {
     fn run_rejects_unknown() {
         assert!(run(argv("frobnicate")).is_err());
         assert!(run(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn run_batch_smoke() {
+        run(argv(
+            "batch --graph mico:tiny --queries motifs:3;cliques:3 --repeat 2 --assert-warm-hits --pmr naive --threads 2 --workers 2",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn run_batch_rejects_bad_usage() {
+        assert!(run(argv("batch --graph mico:tiny")).is_err(), "no queries");
+        let fsm = argv("batch --graph mico:tiny --queries fsm:3:10");
+        assert!(run(fsm).is_err(), "fsm not servable");
+        let warm = argv("batch --graph mico:tiny --queries motifs:3 --assert-warm-hits");
+        assert!(run(warm).is_err(), "warm assertion needs a warm round");
     }
 }

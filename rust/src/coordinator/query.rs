@@ -1,7 +1,7 @@
 //! Query descriptions: a parsed, serializable form of what the CLI / bench
 //! harness asks the coordinator to do.
 
-use crate::pattern::{parse, Pattern};
+use crate::pattern::{catalog, parse, Pattern};
 use anyhow::{bail, Result};
 
 /// A mining query.
@@ -57,6 +57,21 @@ impl Query {
             other => bail!("unknown query kind {other:?}"),
         }
     }
+
+    /// Expand to the pattern set whose **unique-match counts** answer this
+    /// query, in reporting order: the vertex-induced motif set for
+    /// `motifs:<n>`, the query patterns for `match:…`, the `k`-clique for
+    /// `cliques:<k>`. Returns `None` for FSM — its support aggregation is
+    /// level-wise, not per-pattern, so it cannot be served from a
+    /// per-base-pattern result cache ([`crate::service`]).
+    pub fn patterns(&self) -> Option<Vec<Pattern>> {
+        match self {
+            Query::Motifs { size } => Some(catalog::motifs_vertex_induced(*size)),
+            Query::Match { patterns } => Some(patterns.clone()),
+            Query::Cliques { k } => Some(vec![catalog::clique(*k)]),
+            Query::Fsm { .. } => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -77,6 +92,16 @@ mod tests {
             Query::Match { patterns } => assert_eq!(patterns.len(), 2),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn patterns_expansion() {
+        assert_eq!(Query::parse("motifs:4").unwrap().patterns().unwrap().len(), 6);
+        assert_eq!(Query::parse("match:cycle4,p3").unwrap().patterns().unwrap().len(), 2);
+        let k = Query::parse("cliques:4").unwrap().patterns().unwrap();
+        assert_eq!(k.len(), 1);
+        assert!(k[0].is_clique());
+        assert!(Query::parse("fsm:3:100").unwrap().patterns().is_none());
     }
 
     #[test]

@@ -18,16 +18,19 @@
 //! 2. **Fast path.** A single edge constraint with no anti-edges iterates
 //!    the windowed adjacency slice directly — zero copies
 //!    ([`Cands::Adj`]).
-//! 3. **General path.** A 2-way intersection whose operands are both hubs
-//!    collapses to one **word-wise AND** over their bitmap rows, clamped to
-//!    the window. Otherwise the candidate buffer seeds from the windowed
-//!    smallest-degree operand, and every further operand applies in one of
-//!    two tiers: a **hub bitmap row** (O(1) membership per candidate,
-//!    [`crate::graph::bitmap`]) when the operand vertex carries one, or the
-//!    **sorted-list kernels** of [`super::intersect`], which themselves
-//!    dispatch gallop / SIMD / scalar. Intersections run before
-//!    differences, mirroring the candidate-shrinking order the cost model
-//!    assumes.
+//! 3. **General path.** An intersection whose operands are **all** hubs
+//!    (2-way or wider) collapses to one **word-wise AND** sweep over their
+//!    bitmap rows, clamped to the window — and subtract operands that are
+//!    hubs fold into the same sweep as **ANDNOT** words
+//!    ([`bitmap::fold_rows_into`]), so hub-heavy vertex-induced levels
+//!    never touch a sorted list at all. Otherwise the candidate buffer
+//!    seeds from the windowed smallest-degree operand, and every further
+//!    operand applies in one of two tiers: a **hub bitmap row** (O(1)
+//!    membership per candidate, [`crate::graph::bitmap`]) when the operand
+//!    vertex carries one, or the **sorted-list kernels** of
+//!    [`super::intersect`], which themselves dispatch gallop / SIMD /
+//!    scalar. Intersections run before differences, mirroring the
+//!    candidate-shrinking order the cost model assumes.
 //!
 //! The contract guaranteed to both executors: the produced candidate set is
 //! exactly `⋂ N(partial[j]) \ ⋃ N(partial[k])` restricted to the window,
@@ -37,6 +40,7 @@
 
 use super::intersect;
 use crate::graph::{bitmap, DataGraph, VertexId};
+use crate::pattern::MAX_PATTERN_VERTICES;
 use crate::plan::Level;
 
 /// Candidate source produced by [`candidates`].
@@ -99,22 +103,42 @@ pub fn candidates<'g>(
         ));
     }
 
-    // Word-wise tier: a 2-way intersection whose operands are both hubs
-    // reduces to one AND sweep over the bitmap rows (clamped to the
-    // window) — the heaviest merge case in power-law graphs.
-    let hub_pair = l.intersect.len() == 2
-        && match (
-            graph.hub_row(partial[l.intersect[0]]),
-            graph.hub_row(partial[l.intersect[1]]),
-        ) {
-            (Some(r0), Some(r1)) => {
-                bitmap::intersect_rows_into(r0, r1, lo, hi, buf);
-                true
+    // Word-wise tier: an intersection whose operands are all hubs (2-way
+    // or wider) reduces to one AND sweep over the bitmap rows (clamped to
+    // the window) — the heaviest merge case in power-law graphs. Subtract
+    // operands that are hubs fold into the same sweep as ANDNOT words;
+    // non-hub subtractions still run through the list kernels below.
+    // (when the word-wise sweep ran, hub subtract operands were already
+    // folded into it as ANDNOT words — the subtract loop below skips them)
+    let mut word_wise = false;
+    if l.intersect.len() >= 2 {
+        if let Some(first) = graph.hub_row(partial[l.intersect[0]]) {
+            let mut and_rows = [first; MAX_PATTERN_VERTICES];
+            let mut n_and = 0usize;
+            let all_hubs = l.intersect.iter().all(|&j| match graph.hub_row(partial[j]) {
+                Some(r) => {
+                    and_rows[n_and] = r;
+                    n_and += 1;
+                    true
+                }
+                None => false,
+            });
+            if all_hubs {
+                let mut sub_rows = [first; MAX_PATTERN_VERTICES];
+                let mut n_sub = 0usize;
+                for &j in &l.subtract {
+                    if let Some(r) = graph.hub_row(partial[j]) {
+                        sub_rows[n_sub] = r;
+                        n_sub += 1;
+                    }
+                }
+                bitmap::fold_rows_into(&and_rows[..n_and], &sub_rows[..n_sub], lo, hi, buf);
+                word_wise = true;
             }
-            _ => false,
-        };
+        }
+    }
 
-    if !hub_pair {
+    if !word_wise {
         // General path: seed from the windowed smallest adjacency list,
         // then per-operand tier dispatch (hub bitmap row vs sorted-list
         // kernels).
@@ -148,6 +172,9 @@ pub fn candidates<'g>(
         }
         let u = partial[j];
         if let Some(row) = graph.hub_row(u) {
+            if word_wise {
+                continue; // already applied word-wise as ANDNOT
+            }
             bitmap::difference_row_into(buf, row, scratch);
         } else {
             intersect::difference_into(buf, graph.neighbors(u), scratch);
@@ -258,6 +285,71 @@ mod tests {
                 assert_eq!(a, b, "hub vs list candidates for ({first},{second})");
             }
         }
+    }
+
+    #[test]
+    fn word_wise_andnot_agrees_with_list_path() {
+        // three hubs with overlapping neighborhoods: 0 and 1 share
+        // 10..=100, hub 2 covers 40..=120. A level intersecting the first
+        // two and subtracting the third takes the word-wise AND/ANDNOT
+        // sweep on the hybrid graph and the sorted-list path on the
+        // stripped one — candidates must be identical, windows included.
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for v in 10..=100u32 {
+            edges.push((0, v));
+            edges.push((1, v));
+        }
+        for v in 40..=120u32 {
+            edges.push((2, v));
+        }
+        edges.extend([(0, 1), (0, 2), (1, 2)]);
+        let g = GraphBuilder::new().edges(&edges).build("three-hubs");
+        assert!(g.hub_count() >= 3, "all three centers must carry rows");
+        let stripped = g.without_hub_bitmaps();
+        let mk = |greater_than: Vec<usize>, less_than: Vec<usize>| Level {
+            intersect: vec![0, 1],
+            subtract: vec![2],
+            label: None,
+            greater_than,
+            less_than,
+        };
+        let mut buf_a = Vec::new();
+        let mut buf_b = Vec::new();
+        let mut scratch = Vec::new();
+        let partial = vec![0u32, 1, 2, 0];
+        for l in [mk(vec![], vec![]), mk(vec![2], vec![]), mk(vec![], vec![2])] {
+            let a = match candidates(&g, &l, &partial, &mut buf_a, &mut scratch) {
+                Cands::Adj(s) => s.to_vec(),
+                Cands::Buffered => buf_a.clone(),
+            };
+            let b = match candidates(&stripped, &l, &partial, &mut buf_b, &mut scratch) {
+                Cands::Adj(s) => s.to_vec(),
+                Cands::Buffered => buf_b.clone(),
+            };
+            assert_eq!(a, b, "word-wise vs list candidates ({l:?})");
+            // sanity: subtraction actually removed the upper overlap
+            assert!(a.iter().all(|&v| !(40..=100).contains(&v)), "{a:?}");
+        }
+        // mixed case: subtract operand is NOT a hub — the fold must leave
+        // it to the list kernels, with identical results
+        let l = Level {
+            intersect: vec![0, 1],
+            subtract: vec![3],
+            label: None,
+            greater_than: vec![],
+            less_than: vec![],
+        };
+        let partial = vec![0u32, 1, 0, 50]; // vertex 50 is a low-degree leaf
+        let a = match candidates(&g, &l, &partial, &mut buf_a, &mut scratch) {
+            Cands::Adj(s) => s.to_vec(),
+            Cands::Buffered => buf_a.clone(),
+        };
+        let b = match candidates(&stripped, &l, &partial, &mut buf_b, &mut scratch) {
+            Cands::Adj(s) => s.to_vec(),
+            Cands::Buffered => buf_b.clone(),
+        };
+        assert_eq!(a, b, "mixed hub/list subtraction");
+        assert!(!a.contains(&2), "neighbor of 50 must be subtracted: {a:?}");
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! buffer with a hub operand costs O(|buf|) regardless of the hub's degree.
 //!
 //! Invariants (checked by [`crate::graph::DataGraph::check_invariants`]):
-//! * a bitmap row exists only for vertices selected by [`hub_threshold`]
-//!   (top-degree vertices, capped at [`MAX_HUB_ROWS`]);
+//! * a bitmap row exists only for vertices selected by [`HubParams`]
+//!   (top-degree vertices under an adaptive degree floor, row count capped
+//!   relative to the CSR size);
 //! * row `r` of hub `h` has bit `u` set **iff** `u` appears in the sorted
 //!   CSR adjacency list of `h` — the CSR list remains authoritative and is
 //!   kept for every vertex, hubs included;
@@ -17,14 +18,53 @@
 
 use super::VertexId;
 
-/// Upper bound on bitmap rows (memory cap: `MAX_HUB_ROWS * n / 8` bytes).
-pub const MAX_HUB_ROWS: usize = 256;
+/// Hard safety clamp on the number of bitmap rows, regardless of what the
+/// measured distribution asks for. The working cap is the CSR-relative
+/// budget in [`HubParams::from_degree_distribution`]; this only bounds
+/// pathological inputs.
+pub const MAX_HUB_ROWS_CLAMP: usize = 4096;
 
-/// Minimum degree for a vertex to get a bitmap row: the row costs `n` bits,
-/// so demand the sorted list be within a factor 64 of that (`deg >= n/64`),
-/// and never bother below 64 neighbors where merges are already cheap.
-pub fn hub_threshold(num_vertices: usize) -> usize {
-    (num_vertices / 64).max(64)
+/// Hub-row selection parameters, derived from the **measured** degree
+/// distribution of the graph being built (not fixed constants): the degree
+/// floor and row cap adapt to the graph's size and skew.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HubParams {
+    /// Minimum degree for a vertex to get a bitmap row.
+    pub min_degree: usize,
+    /// Maximum number of rows (heaviest vertices win).
+    pub max_rows: usize,
+}
+
+impl HubParams {
+    /// Derive parameters from a graph with `n` vertices and `deg_sum` total
+    /// edge endpoints (`Σ d(v) = 2m`).
+    ///
+    /// * `min_degree` — a row costs `n` bits, so the sorted list it shadows
+    ///   must be within a factor 64 of that (`deg ≥ n/64`), never below 64
+    ///   neighbors (merges are already cheap there), and at least 4× the
+    ///   measured average degree so "hub" stays meaningful on degree-flat
+    ///   graphs where no vertex is exceptional.
+    /// * `max_rows` — total row storage is budgeted at roughly the CSR
+    ///   neighbor array itself: one row is `n/8` bytes vs `4` bytes per
+    ///   stored endpoint, giving `32 · deg_sum / n` (= 32 × average degree)
+    ///   rows, clamped to `[16, MAX_HUB_ROWS_CLAMP]` and to `n`.
+    pub fn from_degree_distribution(n: usize, deg_sum: usize) -> HubParams {
+        if n == 0 {
+            return HubParams {
+                min_degree: 64,
+                max_rows: 0,
+            };
+        }
+        let avg = deg_sum as f64 / n as f64;
+        let min_degree = (n / 64).max((4.0 * avg).ceil() as usize).max(64);
+        let max_rows = ((32.0 * avg).round() as usize)
+            .clamp(16, MAX_HUB_ROWS_CLAMP)
+            .min(n);
+        HubParams {
+            min_degree,
+            max_rows,
+        }
+    }
 }
 
 /// Bitmap adjacency rows for the hub vertices of one data graph.
@@ -38,6 +78,8 @@ pub struct HubBitmaps {
     hubs: Vec<VertexId>,
     /// Row-major bit storage, `hubs.len() * words_per_row` words.
     bits: Vec<u64>,
+    /// The adaptive selection parameters this index was built with.
+    params: HubParams,
 }
 
 /// A borrowed bitmap row: O(1) membership for one hub's neighborhood.
@@ -63,13 +105,15 @@ impl HubRow<'_> {
 }
 
 impl HubBitmaps {
-    /// Build rows for the top-degree vertices of a CSR graph. Returns `None`
-    /// when no vertex qualifies (small or degree-flat graphs).
+    /// Build rows for the top-degree vertices of a CSR graph, with selection
+    /// parameters derived from the graph's own degree distribution
+    /// ([`HubParams::from_degree_distribution`]). Returns `None` when no
+    /// vertex qualifies (small or degree-flat graphs).
     pub fn build(offsets: &[usize], neighbors: &[VertexId]) -> Option<HubBitmaps> {
         let n = offsets.len() - 1;
-        let min_deg = hub_threshold(n);
+        let params = HubParams::from_degree_distribution(n, neighbors.len());
         let mut hubs: Vec<VertexId> = (0..n as VertexId)
-            .filter(|&v| offsets[v as usize + 1] - offsets[v as usize] >= min_deg)
+            .filter(|&v| offsets[v as usize + 1] - offsets[v as usize] >= params.min_degree)
             .collect();
         if hubs.is_empty() {
             return None;
@@ -81,7 +125,7 @@ impl HubBitmaps {
                 v,
             )
         });
-        hubs.truncate(MAX_HUB_ROWS);
+        hubs.truncate(params.max_rows);
 
         let words_per_row = n.div_ceil(64);
         let mut row_of = vec![u32::MAX; n];
@@ -98,7 +142,13 @@ impl HubBitmaps {
             row_of,
             hubs,
             bits,
+            params,
         })
+    }
+
+    /// The adaptive selection parameters this index was built with.
+    pub fn params(&self) -> HubParams {
+        self.params
     }
 
     /// Bitmap row of `v`, if `v` is a hub.
@@ -131,10 +181,8 @@ pub fn intersect_row_into(a: &[VertexId], b: HubRow<'_>, out: &mut Vec<VertexId>
     out.extend(a.iter().copied().filter(|&x| b.contains(x)));
 }
 
-/// `out = a ∩ b ∩ (lo, hi)` where **both** operands are hub bitmap rows:
-/// word-wise AND over the two rows, emitting set bits inside the open
-/// window. This is the heaviest intersection case (two hub adjacency
-/// lists) reduced to `n/64` word ops.
+/// `out = a ∩ b ∩ (lo, hi)` where **both** operands are hub bitmap rows —
+/// the two-operand case of [`fold_rows_into`].
 pub fn intersect_rows_into(
     a: HubRow<'_>,
     b: HubRow<'_>,
@@ -142,10 +190,26 @@ pub fn intersect_rows_into(
     hi: Option<VertexId>,
     out: &mut Vec<VertexId>,
 ) {
+    fold_rows_into(&[a, b], &[], lo, hi, out);
+}
+
+/// `out = (⋂ and_rows) \ (⋃ sub_rows) ∩ (lo, hi)` over hub bitmap rows:
+/// one word-wise AND/ANDNOT sweep, emitting set bits inside the open
+/// window. This is the heaviest candidate-set case (every operand a hub
+/// adjacency list, intersections *and* subtractions) reduced to `n/64`
+/// word ops per operand. `and_rows` must be non-empty; bits beyond the
+/// vertex range stay clear because every AND row keeps them zero.
+pub fn fold_rows_into(
+    and_rows: &[HubRow<'_>],
+    sub_rows: &[HubRow<'_>],
+    lo: Option<VertexId>,
+    hi: Option<VertexId>,
+    out: &mut Vec<VertexId>,
+) {
     out.clear();
-    let (aw, bw) = (a.words(), b.words());
-    debug_assert_eq!(aw.len(), bw.len());
-    let words = aw.len();
+    let first = and_rows.first().expect("need at least one AND operand");
+    let words = first.words().len();
+    debug_assert!(and_rows.iter().chain(sub_rows).all(|r| r.words().len() == words));
     let start_bit = lo.map_or(0, |v| v as usize + 1);
     let end_bit = hi.map_or(words * 64, |v| v as usize);
     if start_bit >= end_bit {
@@ -154,7 +218,13 @@ pub fn intersect_rows_into(
     let start_w = start_bit >> 6;
     let end_w = ((end_bit + 63) >> 6).min(words);
     for w in start_w..end_w {
-        let mut bits = aw[w] & bw[w];
+        let mut bits = first.words()[w];
+        for r in &and_rows[1..] {
+            bits &= r.words()[w];
+        }
+        for r in sub_rows {
+            bits &= !r.words()[w];
+        }
         if w == start_w {
             bits &= !0u64 << (start_bit & 63);
         }
@@ -242,8 +312,75 @@ mod tests {
     }
 
     #[test]
-    fn threshold_scales_with_graph_size() {
-        assert_eq!(hub_threshold(1000), 64);
-        assert_eq!(hub_threshold(64_000), 1000);
+    fn params_derive_from_measured_distribution() {
+        // sparse mid-size graph: the n/64 term stays below the 64 floor
+        let p = HubParams::from_degree_distribution(1000, 6000);
+        assert_eq!(p.min_degree, 64);
+        // large sparse graph: n/64 dominates
+        let p = HubParams::from_degree_distribution(64_000, 640_000);
+        assert_eq!(p.min_degree, 1000);
+        // degree-flat dense graph: the 4×avg term raises the floor so flat
+        // graphs don't declare half their vertices "hubs"
+        let p = HubParams::from_degree_distribution(2000, 2000 * 40);
+        assert_eq!(p.min_degree, 160);
+        // row cap follows the CSR budget (32 × average degree), clamped
+        let p = HubParams::from_degree_distribution(100_000, 100_000 * 22);
+        assert_eq!(p.max_rows, 704);
+        // avg 2 → 64 rows by budget, bounded by the vertex count
+        let p = HubParams::from_degree_distribution(50, 100);
+        assert_eq!(p.max_rows, 50);
+        assert!(HubParams::from_degree_distribution(10_000_000, 10_000_000 * 200).max_rows
+            <= MAX_HUB_ROWS_CLAMP);
+    }
+
+    #[test]
+    fn built_index_reports_params() {
+        let g = star(100);
+        // star(100): n = 101, deg_sum = 200 → avg ≈ 1.98 → floor stays 64
+        let p = g.hub_params().expect("star center is a hub");
+        assert_eq!(p.min_degree, 64);
+        assert!(p.max_rows >= 16);
+        assert_eq!(g.hub_count(), 1);
+    }
+
+    #[test]
+    fn fold_rows_andnot_matches_naive() {
+        // three hubs over a shared leaf universe: 0 and 1 share 3..=70,
+        // hub 2 covers 40..=90 — folding 0∩1\2 must drop the upper overlap
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for v in 3..=70u32 {
+            edges.push((0, v));
+            edges.push((1, v));
+        }
+        for v in 40..=90u32 {
+            edges.push((2, v));
+        }
+        // make all three genuine hubs (degree ≥ 64)
+        for v in 91..=120u32 {
+            edges.push((2, v));
+        }
+        let g = GraphBuilder::new().edges(&edges).build("three-hubs");
+        let (r0, r1, r2) = (
+            g.hub_row(0).expect("hub 0"),
+            g.hub_row(1).expect("hub 1"),
+            g.hub_row(2).expect("hub 2"),
+        );
+        let mut out = Vec::new();
+        fold_rows_into(&[r0, r1], &[r2], None, None, &mut out);
+        assert_eq!(out, (3..40u32).collect::<Vec<_>>());
+        // windowed: open interval (10, 30)
+        fold_rows_into(&[r0, r1], &[r2], Some(10), Some(30), &mut out);
+        assert_eq!(out, (11..30u32).collect::<Vec<_>>());
+        // two subtract rows erase everything
+        fold_rows_into(&[r0], &[r1, r2], None, None, &mut out);
+        let naive: Vec<u32> = (0..=120u32)
+            .filter(|&v| r0.contains(v) && !r1.contains(v) && !r2.contains(v))
+            .collect();
+        assert_eq!(out, naive);
+        // consistency with the 2-row wrapper
+        let mut out2 = Vec::new();
+        intersect_rows_into(r0, r1, Some(5), Some(66), &mut out2);
+        fold_rows_into(&[r0, r1], &[], Some(5), Some(66), &mut out);
+        assert_eq!(out, out2);
     }
 }

@@ -15,7 +15,8 @@
 //! the bitmap rows of [`super::bitmap::HubBitmaps`] are a redundant index
 //! over the heaviest lists:
 //! * `hub_row(v).is_some()` only for top-degree vertices (see
-//!   [`super::bitmap::hub_threshold`]); any vertex may be queried;
+//!   [`super::bitmap::HubParams`] — the degree floor and row cap adapt to
+//!   the measured degree distribution); any vertex may be queried;
 //! * when a row exists, `row.contains(u) == neighbors(v).contains(&u)` for
 //!   all `u` — kernels may use whichever side is cheaper (`common_neighbors`
 //!   style membership loops should prefer the row: O(1) per probe instead
@@ -146,6 +147,12 @@ impl DataGraph {
     /// Number of hub vertices carrying bitmap rows.
     pub fn hub_count(&self) -> usize {
         self.hubs.as_ref().map_or(0, |h| h.num_rows())
+    }
+
+    /// The adaptive hub-selection parameters the bitmap index was built
+    /// with (`None` when the graph carries no index).
+    pub fn hub_params(&self) -> Option<super::bitmap::HubParams> {
+        self.hubs.as_ref().map(|h| h.params())
     }
 
     /// The hub vertices carrying bitmap rows, heaviest first.

@@ -13,6 +13,12 @@ pub struct DynGraph {
     adj: Vec<Vec<VertexId>>,
     labels: Option<Vec<Label>>,
     num_edges: usize,
+    /// Epoch counter: bumped by every **applied** mutation (no-op
+    /// insert/remove of an existing/absent edge leaves it unchanged).
+    /// Consumers that cache derived results — the result store in
+    /// [`crate::service`] — key them by this value so a mutated graph can
+    /// never silently serve stale answers.
+    version: u64,
 }
 
 impl DynGraph {
@@ -21,6 +27,7 @@ impl DynGraph {
             adj: vec![Vec::new(); n],
             labels: None,
             num_edges: 0,
+            version: 0,
         }
     }
 
@@ -33,7 +40,13 @@ impl DynGraph {
                 .is_labeled()
                 .then(|| (0..n as VertexId).map(|v| g.label(v)).collect()),
             num_edges: g.num_edges(),
+            version: 0,
         }
+    }
+
+    /// Graph epoch: the number of applied mutations since construction.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Export to CSR (for the batch matcher).
@@ -95,6 +108,7 @@ impl DynGraph {
                 let j = self.adj[v as usize].binary_search(&u).unwrap_err();
                 self.adj[v as usize].insert(j, u);
                 self.num_edges += 1;
+                self.version += 1;
                 true
             }
         }
@@ -109,6 +123,7 @@ impl DynGraph {
                 let j = self.adj[v as usize].binary_search(&u).unwrap();
                 self.adj[v as usize].remove(j);
                 self.num_edges -= 1;
+                self.version += 1;
                 true
             }
         }
@@ -155,6 +170,20 @@ mod tests {
         for v in 0..60 {
             assert_eq!(g0.neighbors(v), g1.neighbors(v));
         }
+    }
+
+    #[test]
+    fn version_counts_applied_mutations_only() {
+        let mut g = DynGraph::new(4);
+        assert_eq!(g.version(), 0);
+        assert!(g.insert_edge(0, 1));
+        assert_eq!(g.version(), 1);
+        assert!(!g.insert_edge(1, 0), "duplicate insert is a no-op");
+        assert_eq!(g.version(), 1, "no-op must not bump the epoch");
+        assert!(g.remove_edge(0, 1));
+        assert_eq!(g.version(), 2);
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.version(), 2);
     }
 
     #[test]

@@ -21,6 +21,12 @@
 //!   [`exec::fused`] walks that trie in a single data-graph traversal —
 //!   one first-level sweep for the whole morphed base set instead of one
 //!   per pattern. Toggle with `--fused on|off` / [`morph::ExecOpts`].
+//!
+//!   On top of the coordinator sits the [`service`] layer: a result cache
+//!   keyed by canonical pattern × graph epoch plus a batched, multi-worker
+//!   query service (`morphmine serve` / `morphmine batch`) that executes
+//!   only the base patterns missing from the cache and composes the rest
+//!   through the morph algebra.
 //! * **Layer 2 (python/compile/model.py)** — a dense adjacency-matrix motif
 //!   census written in JAX, AOT-lowered to HLO and executed from Rust via
 //!   PJRT ([`runtime`]). It encodes the same morphing equations in dense
@@ -41,6 +47,7 @@ pub mod morph;
 pub mod pattern;
 pub mod plan;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
 pub use graph::DataGraph;

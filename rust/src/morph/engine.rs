@@ -198,8 +198,49 @@ pub fn execute_opts<A: Aggregation>(
     opts: ExecOpts,
     profile: &mut PhaseProfile,
 ) -> Vec<A::Value> {
-    let mut values: HashMap<CanonKey, A::Value> = HashMap::new();
-    if opts.fused && plan.base.len() > 1 {
+    let values = match_bases(graph, &plan.base, agg, &opts, profile);
+    plan.exprs
+        .iter()
+        .map(|e| profile.time("convert", || e.evaluate(agg, &values)))
+        .collect()
+}
+
+/// Match every pattern of `base` over the full match set and return the
+/// aggregation values keyed by canonical key — the matching half of
+/// [`execute_opts`], delegating to [`match_base_subset`] with the full
+/// index range so the fused-vs-per-pattern dispatch lives in one place.
+fn match_bases<A: Aggregation>(
+    graph: &DataGraph,
+    base: &[Pattern],
+    agg: &A,
+    opts: &ExecOpts,
+    profile: &mut PhaseProfile,
+) -> HashMap<CanonKey, A::Value> {
+    let all: Vec<usize> = (0..base.len()).collect();
+    match_base_subset(graph, base, &all, agg, opts, profile)
+        .into_iter()
+        .collect()
+}
+
+/// Match the subset of `base` selected by `indices` over full match sets,
+/// returning `(canonical key, value)` pairs — **the** dispatch point for
+/// fused-vs-per-pattern matching (fused threshold, stats fallback,
+/// counting cost params). The fused path plans the trie over only the
+/// subset ([`FusedPlan::build_for_subset`]), so excluded patterns — e.g.
+/// bases the service's result cache already holds
+/// ([`crate::service::QueryPlanner::execute_bases`]) — never enter it.
+pub(crate) fn match_base_subset<A: Aggregation>(
+    graph: &DataGraph,
+    base: &[Pattern],
+    indices: &[usize],
+    agg: &A,
+    opts: &ExecOpts,
+    profile: &mut PhaseProfile,
+) -> Vec<(CanonKey, A::Value)> {
+    if indices.is_empty() {
+        return Vec::new();
+    }
+    if opts.fused && indices.len() > 1 {
         let computed;
         let stats = match opts.stats.as_ref() {
             Some(s) => s,
@@ -208,25 +249,32 @@ pub fn execute_opts<A: Aggregation>(
                 &computed
             }
         };
-        let fused = profile.time("fuse", || {
-            FusedPlan::build(&plan.base, Some(stats), &CostParams::counting())
+        let mut keep = vec![false; base.len()];
+        for &i in indices {
+            keep[i] = true;
+        }
+        let (fused, selected) = profile.time("fuse", || {
+            FusedPlan::build_for_subset(base, &keep, Some(stats), &CostParams::counting())
         });
         let vals = profile.time("match", || {
             aggregate_patterns_fused(graph, &fused, agg, opts.threads)
         });
-        for (p, v) in plan.base.iter().zip(vals) {
-            values.insert(p.canonical_key(), v);
-        }
+        selected
+            .into_iter()
+            .zip(vals)
+            .map(|(i, v)| (base[i].canonical_key(), v))
+            .collect()
     } else {
-        for p in &plan.base {
-            let v = profile.time("match", || aggregate_pattern(graph, p, agg, opts.threads));
-            values.insert(p.canonical_key(), v);
-        }
+        indices
+            .iter()
+            .map(|&i| {
+                let v = profile.time("match", || {
+                    aggregate_pattern(graph, &base[i], agg, opts.threads)
+                });
+                (base[i].canonical_key(), v)
+            })
+            .collect()
     }
-    plan.exprs
-        .iter()
-        .map(|e| profile.time("convert", || e.evaluate(agg, &values)))
-        .collect()
 }
 
 /// Counting convenience: run a query set under a policy and return

@@ -124,6 +124,31 @@ impl FusedPlan {
         fused
     }
 
+    /// [`FusedPlan::build`] over the subset of `patterns` selected by
+    /// `keep` (aligned bools). Returns the fused plan plus the **original
+    /// indices** of the selected patterns, aligned with the plan's `plans`
+    /// (and hence with `aggregate_patterns_fused` values).
+    ///
+    /// This is how cached bases drop out of the trie: the service planner
+    /// ([`crate::service`]) masks out every base its result store already
+    /// holds, fuse-executes only the missing suffix set, and maps the
+    /// values back through the returned index list.
+    pub fn build_for_subset(
+        patterns: &[Pattern],
+        keep: &[bool],
+        stats: Option<&GraphStats>,
+        params: &CostParams,
+    ) -> (FusedPlan, Vec<usize>) {
+        assert_eq!(
+            patterns.len(),
+            keep.len(),
+            "keep mask must align with the pattern slice"
+        );
+        let selected: Vec<usize> = (0..patterns.len()).filter(|&i| keep[i]).collect();
+        let subset: Vec<Pattern> = selected.iter().map(|&i| patterns[i].clone()).collect();
+        (FusedPlan::build(&subset, stats, params), selected)
+    }
+
     /// Longest trie prefix whose level ops match `levels` exactly.
     fn shared_prefix_len(&self, levels: &[Level]) -> usize {
         let mut cur: Option<usize> = None;
@@ -349,6 +374,35 @@ mod tests {
         for (i, depth) in emits {
             assert_eq!(depth, fused.plans[i].levels.len(), "pattern {i}");
         }
+    }
+
+    #[test]
+    fn subset_build_drops_masked_patterns() {
+        let base = gen::connected_patterns(4);
+        let mut keep = vec![true; base.len()];
+        keep[0] = false;
+        keep[3] = false;
+        let (fused, selected) = FusedPlan::build_for_subset(&base, &keep, None, &counting());
+        assert_eq!(fused.num_patterns(), base.len() - 2);
+        assert_eq!(selected.len(), base.len() - 2);
+        for (slot, &orig) in selected.iter().enumerate() {
+            assert!(keep[orig]);
+            assert_eq!(
+                fused.plans[slot].pattern.canonical_key(),
+                base[orig].canonical_key(),
+                "plan slot {slot} must hold original pattern {orig}"
+            );
+        }
+        // an all-false mask yields an empty plan, an all-true mask the
+        // identical pattern set as a direct build
+        let (empty, sel) =
+            FusedPlan::build_for_subset(&base, &vec![false; base.len()], None, &counting());
+        assert_eq!(empty.num_patterns(), 0);
+        assert!(sel.is_empty());
+        let (full, sel) =
+            FusedPlan::build_for_subset(&base, &vec![true; base.len()], None, &counting());
+        assert_eq!(full.num_patterns(), base.len());
+        assert_eq!(sel, (0..base.len()).collect::<Vec<_>>());
     }
 
     #[test]

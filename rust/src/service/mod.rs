@@ -1,0 +1,37 @@
+//! SERVICE LAYER — morph-aware result cache + batched query service.
+//!
+//! Everything below [`crate::coordinator`] mines from scratch on every
+//! call; this layer sits between query admission and execution and makes
+//! the morph algebra a **cross-query cache**. The observation: morph plans
+//! address their base patterns by canonical key, so a base matched for one
+//! query set answers *any* later query whose rewrite references the same
+//! canonical pattern — repeated and overlapping batches (the ROADMAP's
+//! heavy-traffic scenario) pay only for the bases nobody has asked for
+//! yet.
+//!
+//! * [`store`] — [`ResultStore`]: per-base-pattern values keyed by
+//!   canonical key × graph epoch, LRU + byte-budget eviction,
+//!   hit/miss/bytes metrics.
+//! * [`planner`] — [`QueryPlanner`]: morphs a batch, probes the store,
+//!   fuse-executes **only the missing bases**
+//!   ([`crate::plan::fused::FusedPlan::build_for_subset`]), and composes
+//!   cached + fresh values through the morph expressions.
+//! * [`serve`] — [`Service`]: a multi-threaded request loop (mpsc channel
+//!   workers) that admits batches of query texts, coalesces duplicate
+//!   in-flight base patterns across concurrent batches, and wires epoch
+//!   invalidation to [`crate::graph::DynGraph::insert_edge`] /
+//!   [`remove_edge`](crate::graph::DynGraph::remove_edge) so incremental
+//!   updates bump the epoch instead of silently serving stale counts.
+//!
+//! CLI: `morphmine batch` (one-shot batches, `--repeat` for warm-cache
+//! runs) and `morphmine serve` (interactive loop with `+ u v` / `- u v`
+//! edge updates). Benchmark: A8 `bench --exp service`
+//! (cold / warm / overlapping-batch throughput → `BENCH_service.json`).
+
+pub mod planner;
+pub mod serve;
+pub mod store;
+
+pub use planner::{BatchStats, QueryPlanner};
+pub use serve::{BatchResponse, QueryResult, Service, ServiceConfig, ServiceQuery};
+pub use store::{CacheWeight, ResultStore, StoreMetrics};

@@ -1,0 +1,248 @@
+//! Batch query planner: intersects a batch's morphed base-pattern set
+//! against the result store **before** executing, so only the missing
+//! bases reach the matcher.
+//!
+//! The pipeline per batch:
+//!
+//! 1. Morph the query patterns into a [`MorphPlan`] under the configured
+//!    policy — exactly the plan a cold execution would use.
+//! 2. Probe the store for every base pattern (canonical key × epoch).
+//!    Hits are spliced straight into the value map.
+//! 3. Fuse-plan **only the missing subset**
+//!    ([`FusedPlan::build_for_subset`] — the cached bases drop out of the
+//!    plan trie entirely) and execute it in one traversal; singleton
+//!    leftovers take a plain per-pattern sweep.
+//! 4. Compose cached + fresh values through the morph expressions
+//!    (Theorem 3.2) into per-query map counts.
+//!
+//! [`QueryPlanner::serve_batch`] runs the whole pipeline against one store
+//! — a single-threaded reference implementation for tests and embedders
+//! that don't need a request loop. The multi-worker [`super::Service`]
+//! orchestrates the same [`QueryPlanner::morph`] /
+//! [`QueryPlanner::execute_bases`] / [`QueryPlanner::compose`] steps
+//! itself, because cross-batch in-flight coalescing splits the missing
+//! set into owned and awaited halves between probe and execution — a
+//! contract change here (probe semantics, store feeding, stats
+//! accounting) must land in `serve.rs::process` too.
+
+use super::store::ResultStore;
+use crate::agg::CountAgg;
+use crate::graph::{DataGraph, GraphStats};
+use crate::morph::{self, MorphPlan, Policy};
+use crate::pattern::canon::CanonKey;
+use crate::pattern::Pattern;
+use crate::plan::cost::CostParams;
+use crate::util::timer::PhaseProfile;
+use std::collections::HashMap;
+
+/// Per-batch reuse accounting. `total_bases` always equals
+/// `cached + executed + coalesced`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Distinct base patterns the batch's morph plan references.
+    pub total_bases: usize,
+    /// Bases served from the result store.
+    pub cached_bases: usize,
+    /// Bases this batch matched itself.
+    pub executed_bases: usize,
+    /// Bases neither cached nor executed here: another in-flight batch was
+    /// already computing them and this batch reused its result (only the
+    /// multi-worker [`super::Service`] produces these).
+    pub coalesced_bases: usize,
+}
+
+/// Stateless batch planner (the store carries all cross-batch state).
+#[derive(Clone, Copy, Debug)]
+pub struct QueryPlanner {
+    /// Morphing policy for incoming query sets.
+    pub policy: Policy,
+    /// Fuse multi-pattern executions into one traversal.
+    pub fused: bool,
+    /// Matcher threads per execution.
+    pub threads: usize,
+}
+
+impl QueryPlanner {
+    pub fn new(policy: Policy, fused: bool, threads: usize) -> QueryPlanner {
+        QueryPlanner {
+            policy,
+            fused,
+            threads,
+        }
+    }
+
+    /// Morph a flattened batch of query patterns into one plan (base
+    /// patterns deduplicated across the whole batch).
+    pub fn morph(&self, queries: &[Pattern], stats: &GraphStats) -> MorphPlan {
+        morph::plan_queries(queries, self.policy, Some(stats), &CostParams::counting())
+    }
+
+    /// Execute the subset of `base` selected by `indices`: one fused
+    /// traversal when two or more patterns are missing (the cached bases
+    /// never enter the plan trie), a single sweep otherwise. Returns
+    /// `(canonical key, map count)` pairs. The dispatch itself is the
+    /// engine's ([`crate::morph::engine::match_base_subset`] — the same
+    /// code path `morph::execute_opts` matches with), so the service can
+    /// never drift from cold execution semantics.
+    pub fn execute_bases(
+        &self,
+        graph: &DataGraph,
+        base: &[Pattern],
+        indices: &[usize],
+        stats: &GraphStats,
+        profile: &mut PhaseProfile,
+    ) -> Vec<(CanonKey, i128)> {
+        let opts = morph::ExecOpts::new(self.threads)
+            .with_fused(self.fused)
+            .with_stats(stats.clone());
+        morph::engine::match_base_subset(graph, base, indices, &CountAgg, &opts, profile)
+    }
+
+    /// Evaluate every query's morph expression against the composed base
+    /// values (cached + fresh), returning per-query **map counts** in
+    /// input order.
+    pub fn compose(
+        &self,
+        plan: &MorphPlan,
+        values: &HashMap<CanonKey, i128>,
+        profile: &mut PhaseProfile,
+    ) -> Vec<i128> {
+        plan.exprs
+            .iter()
+            .map(|e| profile.time("convert", || e.evaluate(&CountAgg, values)))
+            .collect()
+    }
+
+    /// Serve one batch against `store`: probe, execute the missing bases,
+    /// feed them back into the store, compose. This is the single-threaded
+    /// pipeline; [`super::Service`] adds worker threads and cross-batch
+    /// coalescing on top.
+    pub fn serve_batch(
+        &self,
+        graph: &DataGraph,
+        queries: &[Pattern],
+        stats: &GraphStats,
+        store: &mut ResultStore<i128>,
+        epoch: u64,
+        profile: &mut PhaseProfile,
+    ) -> (Vec<i128>, BatchStats) {
+        store.set_epoch(epoch);
+        let plan = profile.time("plan", || self.morph(queries, stats));
+        let mut values: HashMap<CanonKey, i128> = HashMap::new();
+        let mut missing: Vec<usize> = Vec::new();
+        for (i, p) in plan.base.iter().enumerate() {
+            let k = p.canonical_key();
+            match store.get(&k, epoch) {
+                Some(v) => {
+                    values.insert(k, v);
+                }
+                None => missing.push(i),
+            }
+        }
+        let fresh = self.execute_bases(graph, &plan.base, &missing, stats, profile);
+        for (k, v) in fresh {
+            store.insert(k, epoch, v);
+            values.insert(k, v);
+        }
+        let stats_out = BatchStats {
+            total_bases: plan.base.len(),
+            cached_bases: plan.base.len() - missing.len(),
+            executed_bases: missing.len(),
+            coalesced_bases: 0,
+        };
+        (self.compose(&plan, &values, profile), stats_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::pattern::catalog;
+
+    fn setup() -> (DataGraph, GraphStats) {
+        let g = erdos_renyi(60, 220, 0x5EC1);
+        let s = GraphStats::compute(&g, 2000, 0x5EC2);
+        (g, s)
+    }
+
+    #[test]
+    fn warm_batch_executes_zero_bases() {
+        let (g, stats) = setup();
+        let planner = QueryPlanner::new(Policy::Naive, true, 2);
+        let mut store = ResultStore::new(1 << 20);
+        let mut prof = PhaseProfile::new();
+        let queries = catalog::motifs_vertex_induced(4);
+        let (cold, s1) = planner.serve_batch(&g, &queries, &stats, &mut store, 0, &mut prof);
+        assert_eq!(s1.cached_bases, 0);
+        assert!(s1.executed_bases > 0);
+        let (warm, s2) = planner.serve_batch(&g, &queries, &stats, &mut store, 0, &mut prof);
+        assert_eq!(cold, warm);
+        assert_eq!(s2.executed_bases, 0, "warm batch must be fully cached");
+        assert_eq!(s2.cached_bases, s1.total_bases);
+        assert!(store.metrics().hits as usize >= s1.total_bases);
+    }
+
+    #[test]
+    fn partial_overlap_executes_only_missing() {
+        let (g, stats) = setup();
+        let planner = QueryPlanner::new(Policy::Naive, true, 2);
+        let mut store = ResultStore::new(1 << 20);
+        let mut prof = PhaseProfile::new();
+        // C4^E morphs into {C4^V, diamond^V, K4} under Naive PMR
+        let (_, s1) =
+            planner.serve_batch(&g, &[catalog::cycle(4)], &stats, &mut store, 0, &mut prof);
+        assert_eq!(s1.executed_bases, s1.total_bases);
+        // the tailed triangle's alternative set shares bases with C4^E's
+        let (_, s2) = planner.serve_batch(
+            &g,
+            &[catalog::cycle(4), catalog::tailed_triangle()],
+            &stats,
+            &mut store,
+            0,
+            &mut prof,
+        );
+        assert!(s2.cached_bases >= s1.total_bases, "C4 bases all reused: {s2:?}");
+        assert!(s2.executed_bases > 0, "tailed-triangle bases are new");
+        assert!(s2.executed_bases < s2.total_bases);
+    }
+
+    #[test]
+    fn planner_matches_direct_engine() {
+        let (g, stats) = setup();
+        let mut prof = PhaseProfile::new();
+        let queries = vec![
+            catalog::cycle(4),
+            catalog::cycle(4).vertex_induced(),
+            catalog::diamond().vertex_induced(),
+        ];
+        for policy in [Policy::Off, Policy::Naive, Policy::CostBased] {
+            let planner = QueryPlanner::new(policy, true, 2);
+            let mut store = ResultStore::new(1 << 20);
+            let (vals, _) = planner.serve_batch(&g, &queries, &stats, &mut store, 0, &mut prof);
+            let direct = morph::engine::count_queries(&g, &queries, policy, 2);
+            for ((v, q), d) in vals.iter().zip(&queries).zip(&direct) {
+                let aut = crate::pattern::iso::automorphisms(q).len() as i128;
+                assert_eq!(v % aut, 0, "{policy:?} {q:?}");
+                assert_eq!((v / aut) as u64, *d, "{policy:?} {q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_change_forces_reexecution() {
+        let (g, stats) = setup();
+        let planner = QueryPlanner::new(Policy::Naive, true, 1);
+        let mut store = ResultStore::new(1 << 20);
+        let mut prof = PhaseProfile::new();
+        let queries = [catalog::triangle()];
+        let (_, s1) = planner.serve_batch(&g, &queries, &stats, &mut store, 0, &mut prof);
+        assert!(s1.executed_bases > 0);
+        let (_, s2) = planner.serve_batch(&g, &queries, &stats, &mut store, 1, &mut prof);
+        assert_eq!(
+            s2.executed_bases, s2.total_bases,
+            "new epoch must invalidate every cached base"
+        );
+        assert!(store.metrics().invalidations > 0);
+    }
+}

@@ -1,0 +1,622 @@
+//! Batched query service: a multi-threaded request loop over one mutable
+//! graph, one result store, and one in-flight registry.
+//!
+//! * **Admission** — batches of [`coordinator::query::Query`] texts
+//!   (`motifs:4`, `match:cycle4,p3`, `cliques:4`) arrive over an mpsc
+//!   channel and are picked up by worker threads. FSM is rejected at parse
+//!   time: its support aggregation is not per-base-pattern cacheable.
+//! * **Reuse** — each worker probes the [`ResultStore`] and executes only
+//!   the missing bases through the [`QueryPlanner`] (the cached bases drop
+//!   out of the fused plan trie).
+//! * **Coalescing** — bases already being computed by *another* in-flight
+//!   batch at the same epoch are not recomputed: the worker registers
+//!   interest in the owner's completion cell and blocks on it after
+//!   finishing its own share. Each `(canonical key, epoch)` pair is
+//!   matched at most once process-wide.
+//! * **Invalidation** — the service owns a [`DynGraph`];
+//!   [`Service::insert_edge`]/[`Service::remove_edge`] delegate to it, and
+//!   every *applied* mutation bumps [`DynGraph::version`]. Batches pin the
+//!   epoch at admission: the CSR snapshot is rebuilt lazily on the first
+//!   batch after a mutation, the store purges entries from older epochs,
+//!   and results computed against a superseded snapshot never enter the
+//!   cache — stale counts are structurally unservable.
+//! * **Containment** — a batch that panics (an internal invariant
+//!   failure) is caught at the worker boundary: that batch's caller gets
+//!   an error from [`Service::call`], cells the batch owned are failed so
+//!   coalesced batches error instead of hanging, and the worker keeps
+//!   serving subsequent batches.
+//!
+//! [`coordinator::query::Query`]: crate::coordinator::query::Query
+
+use super::planner::{BatchStats, QueryPlanner};
+use super::store::{ResultStore, StoreMetrics};
+use crate::coordinator::query::Query;
+use crate::graph::{DataGraph, DynGraph, GraphStats, Relabeling, VertexId};
+use crate::morph::Policy;
+use crate::pattern::canon::CanonKey;
+use crate::pattern::Pattern;
+use crate::util::timer::PhaseProfile;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Cap on how many new vertices a single edge update may create by naming
+/// an ID beyond the current graph (a fat-finger guard for the interactive
+/// `serve` loop: `+ 0 4000000000` must error, not allocate gigabytes of
+/// adjacency slots).
+pub const MAX_UPDATE_GROWTH: usize = 1 << 20;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Request-loop worker threads (concurrent batches).
+    pub workers: usize,
+    /// Matcher threads per batch execution (total parallelism is
+    /// `workers × threads` when batches overlap).
+    pub threads: usize,
+    /// Morphing policy for admitted queries.
+    pub policy: Policy,
+    /// Fuse multi-pattern executions into one traversal.
+    pub fused: bool,
+    /// Result-store eviction budget in bytes.
+    pub cache_bytes: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            threads: crate::exec::parallel::default_threads(),
+            policy: Policy::CostBased,
+            fused: true,
+            cache_bytes: 64 << 20,
+        }
+    }
+}
+
+/// One admitted query: its original text plus the expanded pattern set
+/// whose unique-match counts answer it.
+#[derive(Clone, Debug)]
+pub struct ServiceQuery {
+    pub text: String,
+    pub patterns: Vec<Pattern>,
+}
+
+impl ServiceQuery {
+    /// Parse a query text (`motifs:4`, `match:…`, `cliques:k`). FSM texts
+    /// are rejected — not servable from a per-pattern cache.
+    pub fn parse(text: &str) -> Result<ServiceQuery> {
+        let q = Query::parse(text)?;
+        let Some(patterns) = q.patterns() else {
+            bail!("query {text:?} is not cacheable per-pattern (use `morphmine fsm`)");
+        };
+        Ok(ServiceQuery {
+            text: text.to_string(),
+            patterns,
+        })
+    }
+}
+
+/// Counts for one admitted query, aligned with its expanded patterns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueryResult {
+    /// The admitted query text.
+    pub query: String,
+    /// `(pattern, unique-match count)` in expansion order.
+    pub counts: Vec<(Pattern, u64)>,
+}
+
+/// Response for one batch.
+#[derive(Clone, Debug)]
+pub struct BatchResponse {
+    /// Per-query results, in admission order.
+    pub results: Vec<QueryResult>,
+    /// Base-pattern reuse accounting for this batch.
+    pub stats: BatchStats,
+    /// Graph epoch the batch was answered at.
+    pub epoch: u64,
+    /// Phase breakdown (plan / fuse / match / convert / stats).
+    pub profile: PhaseProfile,
+}
+
+/// Completion cell for one in-flight base computation: owners fill it
+/// (`Ok` on publish, `Err` if the owner unwound first), coalesced waiters
+/// block on it.
+#[derive(Default)]
+struct Cell {
+    value: Mutex<Option<Result<i128, &'static str>>>,
+    ready: Condvar,
+}
+
+/// State behind the service mutex.
+struct State {
+    graph: DynGraph,
+    snapshot: Option<Arc<DataGraph>>,
+    snapshot_epoch: u64,
+    stats: Option<Arc<GraphStats>>,
+    store: ResultStore<i128>,
+    /// `(canonical key, epoch)` → completion cell of the batch computing it.
+    inflight: HashMap<(CanonKey, u64), Arc<Cell>>,
+    /// Degree-ordered relabeling of the *initial* graph, if any: public
+    /// edge updates arrive in original (input) IDs and are translated into
+    /// the engine's internal ID space, which snapshots keep forever.
+    relabel: Option<Relabeling>,
+}
+
+impl State {
+    /// Original (input) vertex ID → internal engine ID. Vertices beyond
+    /// the initial graph (created by later inserts) never went through the
+    /// relabeling and are addressed identically in both spaces.
+    fn internal(&self, v: VertexId) -> VertexId {
+        match &self.relabel {
+            Some(r) if (v as usize) < r.len() => r.new_id(v),
+            _ => v,
+        }
+    }
+}
+
+struct Shared {
+    state: Mutex<State>,
+}
+
+/// Unwind guard for the cells a batch registered: disarmed after a
+/// successful publish; on an owner panic it fails the still-pending cells
+/// so coalesced batches propagate an error instead of waiting forever.
+struct OwnedCells<'a> {
+    shared: &'a Shared,
+    keys: Vec<(CanonKey, u64)>,
+    armed: bool,
+}
+
+impl Drop for OwnedCells<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = match self.shared.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for key in &self.keys {
+            if let Some(cell) = st.inflight.remove(key) {
+                *cell.value.lock().unwrap() = Some(Err("owner batch panicked before publishing"));
+                cell.ready.notify_all();
+            }
+        }
+    }
+}
+
+struct Job {
+    queries: Vec<ServiceQuery>,
+    respond: mpsc::Sender<BatchResponse>,
+}
+
+/// The batched query service. Dropping it shuts the request loop down and
+/// joins the workers.
+pub struct Service {
+    shared: Arc<Shared>,
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service over `graph` (converted to a mutable [`DynGraph`]
+    /// internally; the given CSR becomes the epoch-0 snapshot).
+    pub fn start(graph: DataGraph, config: ServiceConfig) -> Service {
+        let dyn_graph = DynGraph::from_data_graph(&graph);
+        let relabel = graph.relabeling().cloned();
+        let stats = GraphStats::compute(&graph, 2000, 0x5E55);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                graph: dyn_graph,
+                snapshot: Some(Arc::new(graph)),
+                snapshot_epoch: 0,
+                stats: Some(Arc::new(stats)),
+                store: ResultStore::new(config.cache_bytes),
+                inflight: HashMap::new(),
+                relabel,
+            }),
+        });
+        let planner = QueryPlanner::new(config.policy, config.fused, config.threads);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..config.workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                let rx = rx.clone();
+                std::thread::spawn(move || worker_loop(&shared, &rx, planner))
+            })
+            .collect();
+        Service {
+            shared,
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    /// Parse and serve one batch, blocking until the response is ready.
+    pub fn call(&self, queries: &[&str]) -> Result<BatchResponse> {
+        let parsed = queries
+            .iter()
+            .map(|q| ServiceQuery::parse(q))
+            .collect::<Result<Vec<_>>>()?;
+        self.submit(parsed)
+            .recv()
+            .context("service worker dropped the batch")
+    }
+
+    /// Enqueue a pre-parsed batch; the returned channel yields the
+    /// response when a worker finishes it. If the batch cannot be served
+    /// (request loop gone, or the batch's worker panicked mid-execution),
+    /// the channel reports disconnection instead — [`Service::call`]
+    /// surfaces that as an error, never a panic in the caller.
+    pub fn submit(&self, queries: Vec<ServiceQuery>) -> mpsc::Receiver<BatchResponse> {
+        let (respond, rx) = mpsc::channel();
+        let job = Job { queries, respond };
+        if let Some(tx) = &self.tx {
+            // a failed send drops the job and thus its respond sender;
+            // the caller's recv then reports the disconnection
+            let _ = tx.send(job);
+        }
+        rx
+    }
+
+    /// Apply an edge insertion. `Ok(true)` means the update was applied
+    /// and bumped the graph epoch ([`DynGraph::insert_edge`]),
+    /// invalidating every cached result; `Ok(false)` is a duplicate
+    /// insert (no-op, cache stays warm); self-loops and IDs that would
+    /// grow the graph by more than [`MAX_UPDATE_GROWTH`] vertices are
+    /// errors. Vertex IDs are the graph's **original** (input) IDs — any
+    /// degree-ordered relabeling from the initial build is translated
+    /// internally.
+    pub fn insert_edge(&self, u: VertexId, v: VertexId) -> Result<bool> {
+        ensure!(u != v, "self loop ({u},{u}) not allowed");
+        let mut st = self.shared.state.lock().unwrap();
+        let (u, v) = (st.internal(u), st.internal(v));
+        let hi = u.max(v) as usize;
+        ensure!(
+            hi < st.graph.num_vertices() + MAX_UPDATE_GROWTH,
+            "vertex {hi} would grow the {}-vertex graph past the {MAX_UPDATE_GROWTH}-vertex update cap",
+            st.graph.num_vertices()
+        );
+        Ok(st.graph.insert_edge(u, v))
+    }
+
+    /// Apply an edge removal (see [`Service::insert_edge`]). Out-of-range
+    /// IDs name no edge and return `Ok(false)`.
+    pub fn remove_edge(&self, u: VertexId, v: VertexId) -> Result<bool> {
+        let mut st = self.shared.state.lock().unwrap();
+        let (u, v) = (st.internal(u), st.internal(v));
+        if u == v || u.max(v) as usize >= st.graph.num_vertices() {
+            return Ok(false);
+        }
+        Ok(st.graph.remove_edge(u, v))
+    }
+
+    /// Current graph epoch (count of applied mutations).
+    pub fn epoch(&self) -> u64 {
+        self.shared.state.lock().unwrap().graph.version()
+    }
+
+    /// Result-store counters.
+    pub fn store_metrics(&self) -> StoreMetrics {
+        self.shared.state.lock().unwrap().store.metrics()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        // closing the channel ends the workers' recv loops
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Job>>, planner: QueryPlanner) {
+    loop {
+        // hold the receiver lock only while waiting for the next job;
+        // processing runs unlocked so workers overlap
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // service dropped
+            }
+        };
+        // a panicking batch (internal invariant failure) must not kill the
+        // worker: catch the unwind, drop the responder so THIS batch's
+        // caller gets a disconnection error, and keep serving. The
+        // OwnedCells guard inside process() has already failed any cells
+        // the batch owned, so coalesced batches error out too instead of
+        // hanging.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process(shared, &planner, &job.queries)
+        }));
+        if let Ok(response) = result {
+            // a caller that gave up on the response is not an error
+            let _ = job.respond.send(response);
+        }
+    }
+}
+
+/// Serve one batch: snapshot, morph, split bases into cached / owned /
+/// coalesced, execute owned, publish, await coalesced, compose.
+fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) -> BatchResponse {
+    // flatten the batch into one pattern list (the morph plan dedups bases
+    // across all queries)
+    let mut flat: Vec<Pattern> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::with_capacity(queries.len());
+    for q in queries {
+        let start = flat.len();
+        flat.extend(q.patterns.iter().cloned());
+        spans.push((start, flat.len()));
+    }
+
+    // pin the epoch and (re)build the CSR snapshot + stats if a mutation
+    // landed since the last batch
+    let (graph, stats, epoch) = {
+        let mut st = shared.state.lock().unwrap();
+        let epoch = st.graph.version();
+        st.store.set_epoch(epoch);
+        if st.snapshot.is_none() || st.snapshot_epoch != epoch {
+            let g = st.graph.to_data_graph("service");
+            st.stats = Some(Arc::new(GraphStats::compute(&g, 2000, 0x5E55)));
+            st.snapshot = Some(Arc::new(g));
+            st.snapshot_epoch = epoch;
+        }
+        (
+            st.snapshot.clone().expect("snapshot just ensured"),
+            st.stats.clone().expect("stats just ensured"),
+            epoch,
+        )
+    };
+
+    let mut profile = PhaseProfile::new();
+    let plan = profile.time("plan", || planner.morph(&flat, &stats));
+
+    // split the base set: store hits / in-flight elsewhere / ours to run
+    let mut values: HashMap<CanonKey, i128> = HashMap::new();
+    let mut awaited: Vec<(CanonKey, Arc<Cell>)> = Vec::new();
+    let mut owned: Vec<usize> = Vec::new();
+    let mut owned_keys: Vec<(CanonKey, u64)> = Vec::new();
+    {
+        let mut st = shared.state.lock().unwrap();
+        for (i, p) in plan.base.iter().enumerate() {
+            let k = p.canonical_key();
+            if let Some(v) = st.store.get(&k, epoch) {
+                values.insert(k, v);
+            } else if let Some(cell) = st.inflight.get(&(k, epoch)) {
+                awaited.push((k, cell.clone()));
+            } else {
+                st.inflight.insert((k, epoch), Arc::new(Cell::default()));
+                owned.push(i);
+                owned_keys.push((k, epoch));
+            }
+        }
+    }
+    // from here until publish, an unwind must fail our registered cells —
+    // otherwise batches coalesced onto them would wait forever
+    let mut guard = OwnedCells {
+        shared,
+        keys: owned_keys,
+        armed: true,
+    };
+
+    let fresh = planner.execute_bases(&graph, &plan.base, &owned, &stats, &mut profile);
+
+    // publish: feed the store (stale inserts are dropped there) and wake
+    // any batch coalesced onto our bases
+    {
+        let mut st = shared.state.lock().unwrap();
+        for &(k, v) in &fresh {
+            st.store.insert(k, epoch, v);
+            if let Some(cell) = st.inflight.remove(&(k, epoch)) {
+                *cell.value.lock().unwrap() = Some(Ok(v));
+                cell.ready.notify_all();
+            }
+        }
+    }
+    guard.armed = false;
+    let executed = fresh.len();
+    values.extend(fresh);
+
+    // block on bases another batch is computing (no state lock held; the
+    // owner fills every registered cell, on success or unwind)
+    let coalesced = awaited.len();
+    for (k, cell) in awaited {
+        let mut slot = cell.value.lock().unwrap();
+        while slot.is_none() {
+            slot = cell.ready.wait(slot).unwrap();
+        }
+        match slot.expect("cell filled") {
+            Ok(v) => {
+                values.insert(k, v);
+            }
+            Err(msg) => panic!("coalesced base computation failed: {msg}"),
+        }
+    }
+
+    let vals = planner.compose(&plan, &values, &mut profile);
+    let results = queries
+        .iter()
+        .zip(&spans)
+        .map(|(q, &(start, end))| QueryResult {
+            query: q.text.clone(),
+            counts: q
+                .patterns
+                .iter()
+                .zip(&vals[start..end])
+                .map(|(p, &maps)| {
+                    let aut = crate::pattern::iso::automorphisms(p).len() as i128;
+                    assert!(maps >= 0 && maps % aut == 0, "bad map count {maps} for {p:?}");
+                    (p.clone(), (maps / aut) as u64)
+                })
+                .collect(),
+        })
+        .collect();
+
+    BatchResponse {
+        results,
+        stats: BatchStats {
+            total_bases: plan.base.len(),
+            cached_bases: plan.base.len() - executed - coalesced,
+            executed_bases: executed,
+            coalesced_bases: coalesced,
+        },
+        epoch,
+        profile,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    fn service(seed: u64, workers: usize) -> Service {
+        Service::start(
+            erdos_renyi(50, 180, seed),
+            ServiceConfig {
+                workers,
+                threads: 2,
+                policy: Policy::Naive,
+                fused: true,
+                cache_bytes: 1 << 20,
+            },
+        )
+    }
+
+    #[test]
+    fn call_roundtrip_and_warm_cache() {
+        let svc = service(0x5001, 2);
+        let cold = svc.call(&["motifs:3", "cliques:3"]).unwrap();
+        assert_eq!(cold.results.len(), 2);
+        assert_eq!(cold.results[0].counts.len(), 2, "two 3-motifs");
+        assert_eq!(cold.stats.cached_bases, 0);
+        let warm = svc.call(&["motifs:3", "cliques:3"]).unwrap();
+        assert_eq!(warm.stats.executed_bases, 0);
+        for (a, b) in cold.results.iter().zip(&warm.results) {
+            assert_eq!(a.counts, b.counts);
+        }
+        // triangle count appears in both expansions and must agree
+        let tri = cold.results[0].counts.iter().find(|(p, _)| p.is_clique()).unwrap().1;
+        assert_eq!(cold.results[1].counts[0].1, tri);
+    }
+
+    #[test]
+    fn rejects_fsm_and_garbage() {
+        let svc = service(0x5002, 1);
+        assert!(svc.call(&["fsm:3:100"]).is_err());
+        assert!(svc.call(&["bogus:1"]).is_err());
+        assert!(ServiceQuery::parse("fsm:2:5").is_err());
+    }
+
+    #[test]
+    fn edge_updates_bump_epoch_and_invalidate() {
+        let svc = service(0x5003, 1);
+        let r0 = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(r0.epoch, 0);
+        // find a non-edge deterministically via a fresh generator copy
+        let g = erdos_renyi(50, 180, 0x5003);
+        let (u, v) = (0..50u32)
+            .flat_map(|a| (0..50u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !g.has_edge(a, b))
+            .expect("sparse graph has a non-edge");
+        assert!(svc.insert_edge(u, v).unwrap());
+        assert_eq!(svc.epoch(), 1);
+        let r1 = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(r1.epoch, 1);
+        assert_eq!(
+            r1.stats.executed_bases, r1.stats.total_bases,
+            "mutation must invalidate the cache"
+        );
+        // removing the edge restores the original counts (epoch 2, cold)
+        assert!(svc.remove_edge(u, v).unwrap());
+        assert!(!svc.remove_edge(u, v).unwrap(), "second removal is a no-op");
+        assert_eq!(svc.epoch(), 2);
+        let r2 = svc.call(&["motifs:3"]).unwrap();
+        for (a, b) in r0.results.iter().zip(&r2.results) {
+            assert_eq!(a.counts, b.counts, "counts must match the restored graph");
+        }
+    }
+
+    #[test]
+    fn edge_updates_use_original_ids_on_relabeled_graphs() {
+        // star centered at ORIGINAL vertex 3; degree ordering renames it
+        // to internal 0 — updates must still address the input IDs
+        let g = crate::graph::GraphBuilder::new()
+            .edges(&[(3, 0), (3, 1), (3, 2), (3, 4)])
+            .degree_ordered(true)
+            .build("star");
+        assert_eq!(g.original_id(0), 3, "center relabeled to 0");
+        let svc = Service::start(
+            g,
+            ServiceConfig {
+                workers: 1,
+                threads: 1,
+                policy: Policy::Naive,
+                fused: true,
+                cache_bytes: 1 << 20,
+            },
+        );
+        // 5-vertex star: C(4,2) = 6 wedges, no triangles
+        let r = svc.call(&["match:wedge,triangle"]).unwrap();
+        assert_eq!(r.results[0].counts[0].1, 6);
+        assert_eq!(r.results[0].counts[1].1, 0);
+        // closing ORIGINAL leaves (0,1) forms exactly one triangle; if the
+        // IDs were taken as internal, (0,1) would hit the center's existing
+        // edge and be rejected as a duplicate
+        assert!(svc.insert_edge(0, 1).unwrap());
+        let r = svc.call(&["match:triangle"]).unwrap();
+        assert_eq!(r.results[0].counts[0].1, 1);
+        // duplicate detection also happens in original-ID space
+        assert!(!svc.insert_edge(1, 0).unwrap());
+        assert!(svc.remove_edge(0, 1).unwrap());
+        let r = svc.call(&["match:triangle"]).unwrap();
+        assert_eq!(r.results[0].counts[0].1, 0);
+    }
+
+    #[test]
+    fn hostile_updates_are_rejected_not_fatal() {
+        let svc = service(0x5005, 1);
+        // out-of-range removal: no such edge, no panic
+        assert!(!svc.remove_edge(9_999_999, 0).unwrap());
+        // an ID that would allocate gigabytes of adjacency slots errors
+        assert!(svc.insert_edge(4_000_000_000, 0).is_err());
+        // self loops error on insert, no-op on remove
+        assert!(svc.insert_edge(7, 7).is_err());
+        assert!(!svc.remove_edge(7, 7).unwrap());
+        assert_eq!(svc.epoch(), 0, "rejected updates must not bump the epoch");
+        // modest growth past the current vertex count is still allowed
+        assert!(svc.insert_edge(60, 61).unwrap());
+        assert_eq!(svc.epoch(), 1);
+    }
+
+    #[test]
+    fn concurrent_identical_batches_coalesce() {
+        let svc = Arc::new(service(0x5004, 4));
+        let responses: Vec<BatchResponse> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let svc = svc.clone();
+                    s.spawn(move || svc.call(&["motifs:4"]).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let total = responses[0].stats.total_bases;
+        for r in &responses {
+            assert_eq!(r.results[0].counts.len(), 6);
+            assert_eq!(r.results, responses[0].results, "all answers identical");
+            let s = r.stats;
+            assert_eq!(s.cached_bases + s.executed_bases + s.coalesced_bases, s.total_bases);
+        }
+        // each (base, epoch) pair is computed at most once process-wide:
+        // the store saw exactly one insert per base
+        assert_eq!(svc.store_metrics().inserts as usize, total);
+        assert_eq!(svc.store_metrics().stale_drops, 0);
+    }
+}

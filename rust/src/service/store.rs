@@ -1,0 +1,269 @@
+//! Morph-aware result store: per-base-pattern aggregation values keyed by
+//! **canonical pattern key × graph epoch**, with LRU + byte-budget eviction
+//! and hit/miss/bytes metrics.
+//!
+//! The store is the memory behind the cross-query reuse the service layer
+//! adds on top of the morph algebra: a base pattern matched for one query
+//! set answers *any* future query whose morph expression references the
+//! same canonical pattern — as long as the graph has not changed. The
+//! epoch (see [`crate::graph::DynGraph::version`]) makes "has not changed"
+//! explicit: lookups carry the epoch the caller's snapshot was taken at,
+//! and values cached under any other epoch are invisible (and purged on
+//! [`ResultStore::set_epoch`]), so incremental updates can never leak
+//! stale counts.
+
+use crate::pattern::canon::CanonKey;
+use std::collections::HashMap;
+
+/// Approximate heap weight of a cached value, for the byte budget.
+pub trait CacheWeight {
+    fn weight_bytes(&self) -> usize;
+}
+
+impl CacheWeight for i128 {
+    fn weight_bytes(&self) -> usize {
+        std::mem::size_of::<i128>()
+    }
+}
+
+/// Fixed bookkeeping cost charged per entry on top of the value weight
+/// (key, LRU stamp, hash-map slot).
+const ENTRY_OVERHEAD: usize = 64;
+
+/// Store counters. `bytes` is the current footprint; everything else is
+/// cumulative since construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreMetrics {
+    /// Lookups served from the store.
+    pub hits: u64,
+    /// Lookups that found nothing (wrong epoch counts as a miss).
+    pub misses: u64,
+    /// Values inserted.
+    pub inserts: u64,
+    /// Entries evicted by the LRU byte budget.
+    pub evictions: u64,
+    /// Entries purged because the graph epoch moved past them.
+    pub invalidations: u64,
+    /// Inserts dropped because they were computed against an old epoch.
+    pub stale_drops: u64,
+    /// Current footprint (value weights + per-entry overhead).
+    pub bytes: usize,
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// LRU result store for one graph. All live entries belong to the current
+/// epoch — [`ResultStore::set_epoch`] purges everything older, which keeps
+/// the key a plain [`CanonKey`] while the lookup contract stays
+/// "canonical key × epoch".
+pub struct ResultStore<V> {
+    budget_bytes: usize,
+    epoch: u64,
+    tick: u64,
+    map: HashMap<CanonKey, Entry<V>>,
+    metrics: StoreMetrics,
+}
+
+impl<V: CacheWeight + Clone> ResultStore<V> {
+    /// Store with an eviction budget of `budget_bytes` (entries are small;
+    /// a few MiB caches thousands of base patterns).
+    pub fn new(budget_bytes: usize) -> ResultStore<V> {
+        ResultStore {
+            budget_bytes,
+            epoch: 0,
+            tick: 0,
+            map: HashMap::new(),
+            metrics: StoreMetrics::default(),
+        }
+    }
+
+    /// The epoch current entries were computed at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Cumulative counters plus the current byte footprint.
+    pub fn metrics(&self) -> StoreMetrics {
+        self.metrics
+    }
+
+    /// Advance to `epoch`, purging entries cached under older epochs.
+    /// Epochs are monotone (they come from [`crate::graph::DynGraph::version`]);
+    /// calls with the current epoch are no-ops.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        debug_assert!(epoch >= self.epoch, "epochs must be monotone");
+        if epoch == self.epoch {
+            return;
+        }
+        self.metrics.invalidations += self.map.len() as u64;
+        self.metrics.bytes = 0;
+        self.map.clear();
+        self.epoch = epoch;
+    }
+
+    /// Look up the value for `key` computed at `epoch`. A hit refreshes the
+    /// entry's LRU position; an epoch mismatch is a miss (the caller's
+    /// snapshot does not match what the store holds).
+    pub fn get(&mut self, key: &CanonKey, epoch: u64) -> Option<V> {
+        if epoch != self.epoch {
+            self.metrics.misses += 1;
+            return None;
+        }
+        match self.map.get_mut(key) {
+            Some(e) => {
+                self.tick += 1;
+                e.last_used = self.tick;
+                self.metrics.hits += 1;
+                Some(e.value.clone())
+            }
+            None => {
+                self.metrics.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a value computed at `epoch`. Values computed against a
+    /// superseded snapshot are dropped (`stale_drops`) — the caller still
+    /// uses them for its own response, they just don't enter the cache.
+    pub fn insert(&mut self, key: CanonKey, epoch: u64, value: V) {
+        if epoch != self.epoch {
+            self.metrics.stale_drops += 1;
+            return;
+        }
+        let bytes = value.weight_bytes() + ENTRY_OVERHEAD;
+        self.tick += 1;
+        if let Some(old) = self.map.insert(
+            key,
+            Entry {
+                value,
+                bytes,
+                last_used: self.tick,
+            },
+        ) {
+            self.metrics.bytes -= old.bytes;
+        }
+        self.metrics.bytes += bytes;
+        self.metrics.inserts += 1;
+        self.evict_to_budget();
+    }
+
+    /// Evict least-recently-used entries until the footprint fits the
+    /// budget. A single entry larger than the whole budget is kept — the
+    /// store must still be able to serve it. Linear LRU scan: the store
+    /// holds at most a few thousand base patterns, eviction is rare, and
+    /// it keeps hits allocation-free.
+    fn evict_to_budget(&mut self) {
+        while self.metrics.bytes > self.budget_bytes && self.map.len() > 1 {
+            let key = *self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k)
+                .expect("map non-empty");
+            let e = self.map.remove(&key).expect("key just found");
+            self.metrics.bytes -= e.bytes;
+            self.metrics.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    fn key(i: usize) -> CanonKey {
+        catalog::paper_pattern(i % 7 + 1).canonical_key()
+    }
+
+    #[test]
+    fn hit_miss_and_bytes() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        assert!(s.is_empty());
+        assert_eq!(s.get(&key(1), 0), None);
+        s.insert(key(1), 0, 42);
+        assert_eq!(s.get(&key(1), 0), Some(42));
+        assert_eq!(s.len(), 1);
+        let m = s.metrics();
+        assert_eq!((m.hits, m.misses, m.inserts), (1, 1, 1));
+        assert_eq!(m.bytes, 16 + ENTRY_OVERHEAD);
+    }
+
+    #[test]
+    fn epoch_mismatch_is_invisible() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.insert(key(1), 0, 7);
+        // lookup at a later epoch misses even before set_epoch
+        assert_eq!(s.get(&key(1), 1), None);
+        // inserts only land on the store's current epoch
+        s.insert(key(2), 1, 9);
+        assert_eq!(s.metrics().stale_drops, 1);
+        s.set_epoch(1);
+        assert_eq!(s.metrics().invalidations, 1);
+        assert!(s.is_empty());
+        assert_eq!(s.metrics().bytes, 0);
+        s.insert(key(3), 0, 5); // computed against the old snapshot
+        assert_eq!(s.metrics().stale_drops, 2);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn set_epoch_same_is_noop() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.insert(key(1), 0, 1);
+        s.set_epoch(0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.metrics().invalidations, 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        // budget fits exactly two entries
+        let per = 16 + ENTRY_OVERHEAD;
+        let mut s: ResultStore<i128> = ResultStore::new(2 * per);
+        s.insert(key(1), 0, 1);
+        s.insert(key(2), 0, 2);
+        // touch key(1) so key(2) is the LRU victim
+        assert_eq!(s.get(&key(1), 0), Some(1));
+        s.insert(key(3), 0, 3);
+        assert_eq!(s.metrics().evictions, 1);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(&key(1), 0), Some(1));
+        assert_eq!(s.get(&key(2), 0), None, "LRU entry evicted");
+        assert_eq!(s.get(&key(3), 0), Some(3));
+        assert!(s.metrics().bytes <= 2 * per);
+    }
+
+    #[test]
+    fn oversized_single_entry_is_kept() {
+        let mut s: ResultStore<i128> = ResultStore::new(1);
+        s.insert(key(1), 0, 9);
+        assert_eq!(s.get(&key(1), 0), Some(9), "sole entry survives any budget");
+        s.insert(key(2), 0, 8);
+        assert_eq!(s.len(), 1, "second entry forces eviction down to one");
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_charge() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.insert(key(1), 0, 1);
+        let b = s.metrics().bytes;
+        s.insert(key(1), 0, 2);
+        assert_eq!(s.metrics().bytes, b, "replacement must not leak bytes");
+        assert_eq!(s.get(&key(1), 0), Some(2));
+    }
+}

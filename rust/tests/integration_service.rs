@@ -1,0 +1,204 @@
+//! Integration tests for the service layer: cache correctness (warm-cache
+//! answers must equal cold-engine answers, including across incremental
+//! graph updates), the zero-execution warm-batch guarantee, partial reuse,
+//! and cross-batch coalescing.
+
+use morphmine::graph::generators::erdos_renyi;
+use morphmine::graph::{DataGraph, DynGraph};
+use morphmine::morph::{self, Policy};
+use morphmine::pattern::{catalog, Pattern};
+use morphmine::service::{Service, ServiceConfig};
+use morphmine::util::proptest;
+
+fn naive_service(graph: DataGraph, workers: usize, threads: usize) -> Service {
+    Service::start(
+        graph,
+        ServiceConfig {
+            workers,
+            threads,
+            policy: Policy::Naive,
+            fused: true,
+            cache_bytes: 8 << 20,
+        },
+    )
+}
+
+/// Unique-match counts for `patterns` via the cold (cache-free) engine.
+fn cold_counts(g: &DataGraph, patterns: &[Pattern]) -> Vec<u64> {
+    morph::engine::count_queries(g, patterns, Policy::Naive, 1)
+}
+
+#[test]
+fn warm_batch_executes_zero_bases() {
+    // acceptance criterion: a warm-cache batch over a previously-seen
+    // pattern set executes zero base patterns, verified by store metrics
+    let g = erdos_renyi(70, 260, 0xCAFE);
+    let svc = naive_service(g, 2, 2);
+    let cold = svc.call(&["motifs:4"]).unwrap();
+    assert!(cold.stats.executed_bases > 0);
+    let before = svc.store_metrics();
+    let warm = svc.call(&["motifs:4"]).unwrap();
+    let after = svc.store_metrics();
+    assert_eq!(warm.stats.executed_bases, 0, "{:?}", warm.stats);
+    assert_eq!(warm.stats.cached_bases, warm.stats.total_bases);
+    assert_eq!(after.inserts, before.inserts, "a fully-warm batch must not insert anything");
+    assert!(after.hits >= before.hits + warm.stats.total_bases as u64);
+    assert_eq!(cold.results, warm.results);
+}
+
+#[test]
+fn partial_overlap_executes_only_missing_bases() {
+    let g = erdos_renyi(70, 260, 0xBEEF);
+    let check = g.clone();
+    let svc = naive_service(g, 2, 2);
+    let first = svc.call(&["match:cycle4"]).unwrap();
+    assert_eq!(first.stats.executed_bases, first.stats.total_bases);
+    // the 4-motif set's naive bases overlap C4^E's alternative set via K4
+    // (and the overlapping match set re-adds C4's own bases)
+    let second = svc.call(&["match:cycle4,tailed", "cliques:4"]).unwrap();
+    assert!(second.stats.cached_bases > 0, "{:?}", second.stats);
+    assert!(second.stats.executed_bases > 0, "{:?}", second.stats);
+    assert!(
+        second.stats.executed_bases < second.stats.total_bases,
+        "cached bases must drop out of execution: {:?}",
+        second.stats
+    );
+    // answers equal the cold engine's
+    let queries = vec![catalog::cycle(4), catalog::tailed_triangle(), catalog::clique(4)];
+    let expect = cold_counts(&check, &queries);
+    let got: Vec<u64> = second
+        .results
+        .iter()
+        .flat_map(|r| r.counts.iter().map(|&(_, c)| c))
+        .collect();
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn epoch_bump_serves_fresh_counts() {
+    let g0 = erdos_renyi(40, 140, 0xE70C);
+    let mut mirror = DynGraph::from_data_graph(&g0);
+    let svc = naive_service(g0, 1, 2);
+    let batch = ["motifs:3", "motifs:4"];
+
+    let r0 = svc.call(&batch).unwrap();
+    assert_eq!(r0.epoch, 0);
+
+    // apply an insertion through the service, mirror it locally
+    let (u, v) = (0..40u32)
+        .flat_map(|a| (0..40u32).map(move |b| (a, b)))
+        .find(|&(a, b)| a < b && !mirror.has_edge(a, b))
+        .expect("sparse graph has a non-edge");
+    assert!(svc.insert_edge(u, v).unwrap());
+    assert!(mirror.insert_edge(u, v));
+    assert_eq!(svc.epoch(), 1);
+
+    let r1 = svc.call(&batch).unwrap();
+    assert_eq!(r1.epoch, 1);
+    assert_eq!(
+        r1.stats.executed_bases, r1.stats.total_bases,
+        "the epoch bump must invalidate every cached base"
+    );
+    let snapshot = mirror.to_data_graph("mirror");
+    for q in &r1.results {
+        let pats: Vec<Pattern> = q.counts.iter().map(|(p, _)| p.clone()).collect();
+        let got: Vec<u64> = q.counts.iter().map(|&(_, c)| c).collect();
+        assert_eq!(got, cold_counts(&snapshot, &pats), "{}", q.query);
+    }
+
+    // removal restores the original graph — and the original answers
+    assert!(svc.remove_edge(u, v).unwrap());
+    assert_eq!(svc.epoch(), 2);
+    let r2 = svc.call(&batch).unwrap();
+    assert_eq!(r0.results, r2.results);
+}
+
+#[test]
+fn prop_warm_service_equals_cold_engine_across_updates() {
+    // satellite: property test over ER graphs and 3/4-motif batches,
+    // including insert/remove epoch bumps — the warm service must always
+    // agree with a cold execution on the current graph
+    proptest::check(0x5E71, 6, |rng| {
+        let n = 20 + rng.below_usize(15);
+        let m = 2 * n + rng.below_usize(2 * n);
+        let g0 = erdos_renyi(n, m, rng.next_u64());
+        let mut mirror = DynGraph::from_data_graph(&g0);
+        let svc = naive_service(g0, 2, 1);
+        let batches: [&[&str]; 3] = [
+            &["motifs:3"],
+            &["motifs:4", "match:cycle4,tailed-vi"],
+            &["motifs:3", "motifs:4"],
+        ];
+        for round in 0..4 {
+            // alternate: query twice (cold-ish then warm), then mutate
+            for _ in 0..2 {
+                let batch = batches[round % batches.len()];
+                let r = svc.call(batch).unwrap();
+                let snapshot = mirror.to_data_graph("mirror");
+                for q in &r.results {
+                    let pats: Vec<Pattern> = q.counts.iter().map(|(p, _)| p.clone()).collect();
+                    let got: Vec<u64> = q.counts.iter().map(|&(_, c)| c).collect();
+                    assert_eq!(
+                        got,
+                        cold_counts(&snapshot, &pats),
+                        "round {round}, query {}, epoch {}",
+                        q.query,
+                        r.epoch
+                    );
+                }
+            }
+            // random update (insert or remove), mirrored
+            let u = rng.below(n as u64) as u32;
+            let v = rng.below(n as u64) as u32;
+            if u == v {
+                continue;
+            }
+            if rng.chance(0.4) {
+                assert_eq!(svc.remove_edge(u, v).unwrap(), mirror.remove_edge(u, v));
+            } else {
+                assert_eq!(svc.insert_edge(u, v).unwrap(), mirror.insert_edge(u, v));
+            }
+            assert_eq!(svc.epoch(), mirror.version());
+        }
+    });
+}
+
+#[test]
+fn concurrent_mixed_batches_stay_correct() {
+    // several workers, overlapping but non-identical batches submitted
+    // concurrently: every response must match the cold engine, and each
+    // base pattern is computed at most once (coalescing + store)
+    let g = erdos_renyi(60, 240, 0xC0A1);
+    let check = g.clone();
+    let svc = std::sync::Arc::new(naive_service(g, 4, 1));
+    let batches: Vec<Vec<&str>> = vec![
+        vec!["motifs:4"],
+        vec!["motifs:4", "cliques:4"],
+        vec!["match:cycle4,diamond-vi"],
+        vec!["motifs:4"],
+    ];
+    let responses: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = batches
+            .iter()
+            .map(|b| {
+                let svc = svc.clone();
+                s.spawn(move || svc.call(b).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in &responses {
+        let s = r.stats;
+        assert_eq!(s.cached_bases + s.executed_bases + s.coalesced_bases, s.total_bases);
+        for q in &r.results {
+            let pats: Vec<Pattern> = q.counts.iter().map(|(p, _)| p.clone()).collect();
+            let got: Vec<u64> = q.counts.iter().map(|&(_, c)| c).collect();
+            assert_eq!(got, cold_counts(&check, &pats), "{}", q.query);
+        }
+    }
+    // the union of all batches' bases: every one inserted exactly once
+    let m = svc.store_metrics();
+    let executed: usize = responses.iter().map(|r| r.stats.executed_bases).sum();
+    assert_eq!(m.inserts as usize, executed);
+    assert_eq!(m.stale_drops, 0);
+}
