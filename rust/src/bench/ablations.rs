@@ -26,6 +26,11 @@
 //!   overlapping-batch throughput through `morphmine`'s batched query
 //!   service (written to `BENCH_service.json`, path overridable via
 //!   `MM_SERVICE_JSON`).
+//! * **A9 — durable result store**: cold start vs warm restart (snapshot
+//!   recovery) vs replay-heavy restart (WAL-only recovery, no snapshot)
+//!   through the persistence layer, including recovery latencies
+//!   (written to `BENCH_persist.json`, path overridable via
+//!   `MM_PERSIST_JSON`).
 //!
 //! JSON reports go through [`write_rows_json`]: a payload with zero
 //! measured rows (a placeholder) is loudly warned about and never
@@ -670,6 +675,7 @@ pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) 
             policy: Policy::Naive, // deterministic alternative sets
             fused: true,
             cache_bytes: 64 << 20,
+            persist: None,
         };
         let svc = Service::start(d.generate(scale), config.clone());
         let (cold, t_cold) = time(|| svc.call(&batch_a).expect("cold batch"));
@@ -727,6 +733,119 @@ pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) 
     write_rows_json(out, &json, rows.len())
 }
 
+/// A9: durable result store — cold vs warm-restart vs replay-heavy.
+pub fn ablation_persist(scale: Scale, threads: usize) -> Result<()> {
+    let out = std::env::var("MM_PERSIST_JSON").unwrap_or_else(|_| "BENCH_persist.json".into());
+    ablation_persist_to(scale, threads, std::path::Path::new(&out))
+}
+
+/// [`ablation_persist`] with an explicit JSON output path (see
+/// [`ablation_fused_to`] for why tests avoid the env override).
+///
+/// Three restart regimes per dataset, one persist directory each:
+/// * **cold** — a fresh directory: every base executes, the WAL absorbs
+///   one record per insert, graceful shutdown compacts to a snapshot;
+/// * **warm-restart** — a new service (a "new process") over the same
+///   graph and directory: recovery loads the snapshot, and the same batch
+///   must execute **zero** bases (asserted) with answers identical to the
+///   cold run's;
+/// * **replay-heavy** — several distinct batches persisted with snapshot
+///   compaction disabled, then a restart that must rebuild the store by
+///   replaying the whole WAL (asserted: no snapshot contributed) and
+///   still serve the first batch warm.
+pub fn ablation_persist_to(scale: Scale, threads: usize, out: &std::path::Path) -> Result<()> {
+    use crate::service::{PersistConfig, PersistOpts, Service, ServiceConfig};
+    println!("\n### A9 — durable result store (restart regimes, s)\n");
+    println!("| graph | phase | recovery | batch | restored | snapshot entries | wal records |");
+    println!("|-------|-------|----------|-------|----------|------------------|-------------|");
+    let batch_a = ["motifs:4", "match:cycle4,diamond-vi"];
+    let extra_batches: [&[&str]; 2] =
+        [&["match:cycle4,tailed,star4-vi", "cliques:4"], &["motifs:3"]];
+    let mut rows: Vec<String> = Vec::new();
+    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
+        let dir = std::env::temp_dir().join(format!("mm_bench_persist_{}", d.code()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let config = |opts: PersistOpts| ServiceConfig {
+            workers: 2,
+            threads,
+            policy: Policy::Naive, // deterministic alternative sets
+            fused: true,
+            cache_bytes: 64 << 20,
+            persist: Some(PersistConfig {
+                dir: dir.clone(),
+                opts,
+            }),
+        };
+
+        // cold: fresh directory, graceful shutdown compacts
+        let svc = Service::try_start(d.generate(scale), config(PersistOpts::default()))?;
+        let (cold, t_cold) = time(|| svc.call(&batch_a).expect("cold batch"));
+        assert_eq!(cold.stats.cached_bases, 0, "fresh dir must start cold");
+        let (_, t_shutdown) = time(|| drop(svc));
+
+        // warm restart: snapshot recovery in a "new process"
+        let (svc, t_recover) = time(|| {
+            Service::try_start(d.generate(scale), config(PersistOpts::default())).expect("restart")
+        });
+        let rec = svc.recovery_report().expect("persistence configured");
+        assert!(rec.fingerprint_matched, "same graph content must recover warm");
+        assert!(rec.restored > 0);
+        let (warm, t_warm) = time(|| svc.call(&batch_a).expect("warm batch"));
+        assert_eq!(warm.stats.executed_bases, 0, "warm restart must execute zero bases");
+        assert_eq!(cold.results, warm.results, "recovery must not change answers");
+        drop(svc);
+
+        // replay-heavy: WAL-only state (no snapshot compaction at all)
+        let _ = std::fs::remove_dir_all(&dir);
+        let heavy = PersistOpts {
+            snapshot_every: usize::MAX,
+            compact_on_drop: false,
+        };
+        let svc = Service::try_start(d.generate(scale), config(heavy))?;
+        svc.call(&batch_a).expect("replay seed batch");
+        for b in extra_batches {
+            svc.call(b).expect("replay filler batch");
+        }
+        drop(svc);
+        let (svc, t_replay) = time(|| {
+            Service::try_start(d.generate(scale), config(heavy)).expect("replay restart")
+        });
+        let rec2 = svc.recovery_report().expect("persistence configured");
+        assert_eq!(rec2.snapshot_entries, 0, "no snapshot was ever written");
+        assert!(rec2.wal_records > 0 && rec2.fingerprint_matched);
+        let (warm2, t_warm2) = time(|| svc.call(&batch_a).expect("replayed batch"));
+        assert_eq!(warm2.stats.executed_bases, 0, "replayed store must serve warm");
+        assert_eq!(cold.results, warm2.results);
+        drop(svc);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        for (phase, t_rec, t_batch, r, report) in [
+            ("cold", 0.0, t_cold, &cold, None),
+            ("warm-restart", t_recover, t_warm, &warm, Some(rec)),
+            ("replay-heavy", t_replay, t_warm2, &warm2, Some(rec2)),
+        ] {
+            let s = r.stats;
+            let (restored, snap, walr) =
+                report.map_or((0, 0, 0), |x| (x.restored, x.snapshot_entries, x.wal_records));
+            println!(
+                "| {} | {phase} | {t_rec:.3} | {t_batch:.3} | {restored} | {snap} | {walr} |",
+                d.code()
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{}\", \"phase\": \"{phase}\", \"recovery_s\": {t_rec:.6}, \"batch_s\": {t_batch:.6}, \"shutdown_compact_s\": {t_shutdown:.6}, \"total_bases\": {}, \"executed_bases\": {}, \"restored_entries\": {restored}, \"snapshot_entries\": {snap}, \"wal_records\": {walr}}}",
+                d.code(),
+                s.total_bases,
+                s.executed_bases,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"experiment\": \"persist_durable_store\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    write_rows_json(out, &json, rows.len())
+}
+
 /// Run all ablations.
 pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     println!("\n## Ablations\n");
@@ -737,7 +856,8 @@ pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     ablation_approx(scale, threads)?;
     ablation_fused(scale, threads)?;
     ablation_kernels(scale, threads)?;
-    ablation_service(scale, threads)
+    ablation_service(scale, threads)?;
+    ablation_persist(scale, threads)
 }
 
 #[cfg(test)]
@@ -773,6 +893,19 @@ mod tests {
         let body = std::fs::read_to_string(&out).unwrap();
         assert!(body.contains("kernel_tiers_x_representation"));
         assert!(body.contains("relabel+hybrid+simd"));
+    }
+
+    #[test]
+    fn persist_ablation_smoke() {
+        // asserts warm-restart zero-execution, replay-only recovery and
+        // answer equality across restarts inside
+        let out = std::env::temp_dir().join("mm_bench_persist_smoke.json");
+        ablation_persist_to(Scale::Tiny, 2, &out).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("persist_durable_store"));
+        assert!(body.contains("\"phase\": \"warm-restart\""));
+        assert!(body.contains("\"phase\": \"replay-heavy\""));
+        assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
     }
 
     #[test]

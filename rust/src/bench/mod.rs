@@ -12,6 +12,7 @@
 //! | `fused`    | A6 — fused co-execution ablation  | [`ablations::ablation_fused`] |
 //! | `kernels`  | A7 — kernel tiers × representation | [`ablations::ablation_kernels`] |
 //! | `service`  | A8 — service result cache (cold/warm/overlap) | [`ablations::ablation_service`] |
+//! | `persist`  | A9 — durable store (cold/warm-restart/replay) | [`ablations::ablation_persist`] |
 //!
 //! Reports are printed as markdown; EXPERIMENTS.md records a run.
 
@@ -57,6 +58,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
         "fused" => ablations::ablation_fused(scale, threads),
         "kernels" => ablations::ablation_kernels(scale, threads),
         "service" => ablations::ablation_service(scale, threads),
+        "persist" => ablations::ablation_persist(scale, threads),
         "ablations" => ablations::run_all(scale, threads),
         "all" => {
             table2(scale)?;
@@ -68,7 +70,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
             ablations::run_all(scale, threads)
         }
         other => bail!(
-            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|ablations|all)"
+            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|ablations|all)"
         ),
     }
 }

@@ -7,10 +7,11 @@
 //! morphmine cliques --graph <spec> [--k 4]
 //! morphmine census  --graph <spec> [--artifacts artifacts]
 //! morphmine gen     --dataset mico[:scale] --out <path>
-//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|ablations] [--scale tiny|small|medium]
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--assert-warm-hits]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64]
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--assert-warm-hits]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>]
+//! morphmine store   <inspect|compact|purge> --dir <dir>
 //! ```
 //!
 //! Graph specs: dataset names (`mico`, `patents`, `youtube`, `orkut`,
@@ -19,31 +20,53 @@
 //! `batch` runs one query batch (`;`-separated query texts) through the
 //! result-cache service, `--repeat` re-submitting it to demonstrate warm
 //! throughput; `--assert-warm-hits` exits nonzero unless the final repeat
-//! was fully cache-served (the CI smoke leg). `serve` is the interactive
+//! was fully cache-served (the CI smoke leg; with `--repeat 1` it instead
+//! requires the single batch to be served entirely from a store recovered
+//! via `--persist` — the warm-restart smoke). `serve` is the interactive
 //! loop: one batch per stdin line, `+ u v` / `- u v` applies an edge
 //! update (bumping the cache epoch), `quit` exits.
+//!
+//! `--persist <dir>` makes the result store durable (WAL + snapshots, see
+//! [`crate::service::persist`]): a restart against the same graph content
+//! recovers warm; against different content it recovers cold. `store`
+//! operates on such a directory offline: `inspect` prints what recovery
+//! would find, `compact` folds the WAL into one snapshot, `purge` deletes
+//! the persisted files.
 
 use crate::coordinator::{Config, Coordinator};
 use crate::graph::io::load_spec;
 use crate::morph::Policy;
-use crate::service::{BatchResponse, Service, ServiceConfig};
+use crate::service::{persist, BatchResponse, PersistConfig, Service, ServiceConfig};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 
-/// Parsed flags: `--key value` pairs plus positional subcommand.
+/// Parsed flags: the positional subcommand, optional positional
+/// subactions immediately after it (e.g. `store inspect`), then
+/// `--key value` pairs.
 pub struct Args {
     pub cmd: String,
+    pos: Vec<String>,
     flags: HashMap<String, String>,
 }
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         if argv.is_empty() {
-            bail!("usage: morphmine <motifs|match|fsm|cliques|census|gen|bench|info> [--flags]\nsee `morphmine help`");
+            bail!("usage: morphmine <motifs|match|fsm|cliques|census|gen|bench|info|batch|serve|store> [--flags]\nsee `morphmine help`");
         }
         let cmd = argv[0].clone();
-        let mut flags = HashMap::new();
+        let mut pos = Vec::new();
         let mut i = 1;
+        while i < argv.len() && !argv[i].starts_with("--") {
+            pos.push(argv[i].clone());
+            i += 1;
+        }
+        // only `store` takes positional subactions; everywhere else a bare
+        // word is a typo'd flag and must fail fast, not be ignored
+        if cmd != "store" && !pos.is_empty() {
+            bail!("expected --flag, got {:?}", pos[0]);
+        }
+        let mut flags = HashMap::new();
         while i < argv.len() {
             let a = &argv[i];
             let Some(key) = a.strip_prefix("--") else {
@@ -58,7 +81,13 @@ impl Args {
             flags.insert(key.to_string(), val);
             i += 1;
         }
-        Ok(Args { cmd, flags })
+        Ok(Args { cmd, pos, flags })
+    }
+
+    /// Positional subaction after the command (`store inspect` → `pos(0)
+    /// == Some("inspect")`).
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -106,8 +135,16 @@ fn service_of(args: &Args) -> Result<Service> {
         policy: policy_of(args)?,
         fused: fused_of(args)?,
         cache_bytes: args.parse_num("cache-mb", 64usize)? << 20,
+        persist: args.get("persist").map(PersistConfig::new),
     };
-    Ok(Service::start(graph, config))
+    let svc = Service::try_start(graph, config)?;
+    if let Some(r) = svc.recovery_report() {
+        println!(
+            "persist: restored {} entries (snapshot {}, wal records {}, truncated tail: {}, fingerprint match: {})",
+            r.restored, r.snapshot_entries, r.wal_records, r.wal_truncated, r.fingerprint_matched
+        );
+    }
+    Ok(svc)
 }
 
 fn print_batch(r: &BatchResponse) {
@@ -265,9 +302,12 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             );
             if args.get("assert-warm-hits").is_some() {
                 let s = last.expect("at least one round ran");
+                // with a single round the warmth must come from a store
+                // recovered off disk (the CI warm-restart smoke); with
+                // repeats, round 1 warms rounds 2+ in memory
                 ensure!(
-                    repeat >= 2,
-                    "--assert-warm-hits needs --repeat ≥ 2 (a warm round to check)"
+                    repeat >= 2 || args.get("persist").is_some(),
+                    "--assert-warm-hits needs --repeat ≥ 2 (a warm round to check) or --persist (a recovered store to serve from)"
                 );
                 ensure!(
                     s.executed_bases == 0 && s.cached_bases + s.coalesced_bases > 0,
@@ -335,6 +375,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 }
             }
         }
+        "store" => store_cmd(&args)?,
         "info" => {
             let c = coordinator_of(&args)?;
             println!("{}", c.describe());
@@ -345,9 +386,61 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             );
         }
         "help" | "--help" | "-h" => {
-            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info | batch | serve");
+            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info | batch | serve | store");
         }
         other => bail!("unknown command {other:?} — try `morphmine help`"),
+    }
+    Ok(())
+}
+
+/// `morphmine store <inspect|compact|purge> --dir <path>` — offline
+/// maintenance of a persist directory (no graph, no service).
+fn store_cmd(args: &Args) -> Result<()> {
+    let action = args
+        .pos(0)
+        .context("usage: morphmine store <inspect|compact|purge> --dir <path>")?;
+    if let Some(extra) = args.pos(1) {
+        bail!("unexpected argument {extra:?} after store action {action:?}");
+    }
+    let dir = args.get("dir").context("missing --dir <persist directory>")?;
+    let dir = std::path::PathBuf::from(dir);
+    match action {
+        "inspect" => {
+            let i = persist::inspect::<i128>(&dir);
+            match (i.snapshot, i.snapshot_bytes) {
+                (Some((fp, n)), bytes) => {
+                    println!("snapshot: {n} entries for {fp} ({} bytes)", bytes.unwrap_or(0))
+                }
+                (None, Some(b)) => {
+                    println!("snapshot: unreadable ({b} bytes present, rejected by CRC/format)")
+                }
+                (None, None) => println!("snapshot: none"),
+            }
+            match i.wal_bytes {
+                Some(b) => {
+                    let tail = if i.wal_truncated {
+                        ", torn/corrupt tail present"
+                    } else {
+                        ""
+                    };
+                    println!("wal: {} records ({b} bytes{tail})", i.wal_records);
+                }
+                None => println!("wal: none"),
+            }
+            match i.fingerprint {
+                Some(fp) => println!("recoverable image: {} entries for {fp}", i.live_entries),
+                None => println!("recoverable image: none"),
+            }
+        }
+        "compact" => {
+            let (entries, folded) = persist::compact_dir::<i128>(&dir)?;
+            println!("compacted {}: {entries} entries, {folded} records folded", dir.display());
+        }
+        "purge" => {
+            let removed = persist::purge_dir(&dir)?;
+            println!("purged {}: {removed} files removed", dir.display());
+        }
+        other => bail!("unknown store action {other:?} (inspect|compact|purge)"),
     }
     Ok(())
 }
@@ -430,6 +523,46 @@ mod tests {
         let fsm = argv("batch --graph mico:tiny --queries fsm:3:10");
         assert!(run(fsm).is_err(), "fsm not servable");
         let warm = argv("batch --graph mico:tiny --queries motifs:3 --assert-warm-hits");
-        assert!(run(warm).is_err(), "warm assertion needs a warm round");
+        assert!(run(warm).is_err(), "warm assertion needs a warm round or a recovered store");
+    }
+
+    #[test]
+    fn args_parse_positionals() {
+        let a = Args::parse(&argv("store inspect --dir /tmp/x")).unwrap();
+        assert_eq!(a.cmd, "store");
+        assert_eq!(a.pos(0), Some("inspect"));
+        assert_eq!(a.pos(1), None);
+        assert_eq!(a.get("dir"), Some("/tmp/x"));
+        // every other command still rejects stray positionals fast
+        assert!(Args::parse(&argv("bench persist")).is_err());
+        assert!(Args::parse(&argv("motifs foo --graph mico:tiny")).is_err());
+    }
+
+    #[test]
+    fn run_batch_persist_roundtrip_and_store_ops() {
+        // two separate "processes": the first persists its store, the
+        // second must be served entirely from the recovered image
+        let dir = std::env::temp_dir().join("mm_cli_persist_rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.display();
+        let common =
+            "batch --graph mico:tiny --queries motifs:3;cliques:3 --pmr naive --threads 2 --workers 1";
+        run(argv(&format!("{common} --persist {d}"))).unwrap();
+        run(argv(&format!("{common} --persist {d} --assert-warm-hits"))).unwrap();
+        // offline store maintenance on the same directory
+        run(argv(&format!("store inspect --dir {d}"))).unwrap();
+        run(argv(&format!("store compact --dir {d}"))).unwrap();
+        run(argv(&format!("store purge --dir {d}"))).unwrap();
+        // post-purge: nothing left, a restart is cold again → warm
+        // assertion must now fail
+        assert!(run(argv(&format!("{common} --persist {d} --assert-warm-hits"))).is_err());
+        // bad store usage
+        assert!(run(argv("store --dir /tmp/nope")).is_err(), "missing action");
+        assert!(run(argv(&format!("store frobnicate --dir {d}"))).is_err());
+        assert!(run(argv("store inspect")).is_err(), "missing --dir");
+        assert!(
+            run(argv(&format!("store purge inspect --dir {d}"))).is_err(),
+            "extra positionals after the action must fail fast, not be dropped"
+        );
     }
 }

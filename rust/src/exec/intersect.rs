@@ -6,12 +6,12 @@
 //! 1. **galloping** — when operand sizes are skewed (hub lists vs. leaf
 //!    lists differ by orders of magnitude in the power-law graphs the paper
 //!    mines), binary-search the small list into the large one;
-//! 2. **SIMD** — in the merge regime on `x86_64`, wide-compare + compress
-//!    blocks (AVX2 8×8, else SSSE3 4×4), selected by runtime feature
-//!    detection; the scalar path is always compiled and the property tests
-//!    assert tier-for-tier equality;
+//! 2. **SIMD** — in the merge regime, wide-compare + compress blocks
+//!    (AVX2 8×8, else SSSE3 4×4 on `x86_64`; NEON 4×4 on `aarch64`),
+//!    selected by runtime feature detection; the scalar path is always
+//!    compiled and the property tests assert tier-for-tier equality;
 //! 3. **scalar** — branch-reduced two-pointer merge, the portable baseline
-//!    and the only tier on non-x86 targets.
+//!    and the only tier on targets without a vector unit.
 //!
 //! Hub *bitmap* operands are a fourth tier living one level up: the shared
 //! exploration kernel ([`super::kernel`]) routes set ops whose operand is a
@@ -65,6 +65,8 @@ enum SimdLevel {
     Ssse3,
     #[cfg(target_arch = "x86_64")]
     Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
 }
 
 /// Runtime-detected SIMD level, honoring `MORPHMINE_NO_SIMD` (read once).
@@ -81,6 +83,14 @@ fn detected_level() -> SimdLevel {
             }
             if std::arch::is_x86_feature_detected!("ssse3") {
                 return SimdLevel::Ssse3;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // ASIMD is architecturally mandatory on AArch64, but keep the
+            // detection honest (and overridable via MORPHMINE_NO_SIMD)
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return SimdLevel::Neon;
             }
         }
         SimdLevel::None
@@ -128,6 +138,12 @@ pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
             SimdLevel::None => {}
         }
     }
+    #[cfg(target_arch = "aarch64")]
+    if small.len() >= SIMD_MIN && active_level() == SimdLevel::Neon {
+        // SAFETY: neon presence checked by `detected_level`
+        unsafe { neon::intersect_neon(small, large, out) };
+        return;
+    }
     merge_intersect(small, large, 0, 0, out);
 }
 
@@ -165,6 +181,15 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
             }
             SimdLevel::None => {}
         }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if b.len() >= SIMD_MIN
+        && a.len() / b.len() < GALLOP_RATIO
+        && active_level() == SimdLevel::Neon
+    {
+        // SAFETY: neon presence checked by `detected_level`
+        unsafe { neon::difference_neon(a, b, out) };
+        return;
     }
     merge_difference(a, b, out);
 }
@@ -231,41 +256,44 @@ fn merge_difference(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     }
 }
 
+/// Byte-shuffle masks compacting the matched 32-bit lanes of a 128-bit
+/// vector: entry `m` moves lane `k` (for each set bit `k` of `m`, in
+/// ascending order) to the front. Unused bytes are `0x80` (out of range:
+/// zeroed by x86 `pshufb` and aarch64 `vqtbl1q_u8` alike, then ignored —
+/// only the first `popcount(m)` lanes are copied out). Shared by the
+/// SSSE3 and NEON 4×4 kernels.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const fn compress4_table() -> [[u8; 16]; 16] {
+    let mut t = [[0x80u8; 16]; 16];
+    let mut m = 0;
+    while m < 16 {
+        let mut out_byte = 0;
+        let mut lane = 0;
+        while lane < 4 {
+            if m & (1 << lane) != 0 {
+                let mut b = 0;
+                while b < 4 {
+                    t[m][out_byte] = (lane * 4 + b) as u8;
+                    out_byte += 1;
+                    b += 1;
+                }
+            }
+            lane += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+static COMPRESS4: [[u8; 16]; 16] = compress4_table();
+
 /// x86 wide-compare + compress kernels. All functions require the inputs to
 /// be strictly increasing (no duplicates) — guaranteed by the CSR
 /// invariants — and produce exactly the scalar tiers' output.
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::*;
-
-    /// Byte-shuffle masks compacting the matched 32-bit lanes of a 128-bit
-    /// vector: entry `m` moves lane `k` (for each set bit `k` of `m`, in
-    /// ascending order) to the front. Unused bytes are `0x80` (zeroed by
-    /// `pshufb`, then ignored — only the first `popcount(m)` lanes are
-    /// copied out).
-    const fn sse_compress_table() -> [[u8; 16]; 16] {
-        let mut t = [[0x80u8; 16]; 16];
-        let mut m = 0;
-        while m < 16 {
-            let mut out_byte = 0;
-            let mut lane = 0;
-            while lane < 4 {
-                if m & (1 << lane) != 0 {
-                    let mut b = 0;
-                    while b < 4 {
-                        t[m][out_byte] = (lane * 4 + b) as u8;
-                        out_byte += 1;
-                        b += 1;
-                    }
-                }
-                lane += 1;
-            }
-            m += 1;
-        }
-        t
-    }
-
-    static SSE_COMPRESS: [[u8; 16]; 16] = sse_compress_table();
 
     /// Lane-index vectors compacting the matched 32-bit lanes of a 256-bit
     /// vector via `vpermd`: entry `m` lists the set bits of `m` ascending.
@@ -333,8 +361,9 @@ mod x86 {
             );
             let mask = _mm_movemask_ps(_mm_castsi128_ps(hit)) as usize;
             if mask != 0 {
-                let shuf =
-                    _mm_loadu_si128(SSE_COMPRESS.get_unchecked(mask).as_ptr() as *const __m128i);
+                let shuf = _mm_loadu_si128(
+                    super::COMPRESS4.get_unchecked(mask).as_ptr() as *const __m128i,
+                );
                 let packed = _mm_shuffle_epi8(va, shuf);
                 let mut tmp = [0u32; 4];
                 _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, packed);
@@ -427,6 +456,92 @@ mod x86 {
                 let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
                 let eq = _mm256_cmpeq_epi32(_mm256_set1_epi32(x as i32), vb);
                 _mm256_movemask_ps(_mm256_castsi256_ps(eq)) != 0
+            } else {
+                b.get_unchecked(j..).binary_search(&x).is_ok()
+            };
+            if !found {
+                out.push(x);
+            }
+        }
+    }
+}
+
+/// AArch64 NEON wide-compare + compress kernels — the 4×4 blocked shapes
+/// of the SSSE3/SSE2 tier on the other ISA. All-pairs equality uses the
+/// four `vext`-rotations of a block of `b`; lane compaction goes through
+/// [`COMPRESS4`] via `vqtbl1q_u8` (NEON's byte table lookup plays the role
+/// of `pshufb`, zeroing out-of-range `0x80` indices the same way); the
+/// 4-bit movemask NEON lacks is rebuilt by AND-ing the compare mask with
+/// per-lane bit weights and summing across lanes (`vaddvq_u32`). Same
+/// contracts as [`x86`]: strictly increasing inputs, output identical to
+/// the scalar tiers.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Per-lane weights turning a `vceqq` all-ones/zeros mask into the
+    /// 4-bit movemask the compress table is indexed by.
+    static LANE_BITS: [u32; 4] = [1, 2, 4, 8];
+
+    /// NEON 4×4 block intersection: compare each block of `a` against all
+    /// four rotations of a block of `b`, compress the matched `a` lanes.
+    ///
+    /// # Safety
+    /// Requires NEON (ASIMD) at runtime.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn intersect_neon(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let mut i = 0usize;
+        let mut j = 0usize;
+        let na = a.len() / 4 * 4;
+        let nb = b.len() / 4 * 4;
+        let lane_bits = vld1q_u32(LANE_BITS.as_ptr());
+        while i < na && j < nb {
+            let va = vld1q_u32(a.as_ptr().add(i));
+            let vb = vld1q_u32(b.as_ptr().add(j));
+            let a_max = *a.get_unchecked(i + 3);
+            let b_max = *b.get_unchecked(j + 3);
+            // all-pairs equality via the 4 rotations of vb
+            let rot1 = vextq_u32::<1>(vb, vb);
+            let rot2 = vextq_u32::<2>(vb, vb);
+            let rot3 = vextq_u32::<3>(vb, vb);
+            let hit = vorrq_u32(
+                vorrq_u32(vceqq_u32(va, vb), vceqq_u32(va, rot1)),
+                vorrq_u32(vceqq_u32(va, rot2), vceqq_u32(va, rot3)),
+            );
+            let mask = vaddvq_u32(vandq_u32(hit, lane_bits)) as usize;
+            if mask != 0 {
+                let shuf = vld1q_u8(super::COMPRESS4.get_unchecked(mask).as_ptr());
+                let packed = vqtbl1q_u8(vreinterpretq_u8_u32(va), shuf);
+                let mut tmp = [0u32; 4];
+                vst1q_u8(tmp.as_mut_ptr() as *mut u8, packed);
+                out.extend_from_slice(&tmp[..mask.count_ones() as usize]);
+            }
+            // advance the block(s) whose max cannot match anything ahead
+            i += ((a_max <= b_max) as usize) * 4;
+            j += ((b_max <= a_max) as usize) * 4;
+        }
+        super::merge_intersect(a, b, i, j, out);
+    }
+
+    /// NEON blocked membership difference: skip 4-wide blocks of `b`
+    /// below each candidate, then one wide compare decides membership
+    /// (`vmaxvq_u32` reads "any lane hit").
+    ///
+    /// # Safety
+    /// Requires NEON (ASIMD) at runtime.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn difference_neon(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let mut j = 0usize;
+        let nb = b.len() / 4 * 4;
+        for &x in a {
+            while j < nb && *b.get_unchecked(j + 3) < x {
+                j += 4;
+            }
+            let found = if j < nb {
+                // block max ≥ x and all earlier blocks < x: any match is here
+                let vb = vld1q_u32(b.as_ptr().add(j));
+                let eq = vceqq_u32(vdupq_n_u32(x), vb);
+                vmaxvq_u32(eq) != 0
             } else {
                 b.get_unchecked(j..).binary_search(&x).is_ok()
             };
@@ -580,6 +695,17 @@ mod tests {
                     out.clear();
                     unsafe { x86::difference_avx2(&a, &b, &mut out) };
                     assert_eq!(out, want_d, "avx2 difference\na={a:?}\nb={b:?}");
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    out.clear();
+                    unsafe { neon::intersect_neon(&a, &b, &mut out) };
+                    assert_eq!(out, want_i, "neon intersect\na={a:?}\nb={b:?}");
+                    out.clear();
+                    unsafe { neon::difference_neon(&a, &b, &mut out) };
+                    assert_eq!(out, want_d, "neon difference\na={a:?}\nb={b:?}");
                 }
             }
 

@@ -344,6 +344,77 @@ mod tests {
     }
 
     #[test]
+    fn fold_rows_single_row_and_empty_subtract_set() {
+        // satellite boundary case: one AND operand, no subtract operands —
+        // the fold must reproduce exactly the row's own bit set
+        let g = star(80);
+        let row = g.hub_row(0).expect("center is a hub");
+        let mut out = Vec::new();
+        fold_rows_into(&[row], &[], None, None, &mut out);
+        assert_eq!(out, (1..=80u32).collect::<Vec<_>>());
+        // windowed single row
+        fold_rows_into(&[row], &[], Some(10), Some(20), &mut out);
+        assert_eq!(out, (11..20u32).collect::<Vec<_>>());
+        // degenerate windows are empty, not wrapped
+        fold_rows_into(&[row], &[], Some(20), Some(10), &mut out);
+        assert!(out.is_empty());
+        fold_rows_into(&[row], &[], Some(15), Some(16), &mut out);
+        assert!(out.is_empty(), "open interval (15,16) holds nothing");
+        // subtracting the row from itself erases everything
+        fold_rows_into(&[row], &[row], None, None, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one AND operand")]
+    fn fold_rows_empty_and_set_is_a_contract_violation() {
+        // satellite boundary case: the empty AND operand set is outside
+        // the documented contract (there is no universe row to start
+        // from) and must fail loudly, not return garbage
+        let none: &[HubRow<'_>] = &[];
+        let mut out = Vec::new();
+        fold_rows_into(none, none, None, None, &mut out);
+    }
+
+    #[test]
+    fn fold_rows_across_word_boundaries() {
+        // satellite boundary case: neighbor sets and vertex counts that
+        // straddle the 64-bit word boundary. Hubs 0 and 1 share neighbors
+        // 60..=68 (bits on both sides of word 0/word 1), and the graph has
+        // 130 vertices so rows span three words with a partial last word.
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for v in 60..=68u32 {
+            edges.push((0, v));
+            edges.push((1, v));
+        }
+        // pad both to hub degree (≥ 64) with disjoint leaves
+        for v in 69..=124u32 {
+            edges.push((0, v));
+        }
+        for v in 2..58u32 {
+            edges.push((1, v));
+        }
+        let g = GraphBuilder::new().edges(&edges).num_vertices(130).build("boundary");
+        let (r0, r1) = (g.hub_row(0).expect("hub 0"), g.hub_row(1).expect("hub 1"));
+        let mut out = Vec::new();
+        fold_rows_into(&[r0, r1], &[], None, None, &mut out);
+        assert_eq!(out, (60..=68u32).collect::<Vec<_>>(), "overlap crosses the word seam");
+        // windows pinned exactly on the seam
+        fold_rows_into(&[r0, r1], &[], Some(63), None, &mut out);
+        assert_eq!(out, (64..=68u32).collect::<Vec<_>>());
+        fold_rows_into(&[r0, r1], &[], None, Some(64), &mut out);
+        assert_eq!(out, (60..=63u32).collect::<Vec<_>>());
+        fold_rows_into(&[r0, r1], &[], Some(63), Some(65), &mut out);
+        assert_eq!(out, vec![64]);
+        // subtraction across the seam
+        fold_rows_into(&[r0], &[r1], Some(59), Some(70), &mut out);
+        assert_eq!(out, vec![69], "shared seam bits all cancel");
+        // window end beyond the last vertex clamps to the row width
+        fold_rows_into(&[r0], &[], Some(120), Some(4096), &mut out);
+        assert_eq!(out, (121..=124u32).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn fold_rows_andnot_matches_naive() {
         // three hubs over a shared leaf universe: 0 and 1 share 3..=70,
         // hub 2 covers 40..=90 — folding 0∩1\2 must drop the upper overlap

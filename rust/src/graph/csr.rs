@@ -33,6 +33,126 @@ use super::bitmap::{HubBitmaps, HubRow};
 use super::relabel::Relabeling;
 use super::{Label, VertexId};
 
+/// Stable identity of a graph's **content**: order, size and a streamed
+/// hash of the engine-facing (relabeled) adjacency structure plus labels.
+///
+/// Unlike [`super::DynGraph::version`] — an in-process mutation counter
+/// that restarts at zero with every process — the fingerprint is a pure
+/// function of the graph the engine actually explores, so it is meaningful
+/// **across processes**: persisted results keyed by a fingerprint are
+/// servable exactly when the live graph hashes to the same value, and a
+/// store persisted against a different or mutated graph is structurally
+/// unservable. Two graphs with equal fingerprints that differ only in
+/// their original-ID maps or dataset names yield identical match counts,
+/// so neither enters the hash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GraphFingerprint {
+    /// Number of vertices.
+    pub order: u64,
+    /// Number of undirected edges.
+    pub size: u64,
+    /// FNV-1a hash of the adjacency lists (and labels, when present).
+    pub hash: u64,
+}
+
+impl GraphFingerprint {
+    /// Serialized width (`order`, `size`, `hash`, little-endian).
+    pub const BYTES: usize = 24;
+
+    pub fn to_bytes(self) -> [u8; Self::BYTES] {
+        let mut b = [0u8; Self::BYTES];
+        b[..8].copy_from_slice(&self.order.to_le_bytes());
+        b[8..16].copy_from_slice(&self.size.to_le_bytes());
+        b[16..].copy_from_slice(&self.hash.to_le_bytes());
+        b
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Option<GraphFingerprint> {
+        if b.len() != Self::BYTES {
+            return None;
+        }
+        Some(GraphFingerprint {
+            order: u64::from_le_bytes(b[..8].try_into().ok()?),
+            size: u64::from_le_bytes(b[8..16].try_into().ok()?),
+            hash: u64::from_le_bytes(b[16..].try_into().ok()?),
+        })
+    }
+}
+
+impl std::fmt::Display for GraphFingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "|V|={} |E|={} hash={:016x}", self.order, self.size, self.hash)
+    }
+}
+
+/// Streaming FNV-1a (64-bit) used by the graph fingerprints. Deliberately
+/// not `DefaultHasher`: the persisted-store format needs a hash that is
+/// stable across processes, platforms and Rust versions.
+struct StreamHasher(u64);
+
+impl StreamHasher {
+    fn new() -> StreamHasher {
+        StreamHasher(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    fn write_u8(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// The one definition of the fingerprint hash stream, shared by
+/// [`DataGraph::fingerprint`] and [`super::DynGraph::fingerprint`] so the
+/// two representations can never silently diverge (the warm-restart
+/// invariant of [`crate::service::persist`] depends on their equality).
+pub(crate) fn fingerprint_of<'a>(
+    n: usize,
+    num_edges: usize,
+    lists: impl Iterator<Item = &'a [VertexId]>,
+    labels: Option<&[Label]>,
+) -> GraphFingerprint {
+    let mut h = StreamHasher::new();
+    h.write_u64(n as u64);
+    for ns in lists {
+        h.write_u64(ns.len() as u64);
+        for &u in ns {
+            h.write_u32(u);
+        }
+    }
+    match labels {
+        Some(l) => {
+            h.write_u8(1);
+            for &x in l {
+                h.write_u32(x);
+            }
+        }
+        None => h.write_u8(0),
+    }
+    GraphFingerprint {
+        order: n as u64,
+        size: num_edges as u64,
+        hash: h.finish(),
+    }
+}
+
 /// An immutable undirected data graph in hybrid CSR form.
 #[derive(Clone, Debug)]
 pub struct DataGraph {
@@ -168,6 +288,21 @@ impl DataGraph {
         self.relabel.as_ref()
     }
 
+    /// Content fingerprint of this CSR: order, size and a streamed hash of
+    /// the (engine-facing) adjacency lists and labels. See
+    /// [`GraphFingerprint`] for what is deliberately excluded. O(|V|+|E|);
+    /// callers that need it repeatedly should cache it alongside the
+    /// snapshot it describes.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        let n = self.num_vertices();
+        fingerprint_of(
+            n,
+            self.num_edges(),
+            (0..n as VertexId).map(|v| self.neighbors(v)),
+            self.labels.as_deref(),
+        )
+    }
+
     /// Original (input) ID of engine vertex `v` — identity unless the graph
     /// was built with degree-ordered relabeling.
     #[inline]
@@ -295,6 +430,7 @@ impl DataGraph {
 
 #[cfg(test)]
 mod tests {
+    use super::GraphFingerprint;
     use crate::graph::GraphBuilder;
 
     fn triangle_plus_tail() -> crate::graph::DataGraph {
@@ -340,6 +476,42 @@ mod tests {
         assert_eq!(stripped.hub_count(), 0);
         assert!(stripped.has_edge(0, 57), "list path still works");
         assert!(stripped.check_invariants());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_not_provenance() {
+        let g = triangle_plus_tail();
+        let fp = g.fingerprint();
+        assert_eq!(fp.order, 4);
+        assert_eq!(fp.size, 4);
+        // identical content under a different name → identical fingerprint
+        let same = GraphBuilder::new()
+            .edges(&[(2, 0), (2, 3), (0, 1), (1, 2)])
+            .build("other-name");
+        assert_eq!(same.fingerprint(), fp);
+        // one edge more → different fingerprint
+        let more = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (2, 0), (2, 3), (1, 3)])
+            .build("t");
+        assert_ne!(more.fingerprint(), fp);
+        // same order/size, different wiring → hash must differ
+        let rewired = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 0)])
+            .build("square");
+        assert_eq!(rewired.fingerprint().order, fp.order);
+        assert_eq!(rewired.fingerprint().size, fp.size);
+        assert_ne!(rewired.fingerprint().hash, fp.hash);
+        // labels enter the hash
+        let labeled = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (2, 0), (2, 3)])
+            .labels(vec![0, 0, 0, 1])
+            .build("t");
+        assert_ne!(labeled.fingerprint(), fp);
+        // hub-bitmap presence is an index, not content
+        assert_eq!(g.without_hub_bitmaps().fingerprint(), fp);
+        // byte round trip
+        assert_eq!(GraphFingerprint::from_bytes(&fp.to_bytes()), Some(fp));
+        assert_eq!(GraphFingerprint::from_bytes(&[0u8; 7]), None);
     }
 
     #[test]

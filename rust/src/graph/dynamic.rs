@@ -5,7 +5,8 @@
 //! incrementally, and converts to/from the immutable CSR [`DataGraph`] used
 //! by the batch matcher.
 
-use super::{DataGraph, GraphBuilder, Label, VertexId};
+use super::csr::fingerprint_of;
+use super::{DataGraph, GraphBuilder, GraphFingerprint, Label, VertexId};
 
 /// A mutable undirected simple graph.
 #[derive(Clone, Debug, Default)]
@@ -47,6 +48,22 @@ impl DynGraph {
     /// Graph epoch: the number of applied mutations since construction.
     pub fn version(&self) -> u64 {
         self.version
+    }
+
+    /// Content fingerprint of the **current** adjacency state. Hashes the
+    /// same stream as [`DataGraph::fingerprint`], so it always equals the
+    /// fingerprint of [`DynGraph::to_data_graph`]'s output — callers can
+    /// identify the graph a snapshot *would* have without building one.
+    /// Unlike [`DynGraph::version`], which restarts at zero every process,
+    /// this is stable across restarts: the persistence layer keys durable
+    /// store artifacts by it.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        fingerprint_of(
+            self.adj.len(),
+            self.num_edges,
+            self.adj.iter().map(|ns| ns.as_slice()),
+            self.labels.as_deref(),
+        )
     }
 
     /// Export to CSR (for the batch matcher).
@@ -184,6 +201,31 @@ mod tests {
         assert_eq!(g.version(), 2);
         assert!(!g.remove_edge(0, 1));
         assert_eq!(g.version(), 2);
+    }
+
+    #[test]
+    fn fingerprint_agrees_with_csr_and_tracks_mutations() {
+        let g0 = erdos_renyi(50, 170, 0xF1);
+        let mut dg = DynGraph::from_data_graph(&g0);
+        // DynGraph and the CSR it converts to/from hash identically
+        assert_eq!(dg.fingerprint(), g0.fingerprint());
+        assert_eq!(dg.fingerprint(), dg.to_data_graph("x").fingerprint());
+        let fp0 = dg.fingerprint();
+        // applied mutations change the fingerprint; undo restores it
+        let (u, v) = (0..50u32)
+            .flat_map(|a| (0..50u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !dg.has_edge(a, b))
+            .expect("sparse graph has a non-edge");
+        assert!(dg.insert_edge(u, v));
+        let fp1 = dg.fingerprint();
+        assert_ne!(fp1, fp0);
+        assert_eq!(fp1, dg.to_data_graph("x").fingerprint());
+        assert!(dg.remove_edge(u, v));
+        assert_eq!(dg.fingerprint(), fp0, "content-keyed: undo restores identity");
+        // no-op mutations leave it untouched (unlike nothing else observable)
+        let before = dg.fingerprint();
+        assert!(!dg.remove_edge(u, v));
+        assert_eq!(dg.fingerprint(), before);
     }
 
     #[test]

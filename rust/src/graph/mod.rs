@@ -16,7 +16,7 @@ pub mod relabel;
 pub mod stats;
 
 pub use builder::GraphBuilder;
-pub use csr::DataGraph;
+pub use csr::{DataGraph, GraphFingerprint};
 pub use dynamic::DynGraph;
 pub use relabel::Relabeling;
 pub use stats::GraphStats;

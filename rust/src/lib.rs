@@ -26,7 +26,9 @@
 //!   keyed by canonical pattern × graph epoch plus a batched, multi-worker
 //!   query service (`morphmine serve` / `morphmine batch`) that executes
 //!   only the base patterns missing from the cache and composes the rest
-//!   through the morph algebra.
+//!   through the morph algebra. With `--persist <dir>` the cache is
+//!   durable ([`service::persist`]): a WAL + snapshot store keyed by a
+//!   cross-process graph fingerprint, so restarts begin warm.
 //! * **Layer 2 (python/compile/model.py)** — a dense adjacency-matrix motif
 //!   census written in JAX, AOT-lowered to HLO and executed from Rust via
 //!   PJRT ([`runtime`]). It encodes the same morphing equations in dense

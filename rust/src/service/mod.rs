@@ -23,15 +23,26 @@
 //!   [`remove_edge`](crate::graph::DynGraph::remove_edge) so incremental
 //!   updates bump the epoch instead of silently serving stale counts.
 //!
+//! * [`persist`] — durable result store: a CRC-framed write-ahead log of
+//!   store inserts/invalidations plus periodic snapshot compaction, keyed
+//!   by a [`crate::graph::GraphFingerprint`] so a restarted `serve`
+//!   recovers warm exactly when the live graph matches what was persisted
+//!   — and degrades to cold (never to stale counts) otherwise.
+//!
 //! CLI: `morphmine batch` (one-shot batches, `--repeat` for warm-cache
-//! runs) and `morphmine serve` (interactive loop with `+ u v` / `- u v`
-//! edge updates). Benchmark: A8 `bench --exp service`
-//! (cold / warm / overlapping-batch throughput → `BENCH_service.json`).
+//! runs), `morphmine serve` (interactive loop with `+ u v` / `- u v`
+//! edge updates) — both take `--persist <dir>` — and `morphmine store`
+//! (offline `inspect`/`compact`/`purge` of a persist directory).
+//! Benchmarks: A8 `bench --exp service` (cold / warm / overlapping-batch
+//! throughput → `BENCH_service.json`) and A9 `bench --exp persist`
+//! (cold vs warm-restart vs replay-heavy recovery → `BENCH_persist.json`).
 
+pub mod persist;
 pub mod planner;
 pub mod serve;
 pub mod store;
 
+pub use persist::{PersistConfig, PersistOpts, RecoveryReport};
 pub use planner::{BatchStats, QueryPlanner};
 pub use serve::{BatchResponse, QueryResult, Service, ServiceConfig, ServiceQuery};
-pub use store::{CacheWeight, ResultStore, StoreMetrics};
+pub use store::{CacheWeight, PersistValue, ResultStore, StoreMetrics};

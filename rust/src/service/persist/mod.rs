@@ -1,0 +1,622 @@
+//! DURABLE RESULT STORE — crash-safe persistence for the service-layer
+//! [`ResultStore`](crate::service::ResultStore), so `morphmine serve`
+//! restarts **warm** instead of recomputing the matches that were most
+//! expensive to produce.
+//!
+//! A persist directory holds three files:
+//!
+//! * [`wal::WAL_FILE`] — an append-only log of store inserts and epoch
+//!   invalidations, one CRC-framed record each ([`frame`]). Every record
+//!   is flushed as it is written, so a killed process loses at most the
+//!   record mid-write — which replay truncates as a torn tail.
+//! * [`snapshot::SNAPSHOT_FILE`] — a periodic full image of the store
+//!   (compaction), staged to a tmp file and published by an atomic
+//!   rename; writing it resets the WAL to an empty log.
+//! * [`LOCK_FILE`] — single-writer guard ([`DirLock`]): a second live
+//!   process opening the same directory fails fast instead of
+//!   interleaving WAL frames; stale locks from dead processes are
+//!   reclaimed automatically.
+//!
+//! **The fingerprint invariant.** The in-process epoch counter
+//! ([`crate::graph::DynGraph::version`]) restarts at zero with every
+//! process, so it cannot key durable state. Every persisted artifact is
+//! instead bound to a [`GraphFingerprint`] — order, size and a streamed
+//! hash of the engine-facing CSR — and recovery hands entries to the
+//! store **only when the live graph hashes to the same value**. A store
+//! persisted against a different or mutated graph is structurally
+//! unservable: recovery degrades to cold, never to stale counts. This is
+//! also why recovery is total rather than transactional — cached values
+//! are pure functions of `(canonical key, graph content)`, so losing a
+//! WAL suffix or a whole snapshot only makes the restarted store colder.
+//!
+//! CLI: `morphmine serve|batch --persist <dir>` wires this into the
+//! service; `morphmine store inspect|compact|purge --dir <dir>` operates
+//! on a directory offline. Benchmark: A9 `bench --exp persist`
+//! (cold vs warm-restart vs replay-heavy → `BENCH_persist.json`).
+
+pub mod frame;
+pub mod snapshot;
+pub mod wal;
+
+use crate::graph::GraphFingerprint;
+use crate::pattern::canon::CanonKey;
+use crate::service::store::PersistValue;
+use anyhow::{bail, Context, Result};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lock file marking a persist directory as owned by a live process.
+pub const LOCK_FILE: &str = "lock";
+
+/// Exclusive ownership of a persist directory for one process lifetime.
+///
+/// Two live writers appending to one WAL interleave frames: the CRC layer
+/// keeps wrong answers from ever being served, but replay stops at the
+/// first torn frame — silently destroying the durability the directory
+/// exists for. So opening a locked directory fails fast instead. The lock
+/// records the owner's PID; a lock left behind by a dead process (kill
+/// -9, OOM) is detected via `/proc` and reclaimed, so unattended
+/// crash-restart — the whole point of the subsystem — still works on
+/// Linux. (Off Linux liveness cannot be probed, so stale locks need the
+/// manual removal the error message names; a recycled PID can likewise
+/// make a stale lock look alive.)
+///
+/// Acquisition protocol (no `flock` available in a std-only crate): the
+/// PID is staged in a scratch file and published with an atomic
+/// `hard_link`, so the lock file never exists without its content, and
+/// after linking the owner **re-reads the file and keeps the lock only
+/// if it still names this process** — a concurrent reclaimer acting on a
+/// stale "owner is dead" read may delete and replace the link in the
+/// meantime, and the verify step demotes every racer except the one the
+/// file finally names. The single theoretical loser window (verify
+/// passing just before a stale-read deletion lands) costs warm-restart
+/// durability, never answer correctness — the CRC layer guarantees that.
+struct DirLock {
+    path: PathBuf,
+}
+
+impl DirLock {
+    fn acquire(dir: &Path) -> Result<DirLock> {
+        let path = dir.join(LOCK_FILE);
+        let me = std::process::id();
+        // stage content aside so existence and content publish atomically
+        let staged = dir.join(format!("{LOCK_FILE}.{me}"));
+        std::fs::write(&staged, format!("{me}"))
+            .with_context(|| format!("staging lock {}", staged.display()))?;
+        let result = Self::acquire_inner(dir, &path, &staged, me);
+        let _ = std::fs::remove_file(&staged);
+        result
+    }
+
+    fn acquire_inner(dir: &Path, path: &Path, staged: &Path, me: u32) -> Result<DirLock> {
+        for _ in 0..4 {
+            match std::fs::hard_link(staged, path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {
+                    let owner = std::fs::read_to_string(path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    // a live owner — including this very process (two
+                    // services sharing one dir in-process) — excludes us
+                    if let Some(pid) = owner {
+                        if pid_alive(pid) {
+                            bail!(
+                                "persist dir {} is locked by live process {pid} — two \
+                                 writers on one WAL would corrupt it (remove {} if the \
+                                 lock is stale)",
+                                dir.display(),
+                                path.display()
+                            );
+                        }
+                    }
+                    // dead or unreadable owner: reclaim and retry
+                    let _ = std::fs::remove_file(path);
+                    continue;
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("creating lock {}", path.display()))
+                }
+            }
+            // confirm we won any concurrent reclaim of the same stale lock
+            let holder = std::fs::read_to_string(path)
+                .ok()
+                .and_then(|s| s.trim().parse::<u32>().ok());
+            if holder == Some(me) {
+                return Ok(DirLock {
+                    path: path.to_path_buf(),
+                });
+            }
+            // raced out: whoever the file names now is live — next loop
+            // iteration reports them
+        }
+        bail!("could not acquire persist lock at {} (contended)", path.display())
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        // belt-and-braces: never delete a lock that no longer names us
+        let ours = std::fs::read_to_string(&self.path)
+            .ok()
+            .and_then(|s| s.trim().parse::<u32>().ok())
+            == Some(std::process::id());
+        if ours {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Whether `pid` names a live process (Linux `/proc` probe; on other
+/// platforms assume alive — failing safe toward "locked", at the cost of
+/// manual stale-lock removal there).
+fn pid_alive(pid: u32) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        true
+    }
+}
+
+/// Tuning knobs for one persistence session.
+#[derive(Clone, Copy, Debug)]
+pub struct PersistOpts {
+    /// Compact (snapshot + WAL reset) after this many WAL records. An
+    /// epoch invalidation forces compaction regardless, since it makes
+    /// the whole log prefix dead weight.
+    pub snapshot_every: usize,
+    /// Compact once more when the owning service shuts down cleanly, so a
+    /// restart reads one snapshot instead of replaying the session's log.
+    pub compact_on_drop: bool,
+}
+
+impl Default for PersistOpts {
+    fn default() -> PersistOpts {
+        PersistOpts {
+            snapshot_every: 256,
+            compact_on_drop: true,
+        }
+    }
+}
+
+/// Where (and how) a service persists its result store.
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    pub dir: PathBuf,
+    pub opts: PersistOpts,
+}
+
+impl PersistConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig {
+            dir: dir.into(),
+            opts: PersistOpts::default(),
+        }
+    }
+}
+
+/// What recovery found at startup.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// Entries the snapshot contributed (before the fingerprint gate).
+    pub snapshot_entries: usize,
+    /// WAL records replayed.
+    pub wal_records: usize,
+    /// A torn/corrupt WAL tail was truncated.
+    pub wal_truncated: bool,
+    /// The persisted state's fingerprint matched the live graph.
+    pub fingerprint_matched: bool,
+    /// Entries handed to the store (0 unless `fingerprint_matched`).
+    pub restored: usize,
+}
+
+/// One open persistence session: owns the WAL handle and the compaction
+/// cadence for a store bound to `fingerprint`.
+pub struct Persistence<V> {
+    dir: PathBuf,
+    fingerprint: GraphFingerprint,
+    wal: wal::Wal,
+    records_since_snapshot: usize,
+    force_compact: bool,
+    opts: PersistOpts,
+    /// Held for the session; released (file removed) on drop.
+    _lock: DirLock,
+    _value: std::marker::PhantomData<V>,
+}
+
+impl<V: PersistValue> Persistence<V> {
+    /// Open `dir` (creating it if needed) and recover the image persisted
+    /// for `fp`. Returns the session handle, the warm entries to seed the
+    /// store with (empty when the directory is fresh, unreadable, or was
+    /// persisted against a different graph — in which case a fresh log is
+    /// started and any stale snapshot is replaced at the next compaction),
+    /// and a report of what recovery saw.
+    pub fn open(
+        dir: &Path,
+        fp: GraphFingerprint,
+        opts: PersistOpts,
+    ) -> Result<(Persistence<V>, Vec<(CanonKey, V)>, RecoveryReport)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating persist dir {}", dir.display()))?;
+        let lock = DirLock::acquire(dir)?;
+        let snap = snapshot::read::<V>(dir);
+        let snapshot_entries = snap.as_ref().map_or(0, |(_, es)| es.len());
+        let rep = wal::replay::<V>(dir, snap);
+        let matched = rep.fingerprint == Some(fp);
+        // a reused log's replayed records count toward the next compaction
+        // (so a long never-compacted log gets folded soon after start); a
+        // fresh log starts clean — the discarded old-graph records are gone
+        let (warm, wal, pending) = if matched && rep.file_present && rep.header_ok {
+            // continue the existing log, clean tail only
+            let w = wal::Wal::open_append(dir, rep.valid_len, rep.records)
+                .with_context(|| format!("reopening WAL in {}", dir.display()))?;
+            (rep.entries, w, rep.records)
+        } else {
+            // fresh dir, unreadable log, or state for another graph: start
+            // a new log for the live graph (keeping the snapshot entries
+            // when only the WAL was unusable)
+            let warm = if matched { rep.entries } else { Vec::new() };
+            let w = wal::Wal::create(dir, fp)
+                .with_context(|| format!("creating WAL in {}", dir.display()))?;
+            (warm, w, 0)
+        };
+        let report = RecoveryReport {
+            snapshot_entries,
+            wal_records: rep.records,
+            wal_truncated: rep.truncated,
+            fingerprint_matched: matched,
+            restored: warm.len(),
+        };
+        let persist = Persistence {
+            dir: dir.to_path_buf(),
+            fingerprint: fp,
+            wal,
+            records_since_snapshot: pending,
+            force_compact: false,
+            opts,
+            _lock: lock,
+            _value: std::marker::PhantomData,
+        };
+        Ok((persist, warm, report))
+    }
+
+    /// Fingerprint the current entries are bound to.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        self.fingerprint
+    }
+
+    pub fn compact_on_drop(&self) -> bool {
+        self.opts.compact_on_drop
+    }
+
+    /// Whether anything has been logged since the last compaction — when
+    /// false, the on-disk snapshot already equals the live image and a
+    /// shutdown compaction would be pure wasted IO.
+    pub fn dirty(&self) -> bool {
+        self.force_compact || self.records_since_snapshot > 0
+    }
+
+    /// Append one published store insert. Flushed before returning.
+    pub fn record_insert(&mut self, key: &CanonKey, value: &V) -> io::Result<()> {
+        self.wal.append_insert(key, value)?;
+        self.records_since_snapshot += 1;
+        Ok(())
+    }
+
+    /// The graph mutated: everything persisted so far is dead, and future
+    /// inserts belong to `fp`. Forces a compaction at the next
+    /// opportunity (the live image is empty, so it is nearly free and
+    /// shrinks the log to a header).
+    pub fn record_invalidation(&mut self, fp: GraphFingerprint) -> io::Result<()> {
+        self.fingerprint = fp;
+        self.wal.append_invalidate(fp)?;
+        self.records_since_snapshot += 1;
+        self.force_compact = true;
+        Ok(())
+    }
+
+    /// Whether the caller should hand over the live image for compaction.
+    pub fn wants_compaction(&self) -> bool {
+        self.force_compact || self.records_since_snapshot >= self.opts.snapshot_every
+    }
+
+    /// Write `entries` (the full live image, LRU-first) as the snapshot
+    /// and reset the WAL to an empty log bound to the current fingerprint.
+    /// Blocking form — fine at shutdown or offline; the live service uses
+    /// [`Persistence::begin_compaction`] so the snapshot write happens
+    /// outside its state lock.
+    pub fn compact(&mut self, entries: &[(CanonKey, V)]) -> io::Result<()> {
+        snapshot::write(&self.dir, self.fingerprint, entries)?;
+        self.wal = wal::Wal::create(&self.dir, self.fingerprint)?;
+        self.records_since_snapshot = 0;
+        self.force_compact = false;
+        Ok(())
+    }
+
+    /// Cheap half of a compaction, safe to run under a contended lock:
+    /// reset the WAL (subsequent records extend the post-image log) and
+    /// hand the image back as a [`PendingSnapshot`] the caller writes
+    /// **outside** the lock. A crash — or a failed write — between the
+    /// two halves leaves a fresh WAL without its snapshot: recovery then
+    /// restarts colder (the image existed only in memory), never wrong,
+    /// per the subsystem's fingerprint invariant.
+    pub fn begin_compaction(
+        &mut self,
+        entries: Vec<(CanonKey, V)>,
+    ) -> io::Result<PendingSnapshot<V>> {
+        self.wal = wal::Wal::create(&self.dir, self.fingerprint)?;
+        self.records_since_snapshot = 0;
+        self.force_compact = false;
+        Ok(PendingSnapshot {
+            dir: self.dir.clone(),
+            fingerprint: self.fingerprint,
+            entries,
+        })
+    }
+}
+
+/// The deferred half of [`Persistence::begin_compaction`]: a store image
+/// waiting to be written as the snapshot, with no lock requirements.
+pub struct PendingSnapshot<V> {
+    dir: PathBuf,
+    fingerprint: GraphFingerprint,
+    entries: Vec<(CanonKey, V)>,
+}
+
+impl<V: PersistValue> PendingSnapshot<V> {
+    /// Atomically publish the image (stage + rename).
+    pub fn write(self) -> io::Result<()> {
+        snapshot::write(&self.dir, self.fingerprint, &self.entries)
+    }
+}
+
+/// Offline view of a persist directory (the `store inspect` subcommand).
+#[derive(Debug)]
+pub struct DirInspection {
+    /// `(fingerprint, entry count)` of a readable snapshot.
+    pub snapshot: Option<(GraphFingerprint, usize)>,
+    /// Snapshot file size in bytes, if present (even when unreadable).
+    pub snapshot_bytes: Option<u64>,
+    /// WAL file size in bytes, if present.
+    pub wal_bytes: Option<u64>,
+    /// WAL records that replay cleanly.
+    pub wal_records: usize,
+    /// A torn/corrupt WAL tail exists.
+    pub wal_truncated: bool,
+    /// Fingerprint of the final recovered image, if any state is usable.
+    pub fingerprint: Option<GraphFingerprint>,
+    /// Entries in the final recovered image.
+    pub live_entries: usize,
+}
+
+/// Read-only recovery pass over `dir` — no file is modified.
+pub fn inspect<V: PersistValue>(dir: &Path) -> DirInspection {
+    let snap = snapshot::read::<V>(dir);
+    let snapshot = snap.as_ref().map(|(fp, es)| (*fp, es.len()));
+    let rep = wal::replay::<V>(dir, snap);
+    DirInspection {
+        snapshot,
+        snapshot_bytes: std::fs::metadata(dir.join(snapshot::SNAPSHOT_FILE))
+            .ok()
+            .map(|m| m.len()),
+        wal_bytes: std::fs::metadata(dir.join(wal::WAL_FILE)).ok().map(|m| m.len()),
+        wal_records: rep.records,
+        wal_truncated: rep.truncated,
+        fingerprint: rep.fingerprint,
+        live_entries: rep.entries.len(),
+    }
+}
+
+/// Offline compaction (the `store compact` subcommand): recover whatever
+/// image the directory holds — under **its own** recorded fingerprint, no
+/// live graph required — and rewrite it as one snapshot plus an empty WAL.
+/// Returns `(entries, wal records folded in)`, or an error when the
+/// directory holds no usable state to bind a fingerprint to.
+pub fn compact_dir<V: PersistValue>(dir: &Path) -> Result<(usize, usize)> {
+    let _lock = DirLock::acquire(dir)?; // never rewrite under a live service
+    let snap = snapshot::read::<V>(dir);
+    let rep = wal::replay::<V>(dir, snap);
+    let fp = rep.fingerprint.context(
+        "no usable persisted state (missing or corrupt snapshot and WAL header) — nothing to compact",
+    )?;
+    snapshot::write(dir, fp, &rep.entries)?;
+    wal::Wal::create(dir, fp)?;
+    Ok((rep.entries.len(), rep.records))
+}
+
+/// Delete the persist files in `dir` (the `store purge` subcommand).
+/// Only the files this subsystem writes are touched; returns how many
+/// were removed.
+pub fn purge_dir(dir: &Path) -> Result<usize> {
+    if !dir.exists() {
+        return Ok(0);
+    }
+    let _lock = DirLock::acquire(dir)?; // never delete under a live service
+    let mut removed = 0;
+    for name in [snapshot::SNAPSHOT_FILE, wal::WAL_FILE] {
+        let p = dir.join(name);
+        if p.exists() {
+            std::fs::remove_file(&p).with_context(|| format!("removing {}", p.display()))?;
+            removed += 1;
+        }
+    }
+    // staging files are uniquely named (crashed compactions may leave
+    // orphans): match them by prefix
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            if e.file_name().to_string_lossy().starts_with(snapshot::SNAPSHOT_TMP) {
+                std::fs::remove_file(e.path())
+                    .with_context(|| format!("removing {}", e.path().display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    fn fp(seed: u64) -> GraphFingerprint {
+        GraphFingerprint {
+            order: 5,
+            size: 6,
+            hash: seed,
+        }
+    }
+
+    fn key(i: usize) -> CanonKey {
+        catalog::paper_pattern(i % 7 + 1).canonical_key()
+    }
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mm_persist_mod_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn fresh_dir_opens_cold_then_recovers_warm() {
+        let d = dir("fresh");
+        let (mut p, warm, rep) =
+            Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        assert!(warm.is_empty());
+        assert!(!rep.fingerprint_matched || rep.restored == 0);
+        p.record_insert(&key(1), &10).unwrap();
+        p.record_insert(&key(2), &20).unwrap();
+        drop(p);
+        // same graph: warm
+        let (_, warm, rep) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        assert!(rep.fingerprint_matched);
+        assert_eq!(rep.restored, 2);
+        assert_eq!(warm, vec![(key(1), 10), (key(2), 20)]);
+        // different graph: structurally unservable, log restarted
+        let (_, warm, rep) = Persistence::<i128>::open(&d, fp(9), PersistOpts::default()).unwrap();
+        assert!(!rep.fingerprint_matched);
+        assert!(warm.is_empty());
+        // and the restart retargeted the dir to fp(9): fp(1) is gone now
+        let (_, warm, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        assert!(warm.is_empty(), "retargeted log no longer serves the old graph");
+    }
+
+    #[test]
+    fn invalidation_rebinds_and_forces_compaction() {
+        let d = dir("invalidate");
+        let (mut p, _, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        p.record_insert(&key(1), &1).unwrap();
+        assert!(!p.wants_compaction());
+        p.record_invalidation(fp(2)).unwrap();
+        assert!(p.wants_compaction());
+        p.record_insert(&key(2), &2).unwrap();
+        p.compact(&[(key(2), 2)]).unwrap();
+        assert!(!p.wants_compaction());
+        drop(p);
+        // entries recovered only under the post-mutation fingerprint
+        let (_, warm, _) = Persistence::<i128>::open(&d, fp(2), PersistOpts::default()).unwrap();
+        assert_eq!(warm, vec![(key(2), 2)]);
+        let (_, warm, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        assert!(warm.is_empty());
+    }
+
+    #[test]
+    fn compaction_cadence_counts_records() {
+        let d = dir("cadence");
+        let opts = PersistOpts {
+            snapshot_every: 3,
+            compact_on_drop: true,
+        };
+        let (mut p, _, _) = Persistence::<i128>::open(&d, fp(1), opts).unwrap();
+        p.record_insert(&key(1), &1).unwrap();
+        p.record_insert(&key(2), &2).unwrap();
+        assert!(!p.wants_compaction());
+        p.record_insert(&key(3), &3).unwrap();
+        assert!(p.wants_compaction());
+        p.compact(&[(key(1), 1), (key(2), 2), (key(3), 3)]).unwrap();
+        drop(p);
+        // replayed records count toward the next compaction: a reopened
+        // log that was never compacted asks for one quickly
+        let insp = inspect::<i128>(&d);
+        assert_eq!(insp.live_entries, 3);
+        assert_eq!(insp.wal_records, 0, "compaction reset the log");
+        assert_eq!(insp.snapshot, Some((fp(1), 3)));
+    }
+
+    #[test]
+    fn lock_excludes_live_writers_and_reclaims_stale() {
+        let d = dir("lock");
+        let (p, _, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        // a second live open must fail fast instead of sharing the WAL
+        assert!(Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).is_err());
+        // offline rewrites are excluded the same way; read-only inspect is not
+        assert!(compact_dir::<i128>(&d).is_err());
+        assert!(purge_dir(&d).is_err());
+        let _ = inspect::<i128>(&d);
+        drop(p); // releases the lock
+        // a lock file left by a dead process is reclaimed automatically
+        std::fs::write(d.join(LOCK_FILE), "4294967294").unwrap();
+        let (p, _, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        drop(p);
+        assert!(!d.join(LOCK_FILE).exists(), "drop removes the lock");
+    }
+
+    #[test]
+    fn split_compaction_halves_compose_and_fail_cold() {
+        let d = dir("split");
+        let (mut p, _, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        p.record_insert(&key(1), &1).unwrap();
+        p.record_insert(&key(2), &2).unwrap();
+        // begin resets the log immediately; the image is only durable
+        // once the pending write lands
+        let pending = p.begin_compaction(vec![(key(1), 1), (key(2), 2)]).unwrap();
+        assert!(!p.wants_compaction());
+        pending.write().unwrap();
+        drop(p);
+        let (_, warm, rep) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        assert_eq!(warm, vec![(key(1), 1), (key(2), 2)]);
+        assert_eq!(rep.snapshot_entries, 2);
+        assert_eq!(rep.wal_records, 0);
+        // crash between the halves: begin without write loses the image
+        // (it lived only in memory) but recovery stays clean — colder,
+        // never wrong
+        let d2 = dir("split_crash");
+        let (mut p, _, _) = Persistence::<i128>::open(&d2, fp(1), PersistOpts::default()).unwrap();
+        p.record_insert(&key(3), &3).unwrap();
+        let pending = p.begin_compaction(vec![(key(3), 3)]).unwrap();
+        drop(pending); // "crash" before the snapshot write
+        drop(p);
+        let (_, warm, _) = Persistence::<i128>::open(&d2, fp(1), PersistOpts::default()).unwrap();
+        assert!(warm.is_empty(), "unwritten image is gone, not corrupt");
+    }
+
+    #[test]
+    fn inspect_compact_purge_offline() {
+        let d = dir("offline");
+        let (mut p, _, _) = Persistence::<i128>::open(&d, fp(4), PersistOpts::default()).unwrap();
+        p.record_insert(&key(1), &7).unwrap();
+        p.record_insert(&key(2), &8).unwrap();
+        drop(p); // no compaction: WAL-only state
+        let insp = inspect::<i128>(&d);
+        assert_eq!(insp.wal_records, 2);
+        assert_eq!(insp.live_entries, 2);
+        assert_eq!(insp.fingerprint, Some(fp(4)));
+        assert!(insp.snapshot.is_none());
+        // offline compaction folds the log into a snapshot without a graph
+        let (entries, folded) = compact_dir::<i128>(&d).unwrap();
+        assert_eq!((entries, folded), (2, 2));
+        let insp = inspect::<i128>(&d);
+        assert_eq!(insp.snapshot, Some((fp(4), 2)));
+        assert_eq!(insp.wal_records, 0);
+        assert_eq!(insp.live_entries, 2, "image preserved across compaction");
+        // purge removes exactly our files
+        let removed = purge_dir(&d).unwrap();
+        assert_eq!(removed, 2);
+        let insp = inspect::<i128>(&d);
+        assert_eq!(insp.live_entries, 0);
+        assert!(compact_dir::<i128>(&d).is_err(), "nothing left to compact");
+    }
+}

@@ -1,0 +1,172 @@
+//! Full store image on disk: one CRC-framed payload holding every live
+//! `(canonical key, value)` pair plus the [`GraphFingerprint`] they are
+//! valid for.
+//!
+//! Snapshots are written **atomically**: the image goes to `snapshot.tmp`
+//! first and is published by a rename, so a reader never observes a
+//! half-written file under the real name — a crash mid-write leaves the
+//! previous snapshot (or none) intact. The single surrounding frame's CRC
+//! covers the whole payload, so a bit-flipped snapshot is rejected as a
+//! unit and recovery falls back to the WAL.
+
+use super::frame::{self, ByteReader, Frames};
+use crate::graph::GraphFingerprint;
+use crate::pattern::canon::CanonKey;
+use crate::service::store::PersistValue;
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+/// Snapshot file name inside a persist directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.bin";
+/// Prefix of the scratch files images are staged under before the
+/// publishing rename. Each write stages under a unique name
+/// (`snapshot.tmp.<pid>.<seq>`): two concurrent compactions then cannot
+/// interleave bytes in one staging file — whichever rename lands last
+/// publishes a *complete*, CRC-valid image (possibly the older one,
+/// which is merely colder on restart, never corrupt).
+pub const SNAPSHOT_TMP: &str = "snapshot.tmp";
+
+const SNAP_MAGIC: &[u8; 8] = b"MMSNAP01";
+
+/// Per-process staging sequence (uniqueness across threads).
+static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Write the image atomically (stage + rename). Entries should be in
+/// least-recently-used-first order so restoring them in sequence rebuilds
+/// the store's recency.
+pub fn write<V: PersistValue>(
+    dir: &Path,
+    fp: GraphFingerprint,
+    entries: &[(CanonKey, V)],
+) -> io::Result<()> {
+    let mut payload = Vec::with_capacity(64 + entries.len() * 48);
+    payload.extend_from_slice(SNAP_MAGIC);
+    payload.extend_from_slice(&fp.to_bytes());
+    payload.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    let mut value_buf = Vec::new();
+    for (key, value) in entries {
+        payload.push(key.n);
+        payload.extend_from_slice(&key.pairs.to_le_bytes());
+        payload.extend_from_slice(&key.labels.to_le_bytes());
+        value_buf.clear();
+        value.encode(&mut value_buf);
+        payload.extend_from_slice(&(value_buf.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&value_buf);
+    }
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = dir.join(format!("{SNAPSHOT_TMP}.{}.{seq}", std::process::id()));
+    let staged = stage_and_publish(dir, &tmp, &payload);
+    if staged.is_err() {
+        // don't leave a half-written staging file behind
+        let _ = std::fs::remove_file(&tmp);
+    }
+    staged
+}
+
+fn stage_and_publish(dir: &Path, tmp: &Path, payload: &[u8]) -> io::Result<()> {
+    let mut f = File::create(tmp)?;
+    frame::write_frame(&mut f, payload)?;
+    // best effort: make the bytes durable before the rename publishes
+    // them (a failed sync is not fatal — the WAL still holds the data)
+    let _ = f.sync_all();
+    std::fs::rename(tmp, dir.join(SNAPSHOT_FILE))
+}
+
+/// Read a snapshot image. `None` for anything unusable — missing file,
+/// torn frame, CRC mismatch, bad magic or malformed entries — recovery
+/// then proceeds from the WAL alone.
+pub fn read<V: PersistValue>(dir: &Path) -> Option<(GraphFingerprint, Vec<(CanonKey, V)>)> {
+    let bytes = std::fs::read(dir.join(SNAPSHOT_FILE)).ok()?;
+    let payload = Frames::new(&bytes).next()?;
+    let mut r = ByteReader::new(payload);
+    if r.take(SNAP_MAGIC.len())? != SNAP_MAGIC {
+        return None;
+    }
+    let fp = GraphFingerprint::from_bytes(r.take(GraphFingerprint::BYTES)?)?;
+    let count = r.u64()? as usize;
+    let mut entries = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        let n = r.u8()?;
+        let pairs = r.u64()?;
+        let labels = r.u64()?;
+        let vlen = r.u32()? as usize;
+        let value = V::decode(r.take(vlen)?)?;
+        entries.push((CanonKey { n, pairs, labels }, value));
+    }
+    if !r.is_empty() {
+        return None; // trailing bytes: not an image we wrote
+    }
+    Some((fp, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    fn fp() -> GraphFingerprint {
+        GraphFingerprint {
+            order: 3,
+            size: 2,
+            hash: 0xDEAD,
+        }
+    }
+
+    fn key(i: usize) -> CanonKey {
+        catalog::paper_pattern(i % 7 + 1).canonical_key()
+    }
+
+    fn dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("mm_snap_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_atomic_publish() {
+        let d = dir("roundtrip");
+        assert!(read::<i128>(&d).is_none(), "missing file is None");
+        let entries = vec![(key(1), 11i128), (key(2), -22i128), (key(3), 0i128)];
+        write(&d, fp(), &entries).unwrap();
+        let leftovers = std::fs::read_dir(&d)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .starts_with(SNAPSHOT_TMP)
+            })
+            .count();
+        assert_eq!(leftovers, 0, "staging files renamed away");
+        let (got_fp, got) = read::<i128>(&d).expect("snapshot readable");
+        assert_eq!(got_fp, fp());
+        assert_eq!(got, entries);
+        // empty image is valid too (post-invalidation compaction)
+        write::<i128>(&d, fp(), &[]).unwrap();
+        let (_, got) = read::<i128>(&d).expect("empty snapshot readable");
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn bit_flip_rejects_whole_image() {
+        let d = dir("flip");
+        write(&d, fp(), &[(key(1), 5i128), (key(2), 6i128)]).unwrap();
+        let mut bytes = std::fs::read(d.join(SNAPSHOT_FILE)).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(d.join(SNAPSHOT_FILE), &bytes).unwrap();
+        assert!(read::<i128>(&d).is_none(), "CRC must reject the image");
+    }
+
+    #[test]
+    fn truncation_rejects_whole_image() {
+        let d = dir("trunc");
+        write(&d, fp(), &[(key(1), 5i128)]).unwrap();
+        let bytes = std::fs::read(d.join(SNAPSHOT_FILE)).unwrap();
+        std::fs::write(d.join(SNAPSHOT_FILE), &bytes[..bytes.len() - 3]).unwrap();
+        assert!(read::<i128>(&d).is_none());
+    }
+}

@@ -1,0 +1,391 @@
+//! Append-only write-ahead log of result-store mutations.
+//!
+//! Layout: one header frame (magic + the [`GraphFingerprint`] the log's
+//! entries are valid for), then one frame per record:
+//!
+//! * **insert** — a `(canonical key, value)` pair the store published;
+//! * **invalidate** — the graph mutated: everything before this record is
+//!   dead, and subsequent inserts belong to the new fingerprint carried by
+//!   the record.
+//!
+//! Replay is total: it walks the valid frame prefix (torn/corrupt tails
+//! are measured for truncation, never panicked on), applies records onto a
+//! base image, and reports the fingerprint the surviving image is valid
+//! for. Correctness never depends on the log being complete — values are
+//! pure functions of `(canonical key, graph content)`, so a lost suffix
+//! only makes recovery colder, never wrong.
+
+use super::frame::{self, ByteReader, Frames};
+use crate::graph::GraphFingerprint;
+use crate::pattern::canon::CanonKey;
+use crate::service::store::PersistValue;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Seek, Write};
+use std::path::Path;
+
+/// WAL file name inside a persist directory.
+pub const WAL_FILE: &str = "wal.log";
+
+const WAL_MAGIC: &[u8; 8] = b"MMWAL001";
+const TAG_INSERT: u8 = 1;
+const TAG_INVALIDATE: u8 = 2;
+
+/// Open WAL handle: appends framed records, flushing each one so a killed
+/// process loses at most the record being written — which replay then
+/// truncates as a torn tail.
+pub struct Wal {
+    file: File,
+    records: usize,
+}
+
+impl Wal {
+    /// Create (truncating any previous log) with a header binding the log
+    /// to `fp`.
+    pub fn create(dir: &Path, fp: GraphFingerprint) -> io::Result<Wal> {
+        let mut file = File::create(dir.join(WAL_FILE))?;
+        let mut payload = Vec::with_capacity(WAL_MAGIC.len() + GraphFingerprint::BYTES);
+        payload.extend_from_slice(WAL_MAGIC);
+        payload.extend_from_slice(&fp.to_bytes());
+        frame::write_frame(&mut file, &payload)?;
+        file.flush()?;
+        Ok(Wal { file, records: 0 })
+    }
+
+    /// Reopen for append after a replay trusted the first `valid_len`
+    /// bytes: the torn/corrupt tail (if any) is cut off so new records
+    /// extend a clean prefix.
+    pub fn open_append(dir: &Path, valid_len: u64, records: usize) -> io::Result<Wal> {
+        let mut file = OpenOptions::new().read(true).write(true).open(dir.join(WAL_FILE))?;
+        file.set_len(valid_len)?;
+        file.seek(io::SeekFrom::End(0))?;
+        Ok(Wal { file, records })
+    }
+
+    /// Records appended plus records replayed at open.
+    pub fn records(&self) -> usize {
+        self.records
+    }
+
+    pub fn append_insert<V: PersistValue>(&mut self, key: &CanonKey, value: &V) -> io::Result<()> {
+        let mut payload = Vec::with_capacity(32);
+        payload.push(TAG_INSERT);
+        payload.push(key.n);
+        payload.extend_from_slice(&key.pairs.to_le_bytes());
+        payload.extend_from_slice(&key.labels.to_le_bytes());
+        value.encode(&mut payload);
+        self.append(&payload)
+    }
+
+    pub fn append_invalidate(&mut self, fp: GraphFingerprint) -> io::Result<()> {
+        let mut payload = Vec::with_capacity(1 + GraphFingerprint::BYTES);
+        payload.push(TAG_INVALIDATE);
+        payload.extend_from_slice(&fp.to_bytes());
+        self.append(&payload)
+    }
+
+    fn append(&mut self, payload: &[u8]) -> io::Result<()> {
+        frame::write_frame(&mut self.file, payload)?;
+        self.records += 1;
+        self.file.flush()
+    }
+}
+
+/// Outcome of replaying a WAL over a base image. Never an error: a
+/// missing, empty or corrupt log degrades to the base image (or to
+/// nothing), and `valid_len`/`truncated` tell the caller how much of the
+/// file to keep.
+pub struct Replay<V> {
+    /// Fingerprint the surviving `entries` are valid for (`None` when
+    /// neither a usable header nor a base image exists).
+    pub fingerprint: Option<GraphFingerprint>,
+    /// The reconstructed image, in apply order (oldest first).
+    pub entries: Vec<(CanonKey, V)>,
+    /// Records applied from this log.
+    pub records: usize,
+    /// Byte length of the trusted frame prefix.
+    pub valid_len: u64,
+    /// Whether a torn/corrupt tail (or an unreadable record) was dropped.
+    pub truncated: bool,
+    /// The log file exists on disk.
+    pub file_present: bool,
+    /// The header frame was intact (magic + fingerprint).
+    pub header_ok: bool,
+}
+
+/// Decode the body of an insert record (tag already consumed).
+fn decode_insert<V: PersistValue>(mut r: ByteReader<'_>) -> Option<(CanonKey, V)> {
+    let n = r.u8()?;
+    let pairs = r.u64()?;
+    let labels = r.u64()?;
+    let value = V::decode(r.rest())?;
+    Some((CanonKey { n, pairs, labels }, value))
+}
+
+/// Replay the WAL at `dir` over `base` (a snapshot image and the
+/// fingerprint it was taken at). The base contributes only when it matches
+/// the log's header fingerprint — a base from some other graph state is
+/// ignored rather than mixed in.
+pub fn replay<V: PersistValue>(
+    dir: &Path,
+    base: Option<(GraphFingerprint, Vec<(CanonKey, V)>)>,
+) -> Replay<V> {
+    let path = dir.join(WAL_FILE);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(_) => {
+            // no log: the snapshot alone is the image
+            let (fingerprint, entries) = match base {
+                Some((fp, es)) => (Some(fp), es),
+                None => (None, Vec::new()),
+            };
+            return Replay {
+                fingerprint,
+                entries,
+                records: 0,
+                valid_len: 0,
+                truncated: false,
+                file_present: false,
+                header_ok: false,
+            };
+        }
+    };
+
+    let mut frames = Frames::new(&bytes);
+    let header_fp = frames.next().and_then(|payload| {
+        let mut r = ByteReader::new(payload);
+        if r.take(WAL_MAGIC.len())? != WAL_MAGIC {
+            return None;
+        }
+        GraphFingerprint::from_bytes(r.rest())
+    });
+    let Some(header_fp) = header_fp else {
+        // unusable header: nothing in this file can be attributed — fall
+        // back to the snapshot image alone
+        let (fingerprint, entries) = match base {
+            Some((fp, es)) => (Some(fp), es),
+            None => (None, Vec::new()),
+        };
+        return Replay {
+            fingerprint,
+            entries,
+            records: 0,
+            valid_len: 0,
+            truncated: true,
+            file_present: true,
+            header_ok: false,
+        };
+    };
+
+    // the snapshot seeds the image only if it describes the same graph
+    // state the log starts from
+    let mut entries: Vec<(CanonKey, V)> = match base {
+        Some((fp, es)) if fp == header_fp => es,
+        _ => Vec::new(),
+    };
+    let mut index: std::collections::HashMap<CanonKey, usize> =
+        entries.iter().enumerate().map(|(i, (k, _))| (*k, i)).collect();
+    let mut fingerprint = header_fp;
+    let mut records = 0usize;
+    let mut unreadable = false;
+
+    for payload in &mut frames {
+        let mut r = ByteReader::new(payload);
+        match r.u8() {
+            Some(TAG_INSERT) => {
+                match decode_insert::<V>(r) {
+                    Some((key, value)) => {
+                        match index.get(&key) {
+                            Some(&i) => entries[i].1 = value,
+                            None => {
+                                index.insert(key, entries.len());
+                                entries.push((key, value));
+                            }
+                        }
+                        records += 1;
+                    }
+                    None => {
+                        unreadable = true;
+                        break;
+                    }
+                }
+            }
+            Some(TAG_INVALIDATE) => match GraphFingerprint::from_bytes(r.rest()) {
+                Some(fp) => {
+                    entries.clear();
+                    index.clear();
+                    fingerprint = fp;
+                    records += 1;
+                }
+                None => {
+                    unreadable = true;
+                    break;
+                }
+            },
+            _ => {
+                // unknown tag: a future format or garbage that passed the
+                // CRC — stop trusting the file here
+                unreadable = true;
+                break;
+            }
+        }
+    }
+
+    // an unreadable record truncates like a corrupt frame would, except
+    // the frame iterator already advanced past it: recompute the trusted
+    // length as "everything before the record that failed to decode"
+    let valid_len = if unreadable {
+        // walk again, trusting only the header plus the `records` frames
+        // that decoded cleanly
+        let mut it = Frames::new(&bytes);
+        let mut len = 0usize;
+        for _ in 0..=records {
+            if it.next().is_some() {
+                len = it.valid_len();
+            }
+        }
+        len as u64
+    } else {
+        frames.valid_len() as u64
+    };
+
+    Replay {
+        fingerprint: Some(fingerprint),
+        entries,
+        records,
+        valid_len,
+        truncated: unreadable || frames.corrupt(),
+        file_present: true,
+        header_ok: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    fn fp(seed: u64) -> GraphFingerprint {
+        GraphFingerprint {
+            order: 10,
+            size: 20,
+            hash: seed,
+        }
+    }
+
+    fn key(i: usize) -> CanonKey {
+        catalog::paper_pattern(i % 7 + 1).canonical_key()
+    }
+
+    fn dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("mm_wal_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let d = dir("roundtrip");
+        let mut w = Wal::create(&d, fp(1)).unwrap();
+        w.append_insert(&key(1), &42i128).unwrap();
+        w.append_insert(&key(2), &-7i128).unwrap();
+        w.append_insert(&key(1), &43i128).unwrap(); // later insert wins
+        drop(w);
+        let r = replay::<i128>(&d, None);
+        assert_eq!(r.fingerprint, Some(fp(1)));
+        assert_eq!(r.records, 3);
+        assert!(!r.truncated);
+        assert!(r.header_ok && r.file_present);
+        assert_eq!(r.entries, vec![(key(1), 43), (key(2), -7)]);
+    }
+
+    #[test]
+    fn invalidate_clears_and_rebinds() {
+        let d = dir("invalidate");
+        let mut w = Wal::create(&d, fp(1)).unwrap();
+        w.append_insert(&key(1), &1i128).unwrap();
+        w.append_invalidate(fp(2)).unwrap();
+        w.append_insert(&key(2), &2i128).unwrap();
+        drop(w);
+        let r = replay::<i128>(&d, None);
+        assert_eq!(r.fingerprint, Some(fp(2)));
+        assert_eq!(r.entries, vec![(key(2), 2)]);
+        assert_eq!(r.records, 3);
+    }
+
+    #[test]
+    fn base_applies_only_on_matching_fingerprint() {
+        let d = dir("base");
+        let mut w = Wal::create(&d, fp(1)).unwrap();
+        w.append_insert(&key(2), &9i128).unwrap();
+        drop(w);
+        let matching = replay::<i128>(&d, Some((fp(1), vec![(key(1), 5)])));
+        assert_eq!(matching.entries, vec![(key(1), 5), (key(2), 9)]);
+        let stale = replay::<i128>(&d, Some((fp(7), vec![(key(1), 5)])));
+        assert_eq!(stale.entries, vec![(key(2), 9)], "stale snapshot ignored");
+    }
+
+    #[test]
+    fn torn_and_corrupt_tails_truncate() {
+        let d = dir("torn");
+        let mut w = Wal::create(&d, fp(1)).unwrap();
+        w.append_insert(&key(1), &1i128).unwrap();
+        w.append_insert(&key(2), &2i128).unwrap();
+        drop(w);
+        let full = std::fs::read(d.join(WAL_FILE)).unwrap();
+        let clean = replay::<i128>(&d, None);
+        assert_eq!(clean.valid_len as usize, full.len());
+        // kill mid-record: every cut recovers a clean prefix, no panic
+        for cut in (0..full.len()).step_by(3).chain([full.len() - 1]) {
+            std::fs::write(d.join(WAL_FILE), &full[..cut]).unwrap();
+            let r = replay::<i128>(&d, None);
+            assert!(r.records <= 2);
+            assert!(r.valid_len as usize <= cut);
+            for (k, v) in &r.entries {
+                let expect = if *k == key(1) { 1 } else { 2 };
+                assert_eq!(*v, expect);
+            }
+        }
+        // bit flip in the second record
+        let mut flipped = full.clone();
+        let at = clean.valid_len as usize - 2;
+        flipped[at] ^= 0x10;
+        std::fs::write(d.join(WAL_FILE), &flipped).unwrap();
+        let r = replay::<i128>(&d, None);
+        assert!(r.truncated);
+        assert_eq!(r.entries, vec![(key(1), 1)]);
+        // reopening for append truncates the bad tail away
+        let w = Wal::open_append(&d, r.valid_len, r.records).unwrap();
+        assert_eq!(w.records(), 1);
+        drop(w);
+        assert_eq!(
+            std::fs::metadata(d.join(WAL_FILE)).unwrap().len(),
+            r.valid_len
+        );
+    }
+
+    #[test]
+    fn corrupt_header_degrades_to_base() {
+        let d = dir("header");
+        let mut w = Wal::create(&d, fp(1)).unwrap();
+        w.append_insert(&key(1), &1i128).unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(d.join(WAL_FILE)).unwrap();
+        bytes[10] ^= 0xFF; // inside the header payload
+        std::fs::write(d.join(WAL_FILE), &bytes).unwrap();
+        let r = replay::<i128>(&d, Some((fp(3), vec![(key(2), 2)])));
+        assert!(!r.header_ok);
+        assert!(r.truncated);
+        assert_eq!(r.fingerprint, Some(fp(3)), "snapshot image survives alone");
+        assert_eq!(r.entries, vec![(key(2), 2)]);
+    }
+
+    #[test]
+    fn missing_file_is_empty_not_error() {
+        let d = dir("missing");
+        let r = replay::<i128>(&d, None);
+        assert!(!r.file_present);
+        assert_eq!(r.fingerprint, None);
+        assert!(r.entries.is_empty());
+    }
+}

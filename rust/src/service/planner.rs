@@ -73,8 +73,33 @@ impl QueryPlanner {
 
     /// Morph a flattened batch of query patterns into one plan (base
     /// patterns deduplicated across the whole batch).
+    ///
+    /// Repeated queries are deduplicated **before** morphing: a batch of
+    /// N identical (or merely isomorphic) texts runs the rewrite — and,
+    /// under [`Policy::CostBased`], the optimizer — once, and every
+    /// repeat shares the one expression. Isomorphic patterns have equal
+    /// map counts, so sharing is exact; per-query automorphism conversion
+    /// happens downstream against each query's own pattern.
     pub fn morph(&self, queries: &[Pattern], stats: &GraphStats) -> MorphPlan {
-        morph::plan_queries(queries, self.policy, Some(stats), &CostParams::counting())
+        let mut seen: HashMap<CanonKey, usize> = HashMap::new();
+        let mut uniq: Vec<Pattern> = Vec::new();
+        let mut slot: Vec<usize> = Vec::with_capacity(queries.len());
+        for q in queries {
+            let idx = *seen.entry(q.canonical_key()).or_insert_with(|| {
+                uniq.push(q.clone());
+                uniq.len() - 1
+            });
+            slot.push(idx);
+        }
+        let plan = morph::plan_queries(&uniq, self.policy, Some(stats), &CostParams::counting());
+        if uniq.len() == queries.len() {
+            return plan; // no repeats: slot is the identity
+        }
+        let exprs = slot.iter().map(|&i| plan.exprs[i].clone()).collect();
+        MorphPlan {
+            exprs,
+            base: plan.base,
+        }
     }
 
     /// Execute the subset of `base` selected by `indices`: one fused
@@ -227,6 +252,48 @@ mod tests {
                 assert_eq!((v / aut) as u64, *d, "{policy:?} {q:?}");
             }
         }
+    }
+
+    #[test]
+    fn repeated_queries_plan_each_base_once() {
+        // satellite: a batch of N identical query texts must morph/plan
+        // exactly like one copy — same base set, one shared expression —
+        // and answer every repeat identically
+        let (g, stats) = setup();
+        for policy in [Policy::Off, Policy::Naive, Policy::CostBased] {
+            let planner = QueryPlanner::new(policy, true, 2);
+            let single = planner.morph(&[catalog::cycle(4)], &stats);
+            let repeats: Vec<Pattern> = vec![catalog::cycle(4); 6];
+            let plan = planner.morph(&repeats, &stats);
+            assert_eq!(plan.exprs.len(), 6, "one expression per admitted query");
+            assert_eq!(
+                plan.base.len(),
+                single.base.len(),
+                "{policy:?}: repeats must not add bases"
+            );
+            let mut store = ResultStore::new(1 << 20);
+            let mut prof = PhaseProfile::new();
+            let (vals, s) = planner.serve_batch(&g, &repeats, &stats, &mut store, 0, &mut prof);
+            assert_eq!(vals.len(), 6);
+            assert!(vals.windows(2).all(|w| w[0] == w[1]), "{policy:?}: {vals:?}");
+            assert_eq!(s.total_bases, single.base.len());
+            // single-copy answer agrees
+            let mut store2 = ResultStore::new(1 << 20);
+            let (one, _) =
+                planner.serve_batch(&g, &[catalog::cycle(4)], &stats, &mut store2, 0, &mut prof);
+            assert_eq!(vals[0], one[0], "{policy:?}");
+        }
+        // isomorphic-but-relabeled repeats collapse too
+        let planner = QueryPlanner::new(Policy::Naive, true, 2);
+        let p = catalog::path(4);
+        let q = p.permuted(&[3, 1, 0, 2]);
+        let plan = planner.morph(&[p.clone(), q], &stats);
+        assert_eq!(plan.exprs.len(), 2);
+        assert_eq!(
+            plan.base.len(),
+            planner.morph(&[p], &stats).base.len(),
+            "isomorphic repeats share one rewrite"
+        );
     }
 
     #[test]

@@ -20,6 +20,14 @@
 //!   batch after a mutation, the store purges entries from older epochs,
 //!   and results computed against a superseded snapshot never enter the
 //!   cache — stale counts are structurally unservable.
+//! * **Durability** — with [`ServiceConfig::persist`] set, published
+//!   inserts are mirrored into a write-ahead log and folded into
+//!   snapshots ([`crate::service::persist`]); a restart recovers the
+//!   store warm when the live graph's fingerprint matches what was
+//!   persisted, and cold otherwise. WAL appends are flushed per record,
+//!   so an abrupt kill (SIGINT, OOM) loses at most the record mid-write —
+//!   replay truncates it as a torn tail; a graceful [`Drop`] additionally
+//!   compacts so the next start skips the replay.
 //! * **Containment** — a batch that panics (an internal invariant
 //!   failure) is caught at the worker boundary: that batch's caller gets
 //!   an error from [`Service::call`], cells the batch owned are failed so
@@ -28,6 +36,7 @@
 //!
 //! [`coordinator::query::Query`]: crate::coordinator::query::Query
 
+use super::persist::{PendingSnapshot, PersistConfig, Persistence, RecoveryReport};
 use super::planner::{BatchStats, QueryPlanner};
 use super::store::{ResultStore, StoreMetrics};
 use crate::coordinator::query::Query;
@@ -61,6 +70,10 @@ pub struct ServiceConfig {
     pub fused: bool,
     /// Result-store eviction budget in bytes.
     pub cache_bytes: usize,
+    /// Persist the result store to this directory (WAL + snapshots, see
+    /// [`crate::service::persist`]) so a restart recovers warm. `None`
+    /// keeps the store purely in-memory.
+    pub persist: Option<PersistConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -71,6 +84,7 @@ impl Default for ServiceConfig {
             policy: Policy::CostBased,
             fused: true,
             cache_bytes: 64 << 20,
+            persist: None,
         }
     }
 }
@@ -138,6 +152,12 @@ struct State {
     store: ResultStore<i128>,
     /// `(canonical key, epoch)` → completion cell of the batch computing it.
     inflight: HashMap<(CanonKey, u64), Arc<Cell>>,
+    /// Durable-store session, when configured. `None` also after an IO
+    /// error: persistence degrades to in-memory-only with a warning —
+    /// recovery's fingerprint gate keeps whatever partial state is on
+    /// disk safe to (not) serve, so a broken disk can never corrupt
+    /// answers, only cool a future restart.
+    persist: Option<Persistence<i128>>,
     /// Degree-ordered relabeling of the *initial* graph, if any: public
     /// edge updates arrive in original (input) IDs and are translated into
     /// the engine's internal ID space, which snapshots keep forever.
@@ -192,30 +212,58 @@ struct Job {
     respond: mpsc::Sender<BatchResponse>,
 }
 
-/// The batched query service. Dropping it shuts the request loop down and
-/// joins the workers.
+/// The batched query service. Dropping it shuts the request loop down,
+/// joins the workers, and (when persistence is on) compacts the durable
+/// store so the next start recovers from one snapshot.
 pub struct Service {
     shared: Arc<Shared>,
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    recovery: Option<RecoveryReport>,
 }
 
 impl Service {
     /// Start the service over `graph` (converted to a mutable [`DynGraph`]
-    /// internally; the given CSR becomes the epoch-0 snapshot).
+    /// internally; the given CSR becomes the epoch-0 snapshot). Panics if
+    /// the configured persist directory cannot be opened — use
+    /// [`Service::try_start`] to handle that as an error.
     pub fn start(graph: DataGraph, config: ServiceConfig) -> Service {
+        Self::try_start(graph, config).expect("service start failed")
+    }
+
+    /// [`Service::start`], surfacing persistence IO failures as errors.
+    /// When `config.persist` names a directory, the store persisted there
+    /// is recovered first: entries whose [`crate::graph::GraphFingerprint`]
+    /// matches `graph` seed the result store (the warm restart), anything
+    /// else — fresh directory, torn/corrupt files, or state from a
+    /// different or mutated graph — degrades to a cold store.
+    pub fn try_start(graph: DataGraph, config: ServiceConfig) -> Result<Service> {
         let dyn_graph = DynGraph::from_data_graph(&graph);
         let relabel = graph.relabeling().cloned();
         let stats = GraphStats::compute(&graph, 2000, 0x5E55);
+        let mut store = ResultStore::new(config.cache_bytes);
+        let (persist, recovery) = match &config.persist {
+            Some(pc) => {
+                let fp = graph.fingerprint();
+                let (p, warm, report) = Persistence::open(&pc.dir, fp, pc.opts)
+                    .with_context(|| format!("opening persist dir {}", pc.dir.display()))?;
+                for (k, v) in warm {
+                    store.restore(k, v);
+                }
+                (Some(p), Some(report))
+            }
+            None => (None, None),
+        };
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 graph: dyn_graph,
                 snapshot: Some(Arc::new(graph)),
                 snapshot_epoch: 0,
                 stats: Some(Arc::new(stats)),
-                store: ResultStore::new(config.cache_bytes),
+                store,
                 inflight: HashMap::new(),
                 relabel,
+                persist,
             }),
         });
         let planner = QueryPlanner::new(config.policy, config.fused, config.threads);
@@ -228,11 +276,17 @@ impl Service {
                 std::thread::spawn(move || worker_loop(&shared, &rx, planner))
             })
             .collect();
-        Service {
+        Ok(Service {
             shared,
             tx: Some(tx),
             workers,
-        }
+            recovery,
+        })
+    }
+
+    /// What startup recovery found (`None` when persistence is off).
+    pub fn recovery_report(&self) -> Option<RecoveryReport> {
+        self.recovery
     }
 
     /// Parse and serve one batch, blocking until the response is ready.
@@ -312,6 +366,73 @@ impl Drop for Service {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // graceful-shutdown flush: fold the session's WAL into one
+        // snapshot so the next start recovers without a replay. Skipped on
+        // a poisoned lock (a worker panicked mid-publish) — the flushed
+        // WAL already holds everything published, so recovery replays it.
+        // The same applies to an abrupt kill (e.g. SIGINT): every insert
+        // was flushed when it happened, so skipping this step only costs
+        // replay time, never data.
+        if let Ok(mut st) = self.shared.state.lock() {
+            let st = &mut *st;
+            if let Some(p) = &mut st.persist {
+                // skip when nothing was logged since the last compaction:
+                // the snapshot on disk already equals the live image
+                if p.compact_on_drop() && p.dirty() {
+                    if let Err(e) = p.compact(&st.store.entries()) {
+                        eprintln!("warning: final store compaction failed: {e}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Mirror one published store insert into the WAL, degrading persistence
+/// to in-memory-only on the first IO error (see [`State::persist`]).
+fn persist_insert(persist: &mut Option<Persistence<i128>>, key: &CanonKey, value: i128) {
+    if let Some(p) = persist {
+        if let Err(e) = p.record_insert(key, &value) {
+            eprintln!("warning: WAL append failed, persistence disabled: {e}");
+            *persist = None;
+        }
+    }
+}
+
+/// Begin a due compaction under the state lock — only the cheap half (WAL
+/// reset + image clone) runs here; the caller must hand the returned
+/// image to [`persist_finish_compaction`] after releasing the lock.
+/// Degradation contract as in [`persist_insert`].
+fn persist_begin_compaction(
+    persist: &mut Option<Persistence<i128>>,
+    store: &ResultStore<i128>,
+) -> Option<PendingSnapshot<i128>> {
+    let p = persist.as_mut()?;
+    if !p.wants_compaction() {
+        return None;
+    }
+    match p.begin_compaction(store.entries()) {
+        Ok(pending) => Some(pending),
+        Err(e) => {
+            eprintln!("warning: store compaction failed, persistence disabled: {e}");
+            *persist = None;
+            None
+        }
+    }
+}
+
+/// Write a pending snapshot image with **no lock held** — it can be tens
+/// of MB, and serializing it under the state mutex would stall every
+/// worker. On failure the image survives only in memory (the WAL was
+/// already reset), so persistence is disabled: a later restart is colder,
+/// never wrong.
+fn persist_finish_compaction(shared: &Shared, pending: Option<PendingSnapshot<i128>>) {
+    let Some(p) = pending else { return };
+    if let Err(e) = p.write() {
+        eprintln!("warning: snapshot write failed, persistence disabled: {e}");
+        if let Ok(mut st) = shared.state.lock() {
+            st.persist = None;
+        }
     }
 }
 
@@ -357,12 +478,26 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
 
     // pin the epoch and (re)build the CSR snapshot + stats if a mutation
     // landed since the last batch
-    let (graph, stats, epoch) = {
+    let (graph, stats, epoch, pending) = {
         let mut st = shared.state.lock().unwrap();
+        let st = &mut *st;
         let epoch = st.graph.version();
         st.store.set_epoch(epoch);
+        let mut pending = None;
         if st.snapshot.is_none() || st.snapshot_epoch != epoch {
             let g = st.graph.to_data_graph("service");
+            // the epoch moved: everything persisted so far describes a
+            // graph that no longer exists — rebind the durable store to
+            // the new content fingerprint before any new insert lands
+            if let Some(p) = &mut st.persist {
+                if let Err(e) = p.record_invalidation(g.fingerprint()) {
+                    eprintln!("warning: WAL invalidation failed, persistence disabled: {e}");
+                    st.persist = None;
+                }
+            }
+            // forced by the invalidation: the image is empty, the reset
+            // shrinks the log to a header
+            pending = persist_begin_compaction(&mut st.persist, &st.store);
             st.stats = Some(Arc::new(GraphStats::compute(&g, 2000, 0x5E55)));
             st.snapshot = Some(Arc::new(g));
             st.snapshot_epoch = epoch;
@@ -371,8 +506,10 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
             st.snapshot.clone().expect("snapshot just ensured"),
             st.stats.clone().expect("stats just ensured"),
             epoch,
+            pending,
         )
     };
+    persist_finish_compaction(shared, pending);
 
     let mut profile = PhaseProfile::new();
     let plan = profile.time("plan", || planner.morph(&flat, &stats));
@@ -409,16 +546,29 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
 
     // publish: feed the store (stale inserts are dropped there) and wake
     // any batch coalesced onto our bases
-    {
+    let pending = {
         let mut st = shared.state.lock().unwrap();
+        let st = &mut *st;
         for &(k, v) in &fresh {
-            st.store.insert(k, epoch, v);
+            // mirror exactly the inserts the store accepted: a stale
+            // insert (epoch moved mid-batch) must not reach the WAL
+            // either. WAL appends run under the state lock on purpose:
+            // record order must match store state transitions (an insert
+            // appended after another batch's invalidation record would
+            // be replayed under the wrong fingerprint). Only the bulky
+            // snapshot write escapes the lock, via the begin/finish
+            // split below.
+            if st.store.insert(k, epoch, v) {
+                persist_insert(&mut st.persist, &k, v);
+            }
             if let Some(cell) = st.inflight.remove(&(k, epoch)) {
                 *cell.value.lock().unwrap() = Some(Ok(v));
                 cell.ready.notify_all();
             }
         }
-    }
+        persist_begin_compaction(&mut st.persist, &st.store)
+    };
+    persist_finish_compaction(shared, pending);
     guard.armed = false;
     let executed = fresh.len();
     values.extend(fresh);
@@ -485,6 +635,7 @@ mod tests {
                 policy: Policy::Naive,
                 fused: true,
                 cache_bytes: 1 << 20,
+                persist: None,
             },
         )
     }
@@ -560,6 +711,7 @@ mod tests {
                 policy: Policy::Naive,
                 fused: true,
                 cache_bytes: 1 << 20,
+                persist: None,
             },
         );
         // 5-vertex star: C(4,2) = 6 wedges, no triangles
@@ -593,6 +745,33 @@ mod tests {
         // modest growth past the current vertex count is still allowed
         assert!(svc.insert_edge(60, 61).unwrap());
         assert_eq!(svc.epoch(), 1);
+    }
+
+    #[test]
+    fn persistent_service_restarts_warm() {
+        let dir = std::env::temp_dir().join("mm_serve_persist_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let config = || ServiceConfig {
+            workers: 1,
+            threads: 2,
+            policy: Policy::Naive,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: Some(crate::service::persist::PersistConfig::new(&dir)),
+        };
+        let g = || erdos_renyi(50, 180, 0x5EAE);
+        let svc = Service::try_start(g(), config()).unwrap();
+        let cold = svc.call(&["motifs:3"]).unwrap();
+        assert!(cold.stats.executed_bases > 0);
+        drop(svc); // graceful shutdown compacts WAL → snapshot
+        let svc = Service::try_start(g(), config()).unwrap();
+        let rep = svc.recovery_report().expect("persistence configured");
+        assert!(rep.fingerprint_matched, "same graph content must match");
+        assert!(rep.restored > 0);
+        let warm = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(warm.stats.executed_bases, 0, "restart must serve warm");
+        assert_eq!(cold.results, warm.results);
+        assert!(svc.store_metrics().restored > 0);
     }
 
     #[test]

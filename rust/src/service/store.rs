@@ -26,6 +26,28 @@ impl CacheWeight for i128 {
     }
 }
 
+/// Byte codec for values crossing the persistence boundary
+/// ([`crate::service::persist`]). The encoding must be self-contained
+/// within the byte slice handed to `decode` (records and snapshot fields
+/// carry explicit lengths), stable across processes, and total on the
+/// decode side: hostile bytes return `None`, never panic.
+pub trait PersistValue: Sized {
+    /// Append the encoded value to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Decode from exactly the bytes `encode` produced.
+    fn decode(bytes: &[u8]) -> Option<Self>;
+}
+
+impl PersistValue for i128 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn decode(bytes: &[u8]) -> Option<i128> {
+        Some(i128::from_le_bytes(bytes.try_into().ok()?))
+    }
+}
+
 /// Fixed bookkeeping cost charged per entry on top of the value weight
 /// (key, LRU stamp, hash-map slot).
 const ENTRY_OVERHEAD: usize = 64;
@@ -46,6 +68,10 @@ pub struct StoreMetrics {
     pub invalidations: u64,
     /// Inserts dropped because they were computed against an old epoch.
     pub stale_drops: u64,
+    /// Entries seeded from a recovered persistent image at startup
+    /// (counted separately from `inserts` so cache-effectiveness metrics
+    /// stay attributable to this process's own work).
+    pub restored: u64,
     /// Current footprint (value weights + per-entry overhead).
     pub bytes: usize,
 }
@@ -139,11 +165,42 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
     /// Insert a value computed at `epoch`. Values computed against a
     /// superseded snapshot are dropped (`stale_drops`) — the caller still
     /// uses them for its own response, they just don't enter the cache.
-    pub fn insert(&mut self, key: CanonKey, epoch: u64, value: V) {
+    /// Returns whether the value entered the store; mirrors of the store
+    /// (the WAL in [`crate::service::persist`]) must key off this, not
+    /// re-derive the staleness predicate.
+    pub fn insert(&mut self, key: CanonKey, epoch: u64, value: V) -> bool {
         if epoch != self.epoch {
             self.metrics.stale_drops += 1;
-            return;
+            return false;
         }
+        self.put(key, value);
+        self.metrics.inserts += 1;
+        self.evict_to_budget();
+        true
+    }
+
+    /// Seed a recovered entry at the **current** epoch (the persistence
+    /// layer has already verified, via the graph fingerprint, that the
+    /// value describes the live graph). Counted under
+    /// [`StoreMetrics::restored`]; the byte budget applies as usual, so
+    /// restoring more than the budget holds simply evicts the
+    /// least-recently-restored surplus.
+    pub fn restore(&mut self, key: CanonKey, value: V) {
+        self.put(key, value);
+        self.metrics.restored += 1;
+        self.evict_to_budget();
+    }
+
+    /// Live entries in least-recently-used-first order — the order a
+    /// snapshot should be written in, so that restoring entries in
+    /// sequence rebuilds the same recency ranking.
+    pub fn entries(&self) -> Vec<(CanonKey, V)> {
+        let mut es: Vec<(&CanonKey, &Entry<V>)> = self.map.iter().collect();
+        es.sort_by_key(|(_, e)| e.last_used);
+        es.into_iter().map(|(k, e)| (*k, e.value.clone())).collect()
+    }
+
+    fn put(&mut self, key: CanonKey, value: V) {
         let bytes = value.weight_bytes() + ENTRY_OVERHEAD;
         self.tick += 1;
         if let Some(old) = self.map.insert(
@@ -157,8 +214,6 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
             self.metrics.bytes -= old.bytes;
         }
         self.metrics.bytes += bytes;
-        self.metrics.inserts += 1;
-        self.evict_to_budget();
     }
 
     /// Evict least-recently-used entries until the footprint fits the
@@ -255,6 +310,76 @@ mod tests {
         assert_eq!(s.get(&key(1), 0), Some(9), "sole entry survives any budget");
         s.insert(key(2), 0, 8);
         assert_eq!(s.len(), 1, "second entry forces eviction down to one");
+    }
+
+    #[test]
+    fn eviction_boundary_is_inclusive_and_ties_break_by_recency() {
+        // satellite: exact byte-budget ties. Every i128 entry weighs the
+        // same, so a budget of exactly 3 entries sits precisely on the
+        // boundary after the third insert.
+        let per = 16 + ENTRY_OVERHEAD;
+        let mut s: ResultStore<i128> = ResultStore::new(3 * per);
+        s.insert(key(1), 0, 1);
+        s.insert(key(2), 0, 2);
+        s.insert(key(3), 0, 3);
+        assert_eq!(s.metrics().bytes, 3 * per, "exactly at budget");
+        assert_eq!(s.metrics().evictions, 0, "budget is inclusive: no eviction at ==");
+        assert_eq!(s.len(), 3);
+        // all three tie on weight; recency alone picks the victim. Touch
+        // 1 then 3, leaving 2 as the unique LRU entry.
+        assert_eq!(s.get(&key(1), 0), Some(1));
+        assert_eq!(s.get(&key(3), 0), Some(3));
+        s.insert(key(4), 0, 4);
+        assert_eq!(s.metrics().evictions, 1, "one over budget evicts exactly one");
+        assert_eq!(s.get(&key(2), 0), None, "the least-recently-used tie loser goes");
+        assert_eq!(s.get(&key(1), 0), Some(1));
+        assert_eq!(s.get(&key(3), 0), Some(3));
+        assert_eq!(s.get(&key(4), 0), Some(4));
+        assert_eq!(s.metrics().bytes, 3 * per, "back on the boundary");
+        // re-inserting an existing key at the boundary replaces in place:
+        // no eviction, no footprint change
+        s.insert(key(4), 0, 44);
+        assert_eq!(s.metrics().evictions, 1);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn restore_seeds_entries_and_entries_orders_by_recency() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.restore(key(1), 10);
+        s.restore(key(2), 20);
+        let m = s.metrics();
+        assert_eq!((m.restored, m.inserts), (2, 0), "restores are not inserts");
+        assert_eq!(s.get(&key(1), 0), Some(10), "restored entries serve epoch 0");
+        // entries(): LRU first — key(2) was restored after key(1), but the
+        // get above made key(1) the most recent
+        let es = s.entries();
+        assert_eq!(es, vec![(key(2), 20), (key(1), 10)]);
+        // snapshot → restore round trip preserves values and recency
+        let mut t: ResultStore<i128> = ResultStore::new(1 << 20);
+        for (k, v) in es {
+            t.restore(k, v);
+        }
+        assert_eq!(t.entries(), s.entries());
+        // the budget applies to restores too
+        let per = 16 + ENTRY_OVERHEAD;
+        let mut small: ResultStore<i128> = ResultStore::new(per);
+        small.restore(key(1), 1);
+        small.restore(key(2), 2);
+        assert_eq!(small.len(), 1, "restore respects the byte budget");
+        assert_eq!(small.get(&key(2), 0), Some(2), "most recent restore survives");
+    }
+
+    #[test]
+    fn persist_value_codec_roundtrip() {
+        for v in [0i128, 1, -1, i128::MAX, i128::MIN, 123_456_789_012_345] {
+            let mut bytes = Vec::new();
+            v.encode(&mut bytes);
+            assert_eq!(bytes.len(), 16);
+            assert_eq!(i128::decode(&bytes), Some(v));
+        }
+        assert_eq!(i128::decode(&[1, 2, 3]), None, "short buffers fail cleanly");
+        assert_eq!(i128::decode(&[0u8; 17]), None, "long buffers fail cleanly");
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Crash-recovery integration tests for the durable result store
+//! (`rust/src/service/persist/`).
+//!
+//! The contract under test: a persisted-then-restarted service serves a
+//! previously-seen batch with **zero executed bases**, while recovery
+//! against a truncated WAL (a kill between records), a bit-flipped
+//! record, a corrupted snapshot, or a different/mutated graph silently
+//! degrades to a *colder* store — never a panic, and never an answer that
+//! differs from a cold engine's on the live graph.
+
+use morphmine::graph::generators::erdos_renyi;
+use morphmine::graph::{DataGraph, DynGraph};
+use morphmine::morph::{self, Policy};
+use morphmine::pattern::Pattern;
+use morphmine::service::persist::{self, snapshot, wal, Persistence};
+use morphmine::service::{PersistConfig, PersistOpts, Service, ServiceConfig};
+use morphmine::util::proptest;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mm_itest_persist_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn config(dir: &Path, opts: PersistOpts) -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        threads: 2,
+        policy: Policy::Naive,
+        fused: true,
+        cache_bytes: 8 << 20,
+        persist: Some(PersistConfig {
+            dir: dir.to_path_buf(),
+            opts,
+        }),
+    }
+}
+
+/// WAL-only persistence: never compacts, so the log holds every record.
+fn wal_only() -> PersistOpts {
+    PersistOpts {
+        snapshot_every: usize::MAX,
+        compact_on_drop: false,
+    }
+}
+
+/// Unique-match counts for `patterns` via the cold (cache-free) engine.
+fn cold_counts(g: &DataGraph, patterns: &[Pattern]) -> Vec<u64> {
+    morph::engine::count_queries(g, patterns, Policy::Naive, 1)
+}
+
+/// Assert a restarted service's batch answers equal the cold engine's on
+/// `check`, whatever the store recovered.
+fn assert_answers_cold(svc: &Service, check: &DataGraph, batch: &[&str]) {
+    let r = svc.call(batch).expect("batch serves");
+    for q in &r.results {
+        let pats: Vec<Pattern> = q.counts.iter().map(|(p, _)| p.clone()).collect();
+        let got: Vec<u64> = q.counts.iter().map(|&(_, c)| c).collect();
+        assert_eq!(got, cold_counts(check, &pats), "query {}", q.query);
+    }
+}
+
+#[test]
+fn warm_restart_round_trip_executes_zero_bases() {
+    // acceptance criterion: persist → restart → previously-seen batch is
+    // served with zero executed bases and identical answers
+    let dir = tmp_dir("roundtrip");
+    let g = || erdos_renyi(60, 220, 0xD00D);
+    let batch = ["motifs:4", "cliques:3"];
+    let svc = Service::try_start(g(), config(&dir, PersistOpts::default())).unwrap();
+    let cold = svc.call(&batch).unwrap();
+    assert!(cold.stats.executed_bases > 0);
+    // single-writer guard: a second live service on the same directory is
+    // refused instead of interleaving WAL frames with this one
+    assert!(Service::try_start(g(), config(&dir, PersistOpts::default())).is_err());
+    drop(svc); // graceful shutdown → snapshot compaction
+    let svc = Service::try_start(g(), config(&dir, PersistOpts::default())).unwrap();
+    let rep = svc.recovery_report().expect("persistence configured");
+    assert!(rep.fingerprint_matched);
+    assert!(rep.snapshot_entries > 0, "graceful drop must have compacted");
+    assert_eq!(rep.wal_records, 0, "compaction resets the log");
+    let warm = svc.call(&batch).unwrap();
+    assert_eq!(warm.stats.executed_bases, 0, "{:?}", warm.stats);
+    assert_eq!(warm.stats.cached_bases, warm.stats.total_bases);
+    assert_eq!(cold.results, warm.results);
+    assert_eq!(svc.store_metrics().restored as usize, rep.restored);
+}
+
+#[test]
+fn wal_replay_without_snapshot_restarts_warm() {
+    let dir = tmp_dir("replay");
+    let g = || erdos_renyi(60, 220, 0x11AB);
+    let batch = ["motifs:4"];
+    let svc = Service::try_start(g(), config(&dir, wal_only())).unwrap();
+    let cold = svc.call(&batch).unwrap();
+    svc.call(&["cliques:4"]).unwrap(); // more records in the log
+    drop(svc);
+    assert!(!dir.join(snapshot::SNAPSHOT_FILE).exists(), "no compaction happened");
+    assert!(dir.join(wal::WAL_FILE).exists());
+    let svc = Service::try_start(g(), config(&dir, wal_only())).unwrap();
+    let rep = svc.recovery_report().unwrap();
+    assert_eq!(rep.snapshot_entries, 0);
+    assert!(rep.wal_records > 0 && rep.fingerprint_matched);
+    let warm = svc.call(&batch).unwrap();
+    assert_eq!(warm.stats.executed_bases, 0, "replayed store must serve warm");
+    assert_eq!(cold.results, warm.results);
+}
+
+#[test]
+fn kill_between_wal_records_recovers_a_correct_prefix() {
+    // build a WAL-only directory, then simulate a kill at EVERY byte
+    // offset of the log: recovery must never panic, and every recovered
+    // entry must carry the value the full log holds for that key
+    let dir = tmp_dir("kill");
+    let graph = erdos_renyi(50, 180, 0x516); // no relabeling on ER graphs
+    let fp = graph.fingerprint();
+    let svc = Service::try_start(graph.clone(), config(&dir, wal_only())).unwrap();
+    svc.call(&["motifs:4", "cliques:3"]).unwrap();
+    drop(svc);
+    let full_bytes = std::fs::read(dir.join(wal::WAL_FILE)).unwrap();
+    let (_, full_entries, full_rep) =
+        Persistence::<i128>::open(&dir, fp, wal_only()).expect("full recovery");
+    assert!(full_rep.fingerprint_matched && !full_entries.is_empty());
+    // the recovery probe itself must not disturb the log
+    assert_eq!(std::fs::read(dir.join(wal::WAL_FILE)).unwrap(), full_bytes);
+
+    let cut_dir = tmp_dir("kill_cut");
+    for cut in 0..=full_bytes.len() {
+        std::fs::write(cut_dir.join(wal::WAL_FILE), &full_bytes[..cut]).unwrap();
+        let (_, entries, rep) =
+            Persistence::<i128>::open(&cut_dir, fp, wal_only()).expect("truncated recovery");
+        assert!(entries.len() <= full_entries.len());
+        for (k, v) in &entries {
+            let expect = full_entries.iter().find(|(fk, _)| fk == k);
+            assert_eq!(expect.map(|(_, fv)| *fv), Some(*v), "cut={cut}");
+        }
+        assert!(rep.restored == entries.len());
+    }
+
+    // a service restart on a mid-log prefix recomputes the missing tail
+    // and still answers exactly like the cold engine
+    let cut = full_bytes.len() * 2 / 3;
+    std::fs::write(cut_dir.join(wal::WAL_FILE), &full_bytes[..cut]).unwrap();
+    let _ = std::fs::remove_file(cut_dir.join(snapshot::SNAPSHOT_FILE));
+    let svc = Service::try_start(graph.clone(), config(&cut_dir, wal_only())).unwrap();
+    assert_answers_cold(&svc, &graph, &["motifs:4", "cliques:3"]);
+}
+
+#[test]
+fn bit_flipped_wal_record_truncates_never_panics() {
+    let dir = tmp_dir("bitflip");
+    let graph = erdos_renyi(50, 180, 0xF11);
+    let svc = Service::try_start(graph.clone(), config(&dir, wal_only())).unwrap();
+    svc.call(&["motifs:3", "cliques:3"]).unwrap();
+    drop(svc);
+    let bytes = std::fs::read(dir.join(wal::WAL_FILE)).unwrap();
+    // flip one bit somewhere after the header frame, in the record region
+    let mut flipped = bytes.clone();
+    let at = 48.min(flipped.len() - 1);
+    flipped[at] ^= 0x20;
+    std::fs::write(dir.join(wal::WAL_FILE), &flipped).unwrap();
+    let insp = persist::inspect::<i128>(&dir);
+    assert!(insp.wal_truncated, "the flip must be detected");
+    let svc = Service::try_start(graph.clone(), config(&dir, wal_only())).unwrap();
+    let rep = svc.recovery_report().unwrap();
+    assert!(rep.wal_truncated);
+    // the truncation is physical: before any new record is appended, the
+    // log has been cut back to the clean prefix
+    assert!(std::fs::metadata(dir.join(wal::WAL_FILE)).unwrap().len() < bytes.len() as u64);
+    assert_answers_cold(&svc, &graph, &["motifs:3", "cliques:3"]);
+}
+
+#[test]
+fn corrupted_snapshot_falls_back_without_panic() {
+    let dir = tmp_dir("snapflip");
+    let graph = erdos_renyi(50, 180, 0x5A9);
+    let svc = Service::try_start(graph.clone(), config(&dir, PersistOpts::default())).unwrap();
+    svc.call(&["motifs:3"]).unwrap();
+    drop(svc); // compacts: snapshot + empty WAL
+    let snap_path = dir.join(snapshot::SNAPSHOT_FILE);
+    let mut bytes = std::fs::read(&snap_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x04;
+    std::fs::write(&snap_path, &bytes).unwrap();
+    let svc = Service::try_start(graph.clone(), config(&dir, PersistOpts::default())).unwrap();
+    let rep = svc.recovery_report().unwrap();
+    assert_eq!(rep.snapshot_entries, 0, "CRC must reject the whole image");
+    assert_eq!(rep.restored, 0, "post-compaction WAL is empty: cold");
+    assert_answers_cold(&svc, &graph, &["motifs:3"]);
+}
+
+#[test]
+fn restart_against_a_different_graph_degrades_to_cold() {
+    let dir = tmp_dir("othergraph");
+    let a = erdos_renyi(50, 180, 1);
+    let b = erdos_renyi(50, 180, 2); // same order, different wiring
+    let svc = Service::try_start(a, config(&dir, PersistOpts::default())).unwrap();
+    svc.call(&["motifs:4"]).unwrap();
+    drop(svc);
+    let svc = Service::try_start(b.clone(), config(&dir, PersistOpts::default())).unwrap();
+    let rep = svc.recovery_report().unwrap();
+    assert!(!rep.fingerprint_matched, "state for graph A is unservable on B");
+    assert_eq!(rep.restored, 0);
+    let r = svc.call(&["motifs:4"]).unwrap();
+    assert_eq!(
+        r.stats.executed_bases, r.stats.total_bases,
+        "everything recomputes against the new graph"
+    );
+    assert_answers_cold(&svc, &b, &["motifs:3"]);
+    drop(svc);
+    // the directory is retargeted to B: a second restart on B is warm
+    let svc = Service::try_start(b.clone(), config(&dir, PersistOpts::default())).unwrap();
+    assert!(svc.recovery_report().unwrap().fingerprint_matched);
+    let warm = svc.call(&["motifs:4"]).unwrap();
+    assert_eq!(warm.stats.executed_bases, 0);
+}
+
+#[test]
+fn restart_against_a_mutated_graph_matches_by_content() {
+    // mutate the graph THROUGH the service (epoch bump → WAL invalidation
+    // + re-inserts under the post-mutation fingerprint), then restart on
+    // graphs of both contents: only the matching one recovers warm
+    let dir = tmp_dir("mutated");
+    let g0 = erdos_renyi(40, 140, 0xE70);
+    let mut mirror = DynGraph::from_data_graph(&g0);
+    let svc = Service::try_start(g0.clone(), config(&dir, PersistOpts::default())).unwrap();
+    svc.call(&["motifs:3"]).unwrap();
+    let (u, v) = (0..40u32)
+        .flat_map(|x| (0..40u32).map(move |y| (x, y)))
+        .find(|&(x, y)| x < y && !mirror.has_edge(x, y))
+        .expect("sparse graph has a non-edge");
+    assert!(svc.insert_edge(u, v).unwrap());
+    assert!(mirror.insert_edge(u, v));
+    let mutated = svc.call(&["motifs:3"]).unwrap(); // persists under the mutated fingerprint
+    drop(svc);
+
+    // restart on the ORIGINAL graph: the disk state describes the mutated
+    // content, so it must not serve
+    let svc = Service::try_start(g0.clone(), config(&dir, PersistOpts::default())).unwrap();
+    assert!(!svc.recovery_report().unwrap().fingerprint_matched);
+    assert_answers_cold(&svc, &g0, &["motifs:3"]);
+    drop(svc);
+
+    // rebuild the mutated dir state (the original-graph restart above
+    // retargeted it), then restart on the mutated content: warm
+    let dir2 = tmp_dir("mutated2");
+    let svc = Service::try_start(g0.clone(), config(&dir2, PersistOpts::default())).unwrap();
+    assert!(svc.insert_edge(u, v).unwrap());
+    let again = svc.call(&["motifs:3"]).unwrap();
+    assert_eq!(again.results, mutated.results);
+    drop(svc);
+    let snapshot_of_mutated = mirror.to_data_graph("mutated");
+    let svc =
+        Service::try_start(snapshot_of_mutated.clone(), config(&dir2, PersistOpts::default()))
+            .unwrap();
+    let rep = svc.recovery_report().unwrap();
+    assert!(rep.fingerprint_matched, "content matches the mutated graph");
+    assert!(rep.restored > 0);
+    let warm = svc.call(&["motifs:3"]).unwrap();
+    assert_eq!(warm.stats.executed_bases, 0);
+    assert_eq!(warm.results, mutated.results);
+    assert_answers_cold(&svc, &snapshot_of_mutated, &["motifs:3"]);
+}
+
+#[test]
+fn prop_random_corruption_never_panics_and_never_lies() {
+    // property: persist a batch, corrupt the directory at random (truncate
+    // the WAL at a random offset, flip a random byte in WAL or snapshot,
+    // or leave it intact), restart — the service must start, and answers
+    // must equal the cold engine's on the live graph
+    let dir = tmp_dir("prop");
+    proptest::check(0x9E51, 10, |rng| {
+        let seed = rng.below(1 << 30);
+        let graph = erdos_renyi(36, 120, seed);
+        let batches: [&[&str]; 3] =
+            [&["motifs:3"], &["motifs:3", "cliques:3"], &["match:wedge,triangle"]];
+        let batch = batches[rng.below_usize(batches.len())];
+        let opts = if rng.chance(0.5) { wal_only() } else { PersistOpts::default() };
+        let _ = std::fs::remove_dir_all(&dir);
+        let svc = Service::try_start(graph.clone(), config(&dir, opts)).unwrap();
+        svc.call(batch).expect("seed batch");
+        drop(svc);
+        // random corruption
+        for name in [wal::WAL_FILE, snapshot::SNAPSHOT_FILE] {
+            let p = dir.join(name);
+            let Ok(mut bytes) = std::fs::read(&p) else { continue };
+            if bytes.is_empty() {
+                continue;
+            }
+            match rng.below(3) {
+                0 => {
+                    let cut = rng.below_usize(bytes.len() + 1);
+                    bytes.truncate(cut);
+                    std::fs::write(&p, &bytes).unwrap();
+                }
+                1 => {
+                    let at = rng.below_usize(bytes.len());
+                    bytes[at] ^= 1 << rng.below(8);
+                    std::fs::write(&p, &bytes).unwrap();
+                }
+                _ => {}
+            }
+        }
+        let svc = Service::try_start(graph.clone(), config(&dir, opts)).unwrap();
+        assert_answers_cold(&svc, &graph, batch);
+    });
+}

@@ -19,6 +19,7 @@ fn naive_service(graph: DataGraph, workers: usize, threads: usize) -> Service {
             policy: Policy::Naive,
             fused: true,
             cache_bytes: 8 << 20,
+            persist: None,
         },
     )
 }
