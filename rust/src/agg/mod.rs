@@ -59,8 +59,23 @@ pub fn aggregate_pattern<A: Aggregation>(
     agg: &A,
     threads: usize,
 ) -> A::Value {
+    aggregate_pattern_range(graph, pattern, agg, threads, 0, graph.num_vertices() as u32)
+}
+
+/// [`aggregate_pattern`] restricted to first-level vertices in `[lo, hi)`.
+/// Symmetrization distributes over `⊕`, so per-range values over a disjoint
+/// cover of `0..|V|` combine to the full value — the partial-aggregation
+/// contract the distributed driver ([`crate::shard`]) merges under.
+pub fn aggregate_pattern_range<A: Aggregation>(
+    graph: &DataGraph,
+    pattern: &Pattern,
+    agg: &A,
+    threads: usize,
+    lo: u32,
+    hi: u32,
+) -> A::Value {
     let plan = Plan::compile(pattern);
-    let canon = aggregate_canonical(graph, &plan, agg, threads);
+    let canon = aggregate_canonical_range(graph, &plan, agg, threads, lo, hi);
     symmetrize(pattern, agg, &canon)
 }
 
@@ -75,11 +90,27 @@ pub fn aggregate_patterns_fused<A: Aggregation>(
     agg: &A,
     threads: usize,
 ) -> Vec<A::Value> {
+    aggregate_patterns_fused_range(graph, fused, agg, threads, 0, graph.num_vertices() as u32)
+}
+
+/// [`aggregate_patterns_fused`] restricted to first-level vertices in
+/// `[lo, hi)` — the fused counterpart of [`aggregate_pattern_range`], with
+/// the same disjoint-cover summation contract per pattern.
+pub fn aggregate_patterns_fused_range<A: Aggregation>(
+    graph: &DataGraph,
+    fused: &crate::plan::fused::FusedPlan,
+    agg: &A,
+    threads: usize,
+    lo: u32,
+    hi: u32,
+) -> Vec<A::Value> {
     let n_pat = fused.num_patterns();
-    let (vals, _) = crate::exec::fused::par_fused_run(
+    let (vals, _) = crate::exec::fused::par_fused_run_range(
         graph,
         fused,
         threads,
+        lo,
+        hi,
         || {
             let accs: Vec<A::Value> = (0..n_pat).map(|_| agg.identity()).collect();
             let scratch = vec![0 as VertexId; crate::pattern::MAX_PATTERN_VERTICES];
@@ -116,12 +147,28 @@ pub fn aggregate_canonical<A: Aggregation>(
     agg: &A,
     threads: usize,
 ) -> A::Value {
+    aggregate_canonical_range(graph, plan, agg, threads, 0, graph.num_vertices() as u32)
+}
+
+/// [`aggregate_canonical`] restricted to first-level vertices in
+/// `[lo, hi)` — the one copy of the positions→pattern-vertices remap all
+/// per-pattern aggregation goes through.
+pub fn aggregate_canonical_range<A: Aggregation>(
+    graph: &DataGraph,
+    plan: &Plan,
+    agg: &A,
+    threads: usize,
+    lo: u32,
+    hi: u32,
+) -> A::Value {
     let order = &plan.order;
     let n = order.len();
-    crate::exec::parallel::par_run(
+    crate::exec::parallel::par_run_range(
         graph,
         plan,
         threads,
+        lo,
+        hi,
         || (agg.identity(), vec![0 as VertexId; n]),
         |(acc, scratch), m| {
             // positions → pattern vertices

@@ -31,6 +31,10 @@
 //!   through the persistence layer, including recovery latencies
 //!   (written to `BENCH_persist.json`, path overridable via
 //!   `MM_PERSIST_JSON`).
+//! * **A10 — first-level sharding**: one batch through a coordinator over
+//!   1/2/4 local shard workers vs the single-process service, answers
+//!   asserted identical (written to `BENCH_shard.json`, path overridable
+//!   via `MM_SHARD_JSON`).
 //!
 //! JSON reports go through [`write_rows_json`]: a payload with zero
 //! measured rows (a placeholder) is loudly warned about and never
@@ -733,6 +737,102 @@ pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) 
     write_rows_json(out, &json, rows.len())
 }
 
+/// A10: distributed first-level sharding — 1/2/4-shard scaling.
+pub fn ablation_shard(scale: Scale, threads: usize) -> Result<()> {
+    let out = std::env::var("MM_SHARD_JSON").unwrap_or_else(|_| "BENCH_shard.json".into());
+    ablation_shard_to(scale, threads, std::path::Path::new(&out))
+}
+
+/// [`ablation_shard`] with an explicit JSON output path (see
+/// [`ablation_fused_to`] for why tests avoid the env override).
+///
+/// Per dataset: one single-process baseline batch through the service
+/// pipeline, then the same batch through a [`ShardCoordinator`] over 1, 2
+/// and 4 local worker processes-in-threads. Answers are asserted **equal**
+/// to the baseline (the summed partials are exact); the JSON records
+/// wall-clock per shard count. Workers here share the host's cores with
+/// the coordinator, so tiny-scale "speedups" mostly measure protocol +
+/// fan-out overhead — run at `--scale medium` on real hardware (ideally
+/// with remote workers) for the scaling story.
+pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) -> Result<()> {
+    use crate::service::{QueryPlanner, Service, ServiceConfig};
+    use crate::shard::{ShardCoordinator, ShardWorker, WorkerConfig};
+    println!("\n### A10 — first-level sharding (coordinator + N local workers)\n");
+    println!("| graph | shards | batch (s) | vs single process | partials merged |");
+    println!("|-------|--------|-----------|-------------------|-----------------|");
+    let batch = ["motifs:4", "match:cycle4,diamond-vi"];
+    let mut rows: Vec<String> = Vec::new();
+    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
+        // single-process baseline through the same service pipeline
+        let svc = Service::start(
+            d.generate(scale),
+            ServiceConfig {
+                workers: 1,
+                threads,
+                policy: Policy::Naive, // deterministic alternative sets
+                fused: true,
+                cache_bytes: 64 << 20,
+                persist: None,
+            },
+        );
+        let (single, t_single) = time(|| svc.call(&batch).expect("baseline batch"));
+        drop(svc);
+        for shards in [1usize, 2, 4] {
+            let workers: Vec<ShardWorker> = (0..shards)
+                .map(|_| {
+                    ShardWorker::bind(
+                        d.generate(scale),
+                        "127.0.0.1:0",
+                        WorkerConfig {
+                            threads,
+                            fused: true,
+                            cache_bytes: 64 << 20,
+                            persist: None,
+                        },
+                    )
+                    .expect("bind shard worker")
+                })
+                .collect();
+            let addrs: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+            let planner = QueryPlanner::new(Policy::Naive, true, threads);
+            let mut coord =
+                ShardCoordinator::connect(d.generate(scale), &addrs, planner, 64 << 20)?;
+            let (resp, t) = time(|| coord.call(&batch).expect("sharded batch"));
+            assert_eq!(
+                resp.results,
+                single.results,
+                "{}: sharded answers must equal single-process answers",
+                d.code()
+            );
+            assert_eq!(resp.stats.remote_bases, resp.stats.executed_bases);
+            let m = coord.shard_metrics();
+            let speedup = t_single / t.max(1e-9);
+            println!(
+                "| {} | {shards} | {t:.3} | {speedup:.2}× | {} |",
+                d.code(),
+                m.partials_merged
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{}\", \"shards\": {shards}, \"batch_s\": {t:.6}, \"single_process_s\": {t_single:.6}, \"speedup_vs_single\": {speedup:.3}, \"total_bases\": {}, \"remote_bases\": {}, \"partials_merged\": {}, \"remote_cached\": {}}}",
+                d.code(),
+                resp.stats.total_bases,
+                resp.stats.remote_bases,
+                m.partials_merged,
+                m.remote_cached,
+            ));
+            drop(coord);
+            for w in workers {
+                w.shutdown();
+            }
+        }
+    }
+    let json = format!(
+        "{{\n  \"experiment\": \"shard_first_level_scaling\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    write_rows_json(out, &json, rows.len())
+}
+
 /// A9: durable result store — cold vs warm-restart vs replay-heavy.
 pub fn ablation_persist(scale: Scale, threads: usize) -> Result<()> {
     let out = std::env::var("MM_PERSIST_JSON").unwrap_or_else(|_| "BENCH_persist.json".into());
@@ -800,6 +900,7 @@ pub fn ablation_persist_to(scale: Scale, threads: usize, out: &std::path::Path) 
         let heavy = PersistOpts {
             snapshot_every: usize::MAX,
             compact_on_drop: false,
+            fsync_every: None,
         };
         let svc = Service::try_start(d.generate(scale), config(heavy))?;
         svc.call(&batch_a).expect("replay seed batch");
@@ -857,7 +958,8 @@ pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     ablation_fused(scale, threads)?;
     ablation_kernels(scale, threads)?;
     ablation_service(scale, threads)?;
-    ablation_persist(scale, threads)
+    ablation_persist(scale, threads)?;
+    ablation_shard(scale, threads)
 }
 
 #[cfg(test)]
@@ -917,6 +1019,18 @@ mod tests {
         assert!(body.contains("service_result_cache"));
         assert!(body.contains("\"batch\": \"warm\""));
         assert!(body.contains("\"batch\": \"overlap\""));
+        assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
+    }
+
+    #[test]
+    fn shard_ablation_smoke() {
+        // asserts sharded == single-process answers inside, across 1/2/4
+        // local workers; explicit temp output path
+        let out = std::env::temp_dir().join("mm_bench_shard_smoke.json");
+        ablation_shard_to(Scale::Tiny, 2, &out).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("shard_first_level_scaling"));
+        assert!(body.contains("\"shards\": 4"));
         assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
     }
 

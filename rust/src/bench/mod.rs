@@ -13,6 +13,7 @@
 //! | `kernels`  | A7 — kernel tiers × representation | [`ablations::ablation_kernels`] |
 //! | `service`  | A8 — service result cache (cold/warm/overlap) | [`ablations::ablation_service`] |
 //! | `persist`  | A9 — durable store (cold/warm-restart/replay) | [`ablations::ablation_persist`] |
+//! | `shard`    | A10 — first-level sharding (1/2/4 workers) | [`ablations::ablation_shard`] |
 //!
 //! Reports are printed as markdown; EXPERIMENTS.md records a run.
 
@@ -59,6 +60,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
         "kernels" => ablations::ablation_kernels(scale, threads),
         "service" => ablations::ablation_service(scale, threads),
         "persist" => ablations::ablation_persist(scale, threads),
+        "shard" => ablations::ablation_shard(scale, threads),
         "ablations" => ablations::run_all(scale, threads),
         "all" => {
             table2(scale)?;
@@ -70,7 +72,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
             ablations::run_all(scale, threads)
         }
         other => bail!(
-            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|ablations|all)"
+            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations|all)"
         ),
     }
 }

@@ -7,11 +7,12 @@
 //! morphmine cliques --graph <spec> [--k 4]
 //! morphmine census  --graph <spec> [--artifacts artifacts]
 //! morphmine gen     --dataset mico[:scale] --out <path>
-//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|ablations] [--scale tiny|small|medium]
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--assert-warm-hits]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>]
-//! morphmine store   <inspect|compact|purge> --dir <dir>
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…] [--assert-warm-hits]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…]
+//! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N]
+//! morphmine store   <inspect|compact|purge|verify> --dir <dir> [--graph <spec>]
 //! ```
 //!
 //! Graph specs: dataset names (`mico`, `patents`, `youtube`, `orkut`,
@@ -28,10 +29,22 @@
 //!
 //! `--persist <dir>` makes the result store durable (WAL + snapshots, see
 //! [`crate::service::persist`]): a restart against the same graph content
-//! recovers warm; against different content it recovers cold. `store`
-//! operates on such a directory offline: `inspect` prints what recovery
-//! would find, `compact` folds the WAL into one snapshot, `purge` deletes
-//! the persisted files.
+//! recovers warm; against different content it recovers cold.
+//! `--fsync-every N` additionally syncs the WAL every `N` records for
+//! power-loss durability (default: flush-only). `store` operates on such
+//! a directory offline: `inspect` prints what recovery would find,
+//! `compact` folds the WAL into one snapshot, `purge` deletes the
+//! persisted files, and `verify --graph <spec>` checks whether the
+//! directory's state would recover warm for that graph — without starting
+//! a service (exits nonzero on a mismatch).
+//!
+//! Sharded mode ([`crate::shard`]): start `shard-worker` processes, each
+//! loading the **same** graph spec, then point `batch`/`serve` at them
+//! with `--shards host:port,host:port,…`. The coordinator fans each
+//! batch's missing base patterns out — one contiguous first-level slice
+//! per worker — and sums the exact per-slice partial counts; answers are
+//! identical to single-process runs. Edge updates are rejected in sharded
+//! serve (the workers' graph copies are immutable).
 
 use crate::coordinator::{Config, Coordinator};
 use crate::graph::io::load_spec;
@@ -52,7 +65,7 @@ pub struct Args {
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         if argv.is_empty() {
-            bail!("usage: morphmine <motifs|match|fsm|cliques|census|gen|bench|info|batch|serve|store> [--flags]\nsee `morphmine help`");
+            bail!("usage: morphmine <motifs|match|fsm|cliques|census|gen|bench|info|batch|serve|shard-worker|store> [--flags]\nsee `morphmine help`");
         }
         let cmd = argv[0].clone();
         let mut pos = Vec::new();
@@ -124,6 +137,24 @@ fn fused_of(args: &Args) -> Result<bool> {
     }
 }
 
+/// Durable-store config from `--persist <dir>` + `--fsync-every N`.
+fn persist_of(args: &Args) -> Result<Option<PersistConfig>> {
+    let Some(dir) = args.get("persist") else {
+        ensure!(
+            args.get("fsync-every").is_none(),
+            "--fsync-every needs --persist <dir> (there is no WAL to sync without one)"
+        );
+        return Ok(None);
+    };
+    let mut pc = PersistConfig::new(dir);
+    if args.get("fsync-every").is_some() {
+        let n: u32 = args.parse_num("fsync-every", 1u32)?;
+        ensure!(n >= 1, "--fsync-every must be ≥ 1");
+        pc.opts.fsync_every = Some(n);
+    }
+    Ok(Some(pc))
+}
+
 fn service_of(args: &Args) -> Result<Service> {
     let spec = args
         .get("graph")
@@ -135,7 +166,7 @@ fn service_of(args: &Args) -> Result<Service> {
         policy: policy_of(args)?,
         fused: fused_of(args)?,
         cache_bytes: args.parse_num("cache-mb", 64usize)? << 20,
-        persist: args.get("persist").map(PersistConfig::new),
+        persist: persist_of(args)?,
     };
     let svc = Service::try_start(graph, config)?;
     if let Some(r) = svc.recovery_report() {
@@ -145,6 +176,46 @@ fn service_of(args: &Args) -> Result<Service> {
         );
     }
     Ok(svc)
+}
+
+/// Sharded coordinator from `--shards a1,a2,…` (used by `batch`/`serve`).
+fn shard_coordinator_of(args: &Args, addrs: &str) -> Result<crate::shard::ShardCoordinator> {
+    let spec = args
+        .get("graph")
+        .context("missing --graph <dataset[:scale] | path>")?;
+    let graph = load_spec(spec)?;
+    ensure!(
+        args.get("persist").is_none(),
+        "--persist applies to shard workers in sharded mode: run \
+         `morphmine shard-worker --persist <dir>` on each worker instead"
+    );
+    ensure!(
+        args.get("fsync-every").is_none(),
+        "--fsync-every applies to shard workers in sharded mode: pass it to \
+         `morphmine shard-worker` alongside --persist instead"
+    );
+    let addrs: Vec<String> = addrs
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let planner = crate::service::QueryPlanner::new(
+        policy_of(args)?,
+        fused_of(args)?,
+        args.parse_num("threads", crate::exec::parallel::default_threads())?,
+    );
+    let cache_bytes = args.parse_num("cache-mb", 64usize)? << 20;
+    let coord = crate::shard::ShardCoordinator::connect(graph, &addrs, planner, cache_bytes)?;
+    println!("sharded across {} workers: {}", coord.num_shards(), addrs.join(", "));
+    Ok(coord)
+}
+
+fn print_shard_metrics(coord: &crate::shard::ShardCoordinator) {
+    let m = coord.shard_metrics();
+    println!(
+        "shards: requests={} bases_sent={} partials_merged={} remote_cached={} errors={}",
+        m.requests, m.bases_sent, m.partials_merged, m.remote_cached, m.errors
+    );
 }
 
 fn print_batch(r: &BatchResponse) {
@@ -278,7 +349,6 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             crate::bench::run_experiment(&exp, scale, threads)?;
         }
         "batch" => {
-            let svc = service_of(&args)?;
             let spec = args.get("queries").context("missing --queries q1;q2;…")?;
             let texts: Vec<&str> = spec
                 .split(';')
@@ -288,14 +358,35 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             ensure!(!texts.is_empty(), "--queries must name at least one query");
             let repeat = args.parse_num("repeat", 1usize)?.max(1);
             let mut last = None;
+            // either the in-process service or the sharded coordinator —
+            // answers are identical, only who matches the bases differs
+            let mut coord = match args.get("shards") {
+                Some(addrs) => Some(shard_coordinator_of(&args, addrs)?),
+                None => None,
+            };
+            let svc = match &coord {
+                Some(_) => None,
+                None => Some(service_of(&args)?),
+            };
             for round in 1..=repeat {
                 let t = crate::util::timer::Timer::start();
-                let r = svc.call(&texts)?;
+                let r = match (&mut coord, &svc) {
+                    (Some(c), _) => c.call(&texts)?,
+                    (None, Some(s)) => s.call(&texts)?,
+                    (None, None) => unreachable!("one of the two paths is built"),
+                };
                 println!("batch {round}/{repeat}: elapsed {:.3}s", t.secs());
                 print_batch(&r);
                 last = Some(r.stats);
             }
-            let m = svc.store_metrics();
+            let m = match (&coord, &svc) {
+                (Some(c), _) => {
+                    print_shard_metrics(c);
+                    c.store_metrics()
+                }
+                (None, Some(s)) => s.store_metrics(),
+                (None, None) => unreachable!(),
+            };
             println!(
                 "store: hits={} misses={} inserts={} evictions={} invalidations={} bytes={}",
                 m.hits, m.misses, m.inserts, m.evictions, m.invalidations, m.bytes
@@ -317,7 +408,79 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 println!("warm-cache assertion passed ({} hits)", m.hits);
             }
         }
+        "shard-worker" => {
+            let spec = args
+                .get("graph")
+                .context("missing --graph <dataset[:scale] | path>")?;
+            let graph = load_spec(spec)?;
+            let listen = args
+                .get("listen")
+                .context("missing --listen <addr:port> (port 0 picks an ephemeral port)")?;
+            let config = crate::shard::WorkerConfig {
+                threads: args.parse_num("threads", crate::exec::parallel::default_threads())?,
+                fused: fused_of(&args)?,
+                cache_bytes: args.parse_num("cache-mb", 64usize)? << 20,
+                persist: persist_of(&args)?,
+            };
+            let worker = crate::shard::ShardWorker::bind(graph, listen, config)?;
+            // killing the process skips the graceful-shutdown compaction
+            // (no signal handler in a std-only crate): with --persist the
+            // WAL is flushed per record, so the next start replays it
+            // instead of loading one snapshot — slower, never colder, and
+            // the dead owner's dir lock is reclaimed automatically on
+            // Linux. `store compact --dir <dir>` folds the log offline.
+            println!(
+                "shard worker listening on {} ({}) — stop by killing the process \
+                 (restart replays the WAL; `morphmine store compact` folds it offline)",
+                worker.addr(),
+                worker.fingerprint()
+            );
+            worker.wait();
+        }
         "serve" => {
+            if let Some(addrs) = args.get("shards") {
+                let mut coord = shard_coordinator_of(&args, addrs)?;
+                println!(
+                    "morphmine sharded service ready ({} workers). One batch per line, queries separated by ';' — `quit` exits",
+                    coord.num_shards()
+                );
+                let stdin = std::io::stdin();
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    if stdin.read_line(&mut line)? == 0 {
+                        break; // EOF
+                    }
+                    let text = line.trim();
+                    if text.is_empty() {
+                        continue;
+                    }
+                    if text == "quit" || text == "exit" {
+                        break;
+                    }
+                    if text.starts_with('+') || text.starts_with('-') {
+                        eprintln!(
+                            "error: edge updates are not supported in sharded mode — the \
+                             workers' graph copies are immutable (restart the cluster on the \
+                             new graph instead)"
+                        );
+                        continue;
+                    }
+                    let texts: Vec<&str> = text
+                        .split(';')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .collect();
+                    match coord.call(&texts) {
+                        Ok(r) => {
+                            print_batch(&r);
+                            print_shard_metrics(&coord);
+                        }
+                        Err(e) => eprintln!("error: {e:#}"),
+                    }
+                }
+                return Ok(());
+            }
             let svc = service_of(&args)?;
             println!(
                 "morphmine service ready (epoch {}). One batch per line, queries separated by ';'",
@@ -386,19 +549,20 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             );
         }
         "help" | "--help" | "-h" => {
-            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info | batch | serve | store");
+            println!("see module docs: motifs | match | fsm | cliques | census | gen | bench | info | batch | serve | shard-worker | store");
         }
         other => bail!("unknown command {other:?} — try `morphmine help`"),
     }
     Ok(())
 }
 
-/// `morphmine store <inspect|compact|purge> --dir <path>` — offline
-/// maintenance of a persist directory (no graph, no service).
+/// `morphmine store <inspect|compact|purge|verify> --dir <path>` — offline
+/// maintenance of a persist directory (no service; only `verify` loads a
+/// graph, and only to fingerprint it).
 fn store_cmd(args: &Args) -> Result<()> {
     let action = args
         .pos(0)
-        .context("usage: morphmine store <inspect|compact|purge> --dir <path>")?;
+        .context("usage: morphmine store <inspect|compact|purge|verify> --dir <path>")?;
     if let Some(extra) = args.pos(1) {
         bail!("unexpected argument {extra:?} after store action {action:?}");
     }
@@ -440,7 +604,29 @@ fn store_cmd(args: &Args) -> Result<()> {
             let removed = persist::purge_dir(&dir)?;
             println!("purged {}: {removed} files removed", dir.display());
         }
-        other => bail!("unknown store action {other:?} (inspect|compact|purge)"),
+        "verify" => {
+            // offline fingerprint check: would a service over this graph
+            // recover the directory's state warm? No service is started.
+            let spec = args
+                .get("graph")
+                .context("store verify needs --graph <spec> to fingerprint against")?;
+            let graph = load_spec(spec)?;
+            let fp = graph.fingerprint();
+            let v = persist::verify_dir::<i128>(&dir, fp);
+            match v.stored {
+                Some(stored) => println!("stored:  {} entries for {stored}", v.entries),
+                None => println!("stored:  no usable state"),
+            }
+            println!("graph:   {fp}");
+            ensure!(
+                v.matched,
+                "MISMATCH: {} would recover COLD for this graph (state is for a different \
+                 or mutated graph, or there is none)",
+                dir.display()
+            );
+            println!("MATCH: a service over this graph recovers {} entries warm", v.entries);
+        }
+        other => bail!("unknown store action {other:?} (inspect|compact|purge|verify)"),
     }
     Ok(())
 }
@@ -536,6 +722,93 @@ mod tests {
         // every other command still rejects stray positionals fast
         assert!(Args::parse(&argv("bench persist")).is_err());
         assert!(Args::parse(&argv("motifs foo --graph mico:tiny")).is_err());
+    }
+
+    #[test]
+    fn run_sharded_batch_matches_single_process() {
+        // two in-process workers standing in for worker processes; the
+        // sharded batch must produce identical counts to the plain one
+        let load = || crate::graph::io::load_spec("mico:tiny").unwrap();
+        let worker = |g| {
+            crate::shard::ShardWorker::bind(
+                g,
+                "127.0.0.1:0",
+                crate::shard::WorkerConfig {
+                    threads: 2,
+                    fused: true,
+                    cache_bytes: 1 << 20,
+                    persist: None,
+                },
+            )
+            .unwrap()
+        };
+        let (a, b) = (worker(load()), worker(load()));
+        let shards = format!("{},{}", a.addr(), b.addr());
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3;cliques:3 --pmr naive --threads 2 \
+             --shards {shards} --repeat 2 --assert-warm-hits"
+        )))
+        .unwrap();
+        // --persist and --fsync-every belong on the workers in sharded mode
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --shards {shards} --persist /tmp/nope"
+        )))
+        .is_err());
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --shards {shards} --fsync-every 1"
+        )))
+        .is_err());
+        a.shutdown();
+        b.shutdown();
+        // dead workers fail the batch loudly, not silently
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --shards {shards}"
+        )))
+        .is_err());
+    }
+
+    #[test]
+    fn run_store_verify_checks_fingerprint() {
+        let dir = std::env::temp_dir().join("mm_cli_store_verify");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.display();
+        // nothing persisted yet: verify fails
+        assert!(run(argv(&format!("store verify --dir {d} --graph mico:tiny"))).is_err());
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 --workers 1 --persist {d}"
+        )))
+        .unwrap();
+        // right graph matches, wrong graph (different scale = content) fails
+        run(argv(&format!("store verify --dir {d} --graph mico:tiny"))).unwrap();
+        assert!(run(argv(&format!("store verify --dir {d} --graph patents:tiny"))).is_err());
+        assert!(run(argv(&format!("store verify --dir {d}"))).is_err(), "needs --graph");
+    }
+
+    #[test]
+    fn fsync_every_flag_is_validated() {
+        // --fsync-every without --persist is a usage error
+        assert!(run(argv(
+            "batch --graph mico:tiny --queries motifs:3 --fsync-every 1"
+        ))
+        .is_err());
+        let dir = std::env::temp_dir().join("mm_cli_fsync");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.display();
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --persist {d} --fsync-every 0"
+        )))
+        .is_err());
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 --workers 1 \
+             --persist {d} --fsync-every 1"
+        )))
+        .unwrap();
+        // the synced store recovers warm like a flushed one
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 --workers 1 \
+             --persist {d} --assert-warm-hits"
+        )))
+        .unwrap();
     }
 
     #[test]

@@ -156,8 +156,32 @@ where
     A: Send,
     R: Fn(A, A) -> A,
 {
-    let n = graph.num_vertices() as u32;
-    let cursor = AtomicU32::new(0);
+    par_fused_run_range(graph, fused, threads, 0, graph.num_vertices() as u32, make, visit, reduce)
+}
+
+/// [`par_fused_run`] restricted to first-level vertices in `[lo, hi)`. Every
+/// fused pattern is still matched in full *within* the slice — each match is
+/// rooted at exactly one first-level vertex, so per-pattern results over a
+/// disjoint cover of `0..|V|` sum to the full-graph results (the
+/// [`crate::shard`] partitioning invariant; symmetry-breaking windows are
+/// untouched because they constrain deeper levels relative to the root).
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_run_range<A, R>(
+    graph: &DataGraph,
+    fused: &FusedPlan,
+    threads: usize,
+    lo: u32,
+    hi: u32,
+    make: impl Fn() -> A + Sync,
+    visit: impl Fn(&mut A, usize, &[VertexId]) + Sync,
+    reduce: R,
+) -> A
+where
+    A: Send,
+    R: Fn(A, A) -> A,
+{
+    let n = hi.min(graph.num_vertices() as u32);
+    let cursor = AtomicU32::new(lo);
     let threads = threads.max(1);
     let results = std::sync::Mutex::new(Vec::with_capacity(threads));
     std::thread::scope(|s| {
@@ -171,7 +195,7 @@ where
                     if start >= n {
                         break;
                     }
-                    let end = (start + CHUNK).min(n);
+                    let end = n.min(start.saturating_add(CHUNK));
                     for v in start..end {
                         ex.run_from(fused, v, &mut vis);
                     }
@@ -275,6 +299,43 @@ mod tests {
         }
         for threads in [1, 2, 4] {
             assert_eq!(fused_count_matches(&g, &fused, threads), seq, "x{threads}");
+        }
+    }
+
+    #[test]
+    fn fused_range_partitions_sum_to_full_counts() {
+        // the shard invariant on the fused path: per-pattern counts over a
+        // disjoint first-level cover sum to the full-graph counts
+        let g = erdos_renyi(500, 2500, 18);
+        let n = g.num_vertices() as u32;
+        let base = gen::connected_patterns(4);
+        let fused = FusedPlan::build(&base, None, &CostParams::counting());
+        let full = fused_count_matches(&g, &fused, 2);
+        for k in [2u32, 3, 5] {
+            let mut sum = vec![0u64; base.len()];
+            for i in 0..k {
+                let lo = (n as u64 * i as u64 / k as u64) as u32;
+                let hi = (n as u64 * (i + 1) as u64 / k as u64) as u32;
+                let part = par_fused_run_range(
+                    &g,
+                    &fused,
+                    2,
+                    lo,
+                    hi,
+                    || vec![0u64; fused.num_patterns()],
+                    |acc, i, _m| acc[i] += 1,
+                    |mut a, b| {
+                        for (x, y) in a.iter_mut().zip(b) {
+                            *x += y;
+                        }
+                        a
+                    },
+                );
+                for (s, p) in sum.iter_mut().zip(part) {
+                    *s += p;
+                }
+            }
+            assert_eq!(sum, full, "{k} ranges");
         }
     }
 

@@ -37,6 +37,26 @@
 //! sorted ascending — independent of which tiers served the operands.
 //! Label and injectivity filtering stay with the caller ([`accept`]), as
 //! they depend on per-executor emit semantics.
+//!
+//! Because every per-level set operation funnels through here, the two
+//! executors can be checked against each other end to end — the fused trie
+//! walk and one sweep per pattern must count identically, whatever tiers
+//! served the operands on this machine:
+//!
+//! ```
+//! use morphmine::exec::{count_matches, fused::fused_count_matches};
+//! use morphmine::graph::generators::erdos_renyi;
+//! use morphmine::pattern::catalog;
+//! use morphmine::plan::{cost::CostParams, fused::FusedPlan, Plan};
+//!
+//! let g = erdos_renyi(40, 120, 3);
+//! let base = vec![catalog::triangle(), catalog::path(3), catalog::cycle(4)];
+//! let fused = FusedPlan::build(&base, None, &CostParams::counting());
+//! let fused_counts = fused_count_matches(&g, &fused, 2);
+//! for (p, fc) in base.iter().zip(fused_counts) {
+//!     assert_eq!(fc, count_matches(&g, &Plan::compile(p)), "{p:?}");
+//! }
+//! ```
 
 use super::intersect;
 use crate::graph::{bitmap, DataGraph, VertexId};

@@ -2,6 +2,14 @@
 //! worker threads (`std::thread::scope`), with dynamic chunked work stealing
 //! via a shared atomic cursor — hub vertices make static partitions badly
 //! imbalanced in power-law graphs.
+//!
+//! Every driver also comes in a `_range` form that restricts the **first
+//! exploration level** to a contiguous vertex interval `[lo, hi)`. Because
+//! each match is rooted at exactly one first-level vertex, partitioning the
+//! first level partitions the match set: summing per-range results over a
+//! disjoint cover of `0..|V|` reproduces the full-graph result exactly.
+//! That property is what the distributed driver ([`crate::shard`]) builds
+//! on — a shard is nothing but a `_range` call on another process.
 
 use super::Executor;
 use crate::graph::{DataGraph, VertexId};
@@ -21,8 +29,19 @@ pub fn default_threads() -> usize {
 
 /// Count canonical matches in parallel.
 pub fn par_count_matches(graph: &DataGraph, plan: &Plan, threads: usize) -> u64 {
-    let n = graph.num_vertices() as u32;
-    let cursor = AtomicU32::new(0);
+    par_count_matches_range(graph, plan, threads, 0, graph.num_vertices() as u32)
+}
+
+/// [`par_count_matches`] restricted to first-level vertices in `[lo, hi)`.
+pub fn par_count_matches_range(
+    graph: &DataGraph,
+    plan: &Plan,
+    threads: usize,
+    lo: u32,
+    hi: u32,
+) -> u64 {
+    let hi = hi.min(graph.num_vertices() as u32);
+    let cursor = AtomicU32::new(lo);
     let total = AtomicU64::new(0);
     let threads = threads.max(1);
     std::thread::scope(|s| {
@@ -32,10 +51,10 @@ pub fn par_count_matches(graph: &DataGraph, plan: &Plan, threads: usize) -> u64 
                 let mut local = super::CountVisitor::default();
                 loop {
                     let start = cursor.fetch_add(CHUNK, Ordering::Relaxed);
-                    if start >= n {
+                    if start >= hi {
                         break;
                     }
-                    let end = (start + CHUNK).min(n);
+                    let end = hi.min(start.saturating_add(CHUNK));
                     for v in start..end {
                         ex.run_from(plan, v, &mut local);
                     }
@@ -64,8 +83,28 @@ where
     A: Send,
     R: Fn(A, A) -> A,
 {
-    let n = graph.num_vertices() as u32;
-    let cursor = AtomicU32::new(0);
+    par_run_range(graph, plan, threads, 0, graph.num_vertices() as u32, make, visit, reduce)
+}
+
+/// [`par_run`] restricted to first-level vertices in `[lo, hi)` (an empty
+/// interval yields `make()` untouched — the aggregation identity).
+#[allow(clippy::too_many_arguments)]
+pub fn par_run_range<A, R>(
+    graph: &DataGraph,
+    plan: &Plan,
+    threads: usize,
+    lo: u32,
+    hi: u32,
+    make: impl Fn() -> A + Sync,
+    visit: impl Fn(&mut A, &[VertexId]) + Sync,
+    reduce: R,
+) -> A
+where
+    A: Send,
+    R: Fn(A, A) -> A,
+{
+    let hi = hi.min(graph.num_vertices() as u32);
+    let cursor = AtomicU32::new(lo);
     let threads = threads.max(1);
     let results = std::sync::Mutex::new(Vec::with_capacity(threads));
     std::thread::scope(|s| {
@@ -76,10 +115,10 @@ where
                 let mut vis = |m: &[VertexId]| visit(&mut acc, m);
                 loop {
                     let start = cursor.fetch_add(CHUNK, Ordering::Relaxed);
-                    if start >= n {
+                    if start >= hi {
                         break;
                     }
-                    let end = (start + CHUNK).min(n);
+                    let end = hi.min(start.saturating_add(CHUNK));
                     for v in start..end {
                         ex.run_from(plan, v, &mut vis);
                     }
@@ -127,6 +166,30 @@ mod tests {
             par_count_matches(&g, &plan, 4),
             count_matches(&g, &plan)
         );
+    }
+
+    #[test]
+    fn range_partitions_sum_to_full_count() {
+        // the shard invariant: any disjoint cover of the first level sums
+        // to the full count, because each match roots at one vertex
+        let g = barabasi_albert(900, 5, 14);
+        let n = g.num_vertices() as u32;
+        for pat in [catalog::triangle(), catalog::cycle(4).vertex_induced()] {
+            let plan = Plan::compile(&pat);
+            let full = par_count_matches(&g, &plan, 2);
+            for k in [1u32, 2, 3, 7] {
+                let mut sum = 0;
+                for i in 0..k {
+                    let lo = (n as u64 * i as u64 / k as u64) as u32;
+                    let hi = (n as u64 * (i + 1) as u64 / k as u64) as u32;
+                    sum += par_count_matches_range(&g, &plan, 2, lo, hi);
+                }
+                assert_eq!(sum, full, "{pat:?} over {k} ranges");
+            }
+            // empty and clamped ranges are identities / safe
+            assert_eq!(par_count_matches_range(&g, &plan, 2, 5, 5), 0);
+            assert_eq!(par_count_matches_range(&g, &plan, 2, 0, u32::MAX), full);
+        }
     }
 
     #[test]

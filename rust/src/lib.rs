@@ -28,7 +28,12 @@
 //!   only the base patterns missing from the cache and composes the rest
 //!   through the morph algebra. With `--persist <dir>` the cache is
 //!   durable ([`service::persist`]): a WAL + snapshot store keyed by a
-//!   cross-process graph fingerprint, so restarts begin warm.
+//!   cross-process graph fingerprint, so restarts begin warm. The
+//!   [`shard`] layer scales the whole stack out across processes:
+//!   `morphmine shard-worker` serves first-level slices over a framed TCP
+//!   protocol and `batch|serve --shards <addr,…>` merges the exact
+//!   per-slice partial counts (see `docs/ARCHITECTURE.md` for the
+//!   layer-by-layer map).
 //! * **Layer 2 (python/compile/model.py)** — a dense adjacency-matrix motif
 //!   census written in JAX, AOT-lowered to HLO and executed from Rust via
 //!   PJRT ([`runtime`]). It encodes the same morphing equations in dense
@@ -50,6 +55,7 @@ pub mod pattern;
 pub mod plan;
 pub mod runtime;
 pub mod service;
+pub mod shard;
 pub mod util;
 
 pub use graph::DataGraph;

@@ -4,7 +4,7 @@
 
 use super::algebra::MorphExpr;
 use super::optimizer;
-use crate::agg::{aggregate_pattern, aggregate_patterns_fused, Aggregation};
+use crate::agg::Aggregation;
 use crate::graph::{DataGraph, GraphStats};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
@@ -131,6 +131,12 @@ pub struct ExecOpts {
     /// instance so both decisions share one cost model; `None` means
     /// [`execute_opts`] computes them from the graph on the fused path.
     pub stats: Option<GraphStats>,
+    /// Restrict the **first exploration level** to `[lo, hi)`. `None`
+    /// explores the whole graph. Matches are rooted at exactly one
+    /// first-level vertex, so values computed over a disjoint cover of
+    /// `0..|V|` combine to the full-graph values — this is the seam the
+    /// distributed driver ([`crate::shard`]) partitions along.
+    pub first_level: Option<(crate::graph::VertexId, crate::graph::VertexId)>,
 }
 
 impl Default for ExecOpts {
@@ -146,6 +152,7 @@ impl ExecOpts {
             threads,
             fused: true,
             stats: None,
+            first_level: None,
         }
     }
 
@@ -158,6 +165,16 @@ impl ExecOpts {
     /// Attach graph statistics (shared with the PMR cost model).
     pub fn with_stats(mut self, stats: GraphStats) -> ExecOpts {
         self.stats = Some(stats);
+        self
+    }
+
+    /// Restrict the first exploration level to `[lo, hi)` (shard slice).
+    pub fn with_first_level(
+        mut self,
+        lo: crate::graph::VertexId,
+        hi: crate::graph::VertexId,
+    ) -> ExecOpts {
+        self.first_level = Some((lo, hi));
         self
     }
 }
@@ -240,6 +257,7 @@ pub(crate) fn match_base_subset<A: Aggregation>(
     if indices.is_empty() {
         return Vec::new();
     }
+    let (lo, hi) = opts.first_level.unwrap_or((0, graph.num_vertices() as u32));
     if opts.fused && indices.len() > 1 {
         let computed;
         let stats = match opts.stats.as_ref() {
@@ -257,7 +275,7 @@ pub(crate) fn match_base_subset<A: Aggregation>(
             FusedPlan::build_for_subset(base, &keep, Some(stats), &CostParams::counting())
         });
         let vals = profile.time("match", || {
-            aggregate_patterns_fused(graph, &fused, agg, opts.threads)
+            crate::agg::aggregate_patterns_fused_range(graph, &fused, agg, opts.threads, lo, hi)
         });
         selected
             .into_iter()
@@ -269,7 +287,7 @@ pub(crate) fn match_base_subset<A: Aggregation>(
             .iter()
             .map(|&i| {
                 let v = profile.time("match", || {
-                    aggregate_pattern(graph, &base[i], agg, opts.threads)
+                    crate::agg::aggregate_pattern_range(graph, &base[i], agg, opts.threads, lo, hi)
                 });
                 (base[i].canonical_key(), v)
             })

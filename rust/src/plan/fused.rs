@@ -23,6 +23,21 @@
 //! every pattern routed through them); each pattern's plan terminates at
 //! the node where its final level lives, recorded in `emit`. The trie is
 //! walked by [`crate::exec::fused::FusedExecutor`].
+//!
+//! ```
+//! use morphmine::pattern::catalog;
+//! use morphmine::plan::cost::CostParams;
+//! use morphmine::plan::fused::FusedPlan;
+//!
+//! // the 6 vertex-induced 4-motifs share wedge/triangle prefixes
+//! let base = catalog::motifs_vertex_induced(4);
+//! let fused = FusedPlan::build(&base, None, &CostParams::counting());
+//! assert_eq!(fused.num_patterns(), 6);
+//! assert_eq!(fused.first_level_traversals(), 1, "one shared level-0 sweep");
+//! assert!(fused.shared_levels() > 0, "{}", fused.describe());
+//! // per-pattern plans stay aligned with the input slice
+//! assert_eq!(fused.plans[0].pattern.canonical_key(), base[0].canonical_key());
+//! ```
 
 use super::cost::{self, CostParams};
 use super::{symmetry, Level, Plan};

@@ -31,11 +31,37 @@
 //!
 //! CLI: `morphmine batch` (one-shot batches, `--repeat` for warm-cache
 //! runs), `morphmine serve` (interactive loop with `+ u v` / `- u v`
-//! edge updates) — both take `--persist <dir>` — and `morphmine store`
-//! (offline `inspect`/`compact`/`purge` of a persist directory).
+//! edge updates) — both take `--persist <dir>` and `--shards <addr,…>`
+//! ([`crate::shard`]) — and `morphmine store` (offline
+//! `inspect`/`compact`/`purge`/`verify` of a persist directory).
 //! Benchmarks: A8 `bench --exp service` (cold / warm / overlapping-batch
 //! throughput → `BENCH_service.json`) and A9 `bench --exp persist`
 //! (cold vs warm-restart vs replay-heavy recovery → `BENCH_persist.json`).
+//!
+//! The single-threaded pipeline, end to end — a second identical batch
+//! executes **zero** bases:
+//!
+//! ```
+//! use morphmine::graph::generators::erdos_renyi;
+//! use morphmine::graph::GraphStats;
+//! use morphmine::morph::Policy;
+//! use morphmine::pattern::catalog;
+//! use morphmine::service::{QueryPlanner, ResultStore};
+//! use morphmine::util::timer::PhaseProfile;
+//!
+//! let g = erdos_renyi(50, 180, 7);
+//! let stats = GraphStats::compute(&g, 2000, 7);
+//! let planner = QueryPlanner::new(Policy::Naive, true, 2);
+//! let mut store = ResultStore::new(1 << 20);
+//! let mut prof = PhaseProfile::new();
+//!
+//! let queries = catalog::motifs_vertex_induced(3); // wedge + triangle, V/I
+//! let (cold, s1) = planner.serve_batch(&g, &queries, &stats, &mut store, 0, &mut prof);
+//! assert!(s1.executed_bases > 0, "first batch matches its bases");
+//! let (warm, s2) = planner.serve_batch(&g, &queries, &stats, &mut store, 0, &mut prof);
+//! assert_eq!(cold, warm, "the cache never changes answers");
+//! assert_eq!(s2.executed_bases, 0, "second batch is fully cache-served");
+//! ```
 
 pub mod persist;
 pub mod planner;

@@ -29,10 +29,44 @@
 //! are pure functions of `(canonical key, graph content)`, so losing a
 //! WAL suffix or a whole snapshot only makes the restarted store colder.
 //!
-//! CLI: `morphmine serve|batch --persist <dir>` wires this into the
-//! service; `morphmine store inspect|compact|purge --dir <dir>` operates
-//! on a directory offline. Benchmark: A9 `bench --exp persist`
+//! CLI: `morphmine serve|batch --persist <dir>` (plus `--fsync-every N`
+//! for power-loss durability) wires this into the service; `morphmine
+//! store inspect|compact|purge|verify --dir <dir>` operates on a
+//! directory offline. Benchmark: A9 `bench --exp persist`
 //! (cold vs warm-restart vs replay-heavy → `BENCH_persist.json`).
+//!
+//! The restart contract in one example — same content recovers warm,
+//! different content recovers cold:
+//!
+//! ```
+//! use morphmine::graph::generators::erdos_renyi;
+//! use morphmine::graph::GraphFingerprint;
+//! use morphmine::pattern::catalog;
+//! use morphmine::service::persist::{Persistence, PersistOpts};
+//!
+//! let dir = std::env::temp_dir().join("mm_persist_doctest");
+//! let _ = std::fs::remove_dir_all(&dir);
+//! let fp = erdos_renyi(30, 60, 1).fingerprint();
+//! let key = catalog::triangle().canonical_key();
+//!
+//! // first "process": log one published result; drop releases the lock
+//! let (mut p, warm, _) = Persistence::<i128>::open(&dir, fp, PersistOpts::default()).unwrap();
+//! assert!(warm.is_empty(), "a fresh directory recovers cold");
+//! p.record_insert(&key, &42).unwrap();
+//! drop(p);
+//!
+//! // second "process", same graph content: warm restart
+//! let (p, warm, report) = Persistence::<i128>::open(&dir, fp, PersistOpts::default()).unwrap();
+//! assert_eq!(warm, vec![(key, 42)]);
+//! assert!(report.fingerprint_matched);
+//! drop(p);
+//!
+//! // a different graph: structurally unservable — cold, never stale
+//! let other = GraphFingerprint { order: 31, size: 60, hash: 0xBAD };
+//! let (_p, warm, report) = Persistence::<i128>::open(&dir, other, PersistOpts::default()).unwrap();
+//! assert!(warm.is_empty());
+//! assert!(!report.fingerprint_matched);
+//! ```
 
 pub mod frame;
 pub mod snapshot;
@@ -171,6 +205,13 @@ pub struct PersistOpts {
     /// Compact once more when the owning service shuts down cleanly, so a
     /// restart reads one snapshot instead of replaying the session's log.
     pub compact_on_drop: bool,
+    /// `Some(n)`: `sync_data` the WAL after every `n`th record for real
+    /// power-loss durability (`Some(1)` = one disk sync per record; larger
+    /// cadences bound the loss window to `n` records). The default `None`
+    /// keeps flush-only appends — durable across process kills, not power
+    /// loss. Either way a lost suffix only cools recovery, never corrupts
+    /// it. CLI: `--fsync-every N`.
+    pub fsync_every: Option<u32>,
 }
 
 impl Default for PersistOpts {
@@ -178,6 +219,7 @@ impl Default for PersistOpts {
         PersistOpts {
             snapshot_every: 256,
             compact_on_drop: true,
+            fsync_every: None,
         }
     }
 }
@@ -251,7 +293,7 @@ impl<V: PersistValue> Persistence<V> {
         // fresh log starts clean — the discarded old-graph records are gone
         let (warm, wal, pending) = if matched && rep.file_present && rep.header_ok {
             // continue the existing log, clean tail only
-            let w = wal::Wal::open_append(dir, rep.valid_len, rep.records)
+            let w = wal::Wal::open_append(dir, rep.valid_len, rep.records, opts.fsync_every)
                 .with_context(|| format!("reopening WAL in {}", dir.display()))?;
             (rep.entries, w, rep.records)
         } else {
@@ -259,7 +301,7 @@ impl<V: PersistValue> Persistence<V> {
             // a new log for the live graph (keeping the snapshot entries
             // when only the WAL was unusable)
             let warm = if matched { rep.entries } else { Vec::new() };
-            let w = wal::Wal::create(dir, fp)
+            let w = wal::Wal::create(dir, fp, opts.fsync_every)
                 .with_context(|| format!("creating WAL in {}", dir.display()))?;
             (warm, w, 0)
         };
@@ -299,11 +341,19 @@ impl<V: PersistValue> Persistence<V> {
         self.force_compact || self.records_since_snapshot > 0
     }
 
-    /// Append one published store insert. Flushed before returning.
+    /// Append one published store insert. Flushed before returning (and
+    /// synced per [`PersistOpts::fsync_every`]).
     pub fn record_insert(&mut self, key: &CanonKey, value: &V) -> io::Result<()> {
         self.wal.append_insert(key, value)?;
         self.records_since_snapshot += 1;
         Ok(())
+    }
+
+    /// `sync_data` calls the current WAL made under the fsync cadence
+    /// (0 under the flush-only default). Resets when a compaction swaps
+    /// the log out.
+    pub fn wal_syncs(&self) -> u64 {
+        self.wal.syncs()
     }
 
     /// The graph mutated: everything persisted so far is dead, and future
@@ -330,7 +380,7 @@ impl<V: PersistValue> Persistence<V> {
     /// outside its state lock.
     pub fn compact(&mut self, entries: &[(CanonKey, V)]) -> io::Result<()> {
         snapshot::write(&self.dir, self.fingerprint, entries)?;
-        self.wal = wal::Wal::create(&self.dir, self.fingerprint)?;
+        self.wal = wal::Wal::create(&self.dir, self.fingerprint, self.opts.fsync_every)?;
         self.records_since_snapshot = 0;
         self.force_compact = false;
         Ok(())
@@ -347,7 +397,7 @@ impl<V: PersistValue> Persistence<V> {
         &mut self,
         entries: Vec<(CanonKey, V)>,
     ) -> io::Result<PendingSnapshot<V>> {
-        self.wal = wal::Wal::create(&self.dir, self.fingerprint)?;
+        self.wal = wal::Wal::create(&self.dir, self.fingerprint, self.opts.fsync_every)?;
         self.records_since_snapshot = 0;
         self.force_compact = false;
         Ok(PendingSnapshot {
@@ -410,6 +460,33 @@ pub fn inspect<V: PersistValue>(dir: &Path) -> DirInspection {
     }
 }
 
+/// Outcome of [`verify_dir`]: does a persist directory's recoverable
+/// state describe a given graph?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DirVerify {
+    /// The directory holds usable state AND its fingerprint equals the
+    /// graph's — a service started over this graph with `--persist` on
+    /// this directory would recover warm.
+    pub matched: bool,
+    /// Fingerprint of the recoverable image (`None`: no usable state).
+    pub stored: Option<GraphFingerprint>,
+    /// Entries that would be restored on a match.
+    pub entries: usize,
+}
+
+/// Offline fingerprint check (the `store verify` subcommand): would a
+/// service over a graph with fingerprint `fp` recover this directory's
+/// state warm? Read-only — same recovery pass as [`inspect`], no file is
+/// modified and no service is started.
+pub fn verify_dir<V: PersistValue>(dir: &Path, fp: GraphFingerprint) -> DirVerify {
+    let insp = inspect::<V>(dir);
+    DirVerify {
+        matched: insp.fingerprint == Some(fp),
+        stored: insp.fingerprint,
+        entries: insp.live_entries,
+    }
+}
+
 /// Offline compaction (the `store compact` subcommand): recover whatever
 /// image the directory holds — under **its own** recorded fingerprint, no
 /// live graph required — and rewrite it as one snapshot plus an empty WAL.
@@ -423,7 +500,7 @@ pub fn compact_dir<V: PersistValue>(dir: &Path) -> Result<(usize, usize)> {
         "no usable persisted state (missing or corrupt snapshot and WAL header) — nothing to compact",
     )?;
     snapshot::write(dir, fp, &rep.entries)?;
-    wal::Wal::create(dir, fp)?;
+    wal::Wal::create(dir, fp, None)?;
     Ok((rep.entries.len(), rep.records))
 }
 
@@ -529,6 +606,7 @@ mod tests {
         let opts = PersistOpts {
             snapshot_every: 3,
             compact_on_drop: true,
+            fsync_every: None,
         };
         let (mut p, _, _) = Persistence::<i128>::open(&d, fp(1), opts).unwrap();
         p.record_insert(&key(1), &1).unwrap();
@@ -591,6 +669,71 @@ mod tests {
         drop(p);
         let (_, warm, _) = Persistence::<i128>::open(&d2, fp(1), PersistOpts::default()).unwrap();
         assert!(warm.is_empty(), "unwritten image is gone, not corrupt");
+    }
+
+    #[test]
+    fn fsync_cadence_syncs_per_record_and_default_stays_flush_only() {
+        // cadence 1: one sync_data per appended record (power-loss mode)
+        let d = dir("fsync");
+        let opts = PersistOpts {
+            fsync_every: Some(1),
+            ..PersistOpts::default()
+        };
+        let (mut p, _, _) = Persistence::<i128>::open(&d, fp(1), opts).unwrap();
+        assert_eq!(p.wal_syncs(), 0);
+        p.record_insert(&key(1), &1).unwrap();
+        p.record_insert(&key(2), &2).unwrap();
+        p.record_insert(&key(3), &3).unwrap();
+        assert_eq!(p.wal_syncs(), 3, "cadence 1 must sync every record");
+        drop(p);
+        // cadence 2: sync on every second record
+        let d2 = dir("fsync2");
+        let opts2 = PersistOpts {
+            fsync_every: Some(2),
+            ..PersistOpts::default()
+        };
+        let (mut p, _, _) = Persistence::<i128>::open(&d2, fp(1), opts2).unwrap();
+        for i in 0..5 {
+            p.record_insert(&key(i + 1), &(i as i128)).unwrap();
+        }
+        assert_eq!(p.wal_syncs(), 2, "5 records at cadence 2 = 2 syncs");
+        drop(p);
+        // the default keeps today's flush-only behavior: zero syncs
+        let d3 = dir("fsync_default");
+        let (mut p, _, _) =
+            Persistence::<i128>::open(&d3, fp(1), PersistOpts::default()).unwrap();
+        p.record_insert(&key(1), &1).unwrap();
+        p.record_insert(&key(2), &2).unwrap();
+        assert_eq!(p.wal_syncs(), 0, "default must not sync");
+        drop(p);
+        // synced logs replay exactly like flushed ones
+        let (_, warm, _) = Persistence::<i128>::open(&d, fp(1), opts).unwrap();
+        assert_eq!(warm, vec![(key(1), 1), (key(2), 2), (key(3), 3)]);
+    }
+
+    #[test]
+    fn verify_dir_checks_fingerprint_without_a_service() {
+        let d = dir("verify");
+        // empty / missing dir: nothing to match
+        let v = verify_dir::<i128>(&d, fp(1));
+        assert!(!v.matched);
+        assert_eq!(v.stored, None);
+        assert_eq!(v.entries, 0);
+        let (mut p, _, _) = Persistence::<i128>::open(&d, fp(1), PersistOpts::default()).unwrap();
+        p.record_insert(&key(1), &10).unwrap();
+        p.record_insert(&key(2), &20).unwrap();
+        drop(p);
+        // right graph: matches, reporting what recovery would restore
+        let v = verify_dir::<i128>(&d, fp(1));
+        assert!(v.matched);
+        assert_eq!(v.stored, Some(fp(1)));
+        assert_eq!(v.entries, 2);
+        // wrong graph: reports the stored identity, does not match
+        let v = verify_dir::<i128>(&d, fp(9));
+        assert!(!v.matched);
+        assert_eq!(v.stored, Some(fp(1)));
+        // read-only: verifying changed nothing
+        assert_eq!(inspect::<i128>(&d).wal_records, 2);
     }
 
     #[test]

@@ -33,37 +33,82 @@ const TAG_INVALIDATE: u8 = 2;
 /// Open WAL handle: appends framed records, flushing each one so a killed
 /// process loses at most the record being written — which replay then
 /// truncates as a torn tail.
+///
+/// Flushing reaches the OS page cache, not the platters: that survives a
+/// process kill but not a power loss. An optional **fsync cadence**
+/// (`fsync_every = Some(n)`) additionally calls `sync_data` after every
+/// `n`th record — `Some(1)` gives true power-loss durability at one disk
+/// sync per record, larger cadences bound the loss window to `n` records,
+/// and the default `None` keeps the flush-only behavior (replay handles
+/// any lost suffix either way; durability is the only thing at stake,
+/// never correctness).
 pub struct Wal {
     file: File,
     records: usize,
+    /// `Some(n)`: `sync_data` after every `n`th appended record.
+    fsync_every: Option<u32>,
+    appended_since_sync: u32,
+    syncs: u64,
 }
 
 impl Wal {
     /// Create (truncating any previous log) with a header binding the log
-    /// to `fp`.
-    pub fn create(dir: &Path, fp: GraphFingerprint) -> io::Result<Wal> {
+    /// to `fp`. With a sync cadence configured the header itself is
+    /// synced — **and so is the parent directory**, because a
+    /// freshly-created file whose dirent was never fsynced can vanish
+    /// wholesale on power loss, taking every per-record sync the caller
+    /// paid for with it. A power loss must never leave a
+    /// published-but-missing log that a cadence-1 caller believed durable.
+    pub fn create(dir: &Path, fp: GraphFingerprint, fsync_every: Option<u32>) -> io::Result<Wal> {
         let mut file = File::create(dir.join(WAL_FILE))?;
         let mut payload = Vec::with_capacity(WAL_MAGIC.len() + GraphFingerprint::BYTES);
         payload.extend_from_slice(WAL_MAGIC);
         payload.extend_from_slice(&fp.to_bytes());
         frame::write_frame(&mut file, &payload)?;
         file.flush()?;
-        Ok(Wal { file, records: 0 })
+        if fsync_every.is_some() {
+            file.sync_data()?;
+            File::open(dir)?.sync_all()?;
+        }
+        Ok(Wal {
+            file,
+            records: 0,
+            fsync_every,
+            appended_since_sync: 0,
+            syncs: 0,
+        })
     }
 
     /// Reopen for append after a replay trusted the first `valid_len`
     /// bytes: the torn/corrupt tail (if any) is cut off so new records
     /// extend a clean prefix.
-    pub fn open_append(dir: &Path, valid_len: u64, records: usize) -> io::Result<Wal> {
+    pub fn open_append(
+        dir: &Path,
+        valid_len: u64,
+        records: usize,
+        fsync_every: Option<u32>,
+    ) -> io::Result<Wal> {
         let mut file = OpenOptions::new().read(true).write(true).open(dir.join(WAL_FILE))?;
         file.set_len(valid_len)?;
         file.seek(io::SeekFrom::End(0))?;
-        Ok(Wal { file, records })
+        Ok(Wal {
+            file,
+            records,
+            fsync_every,
+            appended_since_sync: 0,
+            syncs: 0,
+        })
     }
 
     /// Records appended plus records replayed at open.
     pub fn records(&self) -> usize {
         self.records
+    }
+
+    /// `sync_data` calls made by the cadence (0 under the flush-only
+    /// default) — observable so tests can pin the cadence contract.
+    pub fn syncs(&self) -> u64 {
+        self.syncs
     }
 
     pub fn append_insert<V: PersistValue>(&mut self, key: &CanonKey, value: &V) -> io::Result<()> {
@@ -86,7 +131,16 @@ impl Wal {
     fn append(&mut self, payload: &[u8]) -> io::Result<()> {
         frame::write_frame(&mut self.file, payload)?;
         self.records += 1;
-        self.file.flush()
+        self.file.flush()?;
+        if let Some(n) = self.fsync_every {
+            self.appended_since_sync += 1;
+            if self.appended_since_sync >= n.max(1) {
+                self.file.sync_data()?;
+                self.appended_since_sync = 0;
+                self.syncs += 1;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -286,7 +340,7 @@ mod tests {
     #[test]
     fn append_replay_roundtrip() {
         let d = dir("roundtrip");
-        let mut w = Wal::create(&d, fp(1)).unwrap();
+        let mut w = Wal::create(&d, fp(1), None).unwrap();
         w.append_insert(&key(1), &42i128).unwrap();
         w.append_insert(&key(2), &-7i128).unwrap();
         w.append_insert(&key(1), &43i128).unwrap(); // later insert wins
@@ -302,7 +356,7 @@ mod tests {
     #[test]
     fn invalidate_clears_and_rebinds() {
         let d = dir("invalidate");
-        let mut w = Wal::create(&d, fp(1)).unwrap();
+        let mut w = Wal::create(&d, fp(1), None).unwrap();
         w.append_insert(&key(1), &1i128).unwrap();
         w.append_invalidate(fp(2)).unwrap();
         w.append_insert(&key(2), &2i128).unwrap();
@@ -316,7 +370,7 @@ mod tests {
     #[test]
     fn base_applies_only_on_matching_fingerprint() {
         let d = dir("base");
-        let mut w = Wal::create(&d, fp(1)).unwrap();
+        let mut w = Wal::create(&d, fp(1), None).unwrap();
         w.append_insert(&key(2), &9i128).unwrap();
         drop(w);
         let matching = replay::<i128>(&d, Some((fp(1), vec![(key(1), 5)])));
@@ -328,7 +382,7 @@ mod tests {
     #[test]
     fn torn_and_corrupt_tails_truncate() {
         let d = dir("torn");
-        let mut w = Wal::create(&d, fp(1)).unwrap();
+        let mut w = Wal::create(&d, fp(1), None).unwrap();
         w.append_insert(&key(1), &1i128).unwrap();
         w.append_insert(&key(2), &2i128).unwrap();
         drop(w);
@@ -355,7 +409,7 @@ mod tests {
         assert!(r.truncated);
         assert_eq!(r.entries, vec![(key(1), 1)]);
         // reopening for append truncates the bad tail away
-        let w = Wal::open_append(&d, r.valid_len, r.records).unwrap();
+        let w = Wal::open_append(&d, r.valid_len, r.records, None).unwrap();
         assert_eq!(w.records(), 1);
         drop(w);
         assert_eq!(
@@ -367,7 +421,7 @@ mod tests {
     #[test]
     fn corrupt_header_degrades_to_base() {
         let d = dir("header");
-        let mut w = Wal::create(&d, fp(1)).unwrap();
+        let mut w = Wal::create(&d, fp(1), None).unwrap();
         w.append_insert(&key(1), &1i128).unwrap();
         drop(w);
         let mut bytes = std::fs::read(d.join(WAL_FILE)).unwrap();

@@ -27,7 +27,7 @@
 
 use super::store::ResultStore;
 use crate::agg::CountAgg;
-use crate::graph::{DataGraph, GraphStats};
+use crate::graph::{DataGraph, GraphStats, VertexId};
 use crate::morph::{self, MorphPlan, Policy};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
@@ -49,6 +49,10 @@ pub struct BatchStats {
     /// already computing them and this batch reused its result (only the
     /// multi-worker [`super::Service`] produces these).
     pub coalesced_bases: usize,
+    /// Of `executed_bases`, how many were matched by shard workers
+    /// ([`crate::shard`]) instead of in-process (only
+    /// [`QueryPlanner::serve_batch_sharded`] produces these).
+    pub remote_bases: usize,
 }
 
 /// Stateless batch planner (the store carries all cross-batch state).
@@ -117,9 +121,29 @@ impl QueryPlanner {
         stats: &GraphStats,
         profile: &mut PhaseProfile,
     ) -> Vec<(CanonKey, i128)> {
-        let opts = morph::ExecOpts::new(self.threads)
+        self.execute_bases_range(graph, base, indices, stats, profile, None)
+    }
+
+    /// [`QueryPlanner::execute_bases`] with the first exploration level
+    /// restricted to `[lo, hi)` — the shard-worker entry point
+    /// ([`crate::shard::ShardWorker`] matches its slice through this, so a
+    /// shard can never drift from single-process execution semantics).
+    /// `None` explores the whole graph.
+    pub fn execute_bases_range(
+        &self,
+        graph: &DataGraph,
+        base: &[Pattern],
+        indices: &[usize],
+        stats: &GraphStats,
+        profile: &mut PhaseProfile,
+        first_level: Option<(VertexId, VertexId)>,
+    ) -> Vec<(CanonKey, i128)> {
+        let mut opts = morph::ExecOpts::new(self.threads)
             .with_fused(self.fused)
             .with_stats(stats.clone());
+        if let Some((lo, hi)) = first_level {
+            opts = opts.with_first_level(lo, hi);
+        }
         morph::engine::match_base_subset(graph, base, indices, &CountAgg, &opts, profile)
     }
 
@@ -174,8 +198,57 @@ impl QueryPlanner {
             cached_bases: plan.base.len() - missing.len(),
             executed_bases: missing.len(),
             coalesced_bases: 0,
+            remote_bases: 0,
         };
         (self.compose(&plan, &values, profile), stats_out)
+    }
+
+    /// [`QueryPlanner::serve_batch`] with the missing bases matched by a
+    /// [`crate::shard::ShardPool`] instead of in-process: probe the store,
+    /// fan the missing bases out across the pool's first-level slices, sum
+    /// the per-shard partials (exact — each match roots at one first-level
+    /// vertex), feed the totals back into the local store, compose.
+    ///
+    /// Fails the whole batch if any shard fails: merging a partial pool
+    /// would silently undercount. The store is untouched by a failed
+    /// batch, so a retry (or a local fallback via
+    /// [`QueryPlanner::serve_batch`]) starts from the same state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve_batch_sharded(
+        &self,
+        queries: &[Pattern],
+        stats: &GraphStats,
+        store: &mut ResultStore<i128>,
+        epoch: u64,
+        pool: &mut crate::shard::ShardPool,
+        profile: &mut PhaseProfile,
+    ) -> anyhow::Result<(Vec<i128>, BatchStats)> {
+        store.set_epoch(epoch);
+        let plan = profile.time("plan", || self.morph(queries, stats));
+        let mut values: HashMap<CanonKey, i128> = HashMap::new();
+        let mut missing: Vec<usize> = Vec::new();
+        for (i, p) in plan.base.iter().enumerate() {
+            let k = p.canonical_key();
+            match store.get(&k, epoch) {
+                Some(v) => {
+                    values.insert(k, v);
+                }
+                None => missing.push(i),
+            }
+        }
+        let fresh = profile.time("match", || pool.execute_bases(&plan.base, &missing, epoch))?;
+        for (k, v) in fresh {
+            store.insert(k, epoch, v);
+            values.insert(k, v);
+        }
+        let stats_out = BatchStats {
+            total_bases: plan.base.len(),
+            cached_bases: plan.base.len() - missing.len(),
+            executed_bases: missing.len(),
+            coalesced_bases: 0,
+            remote_bases: missing.len(),
+        };
+        Ok((self.compose(&plan, &values, profile), stats_out))
     }
 }
 

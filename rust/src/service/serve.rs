@@ -590,9 +590,36 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
     }
 
     let vals = planner.compose(&plan, &values, &mut profile);
-    let results = queries
+    let results = to_query_results(queries, &spans, &vals);
+
+    BatchResponse {
+        results,
+        stats: BatchStats {
+            total_bases: plan.base.len(),
+            cached_bases: plan.base.len() - executed - coalesced,
+            executed_bases: executed,
+            coalesced_bases: coalesced,
+            remote_bases: 0,
+        },
+        epoch,
+        profile,
+    }
+}
+
+/// Convert composed per-pattern **map counts** (aligned with the batch's
+/// flattened pattern list via `spans`) into per-query **unique-match
+/// counts** — the one place map→unique conversion happens, shared by the
+/// in-process worker loop above and the sharded coordinator
+/// ([`crate::shard::ShardCoordinator`]) so the two paths can never round
+/// differently.
+pub(crate) fn to_query_results(
+    queries: &[ServiceQuery],
+    spans: &[(usize, usize)],
+    vals: &[i128],
+) -> Vec<QueryResult> {
+    queries
         .iter()
-        .zip(&spans)
+        .zip(spans)
         .map(|(q, &(start, end))| QueryResult {
             query: q.text.clone(),
             counts: q
@@ -606,19 +633,7 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
                 })
                 .collect(),
         })
-        .collect();
-
-    BatchResponse {
-        results,
-        stats: BatchStats {
-            total_bases: plan.base.len(),
-            cached_bases: plan.base.len() - executed - coalesced,
-            executed_bases: executed,
-            coalesced_bases: coalesced,
-        },
-        epoch,
-        profile,
-    }
+        .collect()
 }
 
 #[cfg(test)]

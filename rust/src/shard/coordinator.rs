@@ -1,0 +1,349 @@
+//! Coordinator side of the shard fan-out: one framed TCP connection per
+//! worker ([`ShardClient`]) and the pool that partitions a batch's missing
+//! bases across all of them ([`ShardPool`]).
+//!
+//! The pool's one operation, [`ShardPool::execute_bases`], is a drop-in
+//! replacement for local execution: it splits the first-level vertex range
+//! into one contiguous slice per worker ([`super::shard_ranges`]), sends
+//! every worker the *same* base pattern set with *its* slice, and sums the
+//! per-shard partial map counts per canonical key. Each match is rooted at
+//! exactly one first-level vertex, so the sums are exactly the full-graph
+//! values — no reconciliation, no double counting, and the morph-algebra
+//! composition downstream is untouched.
+//!
+//! Failure handling is fail-fast: a worker that rejects the handshake
+//! (wrong graph), drops the connection, or answers with an error fails the
+//! whole batch with a descriptive error. Partial answers are never merged
+//! — a missing slice would silently undercount.
+
+use super::proto::{self, ExecRequest, ExecResponse, Msg};
+use super::shard_ranges;
+use crate::graph::{DataGraph, GraphFingerprint};
+use crate::pattern::canon::CanonKey;
+use crate::pattern::Pattern;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+
+/// Coordinator-side counters for the shard fan-out.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardMetrics {
+    /// Exec requests sent (one per worker per batch with missing bases).
+    pub requests: u64,
+    /// Base patterns fanned out, summed over workers.
+    pub bases_sent: u64,
+    /// Per-shard partial values merged into totals.
+    pub partials_merged: u64,
+    /// Bases workers reported serving from their local stores instead of
+    /// matching (shard-level cache reuse, summed over workers).
+    pub remote_cached: u64,
+    /// Batches failed by a worker error or lost connection.
+    pub errors: u64,
+}
+
+/// One connected shard worker.
+pub struct ShardClient {
+    addr: String,
+    stream: TcpStream,
+    threads: u32,
+}
+
+/// How long a worker gets to answer the handshake. A worker that accepts
+/// the TCP connection but never replies (wedged, SIGSTOPped, black-holed)
+/// must fail the pool loudly at connect time, not hang it. Exec replies
+/// are deliberately *not* deadlined — matching a big slice legitimately
+/// takes as long as it takes; liveness probing for in-flight requests is
+/// a recorded ROADMAP follow-up.
+pub const HANDSHAKE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+impl ShardClient {
+    /// Connect and handshake: the worker must hold a graph with exactly
+    /// `fingerprint` — anything else is a hard reject on its side, which
+    /// surfaces here as a connection error. The handshake reply is
+    /// deadlined by [`HANDSHAKE_TIMEOUT`] so a wedged worker fails the
+    /// pool instead of hanging it.
+    pub fn connect(addr: &str, fingerprint: GraphFingerprint) -> Result<ShardClient> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to shard worker {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("setting handshake timeout")?;
+        proto::write_msg(&mut stream, &Msg::Hello { fingerprint })
+            .with_context(|| format!("greeting shard worker {addr}"))?;
+        let reply = proto::read_msg(&mut stream)
+            .with_context(|| format!("reading handshake reply from {addr}"))?;
+        // exec replies wait on real matching work: no deadline (see above)
+        stream
+            .set_read_timeout(None)
+            .context("clearing handshake timeout")?;
+        match reply {
+            Msg::Welcome { fingerprint: fp, threads } => {
+                ensure!(
+                    fp == fingerprint,
+                    "shard worker {addr} answered with fingerprint {fp}, expected {fingerprint}"
+                );
+                Ok(ShardClient {
+                    addr: addr.to_string(),
+                    stream,
+                    threads,
+                })
+            }
+            Msg::Reject { reason } => bail!("shard worker {addr} rejected handshake: {reason}"),
+            other => bail!("shard worker {addr} sent unexpected handshake reply {other:?}"),
+        }
+    }
+
+    /// The worker's address, as given to [`ShardClient::connect`].
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Matcher threads the worker reported at handshake.
+    pub fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    fn execute(&mut self, req: ExecRequest) -> Result<ExecResponse> {
+        let id = req.id;
+        proto::write_msg(&mut self.stream, &Msg::Exec(req))
+            .with_context(|| format!("sending request to shard worker {}", self.addr))?;
+        match proto::read_msg(&mut self.stream)
+            .with_context(|| format!("reading reply from shard worker {}", self.addr))?
+        {
+            Msg::Result(resp) if resp.id == id => Ok(resp),
+            Msg::Result(resp) => bail!(
+                "shard worker {} answered request {} while {} was pending",
+                self.addr,
+                resp.id,
+                id
+            ),
+            Msg::Error { id: eid, message } if eid == id => {
+                bail!("shard worker {} failed the request: {message}", self.addr)
+            }
+            other => bail!("shard worker {} sent unexpected reply {other:?}", self.addr),
+        }
+    }
+}
+
+/// A fixed set of connected shard workers sharing one graph identity.
+pub struct ShardPool {
+    clients: Vec<ShardClient>,
+    fingerprint: GraphFingerprint,
+    num_vertices: u32,
+    next_id: u64,
+    metrics: ShardMetrics,
+}
+
+impl ShardPool {
+    /// Connect to every address, handshaking each against `graph`'s
+    /// fingerprint. Any unreachable or mismatched worker fails the pool —
+    /// a partial pool would silently undercount.
+    pub fn connect(addrs: &[String], graph: &DataGraph) -> Result<ShardPool> {
+        ensure!(!addrs.is_empty(), "a shard pool needs at least one worker address");
+        let fingerprint = graph.fingerprint();
+        let clients = addrs
+            .iter()
+            .map(|a| ShardClient::connect(a, fingerprint))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardPool {
+            clients,
+            fingerprint,
+            num_vertices: graph.num_vertices() as u32,
+            next_id: 0,
+            metrics: ShardMetrics::default(),
+        })
+    }
+
+    /// Number of workers (= number of first-level slices).
+    pub fn num_shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// The contiguous first-level slices, one per worker in pool order.
+    pub fn ranges(&self) -> Vec<(u32, u32)> {
+        shard_ranges(self.num_vertices, self.clients.len())
+    }
+
+    /// Coordinator-side fan-out counters.
+    pub fn metrics(&self) -> ShardMetrics {
+        self.metrics
+    }
+
+    /// Match the subset of `base` selected by `indices` across the pool
+    /// and return **full-graph** map counts per canonical key: every
+    /// worker runs the same base set over its own first-level slice, and
+    /// the per-shard partials are summed here. `epoch` is the
+    /// coordinator's cache epoch, echoed through for bookkeeping.
+    pub fn execute_bases(
+        &mut self,
+        base: &[Pattern],
+        indices: &[usize],
+        epoch: u64,
+    ) -> Result<Vec<(CanonKey, i128)>> {
+        if indices.is_empty() {
+            return Ok(Vec::new());
+        }
+        let patterns: Vec<Pattern> = indices.iter().map(|&i| base[i].clone()).collect();
+        let keys: Vec<CanonKey> = patterns.iter().map(|p| p.canonical_key()).collect();
+        let ranges = shard_ranges(self.num_vertices, self.clients.len());
+        let base_id = self.next_id;
+        self.next_id += self.clients.len() as u64;
+        let fingerprint = self.fingerprint;
+
+        // fan out: blocking IO, one thread per worker so slices overlap
+        let replies: Vec<Result<ExecResponse>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .clients
+                .iter_mut()
+                .zip(ranges.iter().copied())
+                .enumerate()
+                .map(|(i, (client, (lo, hi)))| {
+                    let patterns = patterns.clone();
+                    s.spawn(move || {
+                        client.execute(ExecRequest {
+                            id: base_id + i as u64,
+                            epoch,
+                            fingerprint,
+                            lo,
+                            hi,
+                            patterns,
+                        })
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard client thread"))
+                .collect()
+        });
+
+        // merge: exact sums per canonical key, all slices or nothing
+        let mut sums: HashMap<CanonKey, i128> = keys.iter().map(|k| (*k, 0)).collect();
+        let distinct = sums.len();
+        for reply in replies {
+            let resp = match reply {
+                Ok(r) => r,
+                Err(e) => {
+                    self.metrics.errors += 1;
+                    return Err(e);
+                }
+            };
+            ensure!(
+                resp.values.len() == distinct,
+                "shard worker answered {} bases, expected {distinct}",
+                resp.values.len()
+            );
+            self.metrics.remote_cached += resp.served_from_store as u64;
+            for (k, v) in resp.values {
+                match sums.get_mut(&k) {
+                    Some(total) => {
+                        *total += v;
+                        self.metrics.partials_merged += 1;
+                    }
+                    None => bail!("shard worker answered an unrequested base pattern {k:?}"),
+                }
+            }
+        }
+        self.metrics.requests += self.clients.len() as u64;
+        self.metrics.bases_sent += (distinct * self.clients.len()) as u64;
+        let mut out = Vec::with_capacity(distinct);
+        let mut emitted = std::collections::HashSet::new();
+        for k in keys {
+            if emitted.insert(k) {
+                out.push((k, sums[&k]));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::pattern::catalog;
+    use crate::shard::worker::{ShardWorker, WorkerConfig};
+
+    fn spawn_workers(seed: u64, k: usize) -> (Vec<ShardWorker>, Vec<String>) {
+        let workers: Vec<ShardWorker> = (0..k)
+            .map(|_| {
+                ShardWorker::bind(
+                    erdos_renyi(70, 260, seed),
+                    "127.0.0.1:0",
+                    WorkerConfig {
+                        threads: 2,
+                        fused: true,
+                        cache_bytes: 1 << 20,
+                        persist: None,
+                    },
+                )
+                .unwrap()
+            })
+            .collect();
+        let addrs = workers.iter().map(|w| w.addr().to_string()).collect();
+        (workers, addrs)
+    }
+
+    #[test]
+    fn pool_sums_equal_local_execution() {
+        let seed = 0x7001;
+        let (workers, addrs) = spawn_workers(seed, 2);
+        let g = erdos_renyi(70, 260, seed);
+        let mut pool = ShardPool::connect(&addrs, &g).unwrap();
+        assert_eq!(pool.num_shards(), 2);
+        let ranges = pool.ranges();
+        assert_eq!(ranges[0].0, 0);
+        assert_eq!(ranges[1].1, 70);
+        assert_eq!(ranges[0].1, ranges[1].0, "slices tile the vertex range");
+        let base = vec![
+            catalog::triangle(),
+            catalog::path(3),
+            catalog::cycle(4).vertex_induced(),
+        ];
+        let indices: Vec<usize> = (0..base.len()).collect();
+        let merged = pool.execute_bases(&base, &indices, 0).unwrap();
+        assert_eq!(merged.len(), base.len());
+        for ((k, v), p) in merged.iter().zip(&base) {
+            assert_eq!(*k, p.canonical_key());
+            let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
+            assert_eq!(*v, direct, "{p:?}: shard sums must equal local counts");
+        }
+        let m = pool.metrics();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.bases_sent, 6);
+        assert_eq!(m.partials_merged, 6);
+        assert_eq!(m.errors, 0);
+        // a resend is served from the worker-local stores
+        let again = pool.execute_bases(&base, &indices, 0).unwrap();
+        assert_eq!(again, merged);
+        assert_eq!(pool.metrics().remote_cached, 6);
+        drop(pool);
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn pool_rejects_mismatched_graph() {
+        let (workers, addrs) = spawn_workers(0x7002, 1);
+        let other = erdos_renyi(70, 260, 0x7003); // different content
+        let err = ShardPool::connect(&addrs, &other).unwrap_err();
+        assert!(format!("{err:#}").contains("rejected handshake"), "{err:#}");
+        drop(workers);
+        // a dead worker fails the pool, not just a request
+        assert!(ShardPool::connect(&addrs, &erdos_renyi(70, 260, 0x7002)).is_err());
+    }
+
+    #[test]
+    fn empty_subset_is_free() {
+        let (workers, addrs) = spawn_workers(0x7004, 1);
+        let g = erdos_renyi(70, 260, 0x7004);
+        let mut pool = ShardPool::connect(&addrs, &g).unwrap();
+        let base = vec![catalog::triangle()];
+        assert!(pool.execute_bases(&base, &[], 0).unwrap().is_empty());
+        assert_eq!(pool.metrics().requests, 0);
+        drop(pool);
+        drop(workers);
+    }
+}

@@ -1,0 +1,238 @@
+//! DISTRIBUTED FIRST-LEVEL SHARDING — scale the fused sweep out across
+//! processes.
+//!
+//! Everything below this module makes one process fast; this layer makes
+//! *several* processes one system. The seam is the same one the
+//! thread-parallel driver already exploits ([`crate::exec::parallel`]):
+//! every match is rooted at exactly one first-level vertex, so
+//! partitioning the first-level vertex range partitions the match set, and
+//! **per-base totals are exact sums of per-slice partials**. A shard
+//! worker is nothing more than a remote `_range` call — it runs the full
+//! fused plan ([`crate::plan::fused`]) restricted to its contiguous slice
+//! of the degree-ordered CSR, symmetry windows and all, so sharded
+//! execution can never drift from single-process semantics.
+//!
+//! The split:
+//!
+//! * [`worker`] — `morphmine shard-worker --listen <addr>`: owns an
+//!   immutable copy of the graph, answers slice requests over a framed TCP
+//!   protocol, caches partials in a worker-local
+//!   [`ResultStore`](crate::service::ResultStore) (re-sent bases are
+//!   served without matching), coalesces concurrent requests for the same
+//!   base, and optionally persists its partials keyed by
+//!   [`shard_fingerprint`] — graph × slice — so a shard restart recovers
+//!   warm.
+//! * [`proto`] — the wire protocol, reusing the persistence layer's
+//!   CRC32 framing ([`crate::service::persist::frame`]). Handshakes carry
+//!   the graph fingerprint; a worker holding different content hard-rejects.
+//! * [`coordinator`] — [`ShardPool`]: fans a batch's missing bases out
+//!   (one contiguous slice per worker, [`shard_ranges`]) and sums the
+//!   partials; [`ShardCoordinator`]: the batch front door used by
+//!   `morphmine batch|serve --shards <addr,…>`, composing the summed
+//!   totals through the same morph algebra and result store as the
+//!   single-process service
+//!   ([`QueryPlanner::serve_batch_sharded`](crate::service::QueryPlanner::serve_batch_sharded)).
+//!
+//! End to end:
+//!
+//! ```
+//! use morphmine::graph::generators::erdos_renyi;
+//! use morphmine::morph::Policy;
+//! use morphmine::service::QueryPlanner;
+//! use morphmine::shard::{ShardCoordinator, ShardWorker, WorkerConfig};
+//!
+//! // two "processes", each holding its own copy of the same graph
+//! let graph = || erdos_renyi(60, 220, 7);
+//! let a = ShardWorker::bind(graph(), "127.0.0.1:0", WorkerConfig::default()).unwrap();
+//! let b = ShardWorker::bind(graph(), "127.0.0.1:0", WorkerConfig::default()).unwrap();
+//! let addrs = vec![a.addr().to_string(), b.addr().to_string()];
+//!
+//! // the coordinator morphs, probes its cache, fans missing bases out,
+//! // and composes the summed partials — exact, not approximate
+//! let planner = QueryPlanner::new(Policy::Naive, true, 2);
+//! let mut coord = ShardCoordinator::connect(graph(), &addrs, planner, 1 << 20).unwrap();
+//! let r = coord.call(&["motifs:3"]).unwrap();
+//! assert_eq!(r.results[0].counts.len(), 2, "wedge + triangle");
+//! assert_eq!(r.stats.remote_bases, r.stats.executed_bases);
+//! # drop(coord); a.shutdown(); b.shutdown();
+//! ```
+
+pub mod coordinator;
+pub mod proto;
+pub mod worker;
+
+pub use coordinator::{ShardClient, ShardMetrics, ShardPool};
+pub use worker::{ShardWorker, WorkerConfig};
+
+use crate::graph::{DataGraph, GraphFingerprint};
+use crate::service::serve::{to_query_results, BatchResponse, ServiceQuery};
+use crate::service::{QueryPlanner, ResultStore, StoreMetrics};
+use crate::util::timer::PhaseProfile;
+use anyhow::Result;
+
+/// Split `0..n` into `k` contiguous slices, one per shard in pool order.
+/// Slices tile the range exactly (first starts at 0, last ends at `n`,
+/// neighbours meet); with `k > n` the surplus slices are empty — an empty
+/// slice contributes the aggregation identity, so correctness never
+/// depends on `k` dividing `n`.
+pub fn shard_ranges(n: u32, k: usize) -> Vec<(u32, u32)> {
+    let k = k.max(1) as u64;
+    (0..k)
+        .map(|i| ((n as u64 * i / k) as u32, (n as u64 * (i + 1) / k) as u32))
+        .collect()
+}
+
+/// Durable identity of one shard's partial counts: the graph fingerprint
+/// folded with the slice bounds (same FNV-1a stream as the fingerprint
+/// itself). A shard's persisted partials are valid only for the exact
+/// `(graph content, first-level slice)` pair they were computed over —
+/// restarting a worker against a different graph *or* a resized pool must
+/// recover cold, never wrong, and this key makes both structurally
+/// unservable (the same invariant the persistence layer already enforces
+/// for whole-graph state).
+pub fn shard_fingerprint(fp: GraphFingerprint, lo: u32, hi: u32) -> GraphFingerprint {
+    let mut h = fp.hash;
+    for b in lo.to_le_bytes().into_iter().chain(hi.to_le_bytes()) {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    GraphFingerprint {
+        order: fp.order,
+        size: fp.size,
+        hash: h,
+    }
+}
+
+/// The sharded batch front door: one coordinator process holding the
+/// morph planner, a local result store for composed totals, and a
+/// [`ShardPool`] that matches the missing bases. Answers are
+/// [`BatchResponse`]s — byte-identical in content to what the
+/// single-process service produces for the same graph and queries.
+///
+/// The coordinator's graph is immutable (epoch pinned at 0): edge updates
+/// would desynchronize it from the workers' copies, so the sharded CLI
+/// rejects them. Mutable sharded serving would need update broadcast —
+/// recorded as a ROADMAP follow-up.
+pub struct ShardCoordinator {
+    stats: crate::graph::GraphStats,
+    planner: QueryPlanner,
+    store: ResultStore<i128>,
+    pool: ShardPool,
+}
+
+impl ShardCoordinator {
+    /// Connect to every worker (handshaking each against `graph`'s
+    /// fingerprint) and set up the coordinator-side planner and store.
+    pub fn connect(
+        graph: DataGraph,
+        addrs: &[String],
+        planner: QueryPlanner,
+        cache_bytes: usize,
+    ) -> Result<ShardCoordinator> {
+        // same stats seed as the service layer: the coordinator's morph
+        // plan (and the equality of its answers to single-process runs)
+        // must not depend on which path computed the statistics
+        let stats = crate::graph::GraphStats::compute(&graph, 2000, 0x5E55);
+        let pool = ShardPool::connect(addrs, &graph)?;
+        Ok(ShardCoordinator {
+            stats,
+            planner,
+            store: ResultStore::new(cache_bytes),
+            pool,
+        })
+    }
+
+    /// Number of connected shard workers.
+    pub fn num_shards(&self) -> usize {
+        self.pool.num_shards()
+    }
+
+    /// Coordinator-side fan-out counters.
+    pub fn shard_metrics(&self) -> ShardMetrics {
+        self.pool.metrics()
+    }
+
+    /// Counters of the coordinator-local store of composed totals.
+    pub fn store_metrics(&self) -> StoreMetrics {
+        self.store.metrics()
+    }
+
+    /// Parse and serve one batch of query texts (`motifs:4`,
+    /// `match:cycle4,p3`, `cliques:4`; FSM is rejected exactly as the
+    /// in-process service rejects it).
+    pub fn call(&mut self, queries: &[&str]) -> Result<BatchResponse> {
+        let parsed = queries
+            .iter()
+            .map(|q| ServiceQuery::parse(q))
+            .collect::<Result<Vec<_>>>()?;
+        self.call_parsed(&parsed)
+    }
+
+    /// Serve one pre-parsed batch.
+    pub fn call_parsed(&mut self, queries: &[ServiceQuery]) -> Result<BatchResponse> {
+        let mut flat = Vec::new();
+        let mut spans = Vec::with_capacity(queries.len());
+        for q in queries {
+            let start = flat.len();
+            flat.extend(q.patterns.iter().cloned());
+            spans.push((start, flat.len()));
+        }
+        let mut profile = PhaseProfile::new();
+        let (vals, stats) = self.planner.serve_batch_sharded(
+            &flat,
+            &self.stats,
+            &mut self.store,
+            0,
+            &mut self.pool,
+            &mut profile,
+        )?;
+        Ok(BatchResponse {
+            results: to_query_results(queries, &spans, &vals),
+            stats,
+            epoch: 0,
+            profile,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_exactly() {
+        for (n, k) in [(100u32, 1usize), (100, 3), (7, 7), (5, 9), (0, 2), (1, 1)] {
+            let rs = shard_ranges(n, k);
+            assert_eq!(rs.len(), k.max(1));
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[rs.len() - 1].1, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "n={n} k={k}: slices must meet");
+            }
+            for &(lo, hi) in &rs {
+                assert!(lo <= hi);
+            }
+            let covered: u64 = rs.iter().map(|&(lo, hi)| (hi - lo) as u64).sum();
+            assert_eq!(covered, n as u64);
+        }
+    }
+
+    #[test]
+    fn shard_fingerprints_separate_slices_and_graphs() {
+        let fp = GraphFingerprint {
+            order: 10,
+            size: 20,
+            hash: 0xABCD,
+        };
+        let a = shard_fingerprint(fp, 0, 5);
+        let b = shard_fingerprint(fp, 5, 10);
+        let c = shard_fingerprint(fp, 0, 10);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+        // deterministic (it keys durable state across restarts)
+        assert_eq!(a, shard_fingerprint(fp, 0, 5));
+        // a different graph separates even with equal slices
+        let other = GraphFingerprint { hash: 0xABCE, ..fp };
+        assert_ne!(shard_fingerprint(other, 0, 5), a);
+    }
+}

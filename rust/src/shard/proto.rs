@@ -1,0 +1,498 @@
+//! Wire protocol of the shard fan-out: length-prefixed, CRC32-framed
+//! messages over a byte stream, reusing the persistence layer's frame
+//! format ([`crate::service::persist::frame`]) so both subsystems share
+//! one hardened codec.
+//!
+//! Every message is one frame whose payload starts with a tag byte:
+//!
+//! ```text
+//! [payload len: u32 LE][crc32(payload): u32 LE][tag: u8][body…]
+//! ```
+//!
+//! Handshake: the coordinator opens with [`Msg::Hello`] (magic + protocol
+//! version + its graph's [`GraphFingerprint`]); the worker answers
+//! [`Msg::Welcome`] when the fingerprint matches the graph it loaded and
+//! [`Msg::Reject`] otherwise — a shard serving partial counts for a
+//! *different* graph would merge into silent garbage, so a mismatch is a
+//! hard reject, never a degraded mode. After the handshake the coordinator
+//! sends [`Msg::Exec`] requests (each carrying the fingerprint again, so a
+//! coordinator whose graph mutated mid-session is caught per-request) and
+//! the worker answers [`Msg::Result`] or [`Msg::Error`].
+//!
+//! Decoding is total on hostile bytes, exactly like WAL replay: a short
+//! header, an oversized length, a CRC mismatch or an unreadable body all
+//! surface as an [`io::Error`] from [`read_msg`] (which closes the
+//! connection) — never a panic. Unlike a WAL tail, a live stream has no
+//! "truncate and continue" recovery: any framing violation ends the
+//! conversation.
+
+use crate::graph::GraphFingerprint;
+use crate::pattern::canon::CanonKey;
+use crate::pattern::{Pattern, MAX_PATTERN_VERTICES};
+use crate::service::persist::frame::{self, ByteReader, FRAME_HEADER};
+use std::io::{self, Read, Write};
+
+/// Cap on one message's payload — far above any honest request or response
+/// (a million-base response is ~33 MB), but low enough that a corrupt
+/// length field is rejected before the reader allocates for it.
+pub const MAX_MSG_LEN: usize = 64 << 20;
+
+/// Protocol magic, first bytes of every handshake payload.
+pub const MAGIC: &[u8; 8] = b"MMSHARD1";
+
+/// Protocol version; bumped on any wire-format change.
+pub const VERSION: u32 = 1;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_REJECT: u8 = 3;
+const TAG_EXEC: u8 = 4;
+const TAG_RESULT: u8 = 5;
+const TAG_ERROR: u8 = 6;
+
+/// One shard-execution request: match `patterns` (base patterns of a morph
+/// plan) with the first exploration level restricted to `[lo, hi)`.
+#[derive(Clone, Debug)]
+pub struct ExecRequest {
+    /// Request id, echoed in the response.
+    pub id: u64,
+    /// Coordinator's cache epoch — echoed back so the coordinator can tag
+    /// the partials; the worker's own store identity rides on the
+    /// fingerprint (its graph is immutable).
+    pub epoch: u64,
+    /// Fingerprint of the graph the coordinator is mining **now**. The
+    /// worker re-checks it on every request: a coordinator whose graph
+    /// mutated after the handshake must not receive partials computed on
+    /// the worker's (unmutated) copy.
+    pub fingerprint: GraphFingerprint,
+    /// First-level slice, inclusive-exclusive.
+    pub lo: u32,
+    /// First-level slice end.
+    pub hi: u32,
+    /// Base patterns to match (distinct canonical forms).
+    pub patterns: Vec<Pattern>,
+}
+
+/// A shard's answer: per-base **partial map counts** over its slice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// Echoed coordinator epoch.
+    pub epoch: u64,
+    /// How many of the requested bases the worker served from its local
+    /// result store instead of matching (shard-level cache reuse).
+    pub served_from_store: u32,
+    /// `(canonical key, partial map count)` — one entry per distinct
+    /// requested base.
+    pub values: Vec<(CanonKey, i128)>,
+}
+
+/// A protocol message.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Coordinator → worker greeting (magic, version, graph fingerprint).
+    Hello { fingerprint: GraphFingerprint },
+    /// Worker → coordinator: fingerprints match, ready for requests.
+    Welcome {
+        fingerprint: GraphFingerprint,
+        /// Matcher threads the worker runs per request (informational).
+        threads: u32,
+    },
+    /// Worker → coordinator: handshake refused (wrong graph, bad magic).
+    Reject { reason: String },
+    /// Coordinator → worker: execute a first-level slice.
+    Exec(ExecRequest),
+    /// Worker → coordinator: partial counts.
+    Result(ExecResponse),
+    /// Worker → coordinator: the request failed (echoes the request id).
+    Error { id: u64, message: String },
+}
+
+fn put_fingerprint(out: &mut Vec<u8>, fp: GraphFingerprint) {
+    out.extend_from_slice(&fp.to_bytes());
+}
+
+fn put_pattern(out: &mut Vec<u8>, p: &Pattern) {
+    out.push(p.num_vertices() as u8);
+    let edges = p.edges();
+    let anti = p.anti_edges();
+    out.push(edges.len() as u8);
+    for (u, v) in edges {
+        out.push(u as u8);
+        out.push(v as u8);
+    }
+    out.push(anti.len() as u8);
+    for (u, v) in anti {
+        out.push(u as u8);
+        out.push(v as u8);
+    }
+    match p.labels_vec() {
+        Some(labels) => {
+            out.push(1);
+            for l in labels {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+        None => out.push(0),
+    }
+}
+
+fn take_pattern(r: &mut ByteReader<'_>) -> Option<Pattern> {
+    let n = r.u8()? as usize;
+    if !(1..=MAX_PATTERN_VERTICES).contains(&n) {
+        return None;
+    }
+    let mut p = Pattern::empty(n);
+    let n_edges = r.u8()? as usize;
+    for _ in 0..n_edges {
+        let (u, v) = (r.u8()? as usize, r.u8()? as usize);
+        // pre-validate: `add_edge` asserts, and hostile bytes must degrade
+        // to "unreadable", never to a panic
+        if u >= n || v >= n || u == v || p.has_edge(u, v) {
+            return None;
+        }
+        p.add_edge(u, v);
+    }
+    let n_anti = r.u8()? as usize;
+    for _ in 0..n_anti {
+        let (u, v) = (r.u8()? as usize, r.u8()? as usize);
+        if u >= n || v >= n || u == v || p.has_edge(u, v) || p.has_anti_edge(u, v) {
+            return None;
+        }
+        p.add_anti_edge(u, v);
+    }
+    match r.u8()? {
+        0 => Some(p),
+        1 => {
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                labels.push(r.u32()?);
+            }
+            Some(p.with_labels(&labels))
+        }
+        _ => None,
+    }
+}
+
+fn take_fingerprint(r: &mut ByteReader<'_>) -> Option<GraphFingerprint> {
+    GraphFingerprint::from_bytes(r.take(GraphFingerprint::BYTES)?)
+}
+
+/// Encode a message into one frame payload (tag + body).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    match msg {
+        Msg::Hello { fingerprint } => {
+            out.push(TAG_HELLO);
+            out.extend_from_slice(MAGIC);
+            out.extend_from_slice(&VERSION.to_le_bytes());
+            put_fingerprint(&mut out, *fingerprint);
+        }
+        Msg::Welcome { fingerprint, threads } => {
+            out.push(TAG_WELCOME);
+            out.extend_from_slice(MAGIC);
+            out.extend_from_slice(&VERSION.to_le_bytes());
+            put_fingerprint(&mut out, *fingerprint);
+            out.extend_from_slice(&threads.to_le_bytes());
+        }
+        Msg::Reject { reason } => {
+            out.push(TAG_REJECT);
+            out.extend_from_slice(reason.as_bytes());
+        }
+        Msg::Exec(req) => {
+            out.push(TAG_EXEC);
+            out.extend_from_slice(&req.id.to_le_bytes());
+            out.extend_from_slice(&req.epoch.to_le_bytes());
+            put_fingerprint(&mut out, req.fingerprint);
+            out.extend_from_slice(&req.lo.to_le_bytes());
+            out.extend_from_slice(&req.hi.to_le_bytes());
+            out.extend_from_slice(&(req.patterns.len() as u32).to_le_bytes());
+            for p in &req.patterns {
+                put_pattern(&mut out, p);
+            }
+        }
+        Msg::Result(resp) => {
+            out.push(TAG_RESULT);
+            out.extend_from_slice(&resp.id.to_le_bytes());
+            out.extend_from_slice(&resp.epoch.to_le_bytes());
+            out.extend_from_slice(&resp.served_from_store.to_le_bytes());
+            out.extend_from_slice(&(resp.values.len() as u32).to_le_bytes());
+            for (k, v) in &resp.values {
+                out.push(k.n);
+                out.extend_from_slice(&k.pairs.to_le_bytes());
+                out.extend_from_slice(&k.labels.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Msg::Error { id, message } => {
+            out.push(TAG_ERROR);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(message.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode one frame payload. Total: hostile bytes return `None`.
+pub fn decode(payload: &[u8]) -> Option<Msg> {
+    let mut r = ByteReader::new(payload);
+    let msg = match r.u8()? {
+        TAG_HELLO => {
+            if r.take(MAGIC.len())? != MAGIC || r.u32()? != VERSION {
+                return None;
+            }
+            let fingerprint = take_fingerprint(&mut r)?;
+            Msg::Hello { fingerprint }
+        }
+        TAG_WELCOME => {
+            if r.take(MAGIC.len())? != MAGIC || r.u32()? != VERSION {
+                return None;
+            }
+            let fingerprint = take_fingerprint(&mut r)?;
+            let threads = r.u32()?;
+            Msg::Welcome { fingerprint, threads }
+        }
+        TAG_REJECT => {
+            return Some(Msg::Reject {
+                reason: String::from_utf8_lossy(r.rest()).into_owned(),
+            });
+        }
+        TAG_EXEC => {
+            let id = r.u64()?;
+            let epoch = r.u64()?;
+            let fingerprint = take_fingerprint(&mut r)?;
+            let lo = r.u32()?;
+            let hi = r.u32()?;
+            let n = r.u32()? as usize;
+            // an honest count is bounded by the payload: every pattern
+            // costs at least 4 bytes on the wire
+            if n > payload.len() / 4 + 1 {
+                return None;
+            }
+            let mut patterns = Vec::with_capacity(n);
+            for _ in 0..n {
+                patterns.push(take_pattern(&mut r)?);
+            }
+            Msg::Exec(ExecRequest {
+                id,
+                epoch,
+                fingerprint,
+                lo,
+                hi,
+                patterns,
+            })
+        }
+        TAG_RESULT => {
+            let id = r.u64()?;
+            let epoch = r.u64()?;
+            let served_from_store = r.u32()?;
+            let n = r.u32()? as usize;
+            if n > payload.len() / 33 + 1 {
+                return None;
+            }
+            let mut values = Vec::with_capacity(n);
+            for _ in 0..n {
+                let key = CanonKey {
+                    n: r.u8()?,
+                    pairs: r.u64()?,
+                    labels: r.u64()?,
+                };
+                let v = i128::from_le_bytes(r.take(16)?.try_into().ok()?);
+                values.push((key, v));
+            }
+            Msg::Result(ExecResponse {
+                id,
+                epoch,
+                served_from_store,
+                values,
+            })
+        }
+        TAG_ERROR => {
+            let id = r.u64()?;
+            return Some(Msg::Error {
+                id,
+                message: String::from_utf8_lossy(r.rest()).into_owned(),
+            });
+        }
+        _ => return None,
+    };
+    // trailing garbage after a well-formed body means a codec mismatch:
+    // refuse rather than guess
+    if !r.is_empty() {
+        return None;
+    }
+    Some(msg)
+}
+
+/// Write one framed message and flush it.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> io::Result<()> {
+    frame::write_frame(w, &encode(msg))?;
+    w.flush()
+}
+
+/// Read one framed message from a stream. Any framing or decoding
+/// violation is an [`io::Error`] — the caller closes the connection.
+pub fn read_msg(r: &mut impl Read) -> io::Result<Msg> {
+    let mut head = [0u8; FRAME_HEADER];
+    r.read_exact(&mut head)?;
+    let len = u32::from_le_bytes(head[..4].try_into().expect("4 bytes")) as usize;
+    let crc = u32::from_le_bytes(head[4..].try_into().expect("4 bytes"));
+    if len > MAX_MSG_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("shard frame length {len} exceeds MAX_MSG_LEN"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    if frame::crc32(&payload) != crc {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "shard frame CRC mismatch",
+        ));
+    }
+    decode(&payload).ok_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidData, "unreadable shard message")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::catalog;
+
+    fn fp(seed: u64) -> GraphFingerprint {
+        GraphFingerprint {
+            order: 100,
+            size: 250,
+            hash: seed,
+        }
+    }
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, msg).unwrap();
+        read_msg(&mut &buf[..]).unwrap()
+    }
+
+    #[test]
+    fn handshake_roundtrip() {
+        match roundtrip(&Msg::Hello { fingerprint: fp(7) }) {
+            Msg::Hello { fingerprint } => assert_eq!(fingerprint, fp(7)),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Msg::Welcome { fingerprint: fp(9), threads: 4 }) {
+            Msg::Welcome { fingerprint, threads } => {
+                assert_eq!((fingerprint, threads), (fp(9), 4))
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Msg::Reject { reason: "wrong graph".into() }) {
+            Msg::Reject { reason } => assert_eq!(reason, "wrong graph"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn exec_roundtrip_preserves_patterns() {
+        let patterns = vec![
+            catalog::triangle(),
+            catalog::cycle(4).vertex_induced(),
+            catalog::path(3).with_labels(&[2, 0, 1]),
+            Pattern::empty(1),
+        ];
+        let req = ExecRequest {
+            id: 42,
+            epoch: 3,
+            fingerprint: fp(1),
+            lo: 100,
+            hi: 200,
+            patterns: patterns.clone(),
+        };
+        match roundtrip(&Msg::Exec(req)) {
+            Msg::Exec(got) => {
+                assert_eq!((got.id, got.epoch, got.lo, got.hi), (42, 3, 100, 200));
+                assert_eq!(got.fingerprint, fp(1));
+                assert_eq!(got.patterns.len(), patterns.len());
+                for (a, b) in got.patterns.iter().zip(&patterns) {
+                    assert_eq!(a, b, "patterns must survive the wire exactly");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_and_error_roundtrip() {
+        let values = vec![
+            (catalog::triangle().canonical_key(), 123i128),
+            (catalog::clique(4).canonical_key(), -7i128),
+            (catalog::cycle(5).canonical_key(), i128::MAX),
+        ];
+        let resp = ExecResponse {
+            id: 42,
+            epoch: 9,
+            served_from_store: 2,
+            values: values.clone(),
+        };
+        match roundtrip(&Msg::Result(resp)) {
+            Msg::Result(got) => {
+                assert_eq!((got.id, got.epoch, got.served_from_store), (42, 9, 2));
+                assert_eq!(got.values, values);
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Msg::Error { id: 5, message: "boom".into() }) {
+            Msg::Error { id, message } => assert_eq!((id, message.as_str()), (5, "boom")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_bytes_never_panic() {
+        // every truncation of a valid message fails cleanly (the torn-frame
+        // walk of frame.rs, applied to the shard codec)
+        let mut buf = Vec::new();
+        let req = ExecRequest {
+            id: 1,
+            epoch: 0,
+            fingerprint: fp(1),
+            lo: 0,
+            hi: 50,
+            patterns: vec![catalog::triangle(), catalog::diamond().vertex_induced()],
+        };
+        write_msg(&mut buf, &Msg::Exec(req)).unwrap();
+        for cut in 0..buf.len() {
+            assert!(read_msg(&mut &buf[..cut]).is_err(), "cut at {cut}");
+        }
+        // every single-bit flip is caught by the CRC (or decodes to a
+        // well-formed message that differs, for flips inside the header's
+        // own CRC field — either way, no panic)
+        for at in 0..buf.len() {
+            let mut evil = buf.clone();
+            evil[at] ^= 0x20;
+            let _ = read_msg(&mut &evil[..]);
+        }
+        // garbage payloads with a valid frame never decode
+        for payload in [&[][..], &[99u8][..], &[TAG_EXEC, 1, 2, 3][..]] {
+            let mut framed = Vec::new();
+            frame::write_frame(&mut framed, payload).unwrap();
+            assert!(read_msg(&mut &framed[..]).is_err());
+        }
+        // a pattern with out-of-range vertices is rejected, not asserted on
+        let mut evil_exec = vec![TAG_EXEC];
+        evil_exec.extend_from_slice(&1u64.to_le_bytes());
+        evil_exec.extend_from_slice(&0u64.to_le_bytes());
+        evil_exec.extend_from_slice(&fp(1).to_bytes());
+        evil_exec.extend_from_slice(&0u32.to_le_bytes());
+        evil_exec.extend_from_slice(&10u32.to_le_bytes());
+        evil_exec.extend_from_slice(&1u32.to_le_bytes());
+        evil_exec.extend_from_slice(&[3, 1, 0, 7, 0]); // edge (0,7) on a 3-vertex pattern
+        assert!(decode(&evil_exec).is_none());
+        // trailing garbage after a valid body is refused
+        let mut ok = encode(&Msg::Hello { fingerprint: fp(2) });
+        ok.push(0);
+        assert!(decode(&ok).is_none());
+    }
+}

@@ -1,0 +1,624 @@
+//! Shard worker: a process that owns one immutable copy of the data graph
+//! and answers [`ExecRequest`]s — "match these base patterns with the
+//! first level restricted to `[lo, hi)`" — over TCP.
+//!
+//! The worker is the service layer in miniature, minus mutation:
+//!
+//! * **Store** — partial counts are cached in a worker-local
+//!   [`ResultStore`] keyed by canonical pattern, so a re-sent base (a
+//!   coordinator retry, a second coordinator, a warm repeat) is served
+//!   without matching. The worker's graph never mutates, so its store
+//!   lives permanently at epoch 0 — content identity rides entirely on
+//!   the [`GraphFingerprint`] checked at handshake *and on every request*.
+//! * **Coalescing** — concurrent connections asking for the same base
+//!   register on a per-canonical-key in-flight cell (the same at-most-once
+//!   discipline as [`crate::service::serve`]): each base is matched at
+//!   most once per worker, whoever asks.
+//! * **Slice identity** — partial counts are only meaningful for the
+//!   first-level slice they were computed over. The store is bound to the
+//!   worker's current slice; a request with a different slice (the
+//!   coordinator pool was resized) resets it, and the durable store is
+//!   keyed by [`super::shard_fingerprint`] — graph fingerprint × slice —
+//!   so a restarted worker recovers warm exactly when both the graph and
+//!   the slice match what was persisted, and cold otherwise.
+//! * **Durability** — with a persist directory configured, published
+//!   partials are mirrored into the same WAL + snapshot machinery as the
+//!   coordinator's store ([`crate::service::persist`]); a clean shutdown
+//!   ([`ShardWorker::shutdown`] / drop — embedders and tests) compacts so
+//!   a restart recovers from one snapshot. The CLI worker blocks in
+//!   [`ShardWorker::wait`] and is stopped by killing the process, which
+//!   skips that compaction: the WAL is flushed per record, so the restart
+//!   replays the log — slower, never colder — and a dead owner's dir
+//!   lock is reclaimed automatically (Linux `/proc` probe; elsewhere the
+//!   lock needs the manual removal the startup error names).
+//!
+//! [`ExecRequest`]: super::proto::ExecRequest
+
+use super::proto::{self, ExecRequest, ExecResponse, Msg};
+use crate::graph::{DataGraph, GraphFingerprint, GraphStats};
+use crate::morph::Policy;
+use crate::pattern::canon::CanonKey;
+use crate::service::persist::{PersistConfig, Persistence};
+use crate::service::{QueryPlanner, ResultStore, StoreMetrics};
+use crate::util::timer::PhaseProfile;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Worker tuning.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Matcher threads per request.
+    pub threads: usize,
+    /// Fuse multi-base requests into one trie traversal.
+    pub fused: bool,
+    /// Local result-store budget in bytes.
+    pub cache_bytes: usize,
+    /// Persist the partial-count store (keyed by graph × slice) so a shard
+    /// restart recovers warm.
+    pub persist: Option<PersistConfig>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        WorkerConfig {
+            threads: crate::exec::parallel::default_threads(),
+            fused: true,
+            cache_bytes: 64 << 20,
+            persist: None,
+        }
+    }
+}
+
+/// Completion cell for one in-flight base (see [`crate::service::serve`]).
+#[derive(Default)]
+struct Cell {
+    value: Mutex<Option<std::result::Result<i128, &'static str>>>,
+    ready: Condvar,
+}
+
+struct Inner {
+    store: ResultStore<i128>,
+    persist: Option<Persistence<i128>>,
+    /// First-level slice the store's entries were computed over.
+    range: Option<(u32, u32)>,
+    inflight: HashMap<CanonKey, Arc<Cell>>,
+}
+
+struct WorkerState {
+    graph: DataGraph,
+    stats: GraphStats,
+    fingerprint: GraphFingerprint,
+    planner: QueryPlanner,
+    cache_bytes: usize,
+    persist_config: Option<PersistConfig>,
+    inner: Mutex<Inner>,
+}
+
+/// Unwind/error guard for the cells a request registered: disarmed after a
+/// successful publish, otherwise fails them so coalesced requests error
+/// instead of hanging.
+struct OwnedCells<'a> {
+    state: &'a WorkerState,
+    keys: Vec<CanonKey>,
+    armed: bool,
+}
+
+impl Drop for OwnedCells<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut inner = match self.state.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for k in &self.keys {
+            if let Some(cell) = inner.inflight.remove(k) {
+                *cell.value.lock().unwrap() = Some(Err("owner failed before publishing"));
+                cell.ready.notify_all();
+            }
+        }
+    }
+}
+
+/// A running shard worker: a TCP listener plus the shared state behind it.
+/// [`ShardWorker::shutdown`] (or drop) stops the accept loop and — when
+/// persistence is on — compacts the durable store so the next start
+/// recovers from one snapshot.
+pub struct ShardWorker {
+    addr: SocketAddr,
+    state: Arc<WorkerState>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    /// Bind `listen` (e.g. `127.0.0.1:7401`, port `0` for an ephemeral
+    /// port) and start accepting coordinator connections over `graph`.
+    pub fn bind(graph: DataGraph, listen: &str, config: WorkerConfig) -> Result<ShardWorker> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding shard worker listener on {listen}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        // the same stats seed as the service layer, so fused order
+        // selection on the worker mirrors what a single process would pick
+        let stats = GraphStats::compute(&graph, 2000, 0x5E55);
+        let fingerprint = graph.fingerprint();
+        let state = Arc::new(WorkerState {
+            graph,
+            stats,
+            fingerprint,
+            // the policy field is morph-only and workers never morph: they
+            // receive already-rewritten base patterns
+            planner: QueryPlanner::new(Policy::Off, config.fused, config.threads),
+            cache_bytes: config.cache_bytes,
+            persist_config: config.persist,
+            inner: Mutex::new(Inner {
+                store: ResultStore::new(config.cache_bytes),
+                persist: None,
+                range: None,
+                inflight: HashMap::new(),
+            }),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || accept_loop(&listener, &state, &stop))
+        };
+        Ok(ShardWorker {
+            addr,
+            state,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address the worker is listening on (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Fingerprint of the graph this worker serves slices of.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        self.state.fingerprint
+    }
+
+    /// Counters of the worker-local partial-count store.
+    pub fn store_metrics(&self) -> StoreMetrics {
+        self.state.inner.lock().unwrap().store.metrics()
+    }
+
+    /// Block until the accept loop ends (i.e. forever, for a CLI worker
+    /// that is stopped by killing the process). Shutdown compaction still
+    /// runs on drop after an external shutdown.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, join the accept loop and compact the durable store.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn stop_now(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // graceful-shutdown flush, mirroring Service::drop: fold the
+        // session's WAL into one snapshot so a shard restart skips replay
+        if let Ok(mut inner) = self.state.inner.lock() {
+            let inner = &mut *inner;
+            if let Some(p) = &mut inner.persist {
+                if p.compact_on_drop() && p.dirty() {
+                    if let Err(e) = p.compact(&inner.store.entries()) {
+                        eprintln!("warning: shard store compaction failed: {e}");
+                    }
+                }
+            }
+            // release the persist dir lock deterministically
+            inner.persist = None;
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        self.stop_now();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, state: &Arc<WorkerState>, stop: &Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(stream) = conn {
+            let state = state.clone();
+            std::thread::spawn(move || serve_connection(&state, stream));
+        }
+    }
+}
+
+fn serve_connection(state: &WorkerState, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // handshake: the coordinator must be mining the exact graph content
+    // this worker loaded — partial counts for any other graph are garbage,
+    // so a mismatch is a hard reject
+    match proto::read_msg(&mut stream) {
+        Ok(Msg::Hello { fingerprint }) if fingerprint == state.fingerprint => {
+            let welcome = Msg::Welcome {
+                fingerprint: state.fingerprint,
+                threads: state.planner.threads as u32,
+            };
+            if proto::write_msg(&mut stream, &welcome).is_err() {
+                return;
+            }
+        }
+        Ok(Msg::Hello { fingerprint }) => {
+            let _ = proto::write_msg(
+                &mut stream,
+                &Msg::Reject {
+                    reason: format!(
+                        "graph fingerprint mismatch: coordinator mines {fingerprint}, \
+                         this worker loaded {}",
+                        state.fingerprint
+                    ),
+                },
+            );
+            return;
+        }
+        _ => {
+            let _ = proto::write_msg(
+                &mut stream,
+                &Msg::Reject {
+                    reason: "expected HELLO".into(),
+                },
+            );
+            return;
+        }
+    }
+    loop {
+        let msg = match proto::read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return, // disconnect or framing violation: done
+        };
+        let Msg::Exec(req) = msg else { return };
+        // a panicking request must not kill the connection silently: the
+        // OwnedCells guard inside handle_exec has already failed any cells
+        // it owned, and the coordinator gets an explicit error
+        let reply = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_exec(state, &req)
+        })) {
+            Ok(Ok(resp)) => Msg::Result(resp),
+            Ok(Err(message)) => Msg::Error { id: req.id, message },
+            Err(_) => Msg::Error {
+                id: req.id,
+                message: "worker request panicked".into(),
+            },
+        };
+        if proto::write_msg(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Mirror one accepted store insert into the WAL (same degradation
+/// contract as the service layer: first IO error disables persistence).
+fn persist_insert(persist: &mut Option<Persistence<i128>>, key: &CanonKey, value: i128) {
+    if let Some(p) = persist {
+        if let Err(e) = p.record_insert(key, &value) {
+            eprintln!("warning: shard WAL append failed, persistence disabled: {e}");
+            *persist = None;
+        }
+    }
+}
+
+/// Bind the store (and durable store) to a first-level slice. Partial
+/// counts are pure functions of `(canonical key, graph content, slice)`,
+/// so a slice change makes every cached entry unusable: the store resets
+/// and the durable store rebinds to the slice's own fingerprint.
+fn ensure_range(
+    state: &WorkerState,
+    inner: &mut Inner,
+    range: (u32, u32),
+) -> std::result::Result<(), String> {
+    if inner.range == Some(range) {
+        return Ok(());
+    }
+    if !inner.inflight.is_empty() {
+        // another connection is mid-match for the old slice; resetting
+        // under it would publish old-slice partials into the new store
+        return Err("shard slice changed while bases are in flight — retry".into());
+    }
+    inner.range = Some(range);
+    inner.store = ResultStore::new(state.cache_bytes);
+    inner.persist = None; // releases the old slice's session + dir lock
+    if let Some(pc) = &state.persist_config {
+        let sfp = super::shard_fingerprint(state.fingerprint, range.0, range.1);
+        match Persistence::open(&pc.dir, sfp, pc.opts) {
+            Ok((p, warm, report)) => {
+                for (k, v) in warm {
+                    inner.store.restore(k, v);
+                }
+                eprintln!(
+                    "shard persist: slice [{}, {}) restored {} entries (fingerprint match: {})",
+                    range.0, range.1, report.restored, report.fingerprint_matched
+                );
+                inner.persist = Some(p);
+            }
+            Err(e) => {
+                eprintln!("warning: shard persistence unavailable: {e:#}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_exec(
+    state: &WorkerState,
+    req: &ExecRequest,
+) -> std::result::Result<ExecResponse, String> {
+    // re-check content identity per request: the coordinator's graph may
+    // have mutated since the handshake, and partials computed on this
+    // worker's (unmutated) copy must never merge into its answers
+    if req.fingerprint != state.fingerprint {
+        return Err(format!(
+            "graph fingerprint mismatch: request is for {}, this worker loaded {}",
+            req.fingerprint, state.fingerprint
+        ));
+    }
+    let n = state.graph.num_vertices() as u32;
+    if req.lo > req.hi || req.hi > n {
+        return Err(format!(
+            "bad shard slice [{}, {}) for a {n}-vertex graph",
+            req.lo, req.hi
+        ));
+    }
+    let keys: Vec<CanonKey> = req.patterns.iter().map(|p| p.canonical_key()).collect();
+
+    // split the request: store hits / in-flight elsewhere / ours to match
+    let mut values: HashMap<CanonKey, i128> = HashMap::new();
+    let mut owned: Vec<usize> = Vec::new();
+    let mut awaited: Vec<(CanonKey, Arc<Cell>)> = Vec::new();
+    {
+        let mut inner = state.inner.lock().unwrap();
+        ensure_range(state, &mut inner, (req.lo, req.hi))?;
+        for (i, k) in keys.iter().enumerate() {
+            if values.contains_key(k) {
+                continue; // duplicate base in one request
+            }
+            if let Some(v) = inner.store.get(k, 0) {
+                values.insert(*k, v);
+            } else if let Some(cell) = inner.inflight.get(k) {
+                awaited.push((*k, cell.clone()));
+            } else {
+                inner.inflight.insert(*k, Arc::new(Cell::default()));
+                owned.push(i);
+            }
+        }
+    }
+    let cached = values.len() as u32;
+    let mut guard = OwnedCells {
+        state,
+        keys: owned.iter().map(|&i| keys[i]).collect(),
+        armed: true,
+    };
+
+    let mut profile = PhaseProfile::new();
+    let fresh = state.planner.execute_bases_range(
+        &state.graph,
+        &req.patterns,
+        &owned,
+        &state.stats,
+        &mut profile,
+        Some((req.lo, req.hi)),
+    );
+
+    // publish: feed the store, mirror into the WAL, wake coalesced peers
+    {
+        let mut inner = state.inner.lock().unwrap();
+        let inner = &mut *inner;
+        // belt-and-braces: ensure_range refuses to switch slices while our
+        // cells are registered, so this always holds
+        let slice_current = inner.range == Some((req.lo, req.hi));
+        for &(k, v) in &fresh {
+            if slice_current && inner.store.insert(k, 0, v) {
+                persist_insert(&mut inner.persist, &k, v);
+            }
+            if let Some(cell) = inner.inflight.remove(&k) {
+                *cell.value.lock().unwrap() = Some(Ok(v));
+                cell.ready.notify_all();
+            }
+        }
+        // compaction runs inline: worker requests are already asynchronous
+        // from the coordinator's perspective, so the begin/finish split the
+        // service layer needs is not worth the machinery here
+        if let Some(p) = &mut inner.persist {
+            if p.wants_compaction() {
+                if let Err(e) = p.compact(&inner.store.entries()) {
+                    eprintln!("warning: shard store compaction failed, persistence disabled: {e}");
+                    inner.persist = None;
+                }
+            }
+        }
+    }
+    guard.armed = false;
+    values.extend(fresh.iter().copied());
+
+    // block on bases another connection is matching
+    for (k, cell) in awaited {
+        let mut slot = cell.value.lock().unwrap();
+        while slot.is_none() {
+            slot = cell.ready.wait(slot).unwrap();
+        }
+        match slot.expect("cell filled") {
+            Ok(v) => {
+                values.insert(k, v);
+            }
+            Err(msg) => return Err(format!("coalesced base failed: {msg}")),
+        }
+    }
+
+    // one entry per distinct requested key, in request order
+    let mut out: Vec<(CanonKey, i128)> = Vec::with_capacity(values.len());
+    let mut emitted: std::collections::HashSet<CanonKey> = std::collections::HashSet::new();
+    for k in &keys {
+        if emitted.insert(*k) {
+            let v = *values
+                .get(k)
+                .ok_or_else(|| format!("base {k:?} was neither cached nor matched"))?;
+            out.push((*k, v));
+        }
+    }
+    Ok(ExecResponse {
+        id: req.id,
+        epoch: req.epoch,
+        served_from_store: cached,
+        values: out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::pattern::catalog;
+
+    fn worker(seed: u64) -> ShardWorker {
+        ShardWorker::bind(
+            erdos_renyi(60, 220, seed),
+            "127.0.0.1:0",
+            WorkerConfig {
+                threads: 2,
+                fused: true,
+                cache_bytes: 1 << 20,
+                persist: None,
+            },
+        )
+        .unwrap()
+    }
+
+    fn fp(seed: u64) -> GraphFingerprint {
+        GraphFingerprint {
+            order: 1,
+            size: 1,
+            hash: seed,
+        }
+    }
+
+    #[test]
+    fn handshake_and_exec_over_tcp() {
+        let w = worker(0x6001);
+        let graph_fp = w.fingerprint();
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &Msg::Hello { fingerprint: graph_fp }).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Welcome { fingerprint, .. } => assert_eq!(fingerprint, graph_fp),
+            other => panic!("expected WELCOME, got {other:?}"),
+        }
+        let patterns = vec![catalog::triangle(), catalog::path(3)];
+        let full = |lo: u32, hi: u32, id: u64| ExecRequest {
+            id,
+            epoch: 0,
+            fingerprint: graph_fp,
+            lo,
+            hi,
+            patterns: patterns.clone(),
+        };
+        proto::write_msg(&mut stream, &Msg::Exec(full(0, 60, 1))).unwrap();
+        let whole = match proto::read_msg(&mut stream).unwrap() {
+            Msg::Result(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(whole.id, 1);
+        assert_eq!(whole.values.len(), 2);
+        assert_eq!(whole.served_from_store, 0);
+        // the full slice equals the direct engine's map counts
+        let g = erdos_renyi(60, 220, 0x6001);
+        for ((k, v), p) in whole.values.iter().zip(&patterns) {
+            assert_eq!(*k, p.canonical_key());
+            let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
+            assert_eq!(*v, direct, "{p:?}");
+        }
+        // re-sent bases are served from the worker-local store
+        proto::write_msg(&mut stream, &Msg::Exec(full(0, 60, 2))).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Result(r) => {
+                assert_eq!(r.served_from_store, 2);
+                assert_eq!(r.values, whole.values);
+            }
+            other => panic!("{other:?}"),
+        }
+        // a slice change resets the store: nothing served warm
+        proto::write_msg(&mut stream, &Msg::Exec(full(0, 30, 3))).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Result(r) => assert_eq!(r.served_from_store, 0),
+            other => panic!("{other:?}"),
+        }
+        drop(stream);
+        w.shutdown();
+    }
+
+    #[test]
+    fn wrong_graph_is_hard_rejected() {
+        let w = worker(0x6002);
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &Msg::Hello { fingerprint: fp(99) }).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Reject { reason } => {
+                assert!(reason.contains("fingerprint mismatch"), "{reason}");
+            }
+            other => panic!("expected REJECT, got {other:?}"),
+        }
+        // the worker closed the conversation: the next read fails
+        assert!(proto::read_msg(&mut stream).is_err());
+    }
+
+    #[test]
+    fn stale_fingerprint_per_request_is_an_error() {
+        // handshake with the right graph, then pretend the coordinator's
+        // graph mutated (new fingerprint on the request)
+        let w = worker(0x6003);
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &Msg::Hello { fingerprint: w.fingerprint() }).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
+        let req = ExecRequest {
+            id: 7,
+            epoch: 1,
+            fingerprint: fp(123),
+            lo: 0,
+            hi: 10,
+            patterns: vec![catalog::triangle()],
+        };
+        proto::write_msg(&mut stream, &Msg::Exec(req)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Error { id, message } => {
+                assert_eq!(id, 7);
+                assert!(message.contains("fingerprint mismatch"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // bad slices error too, without killing the connection
+        let req = ExecRequest {
+            id: 8,
+            epoch: 0,
+            fingerprint: w.fingerprint(),
+            lo: 50,
+            hi: 10_000,
+            patterns: vec![catalog::triangle()],
+        };
+        proto::write_msg(&mut stream, &Msg::Exec(req)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Error { id: 8, .. }));
+    }
+}

@@ -43,6 +43,7 @@ fn wal_only() -> PersistOpts {
     PersistOpts {
         snapshot_every: usize::MAX,
         compact_on_drop: false,
+        fsync_every: None,
     }
 }
 
