@@ -748,12 +748,15 @@ pub fn ablation_shard(scale: Scale, threads: usize) -> Result<()> {
 ///
 /// Per dataset: one single-process baseline batch through the service
 /// pipeline, then the same batch through a [`ShardCoordinator`] over 1, 2
-/// and 4 local worker processes-in-threads. Answers are asserted **equal**
-/// to the baseline (the summed partials are exact); the JSON records
-/// wall-clock per shard count. Workers here share the host's cores with
-/// the coordinator, so tiny-scale "speedups" mostly measure protocol +
-/// fan-out overhead — run at `--scale medium` on real hardware (ideally
-/// with remote workers) for the scaling story.
+/// and 4 local worker processes-in-threads, then a fault-recovery pair —
+/// 3 healthy workers vs 3 healthy plus one that dies after its first
+/// request (`killed_workers` 0 vs 1 in the JSON). Answers are asserted
+/// **equal** to the baseline in every row (the summed partials are
+/// exact); the JSON records wall-clock per shard count and the fabric's
+/// failure/retry/re-fan counters for the fault rows. Workers here share
+/// the host's cores with the coordinator, so tiny-scale "speedups" mostly
+/// measure protocol + fan-out overhead — run at `--scale medium` on real
+/// hardware (ideally with remote workers) for the scaling story.
 pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) -> Result<()> {
     use crate::service::{QueryPlanner, Service, ServiceConfig};
     use crate::shard::{ShardCoordinator, ShardWorker, WorkerConfig};
@@ -825,12 +828,110 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 w.shutdown();
             }
         }
+
+        // fault recovery: the same batch over 3 healthy workers vs 3
+        // healthy workers plus one that handshakes, takes its first
+        // request, and dies — the fabric retries it, declares it dead,
+        // re-fans its sub-slices across the survivors, and the answers
+        // must still equal the single-process baseline. The delta between
+        // the two rows is the price of one mid-batch worker death.
+        let fault_config = crate::shard::PoolConfig {
+            max_retries: 1,
+            retry_base: std::time::Duration::from_millis(50),
+            retry_cap: std::time::Duration::from_millis(200),
+            ..crate::shard::PoolConfig::default()
+        };
+        for killed in [0usize, 1] {
+            let workers: Vec<ShardWorker> = (0..3)
+                .map(|_| {
+                    ShardWorker::bind(
+                        d.generate(scale),
+                        "127.0.0.1:0",
+                        WorkerConfig {
+                            threads,
+                            fused: true,
+                            cache_bytes: 64 << 20,
+                            persist: None,
+                        },
+                    )
+                    .expect("bind shard worker")
+                })
+                .collect();
+            let mut addrs: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+            if killed == 1 {
+                addrs.push(spawn_dying_worker(d.generate(scale).fingerprint()));
+            }
+            let planner = QueryPlanner::new(Policy::Naive, true, threads);
+            let mut coord = ShardCoordinator::connect_with(
+                d.generate(scale),
+                &addrs,
+                planner,
+                64 << 20,
+                fault_config,
+            )?;
+            let (resp, t) = time(|| coord.call(&batch).expect("fault-recovery batch"));
+            assert_eq!(
+                resp.results,
+                single.results,
+                "{}: counts must survive {killed} mid-batch worker death(s)",
+                d.code()
+            );
+            let m = coord.shard_metrics();
+            assert_eq!(
+                m.worker_failures > 0,
+                killed > 0,
+                "{}: failures counted iff a worker died: {m:?}",
+                d.code()
+            );
+            println!(
+                "| {} | 3+{killed} dying | {t:.3} | {:.2}× | {} |",
+                d.code(),
+                t_single / t.max(1e-9),
+                m.partials_merged
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{}\", \"shards\": 3, \"killed_workers\": {killed}, \"batch_s\": {t:.6}, \"single_process_s\": {t_single:.6}, \"worker_failures\": {}, \"retries\": {}, \"refanned\": {}, \"probes\": {}}}",
+                d.code(),
+                m.worker_failures,
+                m.retries,
+                m.refanned,
+                m.probes,
+            ));
+            drop(coord);
+            for w in workers {
+                w.shutdown();
+            }
+        }
     }
     let json = format!(
         "{{\n  \"experiment\": \"shard_first_level_scaling\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
         rows.join(",\n")
     );
     write_rows_json(out, &json, rows.len())
+}
+
+/// Bench-only misbehaving worker: completes the v-current handshake,
+/// reads its first EXEC, then drops the connection — a deterministic
+/// stand-in for a worker process dying mid-batch. Accepts a handful of
+/// connections so the coordinator's retries also reach a corpse; the
+/// listener thread is detached (it parks after its last accept and dies
+/// with the process).
+fn spawn_dying_worker(fingerprint: crate::graph::GraphFingerprint) -> String {
+    use crate::shard::proto::{self, Msg};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind dying worker");
+    let addr = listener.local_addr().expect("dying worker addr").to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming().take(4) {
+            let Ok(mut s) = conn else { continue };
+            let Ok(Msg::Hello { .. }) = proto::read_msg(&mut s) else { continue };
+            let welcome = Msg::Welcome { fingerprint, threads: 1 };
+            if proto::write_msg(&mut s, &welcome).is_err() {
+                continue;
+            }
+            let _ = proto::read_msg(&mut s); // first request: accepted, never answered
+        }
+    });
+    addr
 }
 
 /// A9: durable result store — cold vs warm-restart vs replay-heavy.

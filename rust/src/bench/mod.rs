@@ -13,7 +13,7 @@
 //! | `kernels`  | A7 — kernel tiers × representation | [`ablations::ablation_kernels`] |
 //! | `service`  | A8 — service result cache (cold/warm/overlap) | [`ablations::ablation_service`] |
 //! | `persist`  | A9 — durable store (cold/warm-restart/replay) | [`ablations::ablation_persist`] |
-//! | `shard`    | A10 — first-level sharding (1/2/4 workers) | [`ablations::ablation_shard`] |
+//! | `shard`    | A10 — first-level sharding (1/2/4 workers) + fault recovery (0 vs 1 mid-batch kill) | [`ablations::ablation_shard`] |
 //!
 //! Reports are printed as markdown; EXPERIMENTS.md records a run.
 

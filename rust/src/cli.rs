@@ -9,8 +9,8 @@
 //! morphmine gen     --dataset mico[:scale] --out <path>
 //! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…] [--assert-warm-hits]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…]
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--assert-warm-hits]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…] [--connect-timeout S] [--shard-timeout S] [--probe-interval S]
 //! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N]
 //! morphmine store   <inspect|compact|purge|verify> --dir <dir> [--graph <spec>]
 //! ```
@@ -40,11 +40,17 @@
 //!
 //! Sharded mode ([`crate::shard`]): start `shard-worker` processes, each
 //! loading the **same** graph spec, then point `batch`/`serve` at them
-//! with `--shards host:port,host:port,…`. The coordinator fans each
-//! batch's missing base patterns out — one contiguous first-level slice
-//! per worker — and sums the exact per-slice partial counts; answers are
-//! identical to single-process runs. Edge updates are rejected in sharded
-//! serve (the workers' graph copies are immutable).
+//! with `--shards host:port,host:port,…`. The coordinator deals
+//! degree-weighted first-level sub-slices of each batch's missing base
+//! patterns from a work queue and sums the exact per-slice partial
+//! counts; answers are identical to single-process runs, including when
+//! workers die mid-batch (their sub-slices are retried with backoff and
+//! re-fanned across survivors — the batch fails only when no live worker
+//! remains). `--connect-timeout` bounds the handshake, `--shard-timeout`
+//! is how long a connected worker may stay silent before it is declared
+//! wedged, and `--probe-interval` is how often an idle-looking worker is
+//! PINGed for signs of life (all in seconds). Edge updates are rejected
+//! in sharded serve (the workers' graph copies are immutable).
 
 use crate::coordinator::{Config, Coordinator};
 use crate::graph::io::load_spec;
@@ -156,6 +162,7 @@ fn persist_of(args: &Args) -> Result<Option<PersistConfig>> {
 }
 
 fn service_of(args: &Args) -> Result<Service> {
+    ensure_no_shard_timing_flags(args)?;
     let spec = args
         .get("graph")
         .context("missing --graph <dataset[:scale] | path>")?;
@@ -176,6 +183,55 @@ fn service_of(args: &Args) -> Result<Service> {
         );
     }
     Ok(svc)
+}
+
+/// Parse a `--<key> <seconds>` duration flag (fractional seconds allowed).
+fn duration_flag(args: &Args, key: &str, default: std::time::Duration) -> Result<std::time::Duration> {
+    let Some(s) = args.get(key) else {
+        return Ok(default);
+    };
+    let secs: f64 = s
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad --{key} {s:?}: {e}"))?;
+    ensure!(
+        secs.is_finite() && secs > 0.0,
+        "bad --{key} {s:?}: must be a positive number of seconds"
+    );
+    Ok(std::time::Duration::from_secs_f64(secs))
+}
+
+/// Fabric timing from `--connect-timeout`/`--shard-timeout`/
+/// `--probe-interval` (seconds), on top of [`crate::shard::PoolConfig`]
+/// defaults.
+fn pool_config_of(args: &Args) -> Result<crate::shard::PoolConfig> {
+    let defaults = crate::shard::PoolConfig::default();
+    let config = crate::shard::PoolConfig {
+        connect_timeout: duration_flag(args, "connect-timeout", defaults.connect_timeout)?,
+        shard_timeout: duration_flag(args, "shard-timeout", defaults.shard_timeout)?,
+        probe_interval: duration_flag(args, "probe-interval", defaults.probe_interval)?,
+        ..defaults
+    };
+    ensure!(
+        config.shard_timeout >= config.probe_interval,
+        "--shard-timeout ({:?}) must be ≥ --probe-interval ({:?}): the wedge \
+         deadline is measured in missed probes",
+        config.shard_timeout,
+        config.probe_interval
+    );
+    Ok(config)
+}
+
+/// The fabric timing flags only mean something on a sharded coordinator;
+/// reject them elsewhere so a typo'd deployment fails instead of running
+/// with silently ignored timeouts.
+fn ensure_no_shard_timing_flags(args: &Args) -> Result<()> {
+    for key in ["connect-timeout", "shard-timeout", "probe-interval"] {
+        ensure!(
+            args.get(key).is_none(),
+            "--{key} needs --shards a1,a2,… (it configures the shard fabric)"
+        );
+    }
+    Ok(())
 }
 
 /// Sharded coordinator from `--shards a1,a2,…` (used by `batch`/`serve`).
@@ -205,8 +261,15 @@ fn shard_coordinator_of(args: &Args, addrs: &str) -> Result<crate::shard::ShardC
         args.parse_num("threads", crate::exec::parallel::default_threads())?,
     );
     let cache_bytes = args.parse_num("cache-mb", 64usize)? << 20;
-    let coord = crate::shard::ShardCoordinator::connect(graph, &addrs, planner, cache_bytes)?;
-    println!("sharded across {} workers: {}", coord.num_shards(), addrs.join(", "));
+    let config = pool_config_of(args)?;
+    let coord =
+        crate::shard::ShardCoordinator::connect_with(graph, &addrs, planner, cache_bytes, config)?;
+    println!(
+        "sharded across {} workers ({} sub-slices): {}",
+        coord.num_shards(),
+        coord.num_sub_slices(),
+        addrs.join(", ")
+    );
     Ok(coord)
 }
 
@@ -215,6 +278,10 @@ fn print_shard_metrics(coord: &crate::shard::ShardCoordinator) {
     println!(
         "shards: requests={} bases_sent={} partials_merged={} remote_cached={} errors={}",
         m.requests, m.bases_sent, m.partials_merged, m.remote_cached, m.errors
+    );
+    println!(
+        "fabric: worker_failures={} retries={} refanned={} probes={}",
+        m.worker_failures, m.retries, m.refanned, m.probes
     );
 }
 
@@ -409,6 +476,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             }
         }
         "shard-worker" => {
+            ensure_no_shard_timing_flags(&args)?;
             let spec = args
                 .get("graph")
                 .context("missing --graph <dataset[:scale] | path>")?;
@@ -765,6 +833,59 @@ mod tests {
             "batch --graph mico:tiny --queries motifs:3 --shards {shards}"
         )))
         .is_err());
+    }
+
+    #[test]
+    fn fabric_timing_flags_are_validated() {
+        // the timing flags configure the shard fabric; without --shards
+        // they would be silently ignored, so they are rejected instead
+        for flag in ["--connect-timeout 5", "--shard-timeout 5", "--probe-interval 1"] {
+            assert!(
+                run(argv(&format!("batch --graph mico:tiny --queries motifs:3 {flag}"))).is_err(),
+                "{flag} must require --shards"
+            );
+        }
+        let w = crate::shard::ShardWorker::bind(
+            crate::graph::io::load_spec("mico:tiny").unwrap(),
+            "127.0.0.1:0",
+            crate::shard::WorkerConfig {
+                threads: 2,
+                fused: true,
+                cache_bytes: 1 << 20,
+                persist: None,
+            },
+        )
+        .unwrap();
+        let shards = w.addr().to_string();
+        // bad values fail before any connection attempt
+        for bad in [
+            "--connect-timeout 0",
+            "--connect-timeout -1",
+            "--connect-timeout nan",
+            "--shard-timeout wat",
+            "--probe-interval 0",
+        ] {
+            assert!(
+                run(argv(&format!(
+                    "batch --graph mico:tiny --queries motifs:3 --shards {shards} {bad}"
+                )))
+                .is_err(),
+                "{bad}"
+            );
+        }
+        // a wedge deadline shorter than the probe interval is unsatisfiable
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --shards {shards} \
+             --shard-timeout 0.05 --probe-interval 1"
+        )))
+        .is_err());
+        // valid settings serve the batch normally
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 \
+             --shards {shards} --connect-timeout 5 --shard-timeout 10 --probe-interval 0.5"
+        )))
+        .unwrap();
+        w.shutdown();
     }
 
     #[test]

@@ -209,10 +209,13 @@ impl QueryPlanner {
     /// the per-shard partials (exact — each match roots at one first-level
     /// vertex), feed the totals back into the local store, compose.
     ///
-    /// Fails the whole batch if any shard fails: merging a partial pool
-    /// would silently undercount. The store is untouched by a failed
-    /// batch, so a retry (or a local fallback via
-    /// [`QueryPlanner::serve_batch`]) starts from the same state.
+    /// Worker failures do not fail the batch: the pool retries with
+    /// backoff and re-fans a dead worker's sub-slices across survivors
+    /// (all-slices-eventually), so this errors only when no live worker
+    /// remains — merging a partial pool would silently undercount, so
+    /// that terminal case still fails the whole batch loudly. The store
+    /// is untouched by a failed batch, so a retry (or a local fallback
+    /// via [`QueryPlanner::serve_batch`]) starts from the same state.
     #[allow(clippy::too_many_arguments)]
     pub fn serve_batch_sharded(
         &self,

@@ -1,82 +1,204 @@
-//! Coordinator side of the shard fan-out: one framed TCP connection per
-//! worker ([`ShardClient`]) and the pool that partitions a batch's missing
+//! Coordinator side of the shard fabric: one framed TCP connection per
+//! worker ([`ShardClient`]) and the pool that deals a batch's missing
 //! bases across all of them ([`ShardPool`]).
 //!
 //! The pool's one operation, [`ShardPool::execute_bases`], is a drop-in
-//! replacement for local execution: it splits the first-level vertex range
-//! into one contiguous slice per worker ([`super::shard_ranges`]), sends
-//! every worker the *same* base pattern set with *its* slice, and sums the
-//! per-shard partial map counts per canonical key. Each match is rooted at
-//! exactly one first-level vertex, so the sums are exactly the full-graph
-//! values — no reconciliation, no double counting, and the morph-algebra
-//! composition downstream is untouched.
+//! replacement for local execution, built as a small fault-tolerant
+//! fabric rather than a fixed fan-out:
 //!
-//! Failure handling is fail-fast: a worker that rejects the handshake
-//! (wrong graph), drops the connection, or answers with an error fails the
-//! whole batch with a descriptive error. Partial answers are never merged
-//! — a missing slice would silently undercount.
+//! * **Sub-slice dealing** — the first-level vertex range is cut into
+//!   degree-weighted sub-slices ([`super::weighted_ranges`], several per
+//!   worker) held in a shared work queue. Each worker thread keeps a small
+//!   pipeline of requests in flight and pulls the next sub-slice as
+//!   replies land, so a fast worker steals the sub-slices a straggler
+//!   never got to — no barrier on the slowest fixed slice.
+//! * **Liveness** — while replies are outstanding, the client probes the
+//!   worker with [`Msg::Ping`] every `probe_interval`; any traffic
+//!   (including pongs) counts as liveness, and a connection silent for
+//!   `shard_timeout` is declared wedged. A pong reporting zero in-flight
+//!   requests while we still await replies means the worker lost them —
+//!   caught immediately instead of waiting out the deadline.
+//! * **Retry and re-fan** — a failed worker (refused connect, broken
+//!   pipe, CRC error, wedge, error reply) has its in-flight sub-slices
+//!   pushed back on the queue for the survivors, then gets reconnect
+//!   attempts with capped exponential backoff + deterministic jitter.
+//!   All-slices-or-nothing becomes all-slices-*eventually*: the batch
+//!   fails only when sub-slices remain and no live worker is left.
+//!
+//! The merge stays exact under every re-assignment: sub-slices tile the
+//! first-level range, every match roots at exactly one first-level vertex,
+//! and per-key sums commute — so which worker serves a sub-slice is
+//! irrelevant as long as each one is merged exactly once, which the
+//! completion count (`remaining`) enforces. Partial answers are never
+//! merged into results: a missing sub-slice fails the batch loudly.
 
 use super::proto::{self, ExecRequest, ExecResponse, Msg};
-use super::shard_ranges;
 use crate::graph::{DataGraph, GraphFingerprint};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
-use anyhow::{bail, ensure, Context, Result};
-use std::collections::HashMap;
-use std::net::TcpStream;
+use crate::util::rng::splitmix64;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{ErrorKind, Read};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-/// Coordinator-side counters for the shard fan-out.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct ShardMetrics {
-    /// Exec requests sent (one per worker per batch with missing bases).
-    pub requests: u64,
-    /// Base patterns fanned out, summed over workers.
-    pub bases_sent: u64,
-    /// Per-shard partial values merged into totals.
-    pub partials_merged: u64,
-    /// Bases workers reported serving from their local stores instead of
-    /// matching (shard-level cache reuse, summed over workers).
-    pub remote_cached: u64,
-    /// Batches failed by a worker error or lost connection.
-    pub errors: u64,
+/// Fabric tuning: connection deadlines, liveness probing, retry budget,
+/// and sub-slice dealing. The defaults suit LAN pools; tests and the CLI
+/// (`--connect-timeout`, `--shard-timeout`, `--probe-interval`) override.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Deadline for TCP connect + handshake reply, per attempt. A worker
+    /// that accepts the connection but never answers the handshake
+    /// (wedged, SIGSTOPped, black-holed) fails the attempt loudly.
+    pub connect_timeout: Duration,
+    /// Declare a connection wedged when it produces no traffic (replies
+    /// *or* pongs) for this long while requests are in flight. This is a
+    /// soft per-request deadline: a live worker deep in a heavy slice
+    /// keeps answering probes and is left alone.
+    pub shard_timeout: Duration,
+    /// How often to send a liveness probe while waiting for replies.
+    pub probe_interval: Duration,
+    /// Reconnect attempts per worker failure; also bounds how many times
+    /// a flaky worker may fail per batch before it is dropped for good.
+    pub max_retries: u32,
+    /// First reconnect backoff; doubles per attempt up to `retry_cap`,
+    /// then jittered by ×[0.5, 1.5).
+    pub retry_base: Duration,
+    /// Backoff ceiling.
+    pub retry_cap: Duration,
+    /// Degree-weighted sub-slices dealt per connected worker (the work
+    /// queue holds `workers × this` sub-slices, minus empties).
+    pub sub_slices_per_worker: usize,
+    /// Requests kept in flight per worker connection, so the worker can
+    /// start the next sub-slice while a reply is on the wire.
+    pub pipeline: usize,
 }
 
-/// One connected shard worker.
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig {
+            connect_timeout: Duration::from_secs(30),
+            shard_timeout: Duration::from_secs(30),
+            probe_interval: Duration::from_secs(2),
+            max_retries: 2,
+            retry_base: Duration::from_millis(100),
+            retry_cap: Duration::from_secs(2),
+            sub_slices_per_worker: 4,
+            pipeline: 2,
+        }
+    }
+}
+
+/// Coordinator-side counters for the shard fabric.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardMetrics {
+    /// Exec requests sent (one per dealt sub-slice, retries included).
+    pub requests: u64,
+    /// Base patterns fanned out, summed over requests.
+    pub bases_sent: u64,
+    /// Per-sub-slice partial values merged into totals.
+    pub partials_merged: u64,
+    /// Bases workers reported serving from their local stores instead of
+    /// matching (shard-level cache reuse, summed over requests).
+    pub remote_cached: u64,
+    /// Batches failed because sub-slices remained with no live worker.
+    pub errors: u64,
+    /// Worker failures observed mid-batch (disconnect, wedge, error
+    /// reply, malformed reply) — each one triggers retry + re-fan.
+    pub worker_failures: u64,
+    /// Reconnect attempts made after worker failures.
+    pub retries: u64,
+    /// Sub-slices re-queued from a failed worker for the survivors.
+    pub refanned: u64,
+    /// Liveness probes sent while replies were outstanding.
+    pub probes: u64,
+}
+
+impl ShardMetrics {
+    fn absorb(&mut self, d: ShardMetrics) {
+        self.requests += d.requests;
+        self.bases_sent += d.bases_sent;
+        self.partials_merged += d.partials_merged;
+        self.remote_cached += d.remote_cached;
+        self.errors += d.errors;
+        self.worker_failures += d.worker_failures;
+        self.retries += d.retries;
+        self.refanned += d.refanned;
+        self.probes += d.probes;
+    }
+}
+
+/// One connected shard worker: the framed stream plus an incremental
+/// receive buffer (a probe-interval read timeout can fire mid-frame, and
+/// `read_exact` would lose the partial bytes — the buffer keeps them).
 pub struct ShardClient {
     addr: String,
     stream: TcpStream,
     threads: u32,
+    recv: Vec<u8>,
+    /// Nonce of the last liveness probe sent.
+    next_nonce: u64,
+    /// Nonce watermark at the last Exec send: pongs with a nonce above
+    /// this were probed *after* the newest request, so the worker has
+    /// necessarily read every request we still await (TCP ordering) and
+    /// its in-flight count is trustworthy.
+    exec_nonce_mark: u64,
 }
 
-/// How long a worker gets to answer the handshake. A worker that accepts
-/// the TCP connection but never replies (wedged, SIGSTOPped, black-holed)
-/// must fail the pool loudly at connect time, not hang it. Exec replies
-/// are deliberately *not* deadlined — matching a big slice legitimately
-/// takes as long as it takes; liveness probing for in-flight requests is
-/// a recorded ROADMAP follow-up.
-pub const HANDSHAKE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
-
 impl ShardClient {
-    /// Connect and handshake: the worker must hold a graph with exactly
+    /// Connect and handshake with the default 30s deadline: the worker
+    /// must speak this protocol version and hold a graph with exactly
     /// `fingerprint` — anything else is a hard reject on its side, which
-    /// surfaces here as a connection error. The handshake reply is
-    /// deadlined by [`HANDSHAKE_TIMEOUT`] so a wedged worker fails the
-    /// pool instead of hanging it.
+    /// surfaces here as a connection error.
     pub fn connect(addr: &str, fingerprint: GraphFingerprint) -> Result<ShardClient> {
-        let mut stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to shard worker {addr}"))?;
+        Self::connect_deadline(addr, fingerprint, PoolConfig::default().connect_timeout)
+    }
+
+    /// [`ShardClient::connect`] with an explicit deadline covering both
+    /// the TCP connect and the handshake reply, so a worker that accepts
+    /// the socket but never answers fails the attempt instead of hanging
+    /// it.
+    pub fn connect_deadline(
+        addr: &str,
+        fingerprint: GraphFingerprint,
+        timeout: Duration,
+    ) -> Result<ShardClient> {
+        let timeout = timeout.max(Duration::from_millis(1));
+        let mut last_err: Option<std::io::Error> = None;
+        let mut connected: Option<TcpStream> = None;
+        for sa in addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving shard worker address {addr}"))?
+        {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(s) => {
+                    connected = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let mut stream = connected.ok_or_else(|| match last_err {
+            Some(e) => anyhow!(e).context(format!("connecting to shard worker {addr}")),
+            None => anyhow!("shard worker address {addr} resolved to nothing"),
+        })?;
         let _ = stream.set_nodelay(true);
         stream
-            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
-            .context("setting handshake timeout")?;
-        proto::write_msg(&mut stream, &Msg::Hello { fingerprint })
-            .with_context(|| format!("greeting shard worker {addr}"))?;
+            .set_read_timeout(Some(timeout))
+            .context("setting handshake deadline")?;
+        proto::write_msg(
+            &mut stream,
+            &Msg::Hello {
+                version: proto::VERSION,
+                fingerprint,
+            },
+        )
+        .with_context(|| format!("greeting shard worker {addr}"))?;
         let reply = proto::read_msg(&mut stream)
             .with_context(|| format!("reading handshake reply from {addr}"))?;
-        // exec replies wait on real matching work: no deadline (see above)
-        stream
-            .set_read_timeout(None)
-            .context("clearing handshake timeout")?;
         match reply {
             Msg::Welcome { fingerprint: fp, threads } => {
                 ensure!(
@@ -87,6 +209,9 @@ impl ShardClient {
                     addr: addr.to_string(),
                     stream,
                     threads,
+                    recv: Vec::new(),
+                    next_nonce: 0,
+                    exec_nonce_mark: 0,
                 })
             }
             Msg::Reject { reason } => bail!("shard worker {addr} rejected handshake: {reason}"),
@@ -104,77 +229,244 @@ impl ShardClient {
         self.threads
     }
 
-    fn execute(&mut self, req: ExecRequest) -> Result<ExecResponse> {
-        let id = req.id;
-        proto::write_msg(&mut self.stream, &Msg::Exec(req))
-            .with_context(|| format!("sending request to shard worker {}", self.addr))?;
-        match proto::read_msg(&mut self.stream)
-            .with_context(|| format!("reading reply from shard worker {}", self.addr))?
-        {
-            Msg::Result(resp) if resp.id == id => Ok(resp),
-            Msg::Result(resp) => bail!(
-                "shard worker {} answered request {} while {} was pending",
-                self.addr,
-                resp.id,
-                id
-            ),
-            Msg::Error { id: eid, message } if eid == id => {
-                bail!("shard worker {} failed the request: {message}", self.addr)
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        if matches!(msg, Msg::Exec(_)) {
+            self.exec_nonce_mark = self.next_nonce;
+        }
+        proto::write_msg(&mut self.stream, msg)
+            .with_context(|| format!("sending to shard worker {}", self.addr))
+    }
+
+    /// Pop one complete frame off the receive buffer, if any. Framing
+    /// violations (oversized length, CRC mismatch, unreadable body) are
+    /// errors — the connection is done.
+    fn pop_frame(&mut self) -> Result<Option<Msg>> {
+        use crate::service::persist::frame::{self, FRAME_HEADER};
+        if self.recv.len() < FRAME_HEADER {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.recv[..4].try_into().expect("4 bytes")) as usize;
+        let crc = u32::from_le_bytes(self.recv[4..FRAME_HEADER].try_into().expect("4 bytes"));
+        ensure!(
+            len <= proto::MAX_MSG_LEN,
+            "shard worker {} sent a {len}-byte frame (cap {})",
+            self.addr,
+            proto::MAX_MSG_LEN
+        );
+        if self.recv.len() < FRAME_HEADER + len {
+            return Ok(None);
+        }
+        let payload = &self.recv[FRAME_HEADER..FRAME_HEADER + len];
+        ensure!(
+            frame::crc32(payload) == crc,
+            "shard worker {} sent a corrupt frame (CRC mismatch)",
+            self.addr
+        );
+        let msg = proto::decode(payload)
+            .ok_or_else(|| anyhow!("shard worker {} sent an unreadable message", self.addr))?;
+        self.recv.drain(..FRAME_HEADER + len);
+        Ok(Some(msg))
+    }
+
+    /// Wait for the next substantive reply (Result/Error), probing the
+    /// worker with pings every `probe_interval` and failing after
+    /// `shard_timeout` of total silence. Pongs are consumed here: they
+    /// count as liveness, and a trustworthy pong reporting zero in-flight
+    /// requests while we wait means the requests were lost.
+    fn recv_reply(
+        &mut self,
+        probe_interval: Duration,
+        shard_timeout: Duration,
+        probes: &mut u64,
+    ) -> Result<Msg> {
+        self.stream
+            .set_read_timeout(Some(probe_interval.max(Duration::from_millis(1))))
+            .context("setting probe interval")?;
+        let mut last_traffic = Instant::now();
+        let mut chunk = [0u8; 16 << 10];
+        loop {
+            match self.pop_frame()? {
+                Some(Msg::Pong { nonce, inflight }) => {
+                    last_traffic = Instant::now();
+                    if inflight == 0 && nonce > self.exec_nonce_mark {
+                        // the probe was sent after our newest request, so
+                        // the worker read every request we await before
+                        // answering it — zero in-flight means they were
+                        // dropped without a reply
+                        bail!(
+                            "shard worker {} answered a probe but reports no in-flight \
+                             work — requests were lost",
+                            self.addr
+                        );
+                    }
+                    continue;
+                }
+                Some(msg) => return Ok(msg),
+                None => {}
             }
-            other => bail!("shard worker {} sent unexpected reply {other:?}", self.addr),
+            match self.stream.read(&mut chunk) {
+                Ok(0) => bail!("shard worker {} closed the connection", self.addr),
+                Ok(n) => {
+                    self.recv.extend_from_slice(&chunk[..n]);
+                    last_traffic = Instant::now();
+                }
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    if last_traffic.elapsed() >= shard_timeout {
+                        bail!(
+                            "shard worker {} wedged: no traffic for {:.1?} \
+                             (deadline {:.1?})",
+                            self.addr,
+                            last_traffic.elapsed(),
+                            shard_timeout
+                        );
+                    }
+                    self.next_nonce += 1;
+                    *probes += 1;
+                    let ping = Msg::Ping { nonce: self.next_nonce };
+                    self.send(&ping)
+                        .with_context(|| format!("probing shard worker {}", self.addr))?;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("reading from shard worker {}", self.addr))
+                }
+            }
         }
     }
 }
 
-/// A fixed set of connected shard workers sharing one graph identity.
+/// One pool seat: the address is permanent, the connection comes and goes
+/// with failures and reconnects.
+struct WorkerSlot {
+    addr: String,
+    client: Option<ShardClient>,
+}
+
+/// Shared state of one in-flight batch: the sub-slice work queue, the
+/// completion count, and the partial sums.
+struct WorkState {
+    queue: VecDeque<(u32, u32)>,
+    /// Sub-slices not yet merged. The batch is complete exactly when this
+    /// hits zero — each sub-slice is merged once, no matter how many
+    /// times it was re-dealt.
+    remaining: usize,
+    sums: HashMap<CanonKey, i128>,
+    delta: ShardMetrics,
+    failures: Vec<String>,
+}
+
+struct Batch {
+    work: Mutex<WorkState>,
+    /// Signalled on completion and on re-fan, so an idle survivor picks
+    /// up a failed worker's slices promptly.
+    changed: Condvar,
+}
+
+/// A set of connected shard workers sharing one graph identity, dealing
+/// degree-weighted sub-slices from a shared queue with retry and re-fan
+/// on failure.
 pub struct ShardPool {
-    clients: Vec<ShardClient>,
+    workers: Vec<WorkerSlot>,
     fingerprint: GraphFingerprint,
-    num_vertices: u32,
+    sub_slices: Vec<(u32, u32)>,
+    config: PoolConfig,
     next_id: u64,
     metrics: ShardMetrics,
 }
 
 impl ShardPool {
-    /// Connect to every address, handshaking each against `graph`'s
-    /// fingerprint. Any unreachable or mismatched worker fails the pool —
-    /// a partial pool would silently undercount.
+    /// Connect to every address with default [`PoolConfig`], handshaking
+    /// each against `graph`'s fingerprint.
     pub fn connect(addrs: &[String], graph: &DataGraph) -> Result<ShardPool> {
+        Self::connect_with(addrs, graph, PoolConfig::default())
+    }
+
+    /// Connect to every address, handshaking each against `graph`'s
+    /// fingerprint. Every unusable worker — unreachable, wedged, wrong
+    /// graph, wrong protocol — is collected and reported in **one** error,
+    /// so an operator fixes the whole pool in one pass instead of
+    /// replaying connect once per broken address. A partial pool is still
+    /// refused: batches tolerate workers dying, but a pool that *starts*
+    /// degraded usually means a typo'd address list.
+    pub fn connect_with(
+        addrs: &[String],
+        graph: &DataGraph,
+        config: PoolConfig,
+    ) -> Result<ShardPool> {
         ensure!(!addrs.is_empty(), "a shard pool needs at least one worker address");
         let fingerprint = graph.fingerprint();
-        let clients = addrs
-            .iter()
-            .map(|a| ShardClient::connect(a, fingerprint))
-            .collect::<Result<Vec<_>>>()?;
+        let mut workers = Vec::with_capacity(addrs.len());
+        let mut unusable: Vec<String> = Vec::new();
+        for addr in addrs {
+            match ShardClient::connect_deadline(addr, fingerprint, config.connect_timeout) {
+                Ok(c) => workers.push(WorkerSlot {
+                    addr: addr.clone(),
+                    client: Some(c),
+                }),
+                Err(e) => unusable.push(format!("{addr}: {e:#}")),
+            }
+        }
+        if !unusable.is_empty() {
+            bail!(
+                "{} of {} shard workers unusable:\n  {}",
+                unusable.len(),
+                addrs.len(),
+                unusable.join("\n  ")
+            );
+        }
+        let weights: Vec<u64> = (0..graph.num_vertices() as u32)
+            .map(|v| graph.degree(v) as u64 + 1)
+            .collect();
+        let sub_slices = super::weighted_ranges(
+            &weights,
+            workers.len() * config.sub_slices_per_worker.max(1),
+        );
         Ok(ShardPool {
-            clients,
+            workers,
             fingerprint,
-            num_vertices: graph.num_vertices() as u32,
+            sub_slices,
+            config,
             next_id: 0,
             metrics: ShardMetrics::default(),
         })
     }
 
-    /// Number of workers (= number of first-level slices).
+    /// Number of pool seats (connected workers at start; a seat whose
+    /// worker died stays counted — the address is still part of the pool).
     pub fn num_shards(&self) -> usize {
-        self.clients.len()
+        self.workers.len()
     }
 
-    /// The contiguous first-level slices, one per worker in pool order.
-    pub fn ranges(&self) -> Vec<(u32, u32)> {
-        shard_ranges(self.num_vertices, self.clients.len())
+    /// The degree-weighted sub-slices dealt per batch, in vertex order.
+    /// Deterministic for a given graph and pool size — sub-slice identity
+    /// keys worker-side stores and durable state.
+    pub fn sub_slices(&self) -> &[(u32, u32)] {
+        &self.sub_slices
     }
 
-    /// Coordinator-side fan-out counters.
+    /// Number of dealt sub-slices (≤ workers × `sub_slices_per_worker`).
+    pub fn num_sub_slices(&self) -> usize {
+        self.sub_slices.len()
+    }
+
+    /// Coordinator-side fabric counters.
     pub fn metrics(&self) -> ShardMetrics {
         self.metrics
     }
 
+    /// The fabric tuning this pool runs with.
+    pub fn config(&self) -> PoolConfig {
+        self.config
+    }
+
     /// Match the subset of `base` selected by `indices` across the pool
-    /// and return **full-graph** map counts per canonical key: every
-    /// worker runs the same base set over its own first-level slice, and
-    /// the per-shard partials are summed here. `epoch` is the
-    /// coordinator's cache epoch, echoed through for bookkeeping.
+    /// and return **full-graph** map counts per canonical key: sub-slices
+    /// are dealt to workers from a shared queue, each worker runs the same
+    /// base set over the sub-slices it pulls, and the partials are summed
+    /// here — exactly once per sub-slice, whichever worker served it.
+    /// `epoch` is the coordinator's cache epoch, echoed through for
+    /// bookkeeping.
     pub fn execute_bases(
         &mut self,
         base: &[Pattern],
@@ -186,75 +478,239 @@ impl ShardPool {
         }
         let patterns: Vec<Pattern> = indices.iter().map(|&i| base[i].clone()).collect();
         let keys: Vec<CanonKey> = patterns.iter().map(|p| p.canonical_key()).collect();
-        let ranges = shard_ranges(self.num_vertices, self.clients.len());
-        let base_id = self.next_id;
-        self.next_id += self.clients.len() as u64;
-        let fingerprint = self.fingerprint;
-
-        // fan out: blocking IO, one thread per worker so slices overlap
-        let replies: Vec<Result<ExecResponse>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .clients
-                .iter_mut()
-                .zip(ranges.iter().copied())
-                .enumerate()
-                .map(|(i, (client, (lo, hi)))| {
-                    let patterns = patterns.clone();
-                    s.spawn(move || {
-                        client.execute(ExecRequest {
-                            id: base_id + i as u64,
-                            epoch,
-                            fingerprint,
-                            lo,
-                            hi,
-                            patterns,
-                        })
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard client thread"))
-                .collect()
-        });
-
-        // merge: exact sums per canonical key, all slices or nothing
-        let mut sums: HashMap<CanonKey, i128> = keys.iter().map(|k| (*k, 0)).collect();
+        let sums: HashMap<CanonKey, i128> = keys.iter().map(|k| (*k, 0)).collect();
         let distinct = sums.len();
-        for reply in replies {
-            let resp = match reply {
-                Ok(r) => r,
-                Err(e) => {
-                    self.metrics.errors += 1;
-                    return Err(e);
+        let batch = Batch {
+            work: Mutex::new(WorkState {
+                queue: self.sub_slices.iter().copied().collect(),
+                remaining: self.sub_slices.len(),
+                sums,
+                delta: ShardMetrics::default(),
+                failures: Vec::new(),
+            }),
+            changed: Condvar::new(),
+        };
+        if self.sub_slices.is_empty() {
+            // zero-vertex graph: every count is the aggregation identity
+        } else {
+            let ids = AtomicU64::new(self.next_id);
+            let (cfg, fingerprint) = (self.config, self.fingerprint);
+            std::thread::scope(|s| {
+                for slot in self.workers.iter_mut() {
+                    let (batch, patterns, ids) = (&batch, &patterns, &ids);
+                    s.spawn(move || {
+                        run_worker(slot, batch, &cfg, patterns, distinct, fingerprint, epoch, ids)
+                    });
                 }
-            };
-            ensure!(
-                resp.values.len() == distinct,
-                "shard worker answered {} bases, expected {distinct}",
-                resp.values.len()
-            );
-            self.metrics.remote_cached += resp.served_from_store as u64;
-            for (k, v) in resp.values {
-                match sums.get_mut(&k) {
-                    Some(total) => {
-                        *total += v;
-                        self.metrics.partials_merged += 1;
-                    }
-                    None => bail!("shard worker answered an unrequested base pattern {k:?}"),
-                }
-            }
+            });
+            self.next_id = ids.into_inner();
         }
-        self.metrics.requests += self.clients.len() as u64;
-        self.metrics.bases_sent += (distinct * self.clients.len()) as u64;
+        let state = batch.work.into_inner().expect("batch threads joined");
+        self.metrics.absorb(state.delta);
+        if state.remaining > 0 {
+            self.metrics.errors += 1;
+            bail!(
+                "sharded batch failed: {} of {} sub-slices unserved and no live worker \
+                 remains; worker failures:\n  {}",
+                state.remaining,
+                self.sub_slices.len(),
+                state.failures.join("\n  ")
+            );
+        }
         let mut out = Vec::with_capacity(distinct);
-        let mut emitted = std::collections::HashSet::new();
+        let mut emitted = HashSet::new();
         for k in keys {
             if emitted.insert(k) {
-                out.push((k, sums[&k]));
+                out.push((k, state.sums[&k]));
             }
         }
         Ok(out)
+    }
+}
+
+/// One worker's batch loop: deal sub-slices into the pipeline, await
+/// replies (probing for liveness), merge, and on failure re-fan + retry.
+/// Returns when the batch is complete or this worker is out of lives.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    slot: &mut WorkerSlot,
+    batch: &Batch,
+    cfg: &PoolConfig,
+    patterns: &[Pattern],
+    distinct: usize,
+    fingerprint: GraphFingerprint,
+    epoch: u64,
+    ids: &AtomicU64,
+) {
+    // deterministic backoff jitter, decorrelated per worker address
+    let mut jitter = {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in slot.addr.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    };
+    // failures tolerated before this worker is dropped from the batch
+    let mut lives = cfg.max_retries as i64 + 1;
+    let mut inflight: HashMap<u64, (u32, u32)> = HashMap::new();
+    let mut probes = 0u64;
+    loop {
+        if slot.client.is_none() {
+            break;
+        }
+        // deal sub-slices into the pipeline
+        let mut send_failure: Option<String> = None;
+        while inflight.len() < cfg.pipeline.max(1) {
+            let slice = {
+                let mut w = batch.work.lock().unwrap();
+                match w.queue.pop_front() {
+                    Some(s) => {
+                        w.delta.requests += 1;
+                        w.delta.bases_sent += distinct as u64;
+                        s
+                    }
+                    None => break,
+                }
+            };
+            let id = ids.fetch_add(1, Ordering::SeqCst);
+            inflight.insert(id, slice);
+            let req = ExecRequest {
+                id,
+                epoch,
+                fingerprint,
+                lo: slice.0,
+                hi: slice.1,
+                patterns: patterns.to_vec(),
+            };
+            let client = slot.client.as_mut().expect("checked live above");
+            if let Err(e) = client.send(&Msg::Exec(req)) {
+                send_failure = Some(format!("{e:#}"));
+                break;
+            }
+        }
+        if let Some(reason) = send_failure {
+            fail_and_refan(slot, batch, cfg, fingerprint, &mut inflight, &mut lives, &mut jitter, &reason);
+            continue;
+        }
+        if inflight.is_empty() {
+            // the queue is dry; linger in case a failing worker re-fans
+            // its slices back — the batch is over only at remaining == 0
+            let w = batch.work.lock().unwrap();
+            if w.remaining == 0 {
+                break;
+            }
+            if w.queue.is_empty() {
+                let _unused = batch
+                    .changed
+                    .wait_timeout(w, Duration::from_millis(25))
+                    .unwrap();
+            }
+            continue;
+        }
+        // await one reply, probing for liveness while we wait
+        let outcome = slot
+            .client
+            .as_mut()
+            .expect("checked live above")
+            .recv_reply(cfg.probe_interval, cfg.shard_timeout, &mut probes);
+        let reason = match outcome {
+            Ok(Msg::Result(resp)) => merge_reply(batch, &mut inflight, &resp, distinct),
+            Ok(Msg::Error { id: _, message }) => Some(format!("worker error reply: {message}")),
+            Ok(other) => Some(format!("unexpected reply {other:?}")),
+            Err(e) => Some(format!("{e:#}")),
+        };
+        if let Some(reason) = reason {
+            fail_and_refan(slot, batch, cfg, fingerprint, &mut inflight, &mut lives, &mut jitter, &reason);
+        }
+    }
+    batch.work.lock().unwrap().delta.probes += probes;
+}
+
+/// Validate and merge one reply. Returns a failure reason if the reply is
+/// malformed (wrong id, wrong cardinality, duplicate or unrequested keys)
+/// — nothing is merged in that case, so the sub-slice can be re-dealt
+/// without double counting.
+fn merge_reply(
+    batch: &Batch,
+    inflight: &mut HashMap<u64, (u32, u32)>,
+    resp: &ExecResponse,
+    distinct: usize,
+) -> Option<String> {
+    if !inflight.contains_key(&resp.id) {
+        return Some(format!("reply for unknown request id {}", resp.id));
+    }
+    let mut w = batch.work.lock().unwrap();
+    let mut seen: HashSet<CanonKey> = HashSet::with_capacity(resp.values.len());
+    let well_formed = resp.values.len() == distinct
+        && resp
+            .values
+            .iter()
+            .all(|(k, _)| seen.insert(*k) && w.sums.contains_key(k));
+    if !well_formed {
+        return Some(format!(
+            "malformed reply for request {}: {} values for {distinct} requested bases",
+            resp.id,
+            resp.values.len()
+        ));
+    }
+    for (k, v) in &resp.values {
+        *w.sums.get_mut(k).expect("validated above") += *v;
+    }
+    w.delta.partials_merged += distinct as u64;
+    w.delta.remote_cached += resp.served_from_store as u64;
+    inflight.remove(&resp.id);
+    w.remaining -= 1;
+    if w.remaining == 0 {
+        batch.changed.notify_all();
+    }
+    None
+}
+
+/// Handle one worker failure: push its in-flight sub-slices back on the
+/// queue (the survivors pick them up immediately), then try to reconnect
+/// with capped exponential backoff + jitter. On reconnect the worker
+/// rejoins the dealing loop; otherwise its seat goes dark for the batch.
+#[allow(clippy::too_many_arguments)]
+fn fail_and_refan(
+    slot: &mut WorkerSlot,
+    batch: &Batch,
+    cfg: &PoolConfig,
+    fingerprint: GraphFingerprint,
+    inflight: &mut HashMap<u64, (u32, u32)>,
+    lives: &mut i64,
+    jitter: &mut u64,
+    reason: &str,
+) {
+    slot.client = None;
+    {
+        let mut w = batch.work.lock().unwrap();
+        w.delta.worker_failures += 1;
+        w.delta.refanned += inflight.len() as u64;
+        for (_, slice) in inflight.drain() {
+            w.queue.push_back(slice);
+        }
+        w.failures.push(format!("{}: {reason}", slot.addr));
+        batch.changed.notify_all();
+    }
+    *lives -= 1;
+    if *lives <= 0 {
+        return;
+    }
+    for attempt in 0..cfg.max_retries {
+        let base = cfg
+            .retry_base
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(cfg.retry_cap);
+        // deterministic jitter in [0.5, 1.5): decorrelates reconnect
+        // storms without nondeterministic tests
+        let frac = (splitmix64(jitter) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        std::thread::sleep(base.mul_f64(0.5 + frac));
+        batch.work.lock().unwrap().delta.retries += 1;
+        if let Ok(c) = ShardClient::connect_deadline(&slot.addr, fingerprint, cfg.connect_timeout)
+        {
+            slot.client = Some(c);
+            return;
+        }
     }
 }
 
@@ -292,10 +748,14 @@ mod tests {
         let g = erdos_renyi(70, 260, seed);
         let mut pool = ShardPool::connect(&addrs, &g).unwrap();
         assert_eq!(pool.num_shards(), 2);
-        let ranges = pool.ranges();
-        assert_eq!(ranges[0].0, 0);
-        assert_eq!(ranges[1].1, 70);
-        assert_eq!(ranges[0].1, ranges[1].0, "slices tile the vertex range");
+        let slices = pool.sub_slices().to_vec();
+        let deal = PoolConfig::default().sub_slices_per_worker * 2;
+        assert!(!slices.is_empty() && slices.len() <= deal, "{slices:?}");
+        assert_eq!(slices[0].0, 0);
+        assert_eq!(slices[slices.len() - 1].1, 70);
+        for w in slices.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "sub-slices tile the vertex range");
+        }
         let base = vec![
             catalog::triangle(),
             catalog::path(3),
@@ -309,15 +769,42 @@ mod tests {
             let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
             assert_eq!(*v, direct, "{p:?}: shard sums must equal local counts");
         }
+        let ns = slices.len() as u64;
         let m = pool.metrics();
-        assert_eq!(m.requests, 2);
-        assert_eq!(m.bases_sent, 6);
-        assert_eq!(m.partials_merged, 6);
+        assert_eq!(m.requests, ns, "one request per dealt sub-slice");
+        assert_eq!(m.bases_sent, 3 * ns);
+        assert_eq!(m.partials_merged, 3 * ns);
         assert_eq!(m.errors, 0);
-        // a resend is served from the worker-local stores
+        assert_eq!(m.worker_failures, 0);
+        assert_eq!(m.refanned, 0);
+        // a resend stays exact; how much of it the per-slice worker
+        // stores serve depends on which worker stole which sub-slice, so
+        // only the bound is deterministic here (see
+        // resend_served_from_worker_store for the exact single-worker case)
         let again = pool.execute_bases(&base, &indices, 0).unwrap();
         assert_eq!(again, merged);
-        assert_eq!(pool.metrics().remote_cached, 6);
+        assert!(pool.metrics().remote_cached <= 3 * ns);
+        drop(pool);
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn resend_served_from_worker_store() {
+        // one worker serves every sub-slice, so the warm resend is exact:
+        // every base × sub-slice comes from its store
+        let (workers, addrs) = spawn_workers(0x7006, 1);
+        let g = erdos_renyi(70, 260, 0x7006);
+        let mut pool = ShardPool::connect(&addrs, &g).unwrap();
+        let base = vec![catalog::triangle(), catalog::path(3)];
+        let indices: Vec<usize> = (0..base.len()).collect();
+        let merged = pool.execute_bases(&base, &indices, 0).unwrap();
+        assert_eq!(pool.metrics().remote_cached, 0, "first run matches everything");
+        let again = pool.execute_bases(&base, &indices, 0).unwrap();
+        assert_eq!(again, merged);
+        let ns = pool.num_sub_slices() as u64;
+        assert_eq!(pool.metrics().remote_cached, 2 * ns);
         drop(pool);
         for w in workers {
             w.shutdown();
@@ -332,7 +819,40 @@ mod tests {
         assert!(format!("{err:#}").contains("rejected handshake"), "{err:#}");
         drop(workers);
         // a dead worker fails the pool, not just a request
-        assert!(ShardPool::connect(&addrs, &erdos_renyi(70, 260, 0x7002)).is_err());
+        let cfg = PoolConfig {
+            connect_timeout: Duration::from_millis(500),
+            ..PoolConfig::default()
+        };
+        assert!(ShardPool::connect_with(&addrs, &erdos_renyi(70, 260, 0x7002), cfg).is_err());
+    }
+
+    #[test]
+    fn connect_reports_every_unusable_worker_at_once() {
+        // two dead addresses (bind ephemeral ports, then free them) plus
+        // one live worker: the error must name both dead ones
+        let dead: Vec<String> = (0..2)
+            .map(|_| {
+                let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                l.local_addr().unwrap().to_string()
+            })
+            .collect();
+        let (workers, live) = spawn_workers(0x7005, 1);
+        let g = erdos_renyi(70, 260, 0x7005);
+        let addrs = vec![dead[0].clone(), live[0].clone(), dead[1].clone()];
+        let cfg = PoolConfig {
+            connect_timeout: Duration::from_millis(500),
+            ..PoolConfig::default()
+        };
+        let err = format!("{:#}", ShardPool::connect_with(&addrs, &g, cfg).unwrap_err());
+        assert!(err.contains("2 of 3"), "{err}");
+        assert!(
+            err.contains(&dead[0]) && err.contains(&dead[1]),
+            "both dead addresses reported in one pass: {err}"
+        );
+        assert!(!err.contains(&format!("{}:", live[0])), "live worker not blamed: {err}");
+        for w in workers {
+            w.shutdown();
+        }
     }
 
     #[test]

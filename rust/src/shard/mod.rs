@@ -16,22 +16,37 @@
 //!
 //! * [`worker`] — `morphmine shard-worker --listen <addr>`: owns an
 //!   immutable copy of the graph, answers slice requests over a framed TCP
-//!   protocol, caches partials in a worker-local
-//!   [`ResultStore`](crate::service::ResultStore) (re-sent bases are
-//!   served without matching), coalesces concurrent requests for the same
-//!   base, and optionally persists its partials keyed by
+//!   protocol (pipelined: several requests in flight per connection,
+//!   replies matched by id), caches partials in per-slice
+//!   [`ResultStore`](crate::service::ResultStore)s (a re-sent
+//!   base × slice is served without matching), coalesces concurrent
+//!   requests for the same base × slice, answers liveness probes inline
+//!   from its read loop, and optionally persists its partials keyed by
 //!   [`shard_fingerprint`] — graph × slice — so a shard restart recovers
 //!   warm.
 //! * [`proto`] — the wire protocol, reusing the persistence layer's
 //!   CRC32 framing ([`crate::service::persist::frame`]). Handshakes carry
-//!   the graph fingerprint; a worker holding different content hard-rejects.
-//! * [`coordinator`] — [`ShardPool`]: fans a batch's missing bases out
-//!   (one contiguous slice per worker, [`shard_ranges`]) and sums the
-//!   partials; [`ShardCoordinator`]: the batch front door used by
+//!   the protocol version and graph fingerprint; a worker holding
+//!   different content (or speaking a different revision) hard-rejects.
+//! * [`coordinator`] — [`ShardPool`]: the fault-tolerant fan-out fabric.
+//!   The first-level range is cut into degree-weighted **sub-slices**
+//!   ([`weighted_ranges`] — the degree-ordered CSR makes low slices far
+//!   heavier than high ones) dealt from a shared work queue, so fast
+//!   workers steal remaining sub-slices from stragglers. A worker failure
+//!   (refused connect, broken pipe, probe timeout, error reply) triggers
+//!   capped-backoff reconnects and then **re-fans** its unserved
+//!   sub-slices across the survivors; the batch fails only when no live
+//!   worker remains. [`ShardCoordinator`]: the batch front door used by
 //!   `morphmine batch|serve --shards <addr,…>`, composing the summed
 //!   totals through the same morph algebra and result store as the
 //!   single-process service
 //!   ([`QueryPlanner::serve_batch_sharded`](crate::service::QueryPlanner::serve_batch_sharded)).
+//!
+//! Re-fanning is trivially correct for the same reason sharding is exact:
+//! sub-slices tile the first-level range, every match roots at exactly one
+//! first-level vertex, and the per-key sums are commutative — so it never
+//! matters *which* worker serves a sub-slice, only that each one is merged
+//! exactly once, which the work queue's completion count enforces.
 //!
 //! End to end:
 //!
@@ -61,7 +76,7 @@ pub mod coordinator;
 pub mod proto;
 pub mod worker;
 
-pub use coordinator::{ShardClient, ShardMetrics, ShardPool};
+pub use coordinator::{PoolConfig, ShardClient, ShardMetrics, ShardPool};
 pub use worker::{ShardWorker, WorkerConfig};
 
 use crate::graph::{DataGraph, GraphFingerprint};
@@ -80,6 +95,46 @@ pub fn shard_ranges(n: u32, k: usize) -> Vec<(u32, u32)> {
     (0..k)
         .map(|i| ((n as u64 * i / k) as u32, (n as u64 * (i + 1) / k) as u32))
         .collect()
+}
+
+/// Split `0..weights.len()` into at most `k` contiguous slices of roughly
+/// equal **total weight** (quantile cuts of the prefix-sum). The work of
+/// matching rooted at vertex `v` scales with its degree, and the CSR is
+/// degree-ordered, so [`shard_ranges`]' equal-*width* slices make slice 0
+/// a straggler by construction; weighting by `degree + 1` instead yields
+/// sub-slices that cost about the same — tiny ranges over the hubs, wide
+/// ranges over the low-degree tail.
+///
+/// Empty slices are dropped (a heavy single vertex can consume several
+/// quantiles), so the result tiles `[0, n)` with between 1 and `k`
+/// nonempty slices — and is a pure function of `(weights, k)`, which keeps
+/// sub-slice boundaries stable across coordinators and restarts (worker
+/// stores and durable state are keyed per slice).
+pub fn weighted_ranges(weights: &[u64], k: usize) -> Vec<(u32, u32)> {
+    let n = weights.len() as u32;
+    let k = k.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: u128 = weights.iter().map(|&w| w as u128).sum::<u128>().max(1);
+    let mut out = Vec::with_capacity(k);
+    let (mut lo, mut acc, mut cut) = (0u32, 0u128, 1usize);
+    for (v, &w) in weights.iter().enumerate() {
+        acc += w as u128;
+        // emit a boundary for every quantile the running sum has crossed
+        while cut < k && acc * (k as u128) >= total * (cut as u128) {
+            let hi = v as u32 + 1;
+            if hi > lo {
+                out.push((lo, hi));
+                lo = hi;
+            }
+            cut += 1;
+        }
+    }
+    if lo < n {
+        out.push((lo, n));
+    }
+    out
 }
 
 /// Durable identity of one shard's partial counts: the graph fingerprint
@@ -128,11 +183,23 @@ impl ShardCoordinator {
         planner: QueryPlanner,
         cache_bytes: usize,
     ) -> Result<ShardCoordinator> {
+        Self::connect_with(graph, addrs, planner, cache_bytes, PoolConfig::default())
+    }
+
+    /// [`ShardCoordinator::connect`] with explicit fabric tuning
+    /// (timeouts, probe cadence, retry budget, sub-slicing).
+    pub fn connect_with(
+        graph: DataGraph,
+        addrs: &[String],
+        planner: QueryPlanner,
+        cache_bytes: usize,
+        config: PoolConfig,
+    ) -> Result<ShardCoordinator> {
         // same stats seed as the service layer: the coordinator's morph
         // plan (and the equality of its answers to single-process runs)
         // must not depend on which path computed the statistics
         let stats = crate::graph::GraphStats::compute(&graph, 2000, 0x5E55);
-        let pool = ShardPool::connect(addrs, &graph)?;
+        let pool = ShardPool::connect_with(addrs, &graph, config)?;
         Ok(ShardCoordinator {
             stats,
             planner,
@@ -144,6 +211,11 @@ impl ShardCoordinator {
     /// Number of connected shard workers.
     pub fn num_shards(&self) -> usize {
         self.pool.num_shards()
+    }
+
+    /// Number of degree-weighted sub-slices the pool deals per batch.
+    pub fn num_sub_slices(&self) -> usize {
+        self.pool.num_sub_slices()
     }
 
     /// Coordinator-side fan-out counters.
@@ -214,6 +286,56 @@ mod tests {
             let covered: u64 = rs.iter().map(|&(lo, hi)| (hi - lo) as u64).sum();
             assert_eq!(covered, n as u64);
         }
+    }
+
+    #[test]
+    fn weighted_ranges_tile_and_balance() {
+        // uniform weights reduce to (at most) equal-width slices
+        let uniform = vec![1u64; 12];
+        let rs = weighted_ranges(&uniform, 4);
+        assert_eq!(rs, vec![(0, 3), (3, 6), (6, 9), (9, 12)]);
+        // a degree-ordered profile: the hub head gets narrow slices, the
+        // tail gets wide ones, every slice is nonempty, and they tile
+        let degrees: Vec<u64> = (0..100u64).map(|v| 200 - 2 * v + 1).collect();
+        for k in [1usize, 2, 3, 7, 16, 100, 1000] {
+            let rs = weighted_ranges(&degrees, k);
+            assert!(!rs.is_empty() && rs.len() <= k, "k={k}: {} slices", rs.len());
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[rs.len() - 1].1, 100);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "k={k}: slices must meet");
+            }
+            for &(lo, hi) in &rs {
+                assert!(lo < hi, "k={k}: no empty slices");
+            }
+            // no slice exceeds twice the ideal share (plus one vertex of
+            // rounding slack) — the balance property the work queue needs
+            let total: u64 = degrees.iter().sum();
+            for &(lo, hi) in &rs {
+                let w: u64 = degrees[lo as usize..hi as usize].iter().sum();
+                let max_one = degrees[lo as usize]; // heaviest vertex in the slice
+                assert!(
+                    w <= 2 * total / k as u64 + max_one,
+                    "k={k}: slice [{lo},{hi}) weighs {w} of {total}"
+                );
+            }
+        }
+        // a single monster vertex consumes several quantiles without
+        // producing empty slices
+        let spiked = vec![1_000_000u64, 1, 1, 1];
+        let rs = weighted_ranges(&spiked, 4);
+        assert_eq!(rs[0], (0, 1));
+        assert_eq!(rs[rs.len() - 1].1, 4);
+        for &(lo, hi) in &rs {
+            assert!(lo < hi);
+        }
+        // degenerate shapes
+        assert!(weighted_ranges(&[], 3).is_empty());
+        // all-zero weights collapse to one slice covering everything
+        assert_eq!(weighted_ranges(&[0, 0], 2), vec![(0, 2)]);
+        assert_eq!(weighted_ranges(&[5], 8), vec![(0, 1)]);
+        // determinism: sub-slice boundaries key durable worker state
+        assert_eq!(weighted_ranges(&degrees, 7), weighted_ranges(&degrees, 7));
     }
 
     #[test]

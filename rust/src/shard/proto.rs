@@ -11,13 +11,24 @@
 //!
 //! Handshake: the coordinator opens with [`Msg::Hello`] (magic + protocol
 //! version + its graph's [`GraphFingerprint`]); the worker answers
-//! [`Msg::Welcome`] when the fingerprint matches the graph it loaded and
-//! [`Msg::Reject`] otherwise — a shard serving partial counts for a
-//! *different* graph would merge into silent garbage, so a mismatch is a
-//! hard reject, never a degraded mode. After the handshake the coordinator
-//! sends [`Msg::Exec`] requests (each carrying the fingerprint again, so a
-//! coordinator whose graph mutated mid-session is caught per-request) and
-//! the worker answers [`Msg::Result`] or [`Msg::Error`].
+//! [`Msg::Welcome`] when the version and fingerprint match what it speaks
+//! and loaded, and [`Msg::Reject`] otherwise — a shard serving partial
+//! counts for a *different* graph would merge into silent garbage, so a
+//! mismatch is a hard reject, never a degraded mode. The version rides in
+//! the `Hello` body and is decoded *tolerantly* (an unknown version still
+//! yields a `Hello` carrying it), so a revision skew surfaces as a
+//! descriptive reject naming both versions instead of an opaque framing
+//! error. After the handshake the coordinator sends [`Msg::Exec`] requests
+//! (each carrying a request id and the fingerprint again, so a coordinator
+//! whose graph mutated mid-session is caught per-request) and the worker
+//! answers [`Msg::Result`] or [`Msg::Error`]. Requests are pipelined:
+//! several may be in flight on one connection, and replies are matched by
+//! id, not order. While a request is being matched, the coordinator may
+//! interleave [`Msg::Ping`] liveness probes; the worker answers
+//! [`Msg::Pong`] inline from its read loop (echoing the nonce plus its
+//! count of in-flight requests on that connection), which is what lets a
+//! wedged-but-connected worker be told apart from one that is legitimately
+//! deep in a heavy slice.
 //!
 //! Decoding is total on hostile bytes, exactly like WAL replay: a short
 //! header, an oversized length, a CRC mismatch or an unreadable body all
@@ -40,8 +51,10 @@ pub const MAX_MSG_LEN: usize = 64 << 20;
 /// Protocol magic, first bytes of every handshake payload.
 pub const MAGIC: &[u8; 8] = b"MMSHARD1";
 
-/// Protocol version; bumped on any wire-format change.
-pub const VERSION: u32 = 1;
+/// Protocol version; bumped on any wire-format change. v2 added PING/PONG
+/// liveness probes, pipelined request ids, and the version field in the
+/// `Hello` body (decoded tolerantly so skew rejects descriptively).
+pub const VERSION: u32 = 2;
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
@@ -49,6 +62,8 @@ const TAG_REJECT: u8 = 3;
 const TAG_EXEC: u8 = 4;
 const TAG_RESULT: u8 = 5;
 const TAG_ERROR: u8 = 6;
+const TAG_PING: u8 = 7;
+const TAG_PONG: u8 = 8;
 
 /// One shard-execution request: match `patterns` (base patterns of a morph
 /// plan) with the first exploration level restricted to `[lo, hi)`.
@@ -92,14 +107,22 @@ pub struct ExecResponse {
 #[derive(Clone, Debug)]
 pub enum Msg {
     /// Coordinator → worker greeting (magic, version, graph fingerprint).
-    Hello { fingerprint: GraphFingerprint },
+    /// `version` is what the *peer* speaks: an unknown version decodes to a
+    /// `Hello` carrying it (with a zeroed fingerprint, since the rest of
+    /// the body is that revision's layout), so the worker can reject by
+    /// name instead of dropping the connection on a framing error.
+    Hello {
+        version: u32,
+        fingerprint: GraphFingerprint,
+    },
     /// Worker → coordinator: fingerprints match, ready for requests.
     Welcome {
         fingerprint: GraphFingerprint,
         /// Matcher threads the worker runs per request (informational).
         threads: u32,
     },
-    /// Worker → coordinator: handshake refused (wrong graph, bad magic).
+    /// Worker → coordinator: handshake refused (wrong graph or version,
+    /// bad magic).
     Reject { reason: String },
     /// Coordinator → worker: execute a first-level slice.
     Exec(ExecRequest),
@@ -107,6 +130,15 @@ pub enum Msg {
     Result(ExecResponse),
     /// Worker → coordinator: the request failed (echoes the request id).
     Error { id: u64, message: String },
+    /// Coordinator → worker: liveness probe, sent while replies are
+    /// outstanding. The nonce is echoed in the matching [`Msg::Pong`].
+    Ping { nonce: u64 },
+    /// Worker → coordinator: probe answer, written inline from the read
+    /// loop (never queued behind matching work). `inflight` is the
+    /// worker's count of requests still being matched on this connection —
+    /// a pong proves the socket and the read loop; `inflight > 0` proves
+    /// the probed requests are actually registered and being worked.
+    Pong { nonce: u64, inflight: u32 },
 }
 
 fn put_fingerprint(out: &mut Vec<u8>, fp: GraphFingerprint) {
@@ -183,10 +215,10 @@ fn take_fingerprint(r: &mut ByteReader<'_>) -> Option<GraphFingerprint> {
 pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
     match msg {
-        Msg::Hello { fingerprint } => {
+        Msg::Hello { version, fingerprint } => {
             out.push(TAG_HELLO);
             out.extend_from_slice(MAGIC);
-            out.extend_from_slice(&VERSION.to_le_bytes());
+            out.extend_from_slice(&version.to_le_bytes());
             put_fingerprint(&mut out, *fingerprint);
         }
         Msg::Welcome { fingerprint, threads } => {
@@ -230,6 +262,15 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             out.extend_from_slice(&id.to_le_bytes());
             out.extend_from_slice(message.as_bytes());
         }
+        Msg::Ping { nonce } => {
+            out.push(TAG_PING);
+            out.extend_from_slice(&nonce.to_le_bytes());
+        }
+        Msg::Pong { nonce, inflight } => {
+            out.push(TAG_PONG);
+            out.extend_from_slice(&nonce.to_le_bytes());
+            out.extend_from_slice(&inflight.to_le_bytes());
+        }
     }
     out
 }
@@ -239,11 +280,26 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
     let mut r = ByteReader::new(payload);
     let msg = match r.u8()? {
         TAG_HELLO => {
-            if r.take(MAGIC.len())? != MAGIC || r.u32()? != VERSION {
+            if r.take(MAGIC.len())? != MAGIC {
                 return None;
             }
+            let version = r.u32()?;
+            if version != VERSION {
+                // a peer speaking another protocol revision: the rest of
+                // the body is that revision's layout and is not
+                // interpreted; surface the version so the handshake can
+                // reject it by name instead of on a framing error
+                return Some(Msg::Hello {
+                    version,
+                    fingerprint: GraphFingerprint {
+                        order: 0,
+                        size: 0,
+                        hash: 0,
+                    },
+                });
+            }
             let fingerprint = take_fingerprint(&mut r)?;
-            Msg::Hello { fingerprint }
+            Msg::Hello { version, fingerprint }
         }
         TAG_WELCOME => {
             if r.take(MAGIC.len())? != MAGIC || r.u32()? != VERSION {
@@ -315,6 +371,11 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
                 message: String::from_utf8_lossy(r.rest()).into_owned(),
             });
         }
+        TAG_PING => Msg::Ping { nonce: r.u64()? },
+        TAG_PONG => Msg::Pong {
+            nonce: r.u64()?,
+            inflight: r.u32()?,
+        },
         _ => return None,
     };
     // trailing garbage after a well-formed body means a codec mismatch:
@@ -378,8 +439,10 @@ mod tests {
 
     #[test]
     fn handshake_roundtrip() {
-        match roundtrip(&Msg::Hello { fingerprint: fp(7) }) {
-            Msg::Hello { fingerprint } => assert_eq!(fingerprint, fp(7)),
+        match roundtrip(&Msg::Hello { version: VERSION, fingerprint: fp(7) }) {
+            Msg::Hello { version, fingerprint } => {
+                assert_eq!((version, fingerprint), (VERSION, fp(7)))
+            }
             other => panic!("{other:?}"),
         }
         match roundtrip(&Msg::Welcome { fingerprint: fp(9), threads: 4 }) {
@@ -450,6 +513,44 @@ mod tests {
     }
 
     #[test]
+    fn ping_pong_roundtrip() {
+        match roundtrip(&Msg::Ping { nonce: u64::MAX }) {
+            Msg::Ping { nonce } => assert_eq!(nonce, u64::MAX),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Msg::Pong { nonce: 17, inflight: 3 }) {
+            Msg::Pong { nonce, inflight } => assert_eq!((nonce, inflight), (17, 3)),
+            other => panic!("{other:?}"),
+        }
+        // probes are tiny: they must fit well under any frame budget so a
+        // probe can always be written even when big replies are in flight
+        assert!(encode(&Msg::Ping { nonce: 1 }).len() < 16);
+    }
+
+    #[test]
+    fn unknown_hello_version_decodes_tolerantly() {
+        // a v1 peer's Hello (no version-99 layouts exist, so fabricate the
+        // closest thing: right magic, wrong version, arbitrary tail)
+        let mut payload = vec![1u8]; // TAG_HELLO
+        payload.extend_from_slice(MAGIC);
+        payload.extend_from_slice(&99u32.to_le_bytes());
+        payload.extend_from_slice(&[0xAB; 7]); // unintelligible tail
+        match decode(&payload) {
+            Some(Msg::Hello { version, .. }) => assert_eq!(version, 99),
+            other => panic!("version skew must decode to a rejectable Hello, got {other:?}"),
+        }
+        // but the magic is still load-bearing
+        let mut bad_magic = payload.clone();
+        bad_magic[1] ^= 0xFF;
+        assert!(decode(&bad_magic).is_none());
+        // and the current version still validates its full body
+        let mut truncated = vec![1u8];
+        truncated.extend_from_slice(MAGIC);
+        truncated.extend_from_slice(&VERSION.to_le_bytes());
+        assert!(decode(&truncated).is_none(), "current version demands a fingerprint");
+    }
+
+    #[test]
     fn hostile_bytes_never_panic() {
         // every truncation of a valid message fails cleanly (the torn-frame
         // walk of frame.rs, applied to the shard codec)
@@ -491,7 +592,7 @@ mod tests {
         evil_exec.extend_from_slice(&[3, 1, 0, 7, 0]); // edge (0,7) on a 3-vertex pattern
         assert!(decode(&evil_exec).is_none());
         // trailing garbage after a valid body is refused
-        let mut ok = encode(&Msg::Hello { fingerprint: fp(2) });
+        let mut ok = encode(&Msg::Hello { version: VERSION, fingerprint: fp(2) });
         ok.push(0);
         assert!(decode(&ok).is_none());
     }

@@ -4,33 +4,40 @@
 //!
 //! The worker is the service layer in miniature, minus mutation:
 //!
-//! * **Store** — partial counts are cached in a worker-local
-//!   [`ResultStore`] keyed by canonical pattern, so a re-sent base (a
-//!   coordinator retry, a second coordinator, a warm repeat) is served
-//!   without matching. The worker's graph never mutates, so its store
-//!   lives permanently at epoch 0 — content identity rides entirely on
-//!   the [`GraphFingerprint`] checked at handshake *and on every request*.
-//! * **Coalescing** — concurrent connections asking for the same base
-//!   register on a per-canonical-key in-flight cell (the same at-most-once
-//!   discipline as [`crate::service::serve`]): each base is matched at
-//!   most once per worker, whoever asks.
-//! * **Slice identity** — partial counts are only meaningful for the
-//!   first-level slice they were computed over. The store is bound to the
-//!   worker's current slice; a request with a different slice (the
-//!   coordinator pool was resized) resets it, and the durable store is
-//!   keyed by [`super::shard_fingerprint`] — graph fingerprint × slice —
-//!   so a restarted worker recovers warm exactly when both the graph and
-//!   the slice match what was persisted, and cold otherwise.
-//! * **Durability** — with a persist directory configured, published
-//!   partials are mirrored into the same WAL + snapshot machinery as the
-//!   coordinator's store ([`crate::service::persist`]); a clean shutdown
-//!   ([`ShardWorker::shutdown`] / drop — embedders and tests) compacts so
-//!   a restart recovers from one snapshot. The CLI worker blocks in
-//!   [`ShardWorker::wait`] and is stopped by killing the process, which
-//!   skips that compaction: the WAL is flushed per record, so the restart
-//!   replays the log — slower, never colder — and a dead owner's dir
-//!   lock is reclaimed automatically (Linux `/proc` probe; elsewhere the
-//!   lock needs the manual removal the startup error names).
+//! * **Per-slice stores** — partial counts are pure functions of
+//!   `(canonical key, graph content, slice)`, so the worker keeps one
+//!   [`ResultStore`] *per first-level slice* it has served. The fabric's
+//!   work queue deals sub-slices dynamically — the same worker may serve
+//!   `[0, 7)` and `[31, 64)` in one batch and a different mix in the next
+//!   — and each slice's partials stay warm independently. The worker's
+//!   graph never mutates, so stores live permanently at epoch 0; content
+//!   identity rides on the [`GraphFingerprint`] checked at handshake *and
+//!   on every request*.
+//! * **Coalescing** — concurrent connections asking for the same
+//!   base × slice register on a per-`(slice, key)` in-flight cell (the
+//!   same at-most-once discipline as [`crate::service::serve`]): each
+//!   base × slice is matched at most once per worker, whoever asks.
+//! * **Pipelining + liveness** — the connection read loop never blocks on
+//!   matching: each [`Msg::Exec`] is handed to its own thread and replies
+//!   are written (under a shared writer lock) whenever they finish, so
+//!   several requests overlap on one connection and replies may be
+//!   reordered — the coordinator matches them by id. [`Msg::Ping`] probes
+//!   are answered inline with [`Msg::Pong`] carrying the connection's
+//!   in-flight request count, which is what lets the coordinator tell a
+//!   live worker deep in a heavy slice from one that lost its requests.
+//! * **Durability** — with a persist directory configured, each slice's
+//!   published partials are mirrored into their own WAL + snapshot
+//!   subdirectory (`slice-<lo>-<hi>/`, keyed by [`super::shard_fingerprint`]
+//!   — graph × slice) via the same machinery as the coordinator's store
+//!   ([`crate::service::persist`]); a clean shutdown
+//!   ([`ShardWorker::shutdown`] / drop — embedders and tests) compacts
+//!   every slice so a restart recovers from snapshots. The CLI worker
+//!   blocks in [`ShardWorker::wait`] and is stopped by killing the
+//!   process, which skips that compaction: the WALs are flushed per
+//!   record, so the restart replays the logs — slower, never colder — and
+//!   a dead owner's dir locks are reclaimed automatically (Linux `/proc`
+//!   probe; elsewhere the lock needs the manual removal the startup error
+//!   names).
 //!
 //! [`ExecRequest`]: super::proto::ExecRequest
 
@@ -44,7 +51,7 @@ use crate::util::timer::PhaseProfile;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -55,10 +62,10 @@ pub struct WorkerConfig {
     pub threads: usize,
     /// Fuse multi-base requests into one trie traversal.
     pub fused: bool,
-    /// Local result-store budget in bytes.
+    /// Result-store budget in bytes, per served slice.
     pub cache_bytes: usize,
-    /// Persist the partial-count store (keyed by graph × slice) so a shard
-    /// restart recovers warm.
+    /// Persist the partial-count stores (keyed by graph × slice, one
+    /// subdirectory per slice) so a shard restart recovers warm.
     pub persist: Option<PersistConfig>,
 }
 
@@ -73,19 +80,31 @@ impl Default for WorkerConfig {
     }
 }
 
-/// Completion cell for one in-flight base (see [`crate::service::serve`]).
+/// Upper bound on distinct slices the worker keeps stores for. Sub-slice
+/// boundaries are a pure function of the graph and the pool size, so an
+/// honest fleet produces a few dozen at most; a hostile or churning
+/// coordinator population sheds the oldest instead of growing without
+/// bound (partials are pure — dropping a store costs recompute, never
+/// correctness).
+const MAX_SLICE_STORES: usize = 128;
+
+/// Completion cell for one in-flight base × slice (see
+/// [`crate::service::serve`]).
 #[derive(Default)]
 struct Cell {
     value: Mutex<Option<std::result::Result<i128, &'static str>>>,
     ready: Condvar,
 }
 
-struct Inner {
+/// One slice's partial-count store and its durable mirror.
+struct SliceStore {
     store: ResultStore<i128>,
     persist: Option<Persistence<i128>>,
-    /// First-level slice the store's entries were computed over.
-    range: Option<(u32, u32)>,
-    inflight: HashMap<CanonKey, Arc<Cell>>,
+}
+
+struct Inner {
+    slices: HashMap<(u32, u32), SliceStore>,
+    inflight: HashMap<((u32, u32), CanonKey), Arc<Cell>>,
 }
 
 struct WorkerState {
@@ -103,7 +122,7 @@ struct WorkerState {
 /// instead of hanging.
 struct OwnedCells<'a> {
     state: &'a WorkerState,
-    keys: Vec<CanonKey>,
+    keys: Vec<((u32, u32), CanonKey)>,
     armed: bool,
 }
 
@@ -127,8 +146,8 @@ impl Drop for OwnedCells<'_> {
 
 /// A running shard worker: a TCP listener plus the shared state behind it.
 /// [`ShardWorker::shutdown`] (or drop) stops the accept loop and — when
-/// persistence is on — compacts the durable store so the next start
-/// recovers from one snapshot.
+/// persistence is on — compacts every slice's durable store so the next
+/// start recovers from snapshots.
 pub struct ShardWorker {
     addr: SocketAddr,
     state: Arc<WorkerState>,
@@ -157,9 +176,7 @@ impl ShardWorker {
             cache_bytes: config.cache_bytes,
             persist_config: config.persist,
             inner: Mutex::new(Inner {
-                store: ResultStore::new(config.cache_bytes),
-                persist: None,
-                range: None,
+                slices: HashMap::new(),
                 inflight: HashMap::new(),
             }),
         });
@@ -187,9 +204,23 @@ impl ShardWorker {
         self.state.fingerprint
     }
 
-    /// Counters of the worker-local partial-count store.
+    /// Counters of the worker-local partial-count stores, summed over
+    /// every slice this worker has served.
     pub fn store_metrics(&self) -> StoreMetrics {
-        self.state.inner.lock().unwrap().store.metrics()
+        let inner = self.state.inner.lock().unwrap();
+        let mut m = StoreMetrics::default();
+        for ss in inner.slices.values() {
+            let s = ss.store.metrics();
+            m.hits += s.hits;
+            m.misses += s.misses;
+            m.inserts += s.inserts;
+            m.evictions += s.evictions;
+            m.invalidations += s.invalidations;
+            m.stale_drops += s.stale_drops;
+            m.restored += s.restored;
+            m.bytes += s.bytes;
+        }
+        m
     }
 
     /// Block until the accept loop ends (i.e. forever, for a CLI worker
@@ -201,7 +232,9 @@ impl ShardWorker {
         }
     }
 
-    /// Stop accepting, join the accept loop and compact the durable store.
+    /// Stop accepting, join the accept loop and compact the durable
+    /// stores. Established connections are not severed: their threads
+    /// drain naturally when the peer disconnects.
     pub fn shutdown(self) {
         drop(self);
     }
@@ -215,19 +248,20 @@ impl ShardWorker {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        // graceful-shutdown flush, mirroring Service::drop: fold the
-        // session's WAL into one snapshot so a shard restart skips replay
+        // graceful-shutdown flush, mirroring Service::drop: fold each
+        // slice's WAL into one snapshot so a shard restart skips replay
         if let Ok(mut inner) = self.state.inner.lock() {
-            let inner = &mut *inner;
-            if let Some(p) = &mut inner.persist {
-                if p.compact_on_drop() && p.dirty() {
-                    if let Err(e) = p.compact(&inner.store.entries()) {
-                        eprintln!("warning: shard store compaction failed: {e}");
+            for ss in inner.slices.values_mut() {
+                if let Some(p) = &mut ss.persist {
+                    if p.compact_on_drop() && p.dirty() {
+                        if let Err(e) = p.compact(&ss.store.entries()) {
+                            eprintln!("warning: shard store compaction failed: {e}");
+                        }
                     }
                 }
+                // release the persist dir locks deterministically
+                ss.persist = None;
             }
-            // release the persist dir lock deterministically
-            inner.persist = None;
         }
     }
 }
@@ -245,18 +279,32 @@ fn accept_loop(listener: &TcpListener, state: &Arc<WorkerState>, stop: &Arc<Atom
         }
         if let Ok(stream) = conn {
             let state = state.clone();
-            std::thread::spawn(move || serve_connection(&state, stream));
+            std::thread::spawn(move || serve_connection(state, stream));
         }
     }
 }
 
-fn serve_connection(state: &WorkerState, mut stream: TcpStream) {
+fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
-    // handshake: the coordinator must be mining the exact graph content
-    // this worker loaded — partial counts for any other graph are garbage,
-    // so a mismatch is a hard reject
+    // handshake: the coordinator must speak this protocol revision and be
+    // mining the exact graph content this worker loaded — partial counts
+    // for any other graph are garbage, so a mismatch is a hard reject
+    let reject = |stream: &mut TcpStream, reason: String| {
+        let _ = proto::write_msg(stream, &Msg::Reject { reason });
+    };
     match proto::read_msg(&mut stream) {
-        Ok(Msg::Hello { fingerprint }) if fingerprint == state.fingerprint => {
+        Ok(Msg::Hello { version, .. }) if version != proto::VERSION => {
+            reject(
+                &mut stream,
+                format!(
+                    "protocol version mismatch: coordinator speaks v{version}, \
+                     this worker speaks v{}",
+                    proto::VERSION
+                ),
+            );
+            return;
+        }
+        Ok(Msg::Hello { fingerprint, .. }) if fingerprint == state.fingerprint => {
             let welcome = Msg::Welcome {
                 fingerprint: state.fingerprint,
                 threads: state.planner.threads as u32,
@@ -265,55 +313,81 @@ fn serve_connection(state: &WorkerState, mut stream: TcpStream) {
                 return;
             }
         }
-        Ok(Msg::Hello { fingerprint }) => {
-            let _ = proto::write_msg(
+        Ok(Msg::Hello { fingerprint, .. }) => {
+            reject(
                 &mut stream,
-                &Msg::Reject {
-                    reason: format!(
-                        "graph fingerprint mismatch: coordinator mines {fingerprint}, \
-                         this worker loaded {}",
-                        state.fingerprint
-                    ),
-                },
+                format!(
+                    "graph fingerprint mismatch: coordinator mines {fingerprint}, \
+                     this worker loaded {}",
+                    state.fingerprint
+                ),
             );
             return;
         }
         _ => {
-            let _ = proto::write_msg(
-                &mut stream,
-                &Msg::Reject {
-                    reason: "expected HELLO".into(),
-                },
-            );
+            reject(&mut stream, "expected HELLO".into());
             return;
         }
     }
+    // pipelined serving: the read loop only parses; each Exec runs on its
+    // own thread and writes its reply (Result or Error, matched by id)
+    // under the shared writer lock whenever it finishes. Pings are
+    // answered inline so probes are never queued behind matching work.
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let inflight = Arc::new(AtomicU32::new(0));
     loop {
         let msg = match proto::read_msg(&mut stream) {
             Ok(m) => m,
             Err(_) => return, // disconnect or framing violation: done
         };
-        let Msg::Exec(req) = msg else { return };
-        // a panicking request must not kill the connection silently: the
-        // OwnedCells guard inside handle_exec has already failed any cells
-        // it owned, and the coordinator gets an explicit error
-        let reply = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            handle_exec(state, &req)
-        })) {
-            Ok(Ok(resp)) => Msg::Result(resp),
-            Ok(Err(message)) => Msg::Error { id: req.id, message },
-            Err(_) => Msg::Error {
-                id: req.id,
-                message: "worker request panicked".into(),
-            },
-        };
-        if proto::write_msg(&mut stream, &reply).is_err() {
-            return;
+        match msg {
+            Msg::Ping { nonce } => {
+                let pong = Msg::Pong {
+                    nonce,
+                    inflight: inflight.load(Ordering::SeqCst),
+                };
+                if proto::write_msg(&mut *writer.lock().unwrap(), &pong).is_err() {
+                    return;
+                }
+            }
+            Msg::Exec(req) => {
+                // count the request before reading the next message: a
+                // pong sent for a later ping must already include it
+                inflight.fetch_add(1, Ordering::SeqCst);
+                let state = state.clone();
+                let writer = writer.clone();
+                let inflight = inflight.clone();
+                std::thread::spawn(move || {
+                    // a panicking request must not kill the connection
+                    // silently: the OwnedCells guard inside handle_exec
+                    // has already failed any cells it owned, and the
+                    // coordinator gets an explicit error
+                    let reply = match std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| handle_exec(&state, &req)),
+                    ) {
+                        Ok(Ok(resp)) => Msg::Result(resp),
+                        Ok(Err(message)) => Msg::Error { id: req.id, message },
+                        Err(_) => Msg::Error {
+                            id: req.id,
+                            message: "worker request panicked".into(),
+                        },
+                    };
+                    let _ = proto::write_msg(&mut *writer.lock().unwrap(), &reply);
+                    // decrement only after the reply hit the socket: a
+                    // pong reporting zero in-flight therefore proves every
+                    // reply is already ordered ahead of it on the wire
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            _ => return,
         }
     }
 }
 
-/// Mirror one accepted store insert into the WAL (same degradation
+/// Mirror one accepted store insert into the slice's WAL (same degradation
 /// contract as the service layer: first IO error disables persistence).
 fn persist_insert(persist: &mut Option<Persistence<i128>>, key: &CanonKey, value: i128) {
     if let Some(p) = persist {
@@ -324,45 +398,52 @@ fn persist_insert(persist: &mut Option<Persistence<i128>>, key: &CanonKey, value
     }
 }
 
-/// Bind the store (and durable store) to a first-level slice. Partial
-/// counts are pure functions of `(canonical key, graph content, slice)`,
-/// so a slice change makes every cached entry unusable: the store resets
-/// and the durable store rebinds to the slice's own fingerprint.
-fn ensure_range(
-    state: &WorkerState,
-    inner: &mut Inner,
-    range: (u32, u32),
-) -> std::result::Result<(), String> {
-    if inner.range == Some(range) {
-        return Ok(());
+/// Get-or-create the store bound to `slice`. Each slice's durable store
+/// lives in its own subdirectory keyed by [`super::shard_fingerprint`] —
+/// graph fingerprint × slice — so a restarted worker recovers warm exactly
+/// for the `(graph, slice)` pairs that were persisted, and cold otherwise.
+fn ensure_slice(state: &WorkerState, inner: &mut Inner, slice: (u32, u32)) {
+    if inner.slices.contains_key(&slice) {
+        return;
     }
-    if !inner.inflight.is_empty() {
-        // another connection is mid-match for the old slice; resetting
-        // under it would publish old-slice partials into the new store
-        return Err("shard slice changed while bases are in flight — retry".into());
+    if inner.slices.len() >= MAX_SLICE_STORES {
+        // shed a slice no in-flight request is publishing into
+        let victim = inner
+            .slices
+            .keys()
+            .find(|s| !inner.inflight.keys().any(|(is, _)| is == *s))
+            .copied();
+        if let Some(v) = victim {
+            inner.slices.remove(&v);
+        }
     }
-    inner.range = Some(range);
-    inner.store = ResultStore::new(state.cache_bytes);
-    inner.persist = None; // releases the old slice's session + dir lock
+    let mut ss = SliceStore {
+        store: ResultStore::new(state.cache_bytes),
+        persist: None,
+    };
     if let Some(pc) = &state.persist_config {
-        let sfp = super::shard_fingerprint(state.fingerprint, range.0, range.1);
-        match Persistence::open(&pc.dir, sfp, pc.opts) {
+        let sfp = super::shard_fingerprint(state.fingerprint, slice.0, slice.1);
+        let dir = pc.dir.join(format!("slice-{}-{}", slice.0, slice.1));
+        match Persistence::open(&dir, sfp, pc.opts) {
             Ok((p, warm, report)) => {
                 for (k, v) in warm {
-                    inner.store.restore(k, v);
+                    ss.store.restore(k, v);
                 }
                 eprintln!(
                     "shard persist: slice [{}, {}) restored {} entries (fingerprint match: {})",
-                    range.0, range.1, report.restored, report.fingerprint_matched
+                    slice.0, slice.1, report.restored, report.fingerprint_matched
                 );
-                inner.persist = Some(p);
+                ss.persist = Some(p);
             }
             Err(e) => {
-                eprintln!("warning: shard persistence unavailable: {e:#}");
+                eprintln!(
+                    "warning: shard persistence unavailable for slice [{}, {}): {e:#}",
+                    slice.0, slice.1
+                );
             }
         }
     }
-    Ok(())
+    inner.slices.insert(slice, ss);
 }
 
 fn handle_exec(
@@ -385,6 +466,7 @@ fn handle_exec(
             req.lo, req.hi
         ));
     }
+    let slice = (req.lo, req.hi);
     let keys: Vec<CanonKey> = req.patterns.iter().map(|p| p.canonical_key()).collect();
 
     // split the request: store hits / in-flight elsewhere / ours to match
@@ -393,17 +475,19 @@ fn handle_exec(
     let mut awaited: Vec<(CanonKey, Arc<Cell>)> = Vec::new();
     {
         let mut inner = state.inner.lock().unwrap();
-        ensure_range(state, &mut inner, (req.lo, req.hi))?;
+        ensure_slice(state, &mut inner, slice);
+        let inner = &mut *inner;
+        let ss = inner.slices.get_mut(&slice).expect("slice store just ensured");
         for (i, k) in keys.iter().enumerate() {
             if values.contains_key(k) {
                 continue; // duplicate base in one request
             }
-            if let Some(v) = inner.store.get(k, 0) {
+            if let Some(v) = ss.store.get(k, 0) {
                 values.insert(*k, v);
-            } else if let Some(cell) = inner.inflight.get(k) {
+            } else if let Some(cell) = inner.inflight.get(&(slice, *k)) {
                 awaited.push((*k, cell.clone()));
             } else {
-                inner.inflight.insert(*k, Arc::new(Cell::default()));
+                inner.inflight.insert((slice, *k), Arc::new(Cell::default()));
                 owned.push(i);
             }
         }
@@ -411,7 +495,7 @@ fn handle_exec(
     let cached = values.len() as u32;
     let mut guard = OwnedCells {
         state,
-        keys: owned.iter().map(|&i| keys[i]).collect(),
+        keys: owned.iter().map(|&i| (slice, keys[i])).collect(),
         armed: true,
     };
 
@@ -425,38 +509,46 @@ fn handle_exec(
         Some((req.lo, req.hi)),
     );
 
-    // publish: feed the store, mirror into the WAL, wake coalesced peers
+    // publish: feed the slice's store, mirror into its WAL, wake
+    // coalesced peers
     {
         let mut inner = state.inner.lock().unwrap();
         let inner = &mut *inner;
-        // belt-and-braces: ensure_range refuses to switch slices while our
-        // cells are registered, so this always holds
-        let slice_current = inner.range == Some((req.lo, req.hi));
-        for &(k, v) in &fresh {
-            if slice_current && inner.store.insert(k, 0, v) {
-                persist_insert(&mut inner.persist, &k, v);
+        // the slice store can only be missing if it was shed under store
+        // pressure mid-request — the counts are still correct, they just
+        // aren't cached
+        if let Some(ss) = inner.slices.get_mut(&slice) {
+            for &(k, v) in &fresh {
+                if ss.store.insert(k, 0, v) {
+                    persist_insert(&mut ss.persist, &k, v);
+                }
             }
-            if let Some(cell) = inner.inflight.remove(&k) {
-                *cell.value.lock().unwrap() = Some(Ok(v));
-                cell.ready.notify_all();
+            // compaction runs inline: worker requests are already
+            // asynchronous from the coordinator's perspective, so the
+            // begin/finish split the service layer needs is not worth the
+            // machinery here
+            if ss.persist.as_ref().is_some_and(Persistence::wants_compaction) {
+                let entries = ss.store.entries();
+                let p = ss.persist.as_mut().expect("checked above");
+                if let Err(e) = p.compact(&entries) {
+                    eprintln!(
+                        "warning: shard store compaction failed, persistence disabled: {e}"
+                    );
+                    ss.persist = None;
+                }
             }
         }
-        // compaction runs inline: worker requests are already asynchronous
-        // from the coordinator's perspective, so the begin/finish split the
-        // service layer needs is not worth the machinery here
-        if let Some(p) = &mut inner.persist {
-            if p.wants_compaction() {
-                if let Err(e) = p.compact(&inner.store.entries()) {
-                    eprintln!("warning: shard store compaction failed, persistence disabled: {e}");
-                    inner.persist = None;
-                }
+        for &(k, v) in &fresh {
+            if let Some(cell) = inner.inflight.remove(&(slice, k)) {
+                *cell.value.lock().unwrap() = Some(Ok(v));
+                cell.ready.notify_all();
             }
         }
     }
     guard.armed = false;
     values.extend(fresh.iter().copied());
 
-    // block on bases another connection is matching
+    // block on bases another connection is matching over the same slice
     for (k, cell) in awaited {
         let mut slot = cell.value.lock().unwrap();
         while slot.is_none() {
@@ -517,12 +609,19 @@ mod tests {
         }
     }
 
+    fn hello(fingerprint: GraphFingerprint) -> Msg {
+        Msg::Hello {
+            version: proto::VERSION,
+            fingerprint,
+        }
+    }
+
     #[test]
     fn handshake_and_exec_over_tcp() {
         let w = worker(0x6001);
         let graph_fp = w.fingerprint();
         let mut stream = TcpStream::connect(w.addr()).unwrap();
-        proto::write_msg(&mut stream, &Msg::Hello { fingerprint: graph_fp }).unwrap();
+        proto::write_msg(&mut stream, &hello(graph_fp)).unwrap();
         match proto::read_msg(&mut stream).unwrap() {
             Msg::Welcome { fingerprint, .. } => assert_eq!(fingerprint, graph_fp),
             other => panic!("expected WELCOME, got {other:?}"),
@@ -560,10 +659,17 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
-        // a slice change resets the store: nothing served warm
+        // a different slice has its own store: nothing served warm there
         proto::write_msg(&mut stream, &Msg::Exec(full(0, 30, 3))).unwrap();
         match proto::read_msg(&mut stream).unwrap() {
             Msg::Result(r) => assert_eq!(r.served_from_store, 0),
+            other => panic!("{other:?}"),
+        }
+        // …and the first slice's store survived the detour (per-slice
+        // stores, not one store rebound per slice change)
+        proto::write_msg(&mut stream, &Msg::Exec(full(0, 60, 4))).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Result(r) => assert_eq!(r.served_from_store, 2),
             other => panic!("{other:?}"),
         }
         drop(stream);
@@ -574,7 +680,7 @@ mod tests {
     fn wrong_graph_is_hard_rejected() {
         let w = worker(0x6002);
         let mut stream = TcpStream::connect(w.addr()).unwrap();
-        proto::write_msg(&mut stream, &Msg::Hello { fingerprint: fp(99) }).unwrap();
+        proto::write_msg(&mut stream, &hello(fp(99))).unwrap();
         match proto::read_msg(&mut stream).unwrap() {
             Msg::Reject { reason } => {
                 assert!(reason.contains("fingerprint mismatch"), "{reason}");
@@ -586,12 +692,88 @@ mod tests {
     }
 
     #[test]
+    fn wrong_protocol_version_is_rejected_by_name() {
+        let w = worker(0x6005);
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(
+            &mut stream,
+            &Msg::Hello {
+                version: proto::VERSION + 40,
+                fingerprint: w.fingerprint(),
+            },
+        )
+        .unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Reject { reason } => {
+                assert!(reason.contains("version mismatch"), "{reason}");
+                assert!(
+                    reason.contains(&format!("v{}", proto::VERSION + 40)),
+                    "names the peer's version: {reason}"
+                );
+            }
+            other => panic!("expected REJECT, got {other:?}"),
+        }
+        assert!(proto::read_msg(&mut stream).is_err());
+    }
+
+    #[test]
+    fn pings_are_answered_inline_with_inflight_count() {
+        let w = worker(0x6006);
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &hello(w.fingerprint())).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
+        proto::write_msg(&mut stream, &Msg::Ping { nonce: 42 }).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Pong { nonce, inflight } => assert_eq!((nonce, inflight), (42, 0)),
+            other => panic!("expected PONG, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_by_id() {
+        // two different-slice requests sent back to back on one
+        // connection: both answered (possibly reordered), matched by id
+        let w = worker(0x6007);
+        let graph_fp = w.fingerprint();
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &hello(graph_fp)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
+        let req = |lo: u32, hi: u32, id: u64| ExecRequest {
+            id,
+            epoch: 0,
+            fingerprint: graph_fp,
+            lo,
+            hi,
+            patterns: vec![catalog::triangle()],
+        };
+        proto::write_msg(&mut stream, &Msg::Exec(req(0, 30, 10))).unwrap();
+        proto::write_msg(&mut stream, &Msg::Exec(req(30, 60, 11))).unwrap();
+        let mut got: HashMap<u64, i128> = HashMap::new();
+        for _ in 0..2 {
+            match proto::read_msg(&mut stream).unwrap() {
+                Msg::Result(r) => {
+                    assert_eq!(r.values.len(), 1);
+                    got.insert(r.id, r.values[0].1);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // the two slice partials sum to the full-graph count
+        let g = erdos_renyi(60, 220, 0x6007);
+        let direct =
+            crate::agg::aggregate_pattern(&g, &catalog::triangle(), &crate::agg::CountAgg, 1);
+        assert_eq!(got[&10] + got[&11], direct, "slice partials sum exactly");
+        drop(stream);
+        w.shutdown();
+    }
+
+    #[test]
     fn stale_fingerprint_per_request_is_an_error() {
         // handshake with the right graph, then pretend the coordinator's
         // graph mutated (new fingerprint on the request)
         let w = worker(0x6003);
         let mut stream = TcpStream::connect(w.addr()).unwrap();
-        proto::write_msg(&mut stream, &Msg::Hello { fingerprint: w.fingerprint() }).unwrap();
+        proto::write_msg(&mut stream, &hello(w.fingerprint())).unwrap();
         assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
         let req = ExecRequest {
             id: 7,

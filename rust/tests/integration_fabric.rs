@@ -1,0 +1,321 @@
+//! Fault-injection tests for the shard fabric (`morphmine::shard`): the
+//! merge invariant — per-base totals are exact sums of per-slice partials
+//! — must survive severed streams, corrupted bytes, wedged workers, and
+//! SIGKILLed worker processes, with the damage visible in the fabric's
+//! failure counters instead of in the answers.
+
+mod support;
+
+use morphmine::graph::generators::erdos_renyi;
+use morphmine::graph::{DataGraph, GraphStats};
+use morphmine::morph::Policy;
+use morphmine::pattern::catalog;
+use morphmine::service::{QueryPlanner, ResultStore};
+use morphmine::shard::proto::{self, ExecRequest, ExecResponse, Msg};
+use morphmine::shard::{PoolConfig, ShardPool, ShardWorker, WorkerConfig};
+use morphmine::util::proptest;
+use morphmine::util::timer::PhaseProfile;
+use std::time::Duration;
+use support::ChaosProxy;
+
+fn worker_config() -> WorkerConfig {
+    WorkerConfig {
+        threads: 2,
+        fused: true,
+        cache_bytes: 1 << 20,
+        persist: None,
+    }
+}
+
+/// Aggressive-but-stable timing for fault tests: fast probes, short
+/// wedge deadline, one retry, small backoff.
+fn fast_config() -> PoolConfig {
+    PoolConfig {
+        connect_timeout: Duration::from_millis(500),
+        shard_timeout: Duration::from_millis(800),
+        probe_interval: Duration::from_millis(50),
+        max_retries: 1,
+        retry_base: Duration::from_millis(20),
+        retry_cap: Duration::from_millis(100),
+        ..PoolConfig::default()
+    }
+}
+
+/// Single-process reference counts for `queries` on `g`.
+fn local_counts(g: &DataGraph, stats: &GraphStats) -> Vec<i128> {
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let mut store = ResultStore::new(1 << 20);
+    let mut prof = PhaseProfile::new();
+    let (counts, _) =
+        planner.serve_batch(g, &catalog::motifs_vertex_induced(4), stats, &mut store, 0, &mut prof);
+    counts
+}
+
+/// Sharded counts through `pool`, which must succeed.
+fn sharded_counts(g: &DataGraph, stats: &GraphStats, pool: &mut ShardPool) -> Vec<i128> {
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let mut store = ResultStore::new(1 << 20);
+    let mut prof = PhaseProfile::new();
+    let (counts, _) = planner
+        .serve_batch_sharded(
+            &catalog::motifs_vertex_induced(4),
+            stats,
+            &mut store,
+            0,
+            pool,
+            &mut prof,
+        )
+        .unwrap();
+    counts
+}
+
+#[test]
+fn severed_stream_mid_frame_retries_and_stays_exact() {
+    let g = erdos_renyi(60, 240, 0xFA01);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let proxy = ChaosProxy::start(w.addr());
+    let addrs = vec![proxy.addr().to_string()];
+    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    // cut the stream 10 bytes into the first reply — mid-frame, after the
+    // coordinator has already committed the request to the wire
+    proxy.sever_down_after(10);
+    let sharded = sharded_counts(&g, &stats, &mut pool);
+    assert_eq!(sharded, local_counts(&g, &stats), "severed stream must not change counts");
+    let m = pool.metrics();
+    assert!(m.worker_failures >= 1, "the sever is a visible failure: {m:?}");
+    assert!(m.refanned >= 1, "in-flight slices were re-dealt: {m:?}");
+    assert!(m.retries >= 1, "the worker was reconnected: {m:?}");
+    assert_eq!(m.errors, 0, "the batch itself succeeded: {m:?}");
+    drop(pool);
+    drop(proxy);
+    w.shutdown();
+}
+
+#[test]
+fn corrupt_byte_mid_stream_is_caught_and_refanned() {
+    let g = erdos_renyi(60, 240, 0xFA02);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let proxy = ChaosProxy::start(w.addr());
+    let addrs = vec![proxy.addr().to_string()];
+    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    // flip one bit inside the first reply frame: the CRC (or the frame
+    // walk) must catch it — a flipped count silently merged would be the
+    // worst possible failure mode
+    proxy.corrupt_down_at(10);
+    let sharded = sharded_counts(&g, &stats, &mut pool);
+    assert_eq!(sharded, local_counts(&g, &stats), "corruption must never reach the sums");
+    let m = pool.metrics();
+    assert!(m.worker_failures >= 1, "corruption is a visible failure: {m:?}");
+    assert!(m.refanned >= 1, "{m:?}");
+    drop(pool);
+    drop(proxy);
+    w.shutdown();
+}
+
+#[test]
+fn wedged_worker_is_detected_and_refanned_to_survivor() {
+    let g = erdos_renyi(60, 240, 0xFA03);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let healthy = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let wedged = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let proxy = ChaosProxy::start(wedged.addr());
+    let addrs = vec![healthy.addr().to_string(), proxy.addr().to_string()];
+    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    // wedge AFTER the handshake: the worker stays connected but all its
+    // traffic — requests, replies, probe pongs — is swallowed
+    proxy.set_blackhole(true);
+    let t = std::time::Instant::now();
+    let sharded = sharded_counts(&g, &stats, &mut pool);
+    assert_eq!(sharded, local_counts(&g, &stats), "survivor absorbs the wedged slices");
+    assert!(
+        t.elapsed() < Duration::from_secs(20),
+        "wedge detection must be deadline-bound, not a hang ({:?})",
+        t.elapsed()
+    );
+    let m = pool.metrics();
+    assert!(m.probes >= 1, "the silent worker was probed: {m:?}");
+    assert!(m.worker_failures >= 1, "the wedge is a visible failure: {m:?}");
+    assert!(m.refanned >= 1, "wedged slices were re-dealt to the survivor: {m:?}");
+    assert_eq!(m.errors, 0, "{m:?}");
+    drop(pool);
+    drop(proxy);
+    healthy.shutdown();
+    wedged.shutdown();
+}
+
+#[test]
+fn no_live_workers_fails_loudly() {
+    let g = erdos_renyi(40, 120, 0xFA04);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let proxy = ChaosProxy::start(w.addr());
+    let addrs = vec![proxy.addr().to_string()];
+    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    // the only worker dies and stays dead: reconnects are refused
+    proxy.kill();
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let mut store = ResultStore::new(1 << 20);
+    let mut prof = PhaseProfile::new();
+    let err = planner
+        .serve_batch_sharded(
+            &catalog::motifs_vertex_induced(3),
+            &stats,
+            &mut store,
+            0,
+            &mut pool,
+            &mut prof,
+        )
+        .unwrap_err();
+    let text = format!("{err:#}");
+    assert!(
+        text.contains("no live worker remains"),
+        "a dead fleet is a loud, named failure: {text}"
+    );
+    let m = pool.metrics();
+    assert!(m.errors >= 1, "the failed batch is counted: {m:?}");
+    assert!(m.worker_failures >= 1, "{m:?}");
+    w.shutdown();
+}
+
+#[test]
+fn killed_worker_process_mid_batch_refans_to_survivors() {
+    use std::io::BufRead;
+    // three REAL worker processes (the shipped binary), one SIGKILLed
+    // after the fabric is connected: the batch must still complete with
+    // counts identical to the in-process service
+    let spawn = || {
+        let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_morphmine"))
+            .args([
+                "shard-worker",
+                "--graph",
+                "mico:tiny",
+                "--listen",
+                "127.0.0.1:0",
+                "--threads",
+                "2",
+            ])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn shard-worker");
+        let mut line = String::new();
+        std::io::BufReader::new(child.stdout.take().expect("piped stdout"))
+            .read_line(&mut line)
+            .expect("worker startup line");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable worker startup line: {line:?}"))
+            .to_string();
+        (child, addr)
+    };
+    let (mut a, addr_a) = spawn();
+    let (b, addr_b) = spawn();
+    let (c, addr_c) = spawn();
+    let g = morphmine::graph::io::load_spec("mico:tiny").unwrap();
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let addrs = vec![addr_a, addr_b, addr_c];
+    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    // SIGKILL one connected worker: its established connection dies with
+    // it, which the fabric discovers mid-batch on first use
+    a.kill().expect("kill worker");
+    let _ = a.wait();
+    let sharded = sharded_counts(&g, &stats, &mut pool);
+    assert_eq!(sharded, local_counts(&g, &stats), "killed worker must not change counts");
+    let m = pool.metrics();
+    assert!(m.worker_failures >= 1, "the kill is visible: {m:?}");
+    assert!(m.refanned >= 1, "the dead worker's slices were re-dealt: {m:?}");
+    assert_eq!(m.errors, 0, "the batch completed: {m:?}");
+    drop(pool);
+    for mut child in [b, c] {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+#[test]
+fn proto_decode_survives_hostile_mutations() {
+    // fuzz-lite over every message type: truncations, bit flips, and
+    // appended garbage must produce errors (or clean prefix decodes),
+    // never panics — and never a silently wrong message on a framed read
+    let fp = erdos_renyi(20, 40, 1).fingerprint();
+    let msgs = vec![
+        Msg::Hello { version: proto::VERSION, fingerprint: fp },
+        Msg::Welcome { fingerprint: fp, threads: 4 },
+        Msg::Reject { reason: "go away".into() },
+        Msg::Exec(ExecRequest {
+            id: 3,
+            epoch: 1,
+            fingerprint: fp,
+            lo: 2,
+            hi: 17,
+            patterns: vec![catalog::triangle(), catalog::cycle(4).vertex_induced()],
+        }),
+        Msg::Result(ExecResponse {
+            id: 3,
+            epoch: 1,
+            served_from_store: 1,
+            values: vec![
+                (catalog::triangle().canonical_key(), 99),
+                (catalog::path(3).canonical_key(), -4),
+            ],
+        }),
+        Msg::Error { id: 9, message: "boom".into() },
+        Msg::Ping { nonce: u64::MAX },
+        Msg::Pong { nonce: 0, inflight: u32::MAX },
+    ];
+    proptest::check(0xFAB5, 500, |rng| {
+        let m = &msgs[rng.below_usize(msgs.len())];
+        let mut framed = Vec::new();
+        proto::write_msg(&mut framed, m).unwrap();
+        match rng.below_usize(3) {
+            0 => {
+                // strict-prefix truncation: must error, never panic
+                framed.truncate(rng.below_usize(framed.len()));
+                assert!(proto::read_msg(&mut &framed[..]).is_err());
+            }
+            1 => {
+                // single-bit flip anywhere: CRC/length/decode must catch
+                // it — a flipped frame never yields Ok
+                let i = rng.below_usize(framed.len());
+                framed[i] ^= 1u8 << rng.below_usize(8);
+                assert!(proto::read_msg(&mut &framed[..]).is_err());
+            }
+            _ => {
+                // trailing garbage: the real message reads back intact,
+                // the tail errors instead of fabricating a message
+                let extra = 1 + rng.below_usize(40);
+                for _ in 0..extra {
+                    framed.push(rng.below_usize(256) as u8);
+                }
+                let mut r = &framed[..];
+                proto::read_msg(&mut r).unwrap();
+                assert!(proto::read_msg(&mut r).is_err());
+            }
+        }
+        // raw decode (payload already unframed) on mutated bytes: any
+        // Option outcome is fine, panicking or over-allocating is not
+        let mut payload = proto::encode(m);
+        if !payload.is_empty() {
+            let i = rng.below_usize(payload.len());
+            payload[i] ^= 1u8 << rng.below_usize(8);
+            let _ = proto::decode(&payload);
+            payload.truncate(rng.below_usize(payload.len().max(1)));
+            let _ = proto::decode(&payload);
+        }
+    });
+    // an oversized frame header is rejected by the length check BEFORE
+    // any payload allocation — the error names the limit
+    let mut hostile = Vec::new();
+    hostile.extend_from_slice(&((proto::MAX_MSG_LEN as u32) + 1).to_le_bytes());
+    hostile.extend_from_slice(&0u32.to_le_bytes());
+    hostile.extend_from_slice(&[0u8; 16]);
+    let err = proto::read_msg(&mut &hostile[..]).unwrap_err();
+    assert!(
+        err.to_string().contains("exceeds MAX_MSG_LEN"),
+        "oversized frames are refused by name: {err}"
+    );
+}

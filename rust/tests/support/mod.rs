@@ -1,0 +1,235 @@
+//! Test-only fault-injection harness: a TCP chaos proxy that sits between
+//! a shard coordinator and a worker and can delay, corrupt, sever, or
+//! blackhole the byte stream — including mid-frame — so integration tests
+//! can prove the fabric's merge invariant (per-base totals are exact sums
+//! of per-slice partials) survives every failure mode the coordinator
+//! claims to handle.
+//!
+//! Faults are one-shot: arming resets the forwarded-byte counter, the
+//! fault fires once, and subsequent connections (the coordinator's
+//! retries) pass through cleanly — except [`ChaosProxy::set_blackhole`],
+//! which holds until cleared, and [`ChaosProxy::kill`], which is
+//! permanent. "Down" is the worker→coordinator direction (replies), where
+//! corruption exercises the coordinator's CRC check rather than the
+//! worker's framing check.
+//!
+//! Not every test file uses every knob, hence the file-level dead_code
+//! allow (each integration test binary compiles this module separately).
+#![allow(dead_code)]
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Sentinel for a disarmed one-shot fault.
+const OFF: u64 = u64::MAX;
+
+#[derive(Default)]
+struct Faults {
+    /// Sever both directions of the active connection after this many
+    /// worker→coordinator bytes have been forwarded.
+    sever_down_after: AtomicU64,
+    /// XOR one worker→coordinator byte (at this absolute forwarded
+    /// offset) with 0x40 — enough to break the frame CRC, not the length.
+    corrupt_down_at: AtomicU64,
+    /// Sleep this long before forwarding the next worker→coordinator
+    /// chunk.
+    delay_down_ms: AtomicU64,
+    /// Swallow traffic in both directions while set (the connection stays
+    /// open: a wedged worker, not a dead one).
+    blackhole: AtomicBool,
+    /// Worker→coordinator bytes forwarded since the last fault was armed.
+    down_forwarded: AtomicU64,
+}
+
+impl Faults {
+    fn new() -> Faults {
+        let f = Faults::default();
+        f.sever_down_after.store(OFF, Ordering::SeqCst);
+        f.corrupt_down_at.store(OFF, Ordering::SeqCst);
+        f.delay_down_ms.store(OFF, Ordering::SeqCst);
+        f
+    }
+}
+
+/// A running proxy: `coordinator → proxy.addr() → target`.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    target: SocketAddr,
+    stop: Arc<AtomicBool>,
+    faults: Arc<Faults>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Start proxying an ephemeral local port to `target`.
+    pub fn start(target: SocketAddr) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind chaos proxy");
+        let addr = listener.local_addr().expect("proxy addr");
+        listener.set_nonblocking(true).expect("nonblocking accept");
+        let stop = Arc::new(AtomicBool::new(false));
+        let faults = Arc::new(Faults::new());
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (stop, faults, conns) = (stop.clone(), faults.clone(), conns.clone());
+            std::thread::spawn(move || accept_loop(&listener, target, &stop, &faults, &conns))
+        };
+        ChaosProxy {
+            addr,
+            target,
+            stop,
+            faults,
+            conns,
+            accept: Some(accept),
+        }
+    }
+
+    /// The address the coordinator should dial instead of the worker's.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Arm: cut the connection after `bytes` more reply bytes.
+    pub fn sever_down_after(&self, bytes: u64) {
+        self.faults.down_forwarded.store(0, Ordering::SeqCst);
+        self.faults.sever_down_after.store(bytes, Ordering::SeqCst);
+    }
+
+    /// Arm: flip one reply byte at absolute offset `offset` from now.
+    pub fn corrupt_down_at(&self, offset: u64) {
+        self.faults.down_forwarded.store(0, Ordering::SeqCst);
+        self.faults.corrupt_down_at.store(offset, Ordering::SeqCst);
+    }
+
+    /// Arm: stall the next reply chunk by `ms` milliseconds.
+    pub fn delay_down(&self, ms: u64) {
+        self.faults.delay_down_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// While set, traffic is swallowed in both directions but every
+    /// connection stays established — the proxied worker looks wedged.
+    pub fn set_blackhole(&self, on: bool) {
+        self.faults.blackhole.store(on, Ordering::SeqCst);
+    }
+
+    /// Permanently kill the proxy: stop accepting and sever every live
+    /// connection, as if the worker process died.
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for c in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.kill();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    target: SocketAddr,
+    stop: &Arc<AtomicBool>,
+    faults: &Arc<Faults>,
+    conns: &Arc<Mutex<Vec<TcpStream>>>,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let client = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(_) => return,
+        };
+        let Ok(upstream) = TcpStream::connect(target) else {
+            continue; // worker gone: refuse by dropping the client
+        };
+        {
+            let mut cs = conns.lock().unwrap();
+            if let (Ok(c), Ok(u)) = (client.try_clone(), upstream.try_clone()) {
+                cs.push(c);
+                cs.push(u);
+            }
+        }
+        // coordinator → worker: faithful except for stop/blackhole
+        {
+            let (from, to) = (client.try_clone(), upstream.try_clone());
+            let (stop, faults) = (stop.clone(), faults.clone());
+            if let (Ok(from), Ok(to)) = (from, to) {
+                std::thread::spawn(move || pump(from, to, &stop, &faults, false));
+            }
+        }
+        // worker → coordinator: where the one-shot faults fire
+        let (stop2, faults2) = (stop.clone(), faults.clone());
+        std::thread::spawn(move || pump(upstream, client, &stop2, &faults2, true));
+    }
+}
+
+/// Forward `from` → `to` until EOF, error, stop, or an armed sever fires.
+/// `down` marks the worker→coordinator direction.
+fn pump(mut from: TcpStream, mut to: TcpStream, stop: &AtomicBool, faults: &Faults, down: bool) {
+    from.set_read_timeout(Some(Duration::from_millis(25))).ok();
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if faults.blackhole.load(Ordering::SeqCst) {
+            // swallow without closing: the peer sees an open, silent pipe
+            match from.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) | Err(_) => continue,
+            }
+        }
+        let n = match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        if down {
+            let delay = faults.delay_down_ms.swap(OFF, Ordering::SeqCst);
+            if delay != OFF {
+                std::thread::sleep(Duration::from_millis(delay));
+            }
+            let start = faults.down_forwarded.fetch_add(n as u64, Ordering::SeqCst);
+            let corrupt_at = faults.corrupt_down_at.load(Ordering::SeqCst);
+            if corrupt_at != OFF && corrupt_at >= start && corrupt_at < start + n as u64 {
+                faults.corrupt_down_at.store(OFF, Ordering::SeqCst);
+                buf[(corrupt_at - start) as usize] ^= 0x40;
+            }
+            let sever_at = faults.sever_down_after.load(Ordering::SeqCst);
+            if sever_at != OFF && start + n as u64 >= sever_at {
+                // forward the prefix up to the cut so the sever lands
+                // mid-frame, then drop both directions
+                faults.sever_down_after.store(OFF, Ordering::SeqCst);
+                let keep = (sever_at.saturating_sub(start) as usize).min(n);
+                let _ = to.write_all(&buf[..keep]);
+                break;
+            }
+        }
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}
