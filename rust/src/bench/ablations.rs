@@ -791,6 +791,7 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                             fused: true,
                             cache_bytes: 64 << 20,
                             persist: None,
+                            slice_pin: None,
                         },
                     )
                     .expect("bind shard worker")
@@ -852,6 +853,7 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                             fused: true,
                             cache_bytes: 64 << 20,
                             persist: None,
+                            slice_pin: None,
                         },
                     )
                     .expect("bind shard worker")
@@ -862,9 +864,10 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 addrs.push(spawn_dying_worker(d.generate(scale).fingerprint()));
             }
             let planner = QueryPlanner::new(Policy::Naive, true, threads);
+            let flat: Vec<Vec<String>> = addrs.iter().map(|a| vec![a.clone()]).collect();
             let mut coord = ShardCoordinator::connect_with(
                 d.generate(scale),
-                &addrs,
+                &flat,
                 planner,
                 64 << 20,
                 fault_config,
@@ -896,6 +899,98 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 m.retries,
                 m.refanned,
                 m.probes,
+            ));
+            drop(coord);
+            for w in workers {
+                w.shutdown();
+            }
+        }
+
+        // replication: the same batch over 2 groups × 2 replicas vs 4
+        // unreplicated seats, healthy vs one seat dying mid-batch. A
+        // replicated topology must absorb the death by failing over
+        // inside the group — never by re-fanning across groups — while
+        // the flat topology shows the re-fan path for contrast; the row
+        // delta is what one replica's death costs under each regime.
+        for (replicated, killed) in [(false, 0usize), (false, 1), (true, 0), (true, 1)] {
+            let workers: Vec<ShardWorker> = (0..4 - killed)
+                .map(|_| {
+                    ShardWorker::bind(
+                        d.generate(scale),
+                        "127.0.0.1:0",
+                        WorkerConfig {
+                            threads,
+                            fused: true,
+                            cache_bytes: 64 << 20,
+                            persist: None,
+                            slice_pin: None,
+                        },
+                    )
+                    .expect("bind shard worker")
+                })
+                .collect();
+            let mut addrs: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+            if killed == 1 {
+                // the dying seat lands in the second group (replicated)
+                // or as the fourth flat seat
+                addrs.push(spawn_dying_worker(d.generate(scale).fingerprint()));
+            }
+            let groups: Vec<Vec<String>> = if replicated {
+                vec![addrs[..2].to_vec(), addrs[2..].to_vec()]
+            } else {
+                addrs.iter().map(|a| vec![a.clone()]).collect()
+            };
+            let topology = if replicated { "2x2" } else { "flat4" };
+            let planner = QueryPlanner::new(Policy::Naive, true, threads);
+            let mut coord = ShardCoordinator::connect_with(
+                d.generate(scale),
+                &groups,
+                planner,
+                64 << 20,
+                fault_config,
+            )?;
+            let (resp, t) = time(|| coord.call(&batch).expect("replication batch"));
+            assert_eq!(
+                resp.results,
+                single.results,
+                "{}: {topology} counts must survive {killed} replica death(s)",
+                d.code()
+            );
+            let m = coord.shard_metrics();
+            if replicated {
+                assert_eq!(
+                    m.refanned, 0,
+                    "{}: replicated groups never re-fan across groups: {m:?}",
+                    d.code()
+                );
+                assert_eq!(
+                    m.failovers > 0,
+                    killed > 0,
+                    "{}: failovers counted iff a replica died: {m:?}",
+                    d.code()
+                );
+            } else {
+                assert_eq!(
+                    m.refanned > 0,
+                    killed > 0,
+                    "{}: flat topologies re-fan iff a worker died: {m:?}",
+                    d.code()
+                );
+            }
+            println!(
+                "| {} | {topology}+{killed} dying | {t:.3} | {:.2}× | {} |",
+                d.code(),
+                t_single / t.max(1e-9),
+                m.partials_merged
+            );
+            rows.push(format!(
+                "    {{\"graph\": \"{}\", \"topology\": \"{topology}\", \"killed_replicas\": {killed}, \"batch_s\": {t:.6}, \"single_process_s\": {t_single:.6}, \"worker_failures\": {}, \"failovers\": {}, \"hedges\": {}, \"refanned\": {}, \"retries\": {}}}",
+                d.code(),
+                m.worker_failures,
+                m.failovers,
+                m.hedges,
+                m.refanned,
+                m.retries,
             ));
             drop(coord);
             for w in workers {

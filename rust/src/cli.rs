@@ -9,9 +9,9 @@
 //! morphmine gen     --dataset mico[:scale] --out <path>
 //! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--assert-warm-hits]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards a1,a2,…] [--connect-timeout S] [--shard-timeout S] [--probe-interval S]
-//! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N]
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F]
+//! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--slice i/k]
 //! morphmine store   <inspect|compact|purge|verify> --dir <dir> [--graph <spec>]
 //! ```
 //!
@@ -40,16 +40,27 @@
 //!
 //! Sharded mode ([`crate::shard`]): start `shard-worker` processes, each
 //! loading the **same** graph spec, then point `batch`/`serve` at them
-//! with `--shards host:port,host:port,…`. The coordinator deals
+//! with a `--shards` topology — comma-separated replica groups, each a
+//! pipe-separated replica set (`a1|a2,b1|b2` is two groups of two;
+//! `a,b,c` is the unreplicated flat pool). The coordinator deals
 //! degree-weighted first-level sub-slices of each batch's missing base
-//! patterns from a work queue and sums the exact per-slice partial
-//! counts; answers are identical to single-process runs, including when
-//! workers die mid-batch (their sub-slices are retried with backoff and
-//! re-fanned across survivors — the batch fails only when no live worker
-//! remains). `--connect-timeout` bounds the handshake, `--shard-timeout`
-//! is how long a connected worker may stay silent before it is declared
-//! wedged, and `--probe-interval` is how often an idle-looking worker is
-//! PINGed for signs of life (all in seconds). Edge updates are rejected
+//! patterns from per-group work queues and sums the exact per-slice
+//! partial counts; answers are identical to single-process runs,
+//! including when workers die mid-batch. In a replicated group a dead
+//! member's sub-slices **fail over** to a sibling replica and stragglers
+//! are **hedged** after `--hedge-timeout` seconds; the batch fails loudly
+//! only when a whole group is dead. The unreplicated pool keeps the
+//! retry + re-fan semantics (re-fan is the last resort — it only exists
+//! where there is no sibling to fail over to). `--verify-reads F` sends a
+//! sampled fraction `F` of sub-slices to two replicas and hard-fails the
+//! batch if their (deterministic, byte-identical) partials disagree — a
+//! built-in corruption detector. `--connect-timeout` bounds the
+//! handshake, `--shard-timeout` is how long a connected worker may stay
+//! silent before it is declared wedged, and `--probe-interval` is how
+//! often an idle-looking worker is PINGed for signs of life (all in
+//! seconds). `shard-worker --slice i/k` pins a worker to group `i` of a
+//! `k`-group topology so it pre-warms its group's persisted slices at
+//! startup instead of lazily on first request. Edge updates are rejected
 //! in sharded serve (the workers' graph copies are immutable).
 
 use crate::coordinator::{Config, Coordinator};
@@ -200,17 +211,28 @@ fn duration_flag(args: &Args, key: &str, default: std::time::Duration) -> Result
     Ok(std::time::Duration::from_secs_f64(secs))
 }
 
-/// Fabric timing from `--connect-timeout`/`--shard-timeout`/
-/// `--probe-interval` (seconds), on top of [`crate::shard::PoolConfig`]
-/// defaults.
+/// Fabric tuning from `--connect-timeout`/`--shard-timeout`/
+/// `--probe-interval`/`--hedge-timeout` (seconds) and `--verify-reads`
+/// (fraction), on top of [`crate::shard::PoolConfig`] defaults.
 fn pool_config_of(args: &Args) -> Result<crate::shard::PoolConfig> {
     let defaults = crate::shard::PoolConfig::default();
-    let config = crate::shard::PoolConfig {
+    let mut config = crate::shard::PoolConfig {
         connect_timeout: duration_flag(args, "connect-timeout", defaults.connect_timeout)?,
         shard_timeout: duration_flag(args, "shard-timeout", defaults.shard_timeout)?,
         probe_interval: duration_flag(args, "probe-interval", defaults.probe_interval)?,
+        hedge_timeout: duration_flag(args, "hedge-timeout", defaults.hedge_timeout)?,
         ..defaults
     };
+    if let Some(s) = args.get("verify-reads") {
+        let f: f64 = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --verify-reads {s:?}: {e}"))?;
+        ensure!(
+            f.is_finite() && (0.0..=1.0).contains(&f),
+            "bad --verify-reads {s:?}: must be a fraction in [0, 1]"
+        );
+        config.verify_reads = f;
+    }
     ensure!(
         config.shard_timeout >= config.probe_interval,
         "--shard-timeout ({:?}) must be ≥ --probe-interval ({:?}): the wedge \
@@ -221,21 +243,28 @@ fn pool_config_of(args: &Args) -> Result<crate::shard::PoolConfig> {
     Ok(config)
 }
 
-/// The fabric timing flags only mean something on a sharded coordinator;
-/// reject them elsewhere so a typo'd deployment fails instead of running
-/// with silently ignored timeouts.
+/// The fabric flags only mean something on a sharded coordinator; reject
+/// them elsewhere so a typo'd deployment fails instead of running with
+/// silently ignored timeouts.
 fn ensure_no_shard_timing_flags(args: &Args) -> Result<()> {
-    for key in ["connect-timeout", "shard-timeout", "probe-interval"] {
+    for key in [
+        "connect-timeout",
+        "shard-timeout",
+        "probe-interval",
+        "hedge-timeout",
+        "verify-reads",
+    ] {
         ensure!(
             args.get(key).is_none(),
-            "--{key} needs --shards a1,a2,… (it configures the shard fabric)"
+            "--{key} needs --shards a1|a2,b1|b2,… (it configures the shard fabric)"
         );
     }
     Ok(())
 }
 
-/// Sharded coordinator from `--shards a1,a2,…` (used by `batch`/`serve`).
-fn shard_coordinator_of(args: &Args, addrs: &str) -> Result<crate::shard::ShardCoordinator> {
+/// Sharded coordinator from a `--shards` topology spec — comma-separated
+/// replica groups, pipe-separated members (used by `batch`/`serve`).
+fn shard_coordinator_of(args: &Args, spec_shards: &str) -> Result<crate::shard::ShardCoordinator> {
     let spec = args
         .get("graph")
         .context("missing --graph <dataset[:scale] | path>")?;
@@ -250,11 +279,7 @@ fn shard_coordinator_of(args: &Args, addrs: &str) -> Result<crate::shard::ShardC
         "--fsync-every applies to shard workers in sharded mode: pass it to \
          `morphmine shard-worker` alongside --persist instead"
     );
-    let addrs: Vec<String> = addrs
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    let groups = crate::shard::parse_topology(spec_shards)?;
     let planner = crate::service::QueryPlanner::new(
         policy_of(args)?,
         fused_of(args)?,
@@ -262,13 +287,20 @@ fn shard_coordinator_of(args: &Args, addrs: &str) -> Result<crate::shard::ShardC
     );
     let cache_bytes = args.parse_num("cache-mb", 64usize)? << 20;
     let config = pool_config_of(args)?;
-    let coord =
-        crate::shard::ShardCoordinator::connect_with(graph, &addrs, planner, cache_bytes, config)?;
+    let coord = crate::shard::ShardCoordinator::connect_with(
+        graph,
+        &groups,
+        planner,
+        cache_bytes,
+        config,
+    )?;
+    let rendered: Vec<String> = groups.iter().map(|g| g.join("|")).collect();
     println!(
-        "sharded across {} workers ({} sub-slices): {}",
+        "sharded across {} workers in {} group(s) ({} sub-slices): {}",
         coord.num_shards(),
+        coord.num_groups(),
         coord.num_sub_slices(),
-        addrs.join(", ")
+        rendered.join(", ")
     );
     Ok(coord)
 }
@@ -280,8 +312,15 @@ fn print_shard_metrics(coord: &crate::shard::ShardCoordinator) {
         m.requests, m.bases_sent, m.partials_merged, m.remote_cached, m.errors
     );
     println!(
-        "fabric: worker_failures={} retries={} refanned={} probes={}",
-        m.worker_failures, m.retries, m.refanned, m.probes
+        "fabric: worker_failures={} retries={} refanned={} failovers={} hedges={} \
+         verify_mismatches={} probes={}",
+        m.worker_failures,
+        m.retries,
+        m.refanned,
+        m.failovers,
+        m.hedges,
+        m.verify_mismatches,
+        m.probes
     );
 }
 
@@ -484,11 +523,29 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             let listen = args
                 .get("listen")
                 .context("missing --listen <addr:port> (port 0 picks an ephemeral port)")?;
+            let slice_pin = match args.get("slice") {
+                None => None,
+                Some(s) => {
+                    let parts: Vec<&str> = s.split('/').collect();
+                    let parsed = match parts.as_slice() {
+                        [i, k] => i.parse::<usize>().ok().zip(k.parse::<usize>().ok()),
+                        _ => None,
+                    };
+                    let (i, k) = parsed
+                        .with_context(|| format!("bad --slice {s:?}: expected i/k, e.g. 0/2"))?;
+                    ensure!(
+                        k >= 1 && i < k,
+                        "bad --slice {s:?}: the group index must be below the group count"
+                    );
+                    Some((i, k))
+                }
+            };
             let config = crate::shard::WorkerConfig {
                 threads: args.parse_num("threads", crate::exec::parallel::default_threads())?,
                 fused: fused_of(&args)?,
                 cache_bytes: args.parse_num("cache-mb", 64usize)? << 20,
                 persist: persist_of(&args)?,
+                slice_pin,
             };
             let worker = crate::shard::ShardWorker::bind(graph, listen, config)?;
             // killing the process skips the graceful-shutdown compaction
@@ -806,6 +863,7 @@ mod tests {
                     fused: true,
                     cache_bytes: 1 << 20,
                     persist: None,
+                    slice_pin: None,
                 },
             )
             .unwrap()
@@ -836,6 +894,83 @@ mod tests {
     }
 
     #[test]
+    fn run_replicated_shards_and_verified_reads() {
+        let load = || crate::graph::io::load_spec("mico:tiny").unwrap();
+        let worker = |g| {
+            crate::shard::ShardWorker::bind(
+                g,
+                "127.0.0.1:0",
+                crate::shard::WorkerConfig {
+                    threads: 2,
+                    fused: true,
+                    cache_bytes: 1 << 20,
+                    persist: None,
+                    slice_pin: None,
+                },
+            )
+            .unwrap()
+        };
+        let ws: Vec<_> = (0..4).map(|_| worker(load())).collect();
+        let shards = format!(
+            "{}|{},{}|{}",
+            ws[0].addr(),
+            ws[1].addr(),
+            ws[2].addr(),
+            ws[3].addr()
+        );
+        // 2 groups × 2 replicas with every read verified: same answers as
+        // the unreplicated smoke, zero mismatches expected
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3;cliques:3 --pmr naive --threads 2 \
+             --shards {shards} --verify-reads 1.0"
+        )))
+        .unwrap();
+        // bad fractions fail before any connection attempt
+        for bad in ["--verify-reads 1.5", "--verify-reads -0.1", "--verify-reads nan"] {
+            assert!(
+                run(argv(&format!(
+                    "batch --graph mico:tiny --queries motifs:3 --shards {shards} {bad}"
+                )))
+                .is_err(),
+                "{bad}"
+            );
+        }
+        // verified reads without a replica to compare against are refused
+        let flat = format!("{},{}", ws[0].addr(), ws[1].addr());
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --shards {flat} --verify-reads 0.5"
+        )))
+        .is_err());
+        // the replication fabric flags still require --shards
+        assert!(run(argv("batch --graph mico:tiny --queries motifs:3 --hedge-timeout 5")).is_err());
+        assert!(run(argv("batch --graph mico:tiny --queries motifs:3 --verify-reads 0.5")).is_err());
+        // a duplicated address is refused at parse time
+        assert!(run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --shards {0}|{0}",
+            ws[0].addr()
+        )))
+        .is_err());
+        for w in ws {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn shard_worker_slice_flag_is_validated() {
+        // malformed or out-of-range pins fail fast (a valid pin would
+        // block in wait(), so only the rejections are testable here)
+        for bad in ["--slice 2", "--slice a/b", "--slice 2/2", "--slice 3/2", "--slice 1/0"] {
+            assert!(
+                run(argv(&format!(
+                    "shard-worker --graph mico:tiny --listen 127.0.0.1:0 {bad}"
+                )))
+                .is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
     fn fabric_timing_flags_are_validated() {
         // the timing flags configure the shard fabric; without --shards
         // they would be silently ignored, so they are rejected instead
@@ -853,6 +988,7 @@ mod tests {
                 fused: true,
                 cache_bytes: 1 << 20,
                 persist: None,
+                slice_pin: None,
             },
         )
         .unwrap();

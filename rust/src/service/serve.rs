@@ -24,9 +24,13 @@
 //!   inserts are mirrored into a write-ahead log and folded into
 //!   snapshots ([`crate::service::persist`]); a restart recovers the
 //!   store warm when the live graph's fingerprint matches what was
-//!   persisted, and cold otherwise. WAL appends are flushed per record,
-//!   so an abrupt kill (SIGINT, OOM) loses at most the record mid-write —
-//!   replay truncates it as a torn tail; a graceful [`Drop`] additionally
+//!   persisted, and cold otherwise. All WAL and snapshot IO runs on a
+//!   dedicated writer thread so the state mutex is never held across a
+//!   disk write; ordering against invalidations is preserved because
+//!   commands are *enqueued* under that mutex (see [`WalCmd`]). WAL
+//!   appends are flushed per record, so an abrupt kill (SIGINT, OOM)
+//!   loses at most the records still queued or mid-write — replay
+//!   truncates a torn tail; a graceful [`Drop`] drains the queue and
 //!   compacts so the next start skips the replay.
 //! * **Containment** — a batch that panics (an internal invariant
 //!   failure) is caught at the worker boundary: that batch's caller gets
@@ -36,17 +40,18 @@
 //!
 //! [`coordinator::query::Query`]: crate::coordinator::query::Query
 
-use super::persist::{PendingSnapshot, PersistConfig, Persistence, RecoveryReport};
+use super::persist::{PersistConfig, Persistence, RecoveryReport};
 use super::planner::{BatchStats, QueryPlanner};
 use super::store::{ResultStore, StoreMetrics};
 use crate::coordinator::query::Query;
-use crate::graph::{DataGraph, DynGraph, GraphStats, Relabeling, VertexId};
+use crate::graph::{DataGraph, DynGraph, GraphFingerprint, GraphStats, Relabeling, VertexId};
 use crate::morph::Policy;
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
 use crate::util::timer::PhaseProfile;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -143,6 +148,137 @@ struct Cell {
     ready: Condvar,
 }
 
+/// One command for the WAL writer thread.
+///
+/// Commands are **enqueued while holding the service state mutex**, at
+/// the exact point the corresponding store transition happens, so the
+/// FIFO channel pins on-disk record order to store state order: an
+/// insert published before an epoch invalidation can never be written
+/// after it (which replay would bind to the wrong fingerprint). The IO
+/// itself — per-record flushed appends and multi-MB snapshot writes —
+/// runs entirely off the mutex, on the writer thread.
+enum WalCmd {
+    /// Mirror one store-accepted insert into the WAL.
+    Insert(CanonKey, i128),
+    /// The graph mutated: rebind the log to the new content fingerprint.
+    Invalidate(GraphFingerprint),
+    /// Fold this live store image (captured under the state mutex, so it
+    /// is consistent with every record enqueued before it) into a
+    /// snapshot and reset the WAL.
+    Compact(Vec<(CanonKey, i128)>),
+    /// Drain and stop. `image` is the final store image for the
+    /// graceful-shutdown compaction (`None` skips it — used when the
+    /// state mutex was poisoned and the image cannot be trusted).
+    Shutdown {
+        image: Option<Vec<(CanonKey, i128)>>,
+    },
+}
+
+/// Handle to the dedicated WAL writer thread, which owns the
+/// [`Persistence`] session for the service's lifetime.
+struct WalWriter {
+    tx: mpsc::Sender<WalCmd>,
+    /// Set by the writer when the log cadence wants a compaction; the
+    /// next publish observes it under the state mutex, captures the
+    /// image there, and enqueues [`WalCmd::Compact`].
+    compact_due: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WalWriter {
+    fn spawn(persist: Persistence<i128>) -> WalWriter {
+        let (tx, rx) = mpsc::channel();
+        let compact_due = Arc::new(AtomicBool::new(false));
+        let due = compact_due.clone();
+        let join = std::thread::spawn(move || wal_writer_loop(&rx, persist, &due));
+        WalWriter {
+            tx,
+            compact_due,
+            join: Some(join),
+        }
+    }
+
+    fn insert(&self, key: CanonKey, value: i128) {
+        let _ = self.tx.send(WalCmd::Insert(key, value));
+    }
+
+    fn invalidate(&self, fp: GraphFingerprint) {
+        let _ = self.tx.send(WalCmd::Invalidate(fp));
+    }
+
+    fn compact(&self, image: Vec<(CanonKey, i128)>) {
+        let _ = self.tx.send(WalCmd::Compact(image));
+    }
+
+    /// Whether the writer asked for a cadence compaction (one-shot: the
+    /// caller that takes the flag owes the writer a [`WalCmd::Compact`]).
+    fn take_compact_due(&self) -> bool {
+        self.compact_due.swap(false, Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: hand over the final image, then block until
+    /// every queued record (and the shutdown compaction) hit disk.
+    fn shutdown(mut self, image: Option<Vec<(CanonKey, i128)>>) {
+        let _ = self.tx.send(WalCmd::Shutdown { image });
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WalWriter {
+    fn drop(&mut self) {
+        // backstop for paths that bypass Service::drop's explicit
+        // shutdown (e.g. a poisoned state mutex): stop the thread without
+        // a final compaction — the flushed WAL already holds everything
+        // published, so recovery replays it
+        if let Some(h) = self.join.take() {
+            let _ = self.tx.send(WalCmd::Shutdown { image: None });
+            let _ = h.join();
+        }
+    }
+}
+
+/// The writer thread: applies commands in channel order. On the first IO
+/// error, persistence degrades to in-memory-only for the rest of the
+/// session (commands are drained and dropped) — recovery's fingerprint
+/// gate keeps whatever partial state is on disk safe to (not) serve, so
+/// a broken disk can only cool a future restart, never corrupt answers.
+fn wal_writer_loop(rx: &mpsc::Receiver<WalCmd>, mut p: Persistence<i128>, due: &AtomicBool) {
+    while let Ok(cmd) = rx.recv() {
+        let result = match cmd {
+            WalCmd::Insert(k, v) => p.record_insert(&k, &v),
+            WalCmd::Invalidate(fp) => p.record_invalidation(fp),
+            WalCmd::Compact(image) => p.compact(&image),
+            WalCmd::Shutdown { image } => {
+                if let Some(image) = image {
+                    // skip when nothing was logged since the last
+                    // compaction: the snapshot on disk already equals the
+                    // live image
+                    if p.compact_on_drop() && p.dirty() {
+                        if let Err(e) = p.compact(&image) {
+                            eprintln!("warning: final store compaction failed: {e}");
+                        }
+                    }
+                }
+                return;
+            }
+        };
+        if let Err(e) = result {
+            eprintln!("warning: WAL write failed, persistence disabled: {e}");
+            break;
+        }
+        due.store(p.wants_compaction(), Ordering::Relaxed);
+    }
+    // degraded: keep draining so enqueuers never see a closed channel
+    // mid-session and shutdown still joins promptly
+    for cmd in rx.iter() {
+        if matches!(cmd, WalCmd::Shutdown { .. }) {
+            return;
+        }
+    }
+}
+
 /// State behind the service mutex.
 struct State {
     graph: DynGraph,
@@ -152,12 +288,11 @@ struct State {
     store: ResultStore<i128>,
     /// `(canonical key, epoch)` → completion cell of the batch computing it.
     inflight: HashMap<(CanonKey, u64), Arc<Cell>>,
-    /// Durable-store session, when configured. `None` also after an IO
-    /// error: persistence degrades to in-memory-only with a warning —
-    /// recovery's fingerprint gate keeps whatever partial state is on
-    /// disk safe to (not) serve, so a broken disk can never corrupt
-    /// answers, only cool a future restart.
-    persist: Option<Persistence<i128>>,
+    /// Handle to the WAL writer thread, when persistence is configured.
+    /// Mutating the store and enqueuing the mirroring command happen
+    /// under the same lock hold, which is what keeps on-disk record
+    /// order equal to store state order — the IO itself never runs here.
+    persist: Option<WalWriter>,
     /// Degree-ordered relabeling of the *initial* graph, if any: public
     /// edge updates arrive in original (input) IDs and are translated into
     /// the engine's internal ID space, which snapshots keep forever.
@@ -250,7 +385,7 @@ impl Service {
                 for (k, v) in warm {
                     store.restore(k, v);
                 }
-                (Some(p), Some(report))
+                (Some(WalWriter::spawn(p)), Some(report))
             }
             None => (None, None),
         };
@@ -366,72 +501,26 @@ impl Drop for Service {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
-        // graceful-shutdown flush: fold the session's WAL into one
-        // snapshot so the next start recovers without a replay. Skipped on
-        // a poisoned lock (a worker panicked mid-publish) — the flushed
-        // WAL already holds everything published, so recovery replays it.
-        // The same applies to an abrupt kill (e.g. SIGINT): every insert
-        // was flushed when it happened, so skipping this step only costs
-        // replay time, never data.
-        if let Ok(mut st) = self.shared.state.lock() {
-            let st = &mut *st;
-            if let Some(p) = &mut st.persist {
-                // skip when nothing was logged since the last compaction:
-                // the snapshot on disk already equals the live image
-                if p.compact_on_drop() && p.dirty() {
-                    if let Err(e) = p.compact(&st.store.entries()) {
-                        eprintln!("warning: final store compaction failed: {e}");
-                    }
-                }
+        // graceful-shutdown flush: capture the final store image under
+        // the lock and hand it to the WAL writer, which drains every
+        // queued record and folds the session's log into one snapshot so
+        // the next start recovers without a replay. On a poisoned lock
+        // (a worker panicked mid-publish) the image is not trusted and
+        // the writer stops without compacting — the flushed WAL already
+        // holds everything published, so recovery replays it. The same
+        // applies to an abrupt kill (e.g. SIGINT): every insert was
+        // flushed when the writer dequeued it, so skipping this step only
+        // costs replay time, never data.
+        let (writer, image) = match self.shared.state.lock() {
+            Ok(mut st) => {
+                let st = &mut *st;
+                let image = st.persist.is_some().then(|| st.store.entries());
+                (st.persist.take(), image)
             }
-        }
-    }
-}
-
-/// Mirror one published store insert into the WAL, degrading persistence
-/// to in-memory-only on the first IO error (see [`State::persist`]).
-fn persist_insert(persist: &mut Option<Persistence<i128>>, key: &CanonKey, value: i128) {
-    if let Some(p) = persist {
-        if let Err(e) = p.record_insert(key, &value) {
-            eprintln!("warning: WAL append failed, persistence disabled: {e}");
-            *persist = None;
-        }
-    }
-}
-
-/// Begin a due compaction under the state lock — only the cheap half (WAL
-/// reset + image clone) runs here; the caller must hand the returned
-/// image to [`persist_finish_compaction`] after releasing the lock.
-/// Degradation contract as in [`persist_insert`].
-fn persist_begin_compaction(
-    persist: &mut Option<Persistence<i128>>,
-    store: &ResultStore<i128>,
-) -> Option<PendingSnapshot<i128>> {
-    let p = persist.as_mut()?;
-    if !p.wants_compaction() {
-        return None;
-    }
-    match p.begin_compaction(store.entries()) {
-        Ok(pending) => Some(pending),
-        Err(e) => {
-            eprintln!("warning: store compaction failed, persistence disabled: {e}");
-            *persist = None;
-            None
-        }
-    }
-}
-
-/// Write a pending snapshot image with **no lock held** — it can be tens
-/// of MB, and serializing it under the state mutex would stall every
-/// worker. On failure the image survives only in memory (the WAL was
-/// already reset), so persistence is disabled: a later restart is colder,
-/// never wrong.
-fn persist_finish_compaction(shared: &Shared, pending: Option<PendingSnapshot<i128>>) {
-    let Some(p) = pending else { return };
-    if let Err(e) = p.write() {
-        eprintln!("warning: snapshot write failed, persistence disabled: {e}");
-        if let Ok(mut st) = shared.state.lock() {
-            st.persist = None;
+            Err(poisoned) => (poisoned.into_inner().persist.take(), None),
+        };
+        if let Some(writer) = writer {
+            writer.shutdown(image);
         }
     }
 }
@@ -478,26 +567,24 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
 
     // pin the epoch and (re)build the CSR snapshot + stats if a mutation
     // landed since the last batch
-    let (graph, stats, epoch, pending) = {
+    let (graph, stats, epoch) = {
         let mut st = shared.state.lock().unwrap();
         let st = &mut *st;
         let epoch = st.graph.version();
         st.store.set_epoch(epoch);
-        let mut pending = None;
         if st.snapshot.is_none() || st.snapshot_epoch != epoch {
             let g = st.graph.to_data_graph("service");
             // the epoch moved: everything persisted so far describes a
-            // graph that no longer exists — rebind the durable store to
-            // the new content fingerprint before any new insert lands
-            if let Some(p) = &mut st.persist {
-                if let Err(e) = p.record_invalidation(g.fingerprint()) {
-                    eprintln!("warning: WAL invalidation failed, persistence disabled: {e}");
-                    st.persist = None;
-                }
+            // graph that no longer exists — enqueue the rebind before any
+            // new insert can land behind it, then a (near-empty-image)
+            // compaction that shrinks the log to a header. Both are
+            // commands to the writer thread: enqueuing under this lock is
+            // what pins their order against the inserts other batches
+            // publish — no IO happens here
+            if let Some(w) = &st.persist {
+                w.invalidate(g.fingerprint());
+                w.compact(st.store.entries());
             }
-            // forced by the invalidation: the image is empty, the reset
-            // shrinks the log to a header
-            pending = persist_begin_compaction(&mut st.persist, &st.store);
             st.stats = Some(Arc::new(GraphStats::compute(&g, 2000, 0x5E55)));
             st.snapshot = Some(Arc::new(g));
             st.snapshot_epoch = epoch;
@@ -506,10 +593,8 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
             st.snapshot.clone().expect("snapshot just ensured"),
             st.stats.clone().expect("stats just ensured"),
             epoch,
-            pending,
         )
     };
-    persist_finish_compaction(shared, pending);
 
     let mut profile = PhaseProfile::new();
     let plan = profile.time("plan", || planner.morph(&flat, &stats));
@@ -546,29 +631,36 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
 
     // publish: feed the store (stale inserts are dropped there) and wake
     // any batch coalesced onto our bases
-    let pending = {
+    {
         let mut st = shared.state.lock().unwrap();
         let st = &mut *st;
         for &(k, v) in &fresh {
             // mirror exactly the inserts the store accepted: a stale
             // insert (epoch moved mid-batch) must not reach the WAL
-            // either. WAL appends run under the state lock on purpose:
+            // either. The append itself runs on the writer thread; the
+            // enqueue happens here, under the state lock, on purpose —
             // record order must match store state transitions (an insert
             // appended after another batch's invalidation record would
-            // be replayed under the wrong fingerprint). Only the bulky
-            // snapshot write escapes the lock, via the begin/finish
-            // split below.
+            // be replayed under the wrong fingerprint)
             if st.store.insert(k, epoch, v) {
-                persist_insert(&mut st.persist, &k, v);
+                if let Some(w) = &st.persist {
+                    w.insert(k, v);
+                }
             }
             if let Some(cell) = st.inflight.remove(&(k, epoch)) {
                 *cell.value.lock().unwrap() = Some(Ok(v));
                 cell.ready.notify_all();
             }
         }
-        persist_begin_compaction(&mut st.persist, &st.store)
-    };
-    persist_finish_compaction(shared, pending);
+        // cadence compaction: the writer flags when the log is due; the
+        // image is captured under this lock (consistent with every record
+        // enqueued above) and written off-lock, on the writer thread
+        if let Some(w) = &st.persist {
+            if w.take_compact_due() {
+                w.compact(st.store.entries());
+            }
+        }
+    }
     guard.armed = false;
     let executed = fresh.len();
     values.extend(fresh);
@@ -787,6 +879,55 @@ mod tests {
         assert_eq!(warm.stats.executed_bases, 0, "restart must serve warm");
         assert_eq!(cold.results, warm.results);
         assert!(svc.store_metrics().restored > 0);
+    }
+
+    #[test]
+    fn wal_writer_keeps_record_order_across_interleaved_epoch_bumps() {
+        // inserts and epoch invalidations now reach disk via the writer
+        // thread; this interleaves them aggressively and then restarts.
+        // A record written out of order (an insert slipping behind the
+        // next epoch's invalidation) would be replayed under the final
+        // fingerprint and surface as stale counts served warm — caught by
+        // the result comparison below.
+        let dir = std::env::temp_dir().join("mm_serve_wal_writer_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let config = || ServiceConfig {
+            workers: 2,
+            threads: 2,
+            policy: Policy::Naive,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: Some(crate::service::persist::PersistConfig::new(&dir)),
+        };
+        let g = || erdos_renyi(50, 180, 0x5EAF);
+        let svc = Service::try_start(g(), config()).unwrap();
+        let baseline = svc.call(&["motifs:3", "cliques:3"]).unwrap();
+        // each (insert, query, remove, query) round bumps the epoch twice
+        // and logs a fresh result set in between, so the WAL sees
+        // insert/invalidate sequences from competing worker batches
+        let fresh = erdos_renyi(50, 180, 0x5EAF);
+        let (u, v) = (0..50u32)
+            .flat_map(|a| (0..50u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !fresh.has_edge(a, b))
+            .expect("sparse graph has a non-edge");
+        for _ in 0..3 {
+            assert!(svc.insert_edge(u, v).unwrap());
+            let perturbed = svc.call(&["motifs:3", "cliques:3"]).unwrap();
+            assert!(perturbed.stats.executed_bases > 0, "epoch bump must invalidate");
+            assert!(svc.remove_edge(u, v).unwrap());
+            let restored = svc.call(&["motifs:3", "cliques:3"]).unwrap();
+            assert_eq!(restored.results, baseline.results);
+        }
+        drop(svc); // joins the writer: queue drained, log compacted
+        // the final graph content equals the original, so the restart must
+        // recover warm — and with the ORIGINAL counts, not any epoch's
+        // stale intermediates
+        let svc = Service::try_start(g(), config()).unwrap();
+        assert!(svc.recovery_report().unwrap().fingerprint_matched);
+        assert!(svc.store_metrics().restored > 0);
+        let warm = svc.call(&["motifs:3", "cliques:3"]).unwrap();
+        assert_eq!(warm.stats.executed_bases, 0, "restart must serve warm");
+        assert_eq!(warm.results, baseline.results);
     }
 
     #[test]

@@ -18,19 +18,45 @@
 //!   `shard_timeout` is declared wedged. A pong reporting zero in-flight
 //!   requests while we still await replies means the worker lost them —
 //!   caught immediately instead of waiting out the deadline.
-//! * **Retry and re-fan** — a failed worker (refused connect, broken
-//!   pipe, CRC error, wedge, error reply) has its in-flight sub-slices
-//!   pushed back on the queue for the survivors, then gets reconnect
-//!   attempts with capped exponential backoff + deterministic jitter.
-//!   All-slices-or-nothing becomes all-slices-*eventually*: the batch
-//!   fails only when sub-slices remain and no live worker is left.
+//! * **Replica groups** — the topology is a list of groups
+//!   ([`super::parse_topology`]): each group owns a contiguous cut of the
+//!   first-level range ([`super::weighted_cuts`]) and every member holds
+//!   the same graph, so any member can serve any of the group's
+//!   sub-slices. Group queues are disjoint; members of one group steal
+//!   from each other, never across groups. The unreplicated topology (all
+//!   groups singleton) collapses to one shared queue — PR 6's fabric,
+//!   byte-for-byte.
+//! * **Failover before re-fan** — in a replicated group a failed member
+//!   (refused connect, broken pipe, CRC error, wedge, error reply) has
+//!   its unserved sub-slices handed to a live sibling (`failovers`), its
+//!   reconnect attempts are opportunistic (they draw on no retry budget —
+//!   the sibling already holds the fort), and the batch fails loudly the
+//!   moment a whole group is dead with slices unserved (its declared
+//!   redundancy is exhausted; silently shifting its load across groups
+//!   would mask the outage). Only the unreplicated topology re-fans
+//!   across workers (`refanned`) with counted, capped-backoff reconnects
+//!   — the last resort, reached when there is no sibling to fail over to.
+//! * **Hedged reads** — an idle member whose group queue is dry duplicates
+//!   the group's oldest straggling sub-slice (in flight elsewhere longer
+//!   than `hedge_timeout`) onto its own connection (`hedges`); the first
+//!   reply is merged, the loser is dropped by the completion bookkeeping.
+//! * **Verified reads** — opt-in (`verify_reads` fraction): a sampled,
+//!   deterministically chosen subset of sub-slices is executed by **two
+//!   distinct** replicas and the partials compared byte-for-byte.
+//!   Deterministic slices make equality exact, so any divergence is
+//!   corruption or a bug — the batch hard-fails naming the slice
+//!   (`verify_mismatches`). If a group loses its redundancy mid-batch,
+//!   affected slices degrade to ordinary unverified reads instead of
+//!   deadlocking.
 //!
-//! The merge stays exact under every re-assignment: sub-slices tile the
+//! The merge stays exact under every re-assignment — failover, hedge
+//! duplicate, verify duplicate, or re-fan: sub-slices tile the
 //! first-level range, every match roots at exactly one first-level vertex,
-//! and per-key sums commute — so which worker serves a sub-slice is
+//! and per-key sums commute — so which replica serves a sub-slice is
 //! irrelevant as long as each one is merged exactly once, which the
-//! completion count (`remaining`) enforces. Partial answers are never
-//! merged into results: a missing sub-slice fails the batch loudly.
+//! per-slice `done` flag and the completion count (`remaining`) enforce.
+//! Partial answers are never merged into results: a missing sub-slice
+//! fails the batch loudly.
 
 use super::proto::{self, ExecRequest, ExecResponse, Msg};
 use crate::graph::{DataGraph, GraphFingerprint};
@@ -69,12 +95,23 @@ pub struct PoolConfig {
     pub retry_base: Duration,
     /// Backoff ceiling.
     pub retry_cap: Duration,
-    /// Degree-weighted sub-slices dealt per connected worker (the work
-    /// queue holds `workers × this` sub-slices, minus empties).
+    /// Degree-weighted sub-slices dealt per connected worker (a group's
+    /// queue holds `members × this` sub-slices, minus empties).
     pub sub_slices_per_worker: usize,
     /// Requests kept in flight per worker connection, so the worker can
     /// start the next sub-slice while a reply is on the wire.
     pub pipeline: usize,
+    /// How long a sub-slice may sit in flight on one replica before an
+    /// idle sibling hedges it — sends a duplicate request and lets the
+    /// first reply win. Only replicated groups hedge; set it high to
+    /// effectively disable hedging.
+    pub hedge_timeout: Duration,
+    /// Fraction of sub-slices (0.0–1.0) dispatched to **two** distinct
+    /// replicas and compared byte-for-byte; any disagreement hard-fails
+    /// the batch. Deterministic slices make the comparison exact, so this
+    /// is a built-in corruption/heisenbug detector. Requires a replicated
+    /// topology; 0.0 (the default) disables it.
+    pub verify_reads: f64,
 }
 
 impl Default for PoolConfig {
@@ -88,6 +125,8 @@ impl Default for PoolConfig {
             retry_cap: Duration::from_secs(2),
             sub_slices_per_worker: 4,
             pipeline: 2,
+            hedge_timeout: Duration::from_secs(5),
+            verify_reads: 0.0,
         }
     }
 }
@@ -107,14 +146,29 @@ pub struct ShardMetrics {
     /// Batches failed because sub-slices remained with no live worker.
     pub errors: u64,
     /// Worker failures observed mid-batch (disconnect, wedge, error
-    /// reply, malformed reply) — each one triggers retry + re-fan.
+    /// reply, malformed reply) — each one triggers failover (replicated
+    /// groups) or retry + re-fan (unreplicated topologies).
     pub worker_failures: u64,
-    /// Reconnect attempts made after worker failures.
+    /// Budgeted reconnect attempts made after worker failures. A failover
+    /// absorbed by a live sibling does **not** count here: the dead
+    /// member's reconnects are then opportunistic, outside any budget.
     pub retries: u64,
-    /// Sub-slices re-queued from a failed worker for the survivors.
+    /// Sub-slices re-queued from a failed worker for the survivors
+    /// (unreplicated topologies only — the last resort).
     pub refanned: u64,
     /// Liveness probes sent while replies were outstanding.
     pub probes: u64,
+    /// Sub-slices handed from a failed replica to a live sibling in its
+    /// group — the failover path that replaces re-fan in replicated
+    /// topologies.
+    pub failovers: u64,
+    /// Duplicate requests sent for straggling sub-slices to an idle
+    /// sibling replica (first reply wins).
+    pub hedges: u64,
+    /// Verified reads whose two replicas disagreed. Each one is a hard
+    /// batch failure — deterministic slices mean a disagreement is
+    /// corruption or a bug, never noise.
+    pub verify_mismatches: u64,
 }
 
 impl ShardMetrics {
@@ -128,6 +182,9 @@ impl ShardMetrics {
         self.retries += d.retries;
         self.refanned += d.refanned;
         self.probes += d.probes;
+        self.failovers += d.failovers;
+        self.hedges += d.hedges;
+        self.verify_mismatches += d.verify_mismatches;
     }
 }
 
@@ -152,19 +209,30 @@ impl ShardClient {
     /// Connect and handshake with the default 30s deadline: the worker
     /// must speak this protocol version and hold a graph with exactly
     /// `fingerprint` — anything else is a hard reject on its side, which
-    /// surfaces here as a connection error.
+    /// surfaces here as a connection error. The connection identifies
+    /// itself as the sole member of a single-group topology; pools pass
+    /// their real topology coordinates via
+    /// [`ShardClient::connect_deadline`].
     pub fn connect(addr: &str, fingerprint: GraphFingerprint) -> Result<ShardClient> {
-        Self::connect_deadline(addr, fingerprint, PoolConfig::default().connect_timeout)
+        Self::connect_deadline(
+            addr,
+            fingerprint,
+            PoolConfig::default().connect_timeout,
+            (0, 1, 0),
+        )
     }
 
     /// [`ShardClient::connect`] with an explicit deadline covering both
-    /// the TCP connect and the handshake reply, so a worker that accepts
+    /// the TCP connect and the handshake reply (so a worker that accepts
     /// the socket but never answers fails the attempt instead of hanging
-    /// it.
+    /// it), and the connection's topology identity `(group, total groups,
+    /// replica within group)` — carried in the `Hello` so the worker can
+    /// pre-warm its group's persisted slices and log which seat it holds.
     pub fn connect_deadline(
         addr: &str,
         fingerprint: GraphFingerprint,
         timeout: Duration,
+        identity: (u32, u32, u32),
     ) -> Result<ShardClient> {
         let timeout = timeout.max(Duration::from_millis(1));
         let mut last_err: Option<std::io::Error> = None;
@@ -194,6 +262,9 @@ impl ShardClient {
             &Msg::Hello {
                 version: proto::VERSION,
                 fingerprint,
+                group: identity.0,
+                groups: identity.1,
+                replica: identity.2,
             },
         )
         .with_context(|| format!("greeting shard worker {addr}"))?;
@@ -336,17 +407,78 @@ impl ShardClient {
     }
 }
 
-/// One pool seat: the address is permanent, the connection comes and goes
-/// with failures and reconnects.
+/// One pool seat: the address and topology coordinates are permanent, the
+/// connection comes and goes with failures and reconnects.
 struct WorkerSlot {
     addr: String,
+    /// Group index in the topology (0-based), sent in the handshake.
+    group: u32,
+    /// Total groups in the topology, sent in the handshake.
+    groups_total: u32,
+    /// Replica index within the group (0-based), sent in the handshake.
+    replica: u32,
+    /// Work queue this member serves: its group's queue in a replicated
+    /// topology, the single shared queue (0) otherwise.
+    queue: usize,
     client: Option<ShardClient>,
 }
 
-/// Shared state of one in-flight batch: the sub-slice work queue, the
-/// completion count, and the partial sums.
+impl WorkerSlot {
+    fn reconnect(&self, cfg: &PoolConfig, fingerprint: GraphFingerprint) -> Result<ShardClient> {
+        ShardClient::connect_deadline(
+            &self.addr,
+            fingerprint,
+            cfg.connect_timeout,
+            (self.group, self.groups_total, self.replica),
+        )
+    }
+}
+
+/// What one replica answered for a verified read, parked until a sibling
+/// answers the duplicate and the two can be compared.
+struct PendingRead {
+    slot: usize,
+    addr: String,
+    served: u32,
+    values: Vec<(CanonKey, i128)>,
+}
+
+/// Per-sub-slice batch bookkeeping. A slice may be dealt more than once —
+/// failover re-deal, hedge duplicate, verify duplicate — but `done`
+/// guarantees it merges exactly once.
+struct SliceEntry {
+    lo: u32,
+    hi: u32,
+    /// Queue (= group, in replicated topologies) that owns this slice.
+    queue: usize,
+    /// Verified read: needs replies from two distinct members.
+    verify: bool,
+    done: bool,
+    /// Members currently running this slice, with dispatch times (the
+    /// hedging clock).
+    inflight: Vec<(usize, Instant)>,
+    /// Members that have taken (or completed) a copy — a verify duplicate
+    /// must go to a member *not* listed here.
+    assigned: Vec<usize>,
+    /// First reply of a verified read, awaiting the sibling's.
+    pending: Option<PendingRead>,
+}
+
+/// Shared state of one in-flight batch: per-group work queues, per-slice
+/// bookkeeping, the completion count, and the partial sums.
 struct WorkState {
-    queue: VecDeque<(u32, u32)>,
+    /// One queue per group (replicated) or a single shared queue
+    /// (unreplicated). Queues hold indices into `slices`; a verified
+    /// slice is enqueued twice.
+    queues: Vec<VecDeque<usize>>,
+    slices: Vec<SliceEntry>,
+    /// Live member count per queue — failover needs to know whether a
+    /// sibling can absorb a dead member's slices.
+    live: Vec<usize>,
+    /// Members per queue currently inside a reconnect loop; group death
+    /// is declared only when `live` and `retrying` are both zero, so a
+    /// member racing back from a transient blip isn't written off.
+    retrying: Vec<usize>,
     /// Sub-slices not yet merged. The batch is complete exactly when this
     /// hits zero — each sub-slice is merged once, no matter how many
     /// times it was re-dealt.
@@ -354,78 +486,152 @@ struct WorkState {
     sums: HashMap<CanonKey, i128>,
     delta: ShardMetrics,
     failures: Vec<String>,
+    /// Unrecoverable batch failure (dead group, verify mismatch): every
+    /// member thread drains out as soon as it observes this.
+    fatal: Option<String>,
 }
 
 struct Batch {
     work: Mutex<WorkState>,
-    /// Signalled on completion and on re-fan, so an idle survivor picks
-    /// up a failed worker's slices promptly.
+    /// Signalled on completion, on failover/re-fan, and on fatal errors,
+    /// so an idle member reacts promptly.
     changed: Condvar,
 }
 
-/// A set of connected shard workers sharing one graph identity, dealing
-/// degree-weighted sub-slices from a shared queue with retry and re-fan
-/// on failure.
+/// A set of connected shard workers sharing one graph identity, organised
+/// into replica groups: each group owns a contiguous cut of the
+/// first-level range and deals its degree-weighted sub-slices from a
+/// group queue with failover, hedging, and optional verified reads. The
+/// unreplicated topology (all groups singleton) shares one queue with PR
+/// 6's retry + re-fan semantics.
 pub struct ShardPool {
     workers: Vec<WorkerSlot>,
     fingerprint: GraphFingerprint,
+    /// All sub-slices in vertex order (concatenation of the group cuts).
     sub_slices: Vec<(u32, u32)>,
+    /// Owning queue per sub-slice, parallel to `sub_slices`.
+    slice_queue: Vec<usize>,
+    /// Member count per queue.
+    queue_members: Vec<usize>,
+    num_queues: usize,
+    num_groups: usize,
+    replicated: bool,
     config: PoolConfig,
     next_id: u64,
     metrics: ShardMetrics,
 }
 
 impl ShardPool {
-    /// Connect to every address with default [`PoolConfig`], handshaking
-    /// each against `graph`'s fingerprint.
+    /// Connect to every address as a singleton group (the unreplicated
+    /// topology) with default [`PoolConfig`], handshaking each against
+    /// `graph`'s fingerprint.
     pub fn connect(addrs: &[String], graph: &DataGraph) -> Result<ShardPool> {
-        Self::connect_with(addrs, graph, PoolConfig::default())
+        let groups: Vec<Vec<String>> = addrs.iter().map(|a| vec![a.clone()]).collect();
+        Self::connect_with(&groups, graph, PoolConfig::default())
     }
 
-    /// Connect to every address, handshaking each against `graph`'s
-    /// fingerprint. Every unusable worker — unreachable, wedged, wrong
-    /// graph, wrong protocol — is collected and reported in **one** error,
-    /// so an operator fixes the whole pool in one pass instead of
-    /// replaying connect once per broken address. A partial pool is still
-    /// refused: batches tolerate workers dying, but a pool that *starts*
-    /// degraded usually means a typo'd address list.
+    /// Connect to every member of every replica group, handshaking each
+    /// against `graph`'s fingerprint. Every unusable worker — unreachable,
+    /// wedged, wrong graph, wrong protocol — is collected and reported in
+    /// **one** error, so an operator fixes the whole pool in one pass
+    /// instead of replaying connect once per broken address. A partial
+    /// pool is still refused: batches tolerate workers dying, but a pool
+    /// that *starts* degraded usually means a typo'd address list.
     pub fn connect_with(
-        addrs: &[String],
+        groups: &[Vec<String>],
         graph: &DataGraph,
         config: PoolConfig,
     ) -> Result<ShardPool> {
-        ensure!(!addrs.is_empty(), "a shard pool needs at least one worker address");
+        ensure!(
+            !groups.is_empty() && groups.iter().all(|g| !g.is_empty()),
+            "a shard pool needs at least one worker address"
+        );
+        ensure!(
+            config.verify_reads.is_finite() && (0.0..=1.0).contains(&config.verify_reads),
+            "verify_reads must be a fraction in [0, 1], got {}",
+            config.verify_reads
+        );
+        let replicated = groups.iter().any(|g| g.len() > 1);
+        ensure!(
+            config.verify_reads == 0.0 || replicated,
+            "verified reads need a replicated topology (a group with two \
+             replicas, e.g. `a1|a2`): there is no second replica to compare \
+             against"
+        );
         let fingerprint = graph.fingerprint();
-        let mut workers = Vec::with_capacity(addrs.len());
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        let mut workers = Vec::with_capacity(total);
         let mut unusable: Vec<String> = Vec::new();
-        for addr in addrs {
-            match ShardClient::connect_deadline(addr, fingerprint, config.connect_timeout) {
-                Ok(c) => workers.push(WorkerSlot {
+        for (g, members) in groups.iter().enumerate() {
+            for (r, addr) in members.iter().enumerate() {
+                let mut slot = WorkerSlot {
                     addr: addr.clone(),
-                    client: Some(c),
-                }),
-                Err(e) => unusable.push(format!("{addr}: {e:#}")),
+                    group: g as u32,
+                    groups_total: groups.len() as u32,
+                    replica: r as u32,
+                    queue: if replicated { g } else { 0 },
+                    client: None,
+                };
+                match slot.reconnect(&config, fingerprint) {
+                    Ok(c) => {
+                        slot.client = Some(c);
+                        workers.push(slot);
+                    }
+                    Err(e) => unusable.push(format!("{addr}: {e:#}")),
+                }
             }
         }
         if !unusable.is_empty() {
             bail!(
                 "{} of {} shard workers unusable:\n  {}",
                 unusable.len(),
-                addrs.len(),
+                total,
                 unusable.join("\n  ")
             );
         }
         let weights: Vec<u64> = (0..graph.num_vertices() as u32)
             .map(|v| graph.degree(v) as u64 + 1)
             .collect();
-        let sub_slices = super::weighted_ranges(
-            &weights,
-            workers.len() * config.sub_slices_per_worker.max(1),
-        );
+        let per = config.sub_slices_per_worker.max(1);
+        let mut sub_slices = Vec::new();
+        let mut slice_queue = Vec::new();
+        let (num_queues, queue_members);
+        if replicated {
+            // each group owns a contiguous weight-quantile cut of the
+            // range, sub-sliced for dealing among its members; the cut is
+            // index-stable (weighted_cuts) so `--slice g/G` pinned workers
+            // agree on the boundaries
+            num_queues = groups.len();
+            queue_members = groups.iter().map(|g| g.len()).collect::<Vec<_>>();
+            let cuts = super::weighted_cuts(&weights, groups.len());
+            for (g, &(glo, ghi)) in cuts.iter().enumerate() {
+                if glo >= ghi {
+                    continue;
+                }
+                let within =
+                    super::weighted_ranges(&weights[glo as usize..ghi as usize], groups[g].len() * per);
+                for (lo, hi) in within {
+                    sub_slices.push((glo + lo, glo + hi));
+                    slice_queue.push(g);
+                }
+            }
+        } else {
+            // the unreplicated topology: one shared queue over the whole
+            // range — PR 6's layout, unchanged
+            num_queues = 1;
+            queue_members = vec![workers.len()];
+            sub_slices = super::weighted_ranges(&weights, workers.len() * per);
+            slice_queue = vec![0; sub_slices.len()];
+        }
         Ok(ShardPool {
             workers,
             fingerprint,
             sub_slices,
+            slice_queue,
+            queue_members,
+            num_queues,
+            num_groups: groups.len(),
+            replicated,
             config,
             next_id: 0,
             metrics: ShardMetrics::default(),
@@ -434,8 +640,20 @@ impl ShardPool {
 
     /// Number of pool seats (connected workers at start; a seat whose
     /// worker died stays counted — the address is still part of the pool).
+    /// Replicas count individually.
     pub fn num_shards(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Number of replica groups in the topology.
+    pub fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+
+    /// Whether any group has more than one replica (group-ownership
+    /// semantics: failover before re-fan, loud death of a whole group).
+    pub fn replicated(&self) -> bool {
+        self.replicated
     }
 
     /// The degree-weighted sub-slices dealt per batch, in vertex order.
@@ -480,26 +698,76 @@ impl ShardPool {
         let keys: Vec<CanonKey> = patterns.iter().map(|p| p.canonical_key()).collect();
         let sums: HashMap<CanonKey, i128> = keys.iter().map(|k| (*k, 0)).collect();
         let distinct = sums.len();
+        let fraction = self.config.verify_reads;
+        let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); self.num_queues];
+        let mut slices = Vec::with_capacity(self.sub_slices.len());
+        for (idx, (&(lo, hi), &q)) in
+            self.sub_slices.iter().zip(&self.slice_queue).enumerate()
+        {
+            // verified reads need two distinct replicas, so only groups
+            // with siblings sample; the choice is deterministic in
+            // (fingerprint, epoch, slice) — re-runs verify the same slices
+            let verify = self.replicated
+                && self.queue_members[q] >= 2
+                && verify_selected(fraction, self.fingerprint, epoch, idx);
+            queues[q].push_back(idx);
+            if verify {
+                queues[q].push_back(idx);
+            }
+            slices.push(SliceEntry {
+                lo,
+                hi,
+                queue: q,
+                verify,
+                done: false,
+                inflight: Vec::new(),
+                assigned: Vec::new(),
+                pending: None,
+            });
+        }
+        let remaining = slices.len();
         let batch = Batch {
             work: Mutex::new(WorkState {
-                queue: self.sub_slices.iter().copied().collect(),
-                remaining: self.sub_slices.len(),
+                queues,
+                slices,
+                live: self.queue_members.clone(),
+                retrying: vec![0; self.num_queues],
+                remaining,
                 sums,
                 delta: ShardMetrics::default(),
                 failures: Vec::new(),
+                fatal: None,
             }),
             changed: Condvar::new(),
         };
-        if self.sub_slices.is_empty() {
+        if remaining == 0 {
             // zero-vertex graph: every count is the aggregation identity
         } else {
             let ids = AtomicU64::new(self.next_id);
-            let (cfg, fingerprint) = (self.config, self.fingerprint);
-            std::thread::scope(|s| {
-                for slot in self.workers.iter_mut() {
+            let (cfg, fingerprint, replicated) = (self.config, self.fingerprint, self.replicated);
+            let hedge_flags: Vec<bool> = self
+                .workers
+                .iter()
+                .map(|s| replicated && self.queue_members[s.queue] > 1)
+                .collect();
+            std::thread::scope(|sc| {
+                for (slot_id, slot) in self.workers.iter_mut().enumerate() {
+                    let hedge = hedge_flags[slot_id];
                     let (batch, patterns, ids) = (&batch, &patterns, &ids);
-                    s.spawn(move || {
-                        run_worker(slot, batch, &cfg, patterns, distinct, fingerprint, epoch, ids)
+                    sc.spawn(move || {
+                        let ctx = MemberCtx {
+                            batch,
+                            cfg,
+                            patterns,
+                            distinct,
+                            fingerprint,
+                            epoch,
+                            ids,
+                            replicated,
+                            hedge,
+                            slot_id,
+                        };
+                        run_member(slot, &ctx)
                     });
                 }
             });
@@ -507,6 +775,15 @@ impl ShardPool {
         }
         let state = batch.work.into_inner().expect("batch threads joined");
         self.metrics.absorb(state.delta);
+        if let Some(fatal) = state.fatal {
+            self.metrics.errors += 1;
+            let detail = if state.failures.is_empty() {
+                String::new()
+            } else {
+                format!("; worker failures:\n  {}", state.failures.join("\n  "))
+            };
+            bail!("sharded batch failed: {fatal}{detail}");
+        }
         if state.remaining > 0 {
             self.metrics.errors += 1;
             bail!(
@@ -528,20 +805,49 @@ impl ShardPool {
     }
 }
 
-/// One worker's batch loop: deal sub-slices into the pipeline, await
-/// replies (probing for liveness), merge, and on failure re-fan + retry.
-/// Returns when the batch is complete or this worker is out of lives.
-#[allow(clippy::too_many_arguments)]
-fn run_worker(
-    slot: &mut WorkerSlot,
-    batch: &Batch,
-    cfg: &PoolConfig,
-    patterns: &[Pattern],
+/// Deterministic verified-read sampling: a pure function of
+/// `(fingerprint, epoch, slice index)`, so the sampled set is stable
+/// across members, re-deals, and re-runs — a flaky slice can't dodge
+/// verification by being retried.
+fn verify_selected(fraction: f64, fingerprint: GraphFingerprint, epoch: u64, idx: usize) -> bool {
+    if fraction <= 0.0 {
+        return false;
+    }
+    if fraction >= 1.0 {
+        return true;
+    }
+    let mut seed = fingerprint
+        .hash
+        .wrapping_add(epoch.rotate_left(17))
+        .wrapping_add((idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let unit = (splitmix64(&mut seed) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    unit < fraction
+}
+
+/// Everything a member thread needs besides its own slot: the shared
+/// batch, the fabric tuning, and the member's place in the topology.
+struct MemberCtx<'a> {
+    batch: &'a Batch,
+    cfg: PoolConfig,
+    patterns: &'a [Pattern],
     distinct: usize,
     fingerprint: GraphFingerprint,
     epoch: u64,
-    ids: &AtomicU64,
-) {
+    ids: &'a AtomicU64,
+    /// Replica-group semantics (slice ownership, failover, loud group
+    /// death) vs the unreplicated shared-queue semantics of PR 6.
+    replicated: bool,
+    /// Whether this member may hedge stragglers (its group has siblings).
+    hedge: bool,
+    slot_id: usize,
+}
+
+/// One member's batch loop: deal admissible sub-slices into the pipeline
+/// (hedging stragglers when idle), await replies (probing for liveness),
+/// merge, and on failure fail over / re-fan per the topology's semantics.
+/// Returns when the batch is complete, fatally failed, or this member is
+/// out of lives.
+fn run_member(slot: &mut WorkerSlot, ctx: &MemberCtx<'_>) {
     // deterministic backoff jitter, decorrelated per worker address
     let mut jitter = {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -550,37 +856,47 @@ fn run_worker(
         }
         h
     };
-    // failures tolerated before this worker is dropped from the batch
-    let mut lives = cfg.max_retries as i64 + 1;
-    let mut inflight: HashMap<u64, (u32, u32)> = HashMap::new();
+    // budgeted failures tolerated before this member is dropped from the
+    // batch; failovers absorbed by a sibling don't draw on it
+    let mut lives = ctx.cfg.max_retries as i64 + 1;
+    let mut inflight: HashMap<u64, usize> = HashMap::new();
     let mut probes = 0u64;
-    loop {
+    'outer: loop {
         if slot.client.is_none() {
             break;
         }
         // deal sub-slices into the pipeline
         let mut send_failure: Option<String> = None;
-        while inflight.len() < cfg.pipeline.max(1) {
-            let slice = {
-                let mut w = batch.work.lock().unwrap();
-                match w.queue.pop_front() {
-                    Some(s) => {
-                        w.delta.requests += 1;
-                        w.delta.bases_sent += distinct as u64;
-                        s
-                    }
-                    None => break,
+        while inflight.len() < ctx.cfg.pipeline.max(1) {
+            let dealt = {
+                let mut w = ctx.batch.work.lock().unwrap();
+                if w.fatal.is_some() {
+                    break 'outer;
                 }
+                let picked = match pop_slice(&mut w, ctx.batch, ctx.slot_id, slot.queue, ctx.distinct)
+                {
+                    Some(i) => Some(i),
+                    None if ctx.hedge => {
+                        try_hedge(&mut w, ctx.slot_id, slot.queue, ctx.cfg.hedge_timeout)
+                    }
+                    None => None,
+                };
+                picked.map(|i| {
+                    w.delta.requests += 1;
+                    w.delta.bases_sent += ctx.distinct as u64;
+                    (i, w.slices[i].lo, w.slices[i].hi)
+                })
             };
-            let id = ids.fetch_add(1, Ordering::SeqCst);
-            inflight.insert(id, slice);
+            let Some((idx, lo, hi)) = dealt else { break };
+            let id = ctx.ids.fetch_add(1, Ordering::SeqCst);
+            inflight.insert(id, idx);
             let req = ExecRequest {
                 id,
-                epoch,
-                fingerprint,
-                lo: slice.0,
-                hi: slice.1,
-                patterns: patterns.to_vec(),
+                epoch: ctx.epoch,
+                fingerprint: ctx.fingerprint,
+                lo,
+                hi,
+                patterns: ctx.patterns.to_vec(),
             };
             let client = slot.client.as_mut().expect("checked live above");
             if let Err(e) = client.send(&Msg::Exec(req)) {
@@ -589,22 +905,22 @@ fn run_worker(
             }
         }
         if let Some(reason) = send_failure {
-            fail_and_refan(slot, batch, cfg, fingerprint, &mut inflight, &mut lives, &mut jitter, &reason);
+            fail_member(slot, ctx, &mut inflight, &mut lives, &mut jitter, &reason);
             continue;
         }
         if inflight.is_empty() {
-            // the queue is dry; linger in case a failing worker re-fans
-            // its slices back — the batch is over only at remaining == 0
-            let w = batch.work.lock().unwrap();
-            if w.remaining == 0 {
+            // the queue holds nothing admissible; linger — a failover or
+            // re-fan may queue work back, a straggler may become
+            // hedge-eligible — until remaining hits zero or the batch dies
+            let w = ctx.batch.work.lock().unwrap();
+            if w.remaining == 0 || w.fatal.is_some() {
                 break;
             }
-            if w.queue.is_empty() {
-                let _unused = batch
-                    .changed
-                    .wait_timeout(w, Duration::from_millis(25))
-                    .unwrap();
-            }
+            let _unused = ctx
+                .batch
+                .changed
+                .wait_timeout(w, Duration::from_millis(25))
+                .unwrap();
             continue;
         }
         // await one reply, probing for liveness while we wait
@@ -612,104 +928,311 @@ fn run_worker(
             .client
             .as_mut()
             .expect("checked live above")
-            .recv_reply(cfg.probe_interval, cfg.shard_timeout, &mut probes);
+            .recv_reply(ctx.cfg.probe_interval, ctx.cfg.shard_timeout, &mut probes);
         let reason = match outcome {
-            Ok(Msg::Result(resp)) => merge_reply(batch, &mut inflight, &resp, distinct),
+            Ok(Msg::Result(resp)) => merge_reply(ctx, &slot.addr, &mut inflight, &resp),
             Ok(Msg::Error { id: _, message }) => Some(format!("worker error reply: {message}")),
             Ok(other) => Some(format!("unexpected reply {other:?}")),
             Err(e) => Some(format!("{e:#}")),
         };
         if let Some(reason) = reason {
-            fail_and_refan(slot, batch, cfg, fingerprint, &mut inflight, &mut lives, &mut jitter, &reason);
+            fail_member(slot, ctx, &mut inflight, &mut lives, &mut jitter, &reason);
         }
     }
-    batch.work.lock().unwrap().delta.probes += probes;
+    ctx.batch.work.lock().unwrap().delta.probes += probes;
 }
 
-/// Validate and merge one reply. Returns a failure reason if the reply is
-/// malformed (wrong id, wrong cardinality, duplicate or unrequested keys)
-/// — nothing is merged in that case, so the sub-slice can be re-dealt
-/// without double counting.
-fn merge_reply(
+/// Pop the next sub-slice member `m` may run from queue `q`. Entries the
+/// member already took a copy of are rotated to the back — a verified
+/// read needs two *distinct* replicas — and stale copies of merged slices
+/// are dropped. If the member is its group's last live replica and meets
+/// a duplicate it can't serve, the verified read degrades to an ordinary
+/// one (finishing from the parked first reply when present) rather than
+/// deadlocking the batch.
+fn pop_slice(
+    w: &mut WorkState,
     batch: &Batch,
-    inflight: &mut HashMap<u64, (u32, u32)>,
-    resp: &ExecResponse,
+    m: usize,
+    q: usize,
     distinct: usize,
-) -> Option<String> {
-    if !inflight.contains_key(&resp.id) {
-        return Some(format!("reply for unknown request id {}", resp.id));
+) -> Option<usize> {
+    for _ in 0..w.queues[q].len() {
+        let idx = w.queues[q].pop_front()?;
+        if w.slices[idx].done {
+            continue; // stale copy of an already-merged slice
+        }
+        if w.slices[idx].assigned.contains(&m) {
+            if w.live[q] <= 1 {
+                // redundancy is gone: a distinct second read can never
+                // happen, so the verified read degrades to an unverified
+                // (still exact) one
+                if let Some(p) = w.slices[idx].pending.take() {
+                    let PendingRead { served, values, .. } = p;
+                    finish_slice(w, batch, idx, served, &values, distinct);
+                }
+                // with no parked reply, our own in-flight copy finishes
+                // the slice unverified when it lands (see merge_reply)
+                continue;
+            }
+            w.queues[q].push_back(idx); // a sibling must take this copy
+            continue;
+        }
+        w.slices[idx].assigned.push(m);
+        w.slices[idx].inflight.push((m, Instant::now()));
+        return Some(idx);
     }
-    let mut w = batch.work.lock().unwrap();
+    None
+}
+
+/// Find the group's oldest straggling sub-slice — in flight on exactly
+/// one sibling for longer than `hedge_timeout` — and duplicate it onto
+/// member `m`. First reply wins; the loser is dropped by the `done`
+/// check. Called only when the member is otherwise idle, so hedging never
+/// competes with fresh work.
+fn try_hedge(w: &mut WorkState, m: usize, q: usize, hedge_timeout: Duration) -> Option<usize> {
+    let now = Instant::now();
+    let mut pick: Option<(usize, Instant)> = None;
+    for (idx, e) in w.slices.iter().enumerate() {
+        if e.queue != q || e.done || e.inflight.len() != 1 || e.assigned.contains(&m) {
+            continue;
+        }
+        let (holder, sent) = e.inflight[0];
+        if holder == m || now.duration_since(sent) < hedge_timeout {
+            continue;
+        }
+        let older = match pick {
+            None => true,
+            Some((_, t)) => sent < t,
+        };
+        if older {
+            pick = Some((idx, sent));
+        }
+    }
+    let (idx, _) = pick?;
+    w.slices[idx].assigned.push(m);
+    w.slices[idx].inflight.push((m, now));
+    w.delta.hedges += 1;
+    Some(idx)
+}
+
+/// Merge one sub-slice's partials into the batch sums and retire it.
+fn finish_slice(
+    w: &mut WorkState,
+    batch: &Batch,
+    idx: usize,
+    served: u32,
+    values: &[(CanonKey, i128)],
+    distinct: usize,
+) {
+    for (k, v) in values {
+        *w.sums.get_mut(k).expect("validated against requested keys") += *v;
+    }
+    w.delta.partials_merged += distinct as u64;
+    w.delta.remote_cached += served as u64;
+    w.slices[idx].done = true;
+    w.remaining -= 1;
+    if w.remaining == 0 {
+        batch.changed.notify_all();
+    }
+}
+
+/// Validate and dispose of one reply: merge it, park it as the first half
+/// of a verified read, compare it against the parked half (hard-failing
+/// the batch on mismatch), or drop it as the late loser of a hedge.
+/// Returns a failure reason if the reply is malformed (wrong id, wrong
+/// cardinality, duplicate or unrequested keys) — nothing is merged in
+/// that case, so the sub-slice can be re-dealt without double counting.
+fn merge_reply(
+    ctx: &MemberCtx<'_>,
+    addr: &str,
+    inflight: &mut HashMap<u64, usize>,
+    resp: &ExecResponse,
+) -> Option<String> {
+    let Some(&idx) = inflight.get(&resp.id) else {
+        return Some(format!("reply for unknown request id {}", resp.id));
+    };
+    let m = ctx.slot_id;
+    let mut w = ctx.batch.work.lock().unwrap();
+    if w.slices[idx].done {
+        // the late loser of a hedge or a degraded verify: the slice is
+        // already merged exactly once — drop the duplicate
+        inflight.remove(&resp.id);
+        w.slices[idx].inflight.retain(|&(s, _)| s != m);
+        return None;
+    }
     let mut seen: HashSet<CanonKey> = HashSet::with_capacity(resp.values.len());
-    let well_formed = resp.values.len() == distinct
+    let well_formed = resp.values.len() == ctx.distinct
         && resp
             .values
             .iter()
             .all(|(k, _)| seen.insert(*k) && w.sums.contains_key(k));
     if !well_formed {
         return Some(format!(
-            "malformed reply for request {}: {} values for {distinct} requested bases",
+            "malformed reply for request {}: {} values for {} requested bases",
             resp.id,
-            resp.values.len()
+            resp.values.len(),
+            ctx.distinct
         ));
     }
-    for (k, v) in &resp.values {
-        *w.sums.get_mut(k).expect("validated above") += *v;
-    }
-    w.delta.partials_merged += distinct as u64;
-    w.delta.remote_cached += resp.served_from_store as u64;
     inflight.remove(&resp.id);
-    w.remaining -= 1;
-    if w.remaining == 0 {
-        batch.changed.notify_all();
+    w.slices[idx].inflight.retain(|&(s, _)| s != m);
+    if !w.slices[idx].verify {
+        finish_slice(&mut w, ctx.batch, idx, resp.served_from_store, &resp.values, ctx.distinct);
+        return None;
+    }
+    match w.slices[idx].pending.take() {
+        Some(p) if p.slot != m => {
+            if p.values == resp.values {
+                let PendingRead { served, values, .. } = p;
+                finish_slice(&mut w, ctx.batch, idx, served, &values, ctx.distinct);
+            } else {
+                // deterministic slices: two honest replicas are
+                // byte-identical, so this is corruption or a bug — refuse
+                // the whole batch, loudly, naming the slice
+                w.delta.verify_mismatches += 1;
+                let (lo, hi) = (w.slices[idx].lo, w.slices[idx].hi);
+                w.fatal = Some(format!(
+                    "verified read mismatch on sub-slice [{lo}, {hi}): replica {} and \
+                     replica {addr} returned different partials for the same \
+                     deterministic slice — corruption or a bug, refusing the batch",
+                    p.addr
+                ));
+                ctx.batch.changed.notify_all();
+            }
+        }
+        Some(p) => {
+            // the same member answered twice (a reconnect re-deal): one
+            // process re-reading itself proves nothing — keep the parked
+            // reply and wait for a sibling's
+            w.slices[idx].pending = Some(p);
+        }
+        None => {
+            if w.live[w.slices[idx].queue] >= 2 {
+                w.slices[idx].pending = Some(PendingRead {
+                    slot: m,
+                    addr: addr.to_string(),
+                    served: resp.served_from_store,
+                    values: resp.values.clone(),
+                });
+            } else {
+                // the group lost its redundancy mid-batch: a second,
+                // distinct replica can never answer — degrade to an
+                // unverified (still exact) read rather than deadlock
+                finish_slice(&mut w, ctx.batch, idx, resp.served_from_store, &resp.values, ctx.distinct);
+            }
+        }
     }
     None
 }
 
-/// Handle one worker failure: push its in-flight sub-slices back on the
-/// queue (the survivors pick them up immediately), then try to reconnect
-/// with capped exponential backoff + jitter. On reconnect the worker
-/// rejoins the dealing loop; otherwise its seat goes dark for the batch.
-#[allow(clippy::too_many_arguments)]
-fn fail_and_refan(
+/// Handle one member failure per the topology's semantics. Replicated
+/// group with a live sibling: hand the lost sub-slices over (`failovers`)
+/// and reconnect opportunistically — no retry budget spent, no `retries`
+/// counted (the satellite accounting fix: a failover absorbed by a
+/// sibling is not a retry against the dead member). Last live member of a
+/// replicated group: budgeted, counted reconnects; if none succeeds and
+/// no sibling is concurrently retrying its way back, the group is dead
+/// and the batch fails loudly. Unreplicated topology: PR 6 unchanged —
+/// re-fan to the survivors (`refanned`) plus budgeted, counted
+/// reconnects.
+fn fail_member(
     slot: &mut WorkerSlot,
-    batch: &Batch,
-    cfg: &PoolConfig,
-    fingerprint: GraphFingerprint,
-    inflight: &mut HashMap<u64, (u32, u32)>,
+    ctx: &MemberCtx<'_>,
+    inflight: &mut HashMap<u64, usize>,
     lives: &mut i64,
     jitter: &mut u64,
     reason: &str,
 ) {
     slot.client = None;
+    let m = ctx.slot_id;
+    let q = slot.queue;
+    let cfg = &ctx.cfg;
+    // whether reconnects below draw on the budget and count as retries
+    let counted;
     {
-        let mut w = batch.work.lock().unwrap();
+        let mut w = ctx.batch.work.lock().unwrap();
         w.delta.worker_failures += 1;
-        w.delta.refanned += inflight.len() as u64;
-        for (_, slice) in inflight.drain() {
-            w.queue.push_back(slice);
-        }
         w.failures.push(format!("{}: {reason}", slot.addr));
-        batch.changed.notify_all();
+        w.live[q] -= 1;
+        let sibling_alive = w.live[q] > 0;
+        let mut lost = 0u64;
+        let idxs: Vec<usize> = inflight.drain().map(|(_, i)| i).collect();
+        for idx in idxs {
+            // release our claim so the slice can be re-dealt — but a
+            // parked verified read stays on the books (it is data we
+            // already hold, not a claim on future work)
+            let keep_assigned =
+                matches!(&w.slices[idx].pending, Some(p) if p.slot == m);
+            w.slices[idx].inflight.retain(|&(s, _)| s != m);
+            if !keep_assigned {
+                w.slices[idx].assigned.retain(|&s| s != m);
+            }
+            if w.slices[idx].done || !w.slices[idx].inflight.is_empty() {
+                continue; // merged already, or a duplicate still runs it
+            }
+            w.queues[q].push_back(idx);
+            lost += 1;
+        }
+        if ctx.replicated {
+            if sibling_alive {
+                w.delta.failovers += lost;
+            }
+            counted = !sibling_alive;
+            w.retrying[q] += 1;
+        } else {
+            w.delta.refanned += lost;
+            counted = true;
+        }
+        ctx.batch.changed.notify_all();
     }
-    *lives -= 1;
-    if *lives <= 0 {
-        return;
+    if counted {
+        *lives -= 1;
     }
-    for attempt in 0..cfg.max_retries {
-        let base = cfg
-            .retry_base
-            .saturating_mul(1u32 << attempt.min(16))
-            .min(cfg.retry_cap);
-        // deterministic jitter in [0.5, 1.5): decorrelates reconnect
-        // storms without nondeterministic tests
-        let frac = (splitmix64(jitter) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
-        std::thread::sleep(base.mul_f64(0.5 + frac));
-        batch.work.lock().unwrap().delta.retries += 1;
-        if let Ok(c) = ShardClient::connect_deadline(&slot.addr, fingerprint, cfg.connect_timeout)
-        {
-            slot.client = Some(c);
-            return;
+    let mut reconnected = false;
+    if !(counted && *lives <= 0) {
+        for attempt in 0..cfg.max_retries {
+            let base = cfg
+                .retry_base
+                .saturating_mul(1u32 << attempt.min(16))
+                .min(cfg.retry_cap);
+            // deterministic jitter in [0.5, 1.5): decorrelates reconnect
+            // storms without nondeterministic tests
+            let frac = (splitmix64(jitter) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            std::thread::sleep(base.mul_f64(0.5 + frac));
+            if counted {
+                ctx.batch.work.lock().unwrap().delta.retries += 1;
+            }
+            if let Ok(c) = slot.reconnect(cfg, ctx.fingerprint) {
+                slot.client = Some(c);
+                reconnected = true;
+                break;
+            }
+        }
+    }
+    if ctx.replicated {
+        let mut w = ctx.batch.work.lock().unwrap();
+        w.retrying[q] -= 1;
+        if reconnected {
+            w.live[q] += 1;
+        } else if w.live[q] == 0 && w.retrying[q] == 0 && w.fatal.is_none() {
+            // no live replica and none on the way back: the group's
+            // slices can never be served — fail the batch loudly now
+            // instead of letting every other group wait forever
+            let unserved = w
+                .slices
+                .iter()
+                .filter(|e| e.queue == q && !e.done)
+                .count();
+            if unserved > 0 {
+                w.fatal = Some(format!(
+                    "shard group {} has no live replica remaining and {unserved} \
+                     sub-slice(s) unserved (replication exhausted; last failure: \
+                     {}: {reason})",
+                    q + 1,
+                    slot.addr
+                ));
+            }
+            ctx.batch.changed.notify_all();
         }
     }
 }
@@ -720,6 +1243,10 @@ mod tests {
     use crate::graph::generators::erdos_renyi;
     use crate::pattern::catalog;
     use crate::shard::worker::{ShardWorker, WorkerConfig};
+
+    fn singletons(addrs: &[String]) -> Vec<Vec<String>> {
+        addrs.iter().map(|a| vec![a.clone()]).collect()
+    }
 
     fn spawn_workers(seed: u64, k: usize) -> (Vec<ShardWorker>, Vec<String>) {
         let workers: Vec<ShardWorker> = (0..k)
@@ -732,6 +1259,7 @@ mod tests {
                         fused: true,
                         cache_bytes: 1 << 20,
                         persist: None,
+                        slice_pin: None,
                     },
                 )
                 .unwrap()
@@ -823,7 +1351,10 @@ mod tests {
             connect_timeout: Duration::from_millis(500),
             ..PoolConfig::default()
         };
-        assert!(ShardPool::connect_with(&addrs, &erdos_renyi(70, 260, 0x7002), cfg).is_err());
+        assert!(
+            ShardPool::connect_with(&singletons(&addrs), &erdos_renyi(70, 260, 0x7002), cfg)
+                .is_err()
+        );
     }
 
     #[test]
@@ -843,13 +1374,119 @@ mod tests {
             connect_timeout: Duration::from_millis(500),
             ..PoolConfig::default()
         };
-        let err = format!("{:#}", ShardPool::connect_with(&addrs, &g, cfg).unwrap_err());
+        let err = format!(
+            "{:#}",
+            ShardPool::connect_with(&singletons(&addrs), &g, cfg).unwrap_err()
+        );
         assert!(err.contains("2 of 3"), "{err}");
         assert!(
             err.contains(&dead[0]) && err.contains(&dead[1]),
             "both dead addresses reported in one pass: {err}"
         );
         assert!(!err.contains(&format!("{}:", live[0])), "live worker not blamed: {err}");
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn replicated_pool_sums_equal_local_execution() {
+        // 2 groups × 2 replicas, all healthy: group queues are disjoint,
+        // every sub-slice is served exactly once, and neither failover
+        // nor hedging nor re-fan fires
+        let seed = 0x7007;
+        let (workers, addrs) = spawn_workers(seed, 4);
+        let g = erdos_renyi(70, 260, seed);
+        let groups = vec![
+            vec![addrs[0].clone(), addrs[1].clone()],
+            vec![addrs[2].clone(), addrs[3].clone()],
+        ];
+        let mut pool = ShardPool::connect_with(&groups, &g, PoolConfig::default()).unwrap();
+        assert_eq!(pool.num_shards(), 4);
+        assert_eq!(pool.num_groups(), 2);
+        assert!(pool.replicated());
+        let slices = pool.sub_slices().to_vec();
+        assert!(!slices.is_empty());
+        assert_eq!(slices[0].0, 0);
+        assert_eq!(slices[slices.len() - 1].1, 70);
+        for w in slices.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "group cuts + sub-slices tile the range");
+        }
+        let base = vec![catalog::triangle(), catalog::path(3)];
+        let indices: Vec<usize> = (0..base.len()).collect();
+        let merged = pool.execute_bases(&base, &indices, 0).unwrap();
+        for ((k, v), p) in merged.iter().zip(&base) {
+            assert_eq!(*k, p.canonical_key());
+            let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
+            assert_eq!(*v, direct, "{p:?}: replicated sums must equal local counts");
+        }
+        let ns = slices.len() as u64;
+        let m = pool.metrics();
+        assert_eq!(m.requests, ns, "healthy groups deal each sub-slice once");
+        assert_eq!(m.partials_merged, 2 * ns);
+        assert_eq!(m.worker_failures, 0);
+        assert_eq!(m.failovers, 0);
+        assert_eq!(m.refanned, 0);
+        assert_eq!(m.verify_mismatches, 0);
+        drop(pool);
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn verified_reads_pass_on_honest_replicas() {
+        // verify_reads = 1.0 over one group of two honest replicas: every
+        // sub-slice is executed twice (once per replica), compared, and
+        // merged exactly once
+        let seed = 0x7008;
+        let (workers, addrs) = spawn_workers(seed, 2);
+        let g = erdos_renyi(70, 260, seed);
+        let groups = vec![vec![addrs[0].clone(), addrs[1].clone()]];
+        let cfg = PoolConfig {
+            verify_reads: 1.0,
+            ..PoolConfig::default()
+        };
+        let mut pool = ShardPool::connect_with(&groups, &g, cfg).unwrap();
+        let base = vec![catalog::triangle(), catalog::path(3)];
+        let indices: Vec<usize> = (0..base.len()).collect();
+        let merged = pool.execute_bases(&base, &indices, 0).unwrap();
+        for ((k, v), p) in merged.iter().zip(&base) {
+            assert_eq!(*k, p.canonical_key());
+            let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
+            assert_eq!(*v, direct, "{p:?}: verified sums must equal local counts");
+        }
+        let ns = pool.num_sub_slices() as u64;
+        let m = pool.metrics();
+        assert_eq!(m.requests, 2 * ns, "every sub-slice read twice under verify 1.0");
+        assert_eq!(m.partials_merged, 2 * ns, "but merged exactly once");
+        assert_eq!(m.verify_mismatches, 0);
+        assert_eq!(m.worker_failures, 0);
+        assert_eq!(m.refanned, 0);
+        // both replicas ran every slice, so a warm rerun is fully served
+        // from their per-slice stores on both sides
+        let again = pool.execute_bases(&base, &indices, 0).unwrap();
+        assert_eq!(again, merged);
+        assert_eq!(pool.metrics().remote_cached, 2 * 2 * ns);
+        drop(pool);
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn verify_reads_rejected_without_replicas() {
+        let (workers, addrs) = spawn_workers(0x7009, 2);
+        let g = erdos_renyi(70, 260, 0x7009);
+        let cfg = PoolConfig {
+            verify_reads: 0.5,
+            ..PoolConfig::default()
+        };
+        let err = ShardPool::connect_with(&singletons(&addrs), &g, cfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("replicated topology"),
+            "{err:#}"
+        );
         for w in workers {
             w.shutdown();
         }

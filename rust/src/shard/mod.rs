@@ -29,24 +29,39 @@
 //!   the protocol version and graph fingerprint; a worker holding
 //!   different content (or speaking a different revision) hard-rejects.
 //! * [`coordinator`] — [`ShardPool`]: the fault-tolerant fan-out fabric.
-//!   The first-level range is cut into degree-weighted **sub-slices**
+//!   The topology is a list of **replica groups** ([`parse_topology`]:
+//!   `a1|a2,b1|b2` — commas separate groups, pipes separate replicas).
+//!   Each group owns a contiguous slice of the first-level range
+//!   ([`weighted_cuts`]), cut further into degree-weighted **sub-slices**
 //!   ([`weighted_ranges`] — the degree-ordered CSR makes low slices far
-//!   heavier than high ones) dealt from a shared work queue, so fast
-//!   workers steal remaining sub-slices from stragglers. A worker failure
-//!   (refused connect, broken pipe, probe timeout, error reply) triggers
-//!   capped-backoff reconnects and then **re-fans** its unserved
-//!   sub-slices across the survivors; the batch fails only when no live
-//!   worker remains. [`ShardCoordinator`]: the batch front door used by
-//!   `morphmine batch|serve --shards <addr,…>`, composing the summed
+//!   heavier than high ones) dealt from a per-group work queue, so fast
+//!   replicas steal remaining sub-slices from stragglers. In a replicated
+//!   group a member failure (refused connect, broken pipe, probe timeout,
+//!   error reply) **fails over** its unserved sub-slices to a live
+//!   sibling, and a straggling sub-slice is **hedged** — duplicated onto
+//!   an idle sibling, first reply wins; the batch fails loudly when a
+//!   whole group is dead (its redundancy contract is exhausted). In the
+//!   unreplicated topology (no `|` anywhere) all workers share one queue
+//!   and PR 6's semantics are unchanged: capped-backoff reconnects, then
+//!   **re-fanning** the dead worker's sub-slices across the survivors —
+//!   the last resort, reached only when there is no sibling to fail over
+//!   to. Opt-in verified reads double-dispatch a sampled fraction of
+//!   sub-slices to two distinct replicas and hard-fail the batch on any
+//!   mismatch. [`ShardCoordinator`]: the batch front door used by
+//!   `morphmine batch|serve --shards <topology>`, composing the summed
 //!   totals through the same morph algebra and result store as the
 //!   single-process service
 //!   ([`QueryPlanner::serve_batch_sharded`](crate::service::QueryPlanner::serve_batch_sharded)).
 //!
-//! Re-fanning is trivially correct for the same reason sharding is exact:
-//! sub-slices tile the first-level range, every match roots at exactly one
-//! first-level vertex, and the per-key sums are commutative — so it never
-//! matters *which* worker serves a sub-slice, only that each one is merged
-//! exactly once, which the work queue's completion count enforces.
+//! Failover, hedging, and re-fanning are trivially correct for the same
+//! reason sharding is exact: sub-slices tile the first-level range, every
+//! match roots at exactly one first-level vertex, and the per-key sums are
+//! commutative — so it never matters *which* replica serves a sub-slice,
+//! only that each one is merged exactly once, which the work queue's
+//! completion count enforces. Determinism buys more than exactness:
+//! identical slice ⇒ byte-identical partials on every replica, so a
+//! verified read is a plain equality check and any divergence is a bug or
+//! corruption, never noise.
 //!
 //! End to end:
 //!
@@ -83,7 +98,43 @@ use crate::graph::{DataGraph, GraphFingerprint};
 use crate::service::serve::{to_query_results, BatchResponse, ServiceQuery};
 use crate::service::{QueryPlanner, ResultStore, StoreMetrics};
 use crate::util::timer::PhaseProfile;
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// Parse a shard topology spec: comma-separated replica groups, each a
+/// pipe-separated list of worker addresses — `a1|a2,b1|b2` is two groups
+/// of two replicas; `a,b,c` is the unreplicated topology (three singleton
+/// groups sharing one work queue, PR 6's semantics). Whitespace around
+/// addresses is trimmed; empty groups, empty addresses, and duplicate
+/// addresses (the same process serving twice would silently halve the
+/// redundancy the spec promises) are errors.
+pub fn parse_topology(spec: &str) -> Result<Vec<Vec<String>>> {
+    let mut groups = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for (gi, group) in spec.split(',').enumerate() {
+        if group.trim().is_empty() {
+            // tolerate stray commas, exactly like the flat parser did
+            continue;
+        }
+        let members: Vec<String> = group
+            .split('|')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        if members.is_empty() {
+            bail!("--shards group {} is empty in {spec:?}", gi + 1);
+        }
+        for m in &members {
+            if !seen.insert(m.clone()) {
+                bail!("--shards lists {m:?} twice: a replica set needs distinct processes");
+            }
+        }
+        groups.push(members);
+    }
+    if groups.is_empty() {
+        bail!("--shards needs at least one worker address");
+    }
+    Ok(groups)
+}
 
 /// Split `0..n` into `k` contiguous slices, one per shard in pool order.
 /// Slices tile the range exactly (first starts at 0, last ends at `n`,
@@ -137,6 +188,37 @@ pub fn weighted_ranges(weights: &[u64], k: usize) -> Vec<(u32, u32)> {
     out
 }
 
+/// Cut `0..weights.len()` into **exactly** `k` contiguous ranges at the
+/// same weight quantiles as [`weighted_ranges`], keeping empty ranges so
+/// that index `i` is stable — this is the group-level cut of a replicated
+/// topology: group `i` of `k` owns `weighted_cuts(weights, k)[i]` and
+/// every replica of that group serves (and persists) the same slices. The
+/// index stability is what lets `shard-worker --slice i/k` compute its
+/// group's range independently of the coordinator and pre-warm the right
+/// persisted slices before the first request arrives.
+pub fn weighted_cuts(weights: &[u64], k: usize) -> Vec<(u32, u32)> {
+    let n = weights.len() as u32;
+    let k = k.max(1);
+    let total: u128 = weights.iter().map(|&w| w as u128).sum::<u128>().max(1);
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push(0u32);
+    let (mut acc, mut cut) = (0u128, 1usize);
+    for (v, &w) in weights.iter().enumerate() {
+        acc += w as u128;
+        while cut < k && acc * (k as u128) >= total * (cut as u128) {
+            bounds.push(v as u32 + 1);
+            cut += 1;
+        }
+    }
+    // quantiles never crossed (all-zero weights, or fewer vertices than
+    // cuts): the remaining boundaries all land at the end
+    while bounds.len() < k {
+        bounds.push(n);
+    }
+    bounds.push(n);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
 /// Durable identity of one shard's partial counts: the graph fingerprint
 /// folded with the slice bounds (same FNV-1a stream as the fingerprint
 /// itself). A shard's persisted partials are valid only for the exact
@@ -177,20 +259,25 @@ pub struct ShardCoordinator {
 impl ShardCoordinator {
     /// Connect to every worker (handshaking each against `graph`'s
     /// fingerprint) and set up the coordinator-side planner and store.
+    /// Each address forms its own singleton group — the unreplicated
+    /// topology; use [`ShardCoordinator::connect_with`] for replica
+    /// groups.
     pub fn connect(
         graph: DataGraph,
         addrs: &[String],
         planner: QueryPlanner,
         cache_bytes: usize,
     ) -> Result<ShardCoordinator> {
-        Self::connect_with(graph, addrs, planner, cache_bytes, PoolConfig::default())
+        let groups: Vec<Vec<String>> = addrs.iter().map(|a| vec![a.clone()]).collect();
+        Self::connect_with(graph, &groups, planner, cache_bytes, PoolConfig::default())
     }
 
-    /// [`ShardCoordinator::connect`] with explicit fabric tuning
-    /// (timeouts, probe cadence, retry budget, sub-slicing).
+    /// [`ShardCoordinator::connect`] with an explicit replica-group
+    /// topology (see [`parse_topology`]) and fabric tuning (timeouts,
+    /// probe cadence, retry budget, sub-slicing, hedging, verified reads).
     pub fn connect_with(
         graph: DataGraph,
-        addrs: &[String],
+        groups: &[Vec<String>],
         planner: QueryPlanner,
         cache_bytes: usize,
         config: PoolConfig,
@@ -199,7 +286,7 @@ impl ShardCoordinator {
         // plan (and the equality of its answers to single-process runs)
         // must not depend on which path computed the statistics
         let stats = crate::graph::GraphStats::compute(&graph, 2000, 0x5E55);
-        let pool = ShardPool::connect_with(addrs, &graph, config)?;
+        let pool = ShardPool::connect_with(groups, &graph, config)?;
         Ok(ShardCoordinator {
             stats,
             planner,
@@ -208,9 +295,14 @@ impl ShardCoordinator {
         })
     }
 
-    /// Number of connected shard workers.
+    /// Number of connected shard workers (replicas count individually).
     pub fn num_shards(&self) -> usize {
         self.pool.num_shards()
+    }
+
+    /// Number of replica groups in the topology.
+    pub fn num_groups(&self) -> usize {
+        self.pool.num_groups()
     }
 
     /// Number of degree-weighted sub-slices the pool deals per batch.
@@ -336,6 +428,50 @@ mod tests {
         assert_eq!(weighted_ranges(&[5], 8), vec![(0, 1)]);
         // determinism: sub-slice boundaries key durable worker state
         assert_eq!(weighted_ranges(&degrees, 7), weighted_ranges(&degrees, 7));
+    }
+
+    #[test]
+    fn topology_parses_groups_and_rejects_abuse() {
+        // flat list: singleton groups, trailing comma tolerated
+        let flat = parse_topology("a:1,b:2,").unwrap();
+        assert_eq!(flat, vec![vec!["a:1".to_string()], vec!["b:2".to_string()]]);
+        // replica groups with whitespace slack
+        let groups = parse_topology(" a1:1 | a2:2 , b1:3|b2:4 ").unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], vec!["a1:1".to_string(), "a2:2".to_string()]);
+        assert_eq!(groups[1], vec!["b1:3".to_string(), "b2:4".to_string()]);
+        // abuse: empty spec, pipe-only group, duplicate address
+        assert!(parse_topology("").is_err());
+        assert!(parse_topology(",,").is_err());
+        assert!(parse_topology("a:1,|").is_err());
+        let dup = parse_topology("a:1|a:1").unwrap_err().to_string();
+        assert!(dup.contains("twice"), "{dup}");
+        assert!(parse_topology("a:1,a:1").is_err());
+    }
+
+    #[test]
+    fn weighted_cuts_are_stable_and_consistent_with_ranges() {
+        let degrees: Vec<u64> = (0..100u64).map(|v| 200 - 2 * v + 1).collect();
+        for k in [1usize, 2, 3, 7, 16] {
+            let cuts = weighted_cuts(&degrees, k);
+            // exactly k ranges, tiling [0, n)
+            assert_eq!(cuts.len(), k);
+            assert_eq!(cuts[0].0, 0);
+            assert_eq!(cuts[k - 1].1, 100);
+            for w in cuts.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            // the nonempty cuts are exactly weighted_ranges' slices: a
+            // worker pinning --slice i/k and a coordinator cutting group
+            // ranges agree on the boundaries
+            let nonempty: Vec<(u32, u32)> =
+                cuts.iter().copied().filter(|&(lo, hi)| lo < hi).collect();
+            assert_eq!(nonempty, weighted_ranges(&degrees, k));
+        }
+        // all-zero weights: group 0 owns everything, the rest are empty
+        // (index stability even in the degenerate case)
+        assert_eq!(weighted_cuts(&[0, 0], 3), vec![(0, 2), (2, 2), (2, 2)]);
+        assert!(weighted_cuts(&[], 2).iter().all(|&(lo, hi)| lo == hi));
     }
 
     #[test]

@@ -53,8 +53,14 @@ pub const MAGIC: &[u8; 8] = b"MMSHARD1";
 
 /// Protocol version; bumped on any wire-format change. v2 added PING/PONG
 /// liveness probes, pipelined request ids, and the version field in the
-/// `Hello` body (decoded tolerantly so skew rejects descriptively).
-pub const VERSION: u32 = 2;
+/// `Hello` body (decoded tolerantly so skew rejects descriptively). v3
+/// added replica-group identity to the `Hello` body: the coordinator tells
+/// each worker which slice group it serves (`group` of `groups`) and which
+/// replica it is within that group, so a worker can pre-warm the persisted
+/// slices its group owns and siblings of one group share a persistence
+/// story (per-slice keys are fingerprint × slice, identical across
+/// replicas).
+pub const VERSION: u32 = 3;
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
@@ -106,14 +112,25 @@ pub struct ExecResponse {
 /// A protocol message.
 #[derive(Clone, Debug)]
 pub enum Msg {
-    /// Coordinator → worker greeting (magic, version, graph fingerprint).
-    /// `version` is what the *peer* speaks: an unknown version decodes to a
-    /// `Hello` carrying it (with a zeroed fingerprint, since the rest of
-    /// the body is that revision's layout), so the worker can reject by
-    /// name instead of dropping the connection on a framing error.
+    /// Coordinator → worker greeting (magic, version, graph fingerprint,
+    /// replica-group identity). `version` is what the *peer* speaks: an
+    /// unknown version decodes to a `Hello` carrying it (with the rest of
+    /// the body zeroed, since that tail is the other revision's layout), so
+    /// the worker can reject by name instead of dropping the connection on
+    /// a framing error. `group`/`groups`/`replica` tell the worker which
+    /// slice group of the topology this connection serves and which replica
+    /// within the group it is — informational for logging, load-bearing for
+    /// replica-aware warm-up (the worker can pre-warm exactly the persisted
+    /// slices its group owns).
     Hello {
         version: u32,
         fingerprint: GraphFingerprint,
+        /// Index of the slice group this worker serves (0-based).
+        group: u32,
+        /// Total number of slice groups in the coordinator's topology.
+        groups: u32,
+        /// Index of this worker within its replica group (0-based).
+        replica: u32,
     },
     /// Worker → coordinator: fingerprints match, ready for requests.
     Welcome {
@@ -215,11 +232,20 @@ fn take_fingerprint(r: &mut ByteReader<'_>) -> Option<GraphFingerprint> {
 pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
     match msg {
-        Msg::Hello { version, fingerprint } => {
+        Msg::Hello {
+            version,
+            fingerprint,
+            group,
+            groups,
+            replica,
+        } => {
             out.push(TAG_HELLO);
             out.extend_from_slice(MAGIC);
             out.extend_from_slice(&version.to_le_bytes());
             put_fingerprint(&mut out, *fingerprint);
+            out.extend_from_slice(&group.to_le_bytes());
+            out.extend_from_slice(&groups.to_le_bytes());
+            out.extend_from_slice(&replica.to_le_bytes());
         }
         Msg::Welcome { fingerprint, threads } => {
             out.push(TAG_WELCOME);
@@ -296,10 +322,22 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
                         size: 0,
                         hash: 0,
                     },
+                    group: 0,
+                    groups: 0,
+                    replica: 0,
                 });
             }
             let fingerprint = take_fingerprint(&mut r)?;
-            Msg::Hello { version, fingerprint }
+            let group = r.u32()?;
+            let groups = r.u32()?;
+            let replica = r.u32()?;
+            Msg::Hello {
+                version,
+                fingerprint,
+                group,
+                groups,
+                replica,
+            }
         }
         TAG_WELCOME => {
             if r.take(MAGIC.len())? != MAGIC || r.u32()? != VERSION {
@@ -439,9 +477,23 @@ mod tests {
 
     #[test]
     fn handshake_roundtrip() {
-        match roundtrip(&Msg::Hello { version: VERSION, fingerprint: fp(7) }) {
-            Msg::Hello { version, fingerprint } => {
-                assert_eq!((version, fingerprint), (VERSION, fp(7)))
+        let hello = Msg::Hello {
+            version: VERSION,
+            fingerprint: fp(7),
+            group: 1,
+            groups: 2,
+            replica: 1,
+        };
+        match roundtrip(&hello) {
+            Msg::Hello {
+                version,
+                fingerprint,
+                group,
+                groups,
+                replica,
+            } => {
+                assert_eq!((version, fingerprint), (VERSION, fp(7)));
+                assert_eq!((group, groups, replica), (1, 2, 1));
             }
             other => panic!("{other:?}"),
         }
@@ -548,6 +600,9 @@ mod tests {
         truncated.extend_from_slice(MAGIC);
         truncated.extend_from_slice(&VERSION.to_le_bytes());
         assert!(decode(&truncated).is_none(), "current version demands a fingerprint");
+        // ... including the group identity that follows the fingerprint
+        truncated.extend_from_slice(&fp(3).to_bytes());
+        assert!(decode(&truncated).is_none(), "current version demands group identity");
     }
 
     #[test]
@@ -592,7 +647,13 @@ mod tests {
         evil_exec.extend_from_slice(&[3, 1, 0, 7, 0]); // edge (0,7) on a 3-vertex pattern
         assert!(decode(&evil_exec).is_none());
         // trailing garbage after a valid body is refused
-        let mut ok = encode(&Msg::Hello { version: VERSION, fingerprint: fp(2) });
+        let mut ok = encode(&Msg::Hello {
+            version: VERSION,
+            fingerprint: fp(2),
+            group: 0,
+            groups: 1,
+            replica: 0,
+        });
         ok.push(0);
         assert!(decode(&ok).is_none());
     }

@@ -48,7 +48,7 @@ use crate::pattern::canon::CanonKey;
 use crate::service::persist::{PersistConfig, Persistence};
 use crate::service::{QueryPlanner, ResultStore, StoreMetrics};
 use crate::util::timer::PhaseProfile;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
@@ -67,6 +67,14 @@ pub struct WorkerConfig {
     /// Persist the partial-count stores (keyed by graph × slice, one
     /// subdirectory per slice) so a shard restart recovers warm.
     pub persist: Option<PersistConfig>,
+    /// Pin this worker to group `i` of a `k`-group topology
+    /// (`--slice i/k`, 0-based): at startup it eagerly re-opens every
+    /// persisted slice store overlapping its group's cut of the
+    /// first-level range, instead of lazily on the first request that
+    /// touches each slice. Group cuts are index-stable
+    /// ([`super::weighted_cuts`]), so the pin and the coordinator agree
+    /// on the boundaries without talking.
+    pub slice_pin: Option<(usize, usize)>,
 }
 
 impl Default for WorkerConfig {
@@ -76,6 +84,7 @@ impl Default for WorkerConfig {
             fused: true,
             cache_bytes: 64 << 20,
             persist: None,
+            slice_pin: None,
         }
     }
 }
@@ -159,6 +168,12 @@ impl ShardWorker {
     /// Bind `listen` (e.g. `127.0.0.1:7401`, port `0` for an ephemeral
     /// port) and start accepting coordinator connections over `graph`.
     pub fn bind(graph: DataGraph, listen: &str, config: WorkerConfig) -> Result<ShardWorker> {
+        if let Some((i, k)) = config.slice_pin {
+            ensure!(
+                k >= 1 && i < k,
+                "--slice {i}/{k}: the group index must be below the group count"
+            );
+        }
         let listener = TcpListener::bind(listen)
             .with_context(|| format!("binding shard worker listener on {listen}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
@@ -180,6 +195,12 @@ impl ShardWorker {
                 inflight: HashMap::new(),
             }),
         });
+        if let Some((i, k)) = config.slice_pin {
+            // --slice i/k pinning: don't wait for the first coordinator to
+            // announce the topology — re-open this group's persisted slice
+            // stores now, so the first batch after a restart starts warm
+            prewarm_group(&state, i, k, 0);
+        }
         let stop = Arc::new(AtomicBool::new(false));
         let accept = {
             let state = state.clone();
@@ -304,13 +325,22 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
             );
             return;
         }
-        Ok(Msg::Hello { fingerprint, .. }) if fingerprint == state.fingerprint => {
+        Ok(Msg::Hello { fingerprint, group, groups, replica, .. })
+            if fingerprint == state.fingerprint =>
+        {
             let welcome = Msg::Welcome {
                 fingerprint: state.fingerprint,
                 threads: state.planner.threads as u32,
             };
             if proto::write_msg(&mut stream, &welcome).is_err() {
                 return;
+            }
+            // replica-aware warm-up: the coordinator just told us which
+            // group seat this connection serves — eagerly re-open that
+            // cut's persisted slice stores (a no-op when none exist or
+            // they are already open)
+            if (group as usize) < (groups as usize) {
+                prewarm_group(&state, group as usize, groups as usize, replica);
             }
         }
         Ok(Msg::Hello { fingerprint, .. }) => {
@@ -384,6 +414,72 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
             }
             _ => return,
         }
+    }
+}
+
+/// Slice ranges with a persisted store under `dir` (subdirectories named
+/// `slice-<lo>-<hi>`), sorted. Unreadable dirs and foreign names are
+/// skipped — pre-warming is an optimisation, never a correctness gate.
+fn persisted_slices(dir: &std::path::Path) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix("slice-") else {
+            continue;
+        };
+        let mut parts = rest.splitn(2, '-');
+        if let (Some(lo), Some(hi)) = (parts.next(), parts.next()) {
+            if let (Ok(lo), Ok(hi)) = (lo.parse(), hi.parse()) {
+                out.push((lo, hi));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Eagerly open every persisted slice store overlapping group `group` of a
+/// `groups`-way cut of the first-level range. Used by `--slice i/k`
+/// pinning at startup and by the handshake's replica-aware warm-up — both
+/// compute the same index-stable cut ([`super::weighted_cuts`]) the
+/// coordinator deals from, so the stores restored here are exactly the
+/// ones the group's sub-slices will ask for.
+fn prewarm_group(state: &WorkerState, group: usize, groups: usize, replica: u32) {
+    let Some(pc) = &state.persist_config else {
+        return;
+    };
+    let found = persisted_slices(&pc.dir);
+    if found.is_empty() {
+        return;
+    }
+    let weights: Vec<u64> = (0..state.graph.num_vertices() as u32)
+        .map(|v| state.graph.degree(v) as u64 + 1)
+        .collect();
+    let (lo, hi) = super::weighted_cuts(&weights, groups)[group];
+    let mut inner = state.inner.lock().unwrap();
+    let mut warmed = 0usize;
+    for &(slo, shi) in &found {
+        if slo >= shi || shi <= lo || slo >= hi {
+            continue; // empty or outside this group's cut
+        }
+        if inner.slices.len() >= MAX_SLICE_STORES {
+            break; // respect the store cap; the rest loads lazily
+        }
+        if !inner.slices.contains_key(&(slo, shi)) {
+            ensure_slice(state, &mut inner, (slo, shi));
+            warmed += 1;
+        }
+    }
+    if warmed > 0 {
+        eprintln!(
+            "shard persist: replica {replica} of group {}/{groups} pre-warmed \
+             {warmed} slice store(s) in [{lo}, {hi})",
+            group + 1
+        );
     }
 }
 
@@ -596,6 +692,7 @@ mod tests {
                 fused: true,
                 cache_bytes: 1 << 20,
                 persist: None,
+                slice_pin: None,
             },
         )
         .unwrap()
@@ -613,6 +710,9 @@ mod tests {
         Msg::Hello {
             version: proto::VERSION,
             fingerprint,
+            group: 0,
+            groups: 1,
+            replica: 0,
         }
     }
 
@@ -700,6 +800,9 @@ mod tests {
             &Msg::Hello {
                 version: proto::VERSION + 40,
                 fingerprint: w.fingerprint(),
+                group: 0,
+                groups: 1,
+                replica: 0,
             },
         )
         .unwrap();

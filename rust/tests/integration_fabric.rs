@@ -7,8 +7,9 @@
 mod support;
 
 use morphmine::graph::generators::erdos_renyi;
-use morphmine::graph::{DataGraph, GraphStats};
+use morphmine::graph::{DataGraph, GraphFingerprint, GraphStats};
 use morphmine::morph::Policy;
+use morphmine::pattern::canon::CanonKey;
 use morphmine::pattern::catalog;
 use morphmine::service::{QueryPlanner, ResultStore};
 use morphmine::shard::proto::{self, ExecRequest, ExecResponse, Msg};
@@ -24,7 +25,14 @@ fn worker_config() -> WorkerConfig {
         fused: true,
         cache_bytes: 1 << 20,
         persist: None,
+        slice_pin: None,
     }
+}
+
+/// Wrap a flat address list as the singleton-group topology (PR 6
+/// semantics: one shared queue, retry + re-fan).
+fn singletons(addrs: &[String]) -> Vec<Vec<String>> {
+    addrs.iter().map(|a| vec![a.clone()]).collect()
 }
 
 /// Aggressive-but-stable timing for fault tests: fast probes, short
@@ -76,7 +84,7 @@ fn severed_stream_mid_frame_retries_and_stays_exact() {
     let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
     let proxy = ChaosProxy::start(w.addr());
     let addrs = vec![proxy.addr().to_string()];
-    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    let mut pool = ShardPool::connect_with(&singletons(&addrs), &g, fast_config()).unwrap();
     // cut the stream 10 bytes into the first reply — mid-frame, after the
     // coordinator has already committed the request to the wire
     proxy.sever_down_after(10);
@@ -99,7 +107,7 @@ fn corrupt_byte_mid_stream_is_caught_and_refanned() {
     let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
     let proxy = ChaosProxy::start(w.addr());
     let addrs = vec![proxy.addr().to_string()];
-    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    let mut pool = ShardPool::connect_with(&singletons(&addrs), &g, fast_config()).unwrap();
     // flip one bit inside the first reply frame: the CRC (or the frame
     // walk) must catch it — a flipped count silently merged would be the
     // worst possible failure mode
@@ -122,7 +130,7 @@ fn wedged_worker_is_detected_and_refanned_to_survivor() {
     let wedged = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
     let proxy = ChaosProxy::start(wedged.addr());
     let addrs = vec![healthy.addr().to_string(), proxy.addr().to_string()];
-    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    let mut pool = ShardPool::connect_with(&singletons(&addrs), &g, fast_config()).unwrap();
     // wedge AFTER the handshake: the worker stays connected but all its
     // traffic — requests, replies, probe pongs — is swallowed
     proxy.set_blackhole(true);
@@ -152,7 +160,7 @@ fn no_live_workers_fails_loudly() {
     let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
     let proxy = ChaosProxy::start(w.addr());
     let addrs = vec![proxy.addr().to_string()];
-    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    let mut pool = ShardPool::connect_with(&singletons(&addrs), &g, fast_config()).unwrap();
     // the only worker dies and stays dead: reconnects are refused
     proxy.kill();
     let planner = QueryPlanner::new(Policy::Naive, true, 2);
@@ -218,7 +226,7 @@ fn killed_worker_process_mid_batch_refans_to_survivors() {
     let g = morphmine::graph::io::load_spec("mico:tiny").unwrap();
     let stats = GraphStats::compute(&g, 2000, 0x5E55);
     let addrs = vec![addr_a, addr_b, addr_c];
-    let mut pool = ShardPool::connect_with(&addrs, &g, fast_config()).unwrap();
+    let mut pool = ShardPool::connect_with(&singletons(&addrs), &g, fast_config()).unwrap();
     // SIGKILL one connected worker: its established connection dies with
     // it, which the fabric discovers mid-batch on first use
     a.kill().expect("kill worker");
@@ -237,13 +245,191 @@ fn killed_worker_process_mid_batch_refans_to_survivors() {
 }
 
 #[test]
+fn killed_replica_in_each_group_fails_over_without_refan() {
+    // 2 groups × 2 replicas; one replica of EACH group is killed after the
+    // fabric connects. Every lost slice must fail over to the surviving
+    // sibling — byte-identical counts, zero re-fans (the group still owns
+    // its slice cut), and zero counted retries (a failover absorbed by a
+    // sibling must not draw on the dead member's budget)
+    let g = erdos_renyi(60, 240, 0xFA06);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let workers: Vec<ShardWorker> = (0..4)
+        .map(|_| ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap())
+        .collect();
+    let pa = ChaosProxy::start(workers[1].addr());
+    let pb = ChaosProxy::start(workers[3].addr());
+    let groups = vec![
+        vec![workers[0].addr().to_string(), pa.addr().to_string()],
+        vec![workers[2].addr().to_string(), pb.addr().to_string()],
+    ];
+    let mut pool = ShardPool::connect_with(&groups, &g, fast_config()).unwrap();
+    // kill one replica per group: established connections die and
+    // reconnects are refused, so the sibling is the only way through
+    pa.kill();
+    pb.kill();
+    let sharded = sharded_counts(&g, &stats, &mut pool);
+    assert_eq!(sharded, local_counts(&g, &stats), "failover must not change counts");
+    let m = pool.metrics();
+    assert!(m.worker_failures >= 1, "the kills are visible failures: {m:?}");
+    assert!(m.failovers >= 1, "lost slices moved to the sibling replica: {m:?}");
+    assert_eq!(m.refanned, 0, "replicated groups never re-fan across groups: {m:?}");
+    assert_eq!(m.retries, 0, "a sibling-absorbed failover is not a counted retry: {m:?}");
+    assert_eq!(m.errors, 0, "the batch completed: {m:?}");
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn whole_group_death_fails_loudly_naming_the_group() {
+    // one healthy singleton group plus one fully-replicated group whose
+    // EVERY replica dies: the dead group's slices are unservable — no
+    // other group may adopt them (slice cuts are group property), so the
+    // batch must fail fast and name the group, not hang
+    let g = erdos_renyi(40, 120, 0xFA07);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let healthy = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let ra = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let rb = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let pa = ChaosProxy::start(ra.addr());
+    let pb = ChaosProxy::start(rb.addr());
+    let groups = vec![
+        vec![healthy.addr().to_string()],
+        vec![pa.addr().to_string(), pb.addr().to_string()],
+    ];
+    let mut pool = ShardPool::connect_with(&groups, &g, fast_config()).unwrap();
+    pa.kill();
+    pb.kill();
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let mut store = ResultStore::new(1 << 20);
+    let mut prof = PhaseProfile::new();
+    let err = planner
+        .serve_batch_sharded(
+            &catalog::motifs_vertex_induced(3),
+            &stats,
+            &mut store,
+            0,
+            &mut pool,
+            &mut prof,
+        )
+        .unwrap_err();
+    let text = format!("{err:#}");
+    assert!(
+        text.contains("no live replica remaining"),
+        "whole-group death is a loud, named failure: {text}"
+    );
+    assert!(text.contains("shard group 2"), "the dead group is named: {text}");
+    let m = pool.metrics();
+    assert!(m.errors >= 1, "the failed batch is counted: {m:?}");
+    assert!(m.worker_failures >= 1, "{m:?}");
+    healthy.shutdown();
+    ra.shutdown();
+    rb.shutdown();
+}
+
+/// A replica that handshakes cleanly and answers every Exec with a
+/// perfectly framed, well-formed reply — right id, right key set, right
+/// cardinality — whose counts are fabricated. Wire CRCs cannot catch
+/// this; only cross-replica verification can.
+fn spawn_lying_worker(fingerprint: GraphFingerprint) -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { return };
+            let Ok(Msg::Hello { .. }) = proto::read_msg(&mut s) else { return };
+            if proto::write_msg(&mut s, &Msg::Welcome { fingerprint, threads: 2 }).is_err() {
+                return;
+            }
+            loop {
+                match proto::read_msg(&mut s) {
+                    Ok(Msg::Exec(req)) => {
+                        let mut seen = std::collections::HashSet::new();
+                        let values: Vec<(CanonKey, i128)> = req
+                            .patterns
+                            .iter()
+                            .map(|p| p.canonical_key())
+                            .filter(|k| seen.insert(*k))
+                            .map(|k| (k, 1 << 62))
+                            .collect();
+                        let reply = Msg::Result(ExecResponse {
+                            id: req.id,
+                            epoch: req.epoch,
+                            served_from_store: 0,
+                            values,
+                        });
+                        if proto::write_msg(&mut s, &reply).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Msg::Ping { nonce }) => {
+                        let pong = Msg::Pong { nonce, inflight: 1 };
+                        if proto::write_msg(&mut s, &pong).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(_) => {}
+                    Err(_) => break,
+                }
+            }
+        }
+    });
+    addr
+}
+
+#[test]
+fn verified_reads_catch_a_corrupt_replica_naming_the_slice() {
+    // one honest replica, one liar, --verify-reads 1.0: every sub-slice
+    // is served by both and compared. The fabricated counts must hard-fail
+    // the batch with an error naming the slice — never merge silently
+    let g = erdos_renyi(60, 240, 0xFA08);
+    let stats = GraphStats::compute(&g, 2000, 0x5E55);
+    let honest = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let liar = spawn_lying_worker(g.fingerprint());
+    let groups = vec![vec![honest.addr().to_string(), liar]];
+    let config = PoolConfig {
+        verify_reads: 1.0,
+        ..fast_config()
+    };
+    let mut pool = ShardPool::connect_with(&groups, &g, config).unwrap();
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let mut store = ResultStore::new(1 << 20);
+    let mut prof = PhaseProfile::new();
+    let err = planner
+        .serve_batch_sharded(
+            &catalog::motifs_vertex_induced(4),
+            &stats,
+            &mut store,
+            0,
+            &mut pool,
+            &mut prof,
+        )
+        .unwrap_err();
+    let text = format!("{err:#}");
+    assert!(
+        text.contains("verified read mismatch on sub-slice ["),
+        "the mismatch error names the slice: {text}"
+    );
+    let m = pool.metrics();
+    assert!(m.verify_mismatches >= 1, "the mismatch is counted: {m:?}");
+    assert!(m.errors >= 1, "{m:?}");
+    honest.shutdown();
+}
+
+#[test]
 fn proto_decode_survives_hostile_mutations() {
     // fuzz-lite over every message type: truncations, bit flips, and
     // appended garbage must produce errors (or clean prefix decodes),
     // never panics — and never a silently wrong message on a framed read
     let fp = erdos_renyi(20, 40, 1).fingerprint();
     let msgs = vec![
-        Msg::Hello { version: proto::VERSION, fingerprint: fp },
+        Msg::Hello {
+            version: proto::VERSION,
+            fingerprint: fp,
+            group: 1,
+            groups: 2,
+            replica: 1,
+        },
         Msg::Welcome { fingerprint: fp, threads: 4 },
         Msg::Reject { reason: "go away".into() },
         Msg::Exec(ExecRequest {

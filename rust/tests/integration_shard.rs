@@ -21,6 +21,7 @@ fn worker_config() -> WorkerConfig {
         fused: true,
         cache_bytes: 1 << 20,
         persist: None,
+        slice_pin: None,
     }
 }
 
@@ -193,6 +194,52 @@ fn shard_persist_restart_recovers_warm_for_same_slice_only() {
 }
 
 #[test]
+fn slice_pin_prewarms_persisted_stores_at_bind() {
+    let dir = std::env::temp_dir().join("mm_shard_slice_pin_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    let g = || erdos_renyi(50, 180, 0x54D7);
+    let persist_config = || WorkerConfig {
+        persist: Some(PersistConfig::new(&dir)),
+        ..worker_config()
+    };
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let batch = ["motifs:3"];
+
+    // cold run populates the per-slice stores on disk
+    let w = ShardWorker::bind(g(), "127.0.0.1:0", persist_config()).unwrap();
+    let mut coord =
+        ShardCoordinator::connect(g(), &[w.addr().to_string()], planner, 1 << 20).unwrap();
+    let cold = coord.call(&batch).unwrap();
+    drop(coord);
+    w.shutdown();
+
+    // restart with `--slice 0/1` pinning: the stores are re-opened at
+    // bind time, before any coordinator has connected or asked anything
+    let pinned = WorkerConfig {
+        slice_pin: Some((0, 1)),
+        ..persist_config()
+    };
+    let w = ShardWorker::bind(g(), "127.0.0.1:0", pinned).unwrap();
+    let m = w.store_metrics();
+    assert!(m.restored > 0, "pinning must pre-warm eagerly: {m:?}");
+    let mut coord =
+        ShardCoordinator::connect(g(), &[w.addr().to_string()], planner, 1 << 20).unwrap();
+    let warm = coord.call(&batch).unwrap();
+    assert_eq!(cold.results, warm.results, "pre-warm must not change answers");
+    assert!(coord.shard_metrics().remote_cached > 0, "pre-warmed stores serve");
+    drop(coord);
+    w.shutdown();
+
+    // an out-of-range pin is refused loudly at bind
+    let bad = WorkerConfig {
+        slice_pin: Some((3, 2)),
+        ..worker_config()
+    };
+    assert!(ShardWorker::bind(g(), "127.0.0.1:0", bad).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn protocol_survives_torn_streams_and_hostile_bytes() {
     // a stream of framed messages cut at every byte offset, walked with
     // the same frame walker WAL recovery uses: every complete frame in
@@ -200,7 +247,13 @@ fn protocol_survives_torn_streams_and_hostile_bytes() {
     use morphmine::service::persist::frame::{write_frame, Frames};
     let fp = erdos_renyi(20, 40, 1).fingerprint();
     let msgs = vec![
-        Msg::Hello { version: proto::VERSION, fingerprint: fp },
+        Msg::Hello {
+            version: proto::VERSION,
+            fingerprint: fp,
+            group: 1,
+            groups: 2,
+            replica: 1,
+        },
         Msg::Welcome { fingerprint: fp, threads: 4 },
         Msg::Ping { nonce: 7 },
         Msg::Pong { nonce: 7, inflight: 3 },
