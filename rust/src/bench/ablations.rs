@@ -38,7 +38,9 @@
 //!
 //! JSON reports go through [`write_rows_json`]: a payload with zero
 //! measured rows (a placeholder) is loudly warned about and never
-//! overwrites a file that already holds measured rows.
+//! overwrites a file that already holds measured rows. Every row carries
+//! a `"metrics"` snapshot of the process registry ([`with_metrics`]) as
+//! counter evidence for the layer the row claims to measure.
 
 use crate::agg::{aggregate_pattern, aggregate_patterns_fused, EnumerateAgg, MniAgg};
 use crate::apps;
@@ -97,6 +99,21 @@ fn write_rows_json(out: &std::path::Path, json: &str, n_rows: usize) -> Result<(
     std::fs::write(out, json)?;
     println!("\nwrote {} ({n_rows} rows)", out.display());
     Ok(())
+}
+
+/// Append a snapshot of the process metric registry to a bench row —
+/// counter evidence that the measured path actually exercised the layers
+/// it claims (nonzero `mm_kernel_ops_total{tier="…"}` under the kernel
+/// ablation, `mm_fused_node_visits_total` under the fused one, shard and
+/// WAL series under theirs). The registry is process-cumulative, so
+/// consumers diff consecutive rows for per-row deltas.
+fn with_metrics(row: String) -> String {
+    let mut r = row;
+    assert_eq!(r.pop(), Some('}'), "bench rows are JSON objects");
+    r.push_str(", \"metrics\": ");
+    r.push_str(&crate::obs::render_json(crate::obs::global()));
+    r.push('}');
+    r
 }
 
 /// A1: symmetry breaking on/off.
@@ -496,13 +513,13 @@ pub fn ablation_fused_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 fused.nodes.len(),
                 fused.total_plan_levels(),
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{}\", \"agg\": \"{mode}\", \"set\": \"{name}\", \"patterns\": {}, \"per_pattern_s\": {t_per:.6}, \"fused_s\": {t_fused:.6}, \"speedup\": {speedup:.3}, \"first_level_sweeps_per_pattern\": {sweeps_per}, \"first_level_sweeps_fused\": {sweeps_fused}, \"trie_nodes\": {}, \"plan_levels\": {}}}",
                 d.code(),
                 base.len(),
                 fused.nodes.len(),
                 fused.total_plan_levels(),
-            ));
+            )));
         }
     }
     let json = format!(
@@ -629,13 +646,13 @@ pub fn ablation_kernels_to(scale: Scale, threads: usize, out: &std::path::Path) 
                 "| {gname} | {cname} | {:.3} | {:.3} | {:.3} | {t_fused:.3} |",
                 pat_times[0], pat_times[1], pat_times[2]
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{gname}\", \"config\": \"{cname}\", \"triangle_s\": {:.6}, \"clique4_s\": {:.6}, \"cycle4_vi_s\": {:.6}, \"fused_base_s\": {t_fused:.6}, \"total_s\": {:.6}}}",
                 pat_times[0],
                 pat_times[1],
                 pat_times[2],
                 pat_times[0] + pat_times[1] + pat_times[2] + t_fused,
-            ));
+            )));
         }
     }
     let json = format!(
@@ -720,14 +737,14 @@ pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) 
                 s.cached_bases,
                 s.executed_bases
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{}\", \"batch\": \"{name}\", \"elapsed_s\": {t:.6}, \"total_bases\": {}, \"cached_bases\": {}, \"executed_bases\": {}, \"coalesced_bases\": {}, \"speedup_vs_cold\": {speedup:.3}}}",
                 d.code(),
                 s.total_bases,
                 s.cached_bases,
                 s.executed_bases,
                 s.coalesced_bases,
-            ));
+            )));
         }
     }
     let json = format!(
@@ -816,14 +833,14 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 d.code(),
                 m.partials_merged
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{}\", \"shards\": {shards}, \"batch_s\": {t:.6}, \"single_process_s\": {t_single:.6}, \"speedup_vs_single\": {speedup:.3}, \"total_bases\": {}, \"remote_bases\": {}, \"partials_merged\": {}, \"remote_cached\": {}}}",
                 d.code(),
                 resp.stats.total_bases,
                 resp.stats.remote_bases,
                 m.partials_merged,
                 m.remote_cached,
-            ));
+            )));
             drop(coord);
             for w in workers {
                 w.shutdown();
@@ -892,14 +909,14 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 t_single / t.max(1e-9),
                 m.partials_merged
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{}\", \"shards\": 3, \"killed_workers\": {killed}, \"batch_s\": {t:.6}, \"single_process_s\": {t_single:.6}, \"worker_failures\": {}, \"retries\": {}, \"refanned\": {}, \"probes\": {}}}",
                 d.code(),
                 m.worker_failures,
                 m.retries,
                 m.refanned,
                 m.probes,
-            ));
+            )));
             drop(coord);
             for w in workers {
                 w.shutdown();
@@ -983,7 +1000,7 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 t_single / t.max(1e-9),
                 m.partials_merged
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{}\", \"topology\": \"{topology}\", \"killed_replicas\": {killed}, \"batch_s\": {t:.6}, \"single_process_s\": {t_single:.6}, \"worker_failures\": {}, \"failovers\": {}, \"hedges\": {}, \"refanned\": {}, \"retries\": {}}}",
                 d.code(),
                 m.worker_failures,
@@ -991,7 +1008,7 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 m.hedges,
                 m.refanned,
                 m.retries,
-            ));
+            )));
             drop(coord);
             for w in workers {
                 w.shutdown();
@@ -1128,12 +1145,12 @@ pub fn ablation_persist_to(scale: Scale, threads: usize, out: &std::path::Path) 
                 "| {} | {phase} | {t_rec:.3} | {t_batch:.3} | {restored} | {snap} | {walr} |",
                 d.code()
             );
-            rows.push(format!(
+            rows.push(with_metrics(format!(
                 "    {{\"graph\": \"{}\", \"phase\": \"{phase}\", \"recovery_s\": {t_rec:.6}, \"batch_s\": {t_batch:.6}, \"shutdown_compact_s\": {t_shutdown:.6}, \"total_bases\": {}, \"executed_bases\": {}, \"restored_entries\": {restored}, \"snapshot_entries\": {snap}, \"wal_records\": {walr}}}",
                 d.code(),
                 s.total_bases,
                 s.executed_bases,
-            ));
+            )));
         }
     }
     let json = format!(
@@ -1203,6 +1220,9 @@ mod tests {
         assert!(body.contains("persist_durable_store"));
         assert!(body.contains("\"phase\": \"warm-restart\""));
         assert!(body.contains("\"phase\": \"replay-heavy\""));
+        // every row embeds a registry snapshot as counter evidence
+        assert!(body.contains("\"metrics\": {"), "{body}");
+        assert!(body.contains("mm_wal_append_us"), "{body}");
         assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
     }
 
@@ -1215,6 +1235,8 @@ mod tests {
         assert!(body.contains("service_result_cache"));
         assert!(body.contains("\"batch\": \"warm\""));
         assert!(body.contains("\"batch\": \"overlap\""));
+        assert!(body.contains("\"metrics\": {"), "{body}");
+        assert!(body.contains("mm_planner_batches_total"), "{body}");
         assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
     }
 

@@ -9,9 +9,9 @@
 //! morphmine gen     --dataset mico[:scale] --out <path>
 //! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F]
-//! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--slice i/k]
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits] [--trace] [--slow-query-ms N] [--cluster-stats]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--metrics <addr:port>] [--trace] [--slow-query-ms N] [--cluster-stats]
+//! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--slice i/k] [--metrics <addr:port>]
 //! morphmine store   <inspect|compact|purge|verify> --dir <dir> [--graph <spec>]
 //! ```
 //!
@@ -62,6 +62,18 @@
 //! `k`-group topology so it pre-warms its group's persisted slices at
 //! startup instead of lazily on first request. Edge updates are rejected
 //! in sharded serve (the workers' graph copies are immutable).
+//!
+//! Observability ([`crate::obs`]): `--metrics <addr:port>` (on the
+//! long-lived `serve` / `shard-worker` processes only) binds a plain-HTTP
+//! scrape endpoint — `curl http://addr/metrics` returns the process's
+//! metric registry as text, `/metrics.json` as JSON. `--trace` (on
+//! `batch` / `serve`) prints one per-batch line of stage wall times
+//! (plan / probe / match / fuse / convert / persist), and
+//! `--slow-query-ms N` logs any batch slower than `N` ms to stderr with
+//! its stage split. `--cluster-stats` (with `--shards`) sweeps every
+//! worker's registry over proto v4 `STATS` and prints the combined
+//! cluster view (plain series sum by name, histogram buckets merge
+//! exactly), with percentiles re-derived from the merged buckets.
 
 use crate::coordinator::{Config, Coordinator};
 use crate::graph::io::load_spec;
@@ -262,6 +274,124 @@ fn ensure_no_shard_timing_flags(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The observability flags are only meaningful where they act:
+/// `--metrics` binds a scrape endpoint, which only the long-lived serving
+/// processes have; `--trace` / `--slow-query-ms` render per-batch stage
+/// timings, which only the batch-serving front doors produce;
+/// `--cluster-stats` sweeps shard-worker registries, which needs a
+/// coordinator. Reject them anywhere else so a typo'd deployment fails
+/// instead of silently not observing.
+fn ensure_obs_flags(args: &Args) -> Result<()> {
+    let cmd = args.cmd.as_str();
+    if !matches!(cmd, "serve" | "shard-worker") {
+        ensure!(
+            args.get("metrics").is_none(),
+            "--metrics needs a long-lived process to scrape: it is accepted on \
+             `serve` and `shard-worker` only"
+        );
+    }
+    if !matches!(cmd, "batch" | "serve") {
+        for key in ["trace", "slow-query-ms"] {
+            ensure!(
+                args.get(key).is_none(),
+                "--{key} renders per-batch timings: it is accepted on `batch` and `serve` only"
+            );
+        }
+        ensure!(
+            args.get("cluster-stats").is_none(),
+            "--cluster-stats aggregates shard-worker registries: it is accepted on \
+             `batch` and `serve` (with --shards) only"
+        );
+    }
+    Ok(())
+}
+
+/// Parse `--slow-query-ms N` (a threshold of 0 logs every batch).
+fn slow_query_ms_of(args: &Args) -> Result<Option<u64>> {
+    match args.get("slow-query-ms") {
+        None => Ok(None),
+        Some(_) => Ok(Some(args.parse_num("slow-query-ms", 0u64)?)),
+    }
+}
+
+/// Bind the `--metrics` scrape endpoint (global registry, detached
+/// thread) and announce where it landed — `--metrics 127.0.0.1:0` picks
+/// an ephemeral port, so the announcement is the only way to find it.
+fn spawn_metrics_of(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("metrics") else {
+        return Ok(());
+    };
+    let bound = crate::obs::spawn_scrape_listener(addr)
+        .with_context(|| format!("binding --metrics {addr}"))?;
+    println!("metrics: http://{bound}/metrics (text; /metrics.json for JSON)");
+    Ok(())
+}
+
+/// `--trace`: one line of per-batch stage wall times in pipeline order
+/// (stages a batch never entered are omitted; wall time outside the
+/// instrumented stages shows as `other`).
+fn print_trace(r: &BatchResponse, elapsed: std::time::Duration) {
+    const STAGES: [&str; 7] = ["plan", "probe", "match", "fuse", "convert", "stats", "persist"];
+    let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
+    print!("trace: epoch={} total={:.3}ms", r.epoch, ms(elapsed));
+    let mut known = std::time::Duration::ZERO;
+    for s in STAGES {
+        let d = r.profile.get(s);
+        if !d.is_zero() {
+            known += d;
+            print!(" {s}={:.3}ms", ms(d));
+        }
+    }
+    for (name, d) in r.profile.entries() {
+        if !STAGES.contains(&name.as_str()) && !d.is_zero() {
+            known += *d;
+            print!(" {name}={:.3}ms", ms(*d));
+        }
+    }
+    if elapsed > known {
+        print!(" other={:.3}ms", ms(elapsed - known));
+    }
+    println!();
+}
+
+/// `--slow-query-ms`: log a batch that blew the threshold to stderr, with
+/// its stage split inline so the log line is actionable on its own.
+fn maybe_log_slow(slow_ms: Option<u64>, elapsed: std::time::Duration, queries: &str, r: &BatchResponse) {
+    let Some(threshold) = slow_ms else {
+        return;
+    };
+    let total_ms = elapsed.as_secs_f64() * 1e3;
+    if total_ms < threshold as f64 {
+        return;
+    }
+    use std::fmt::Write;
+    let mut stages = String::new();
+    for (name, d) in r.profile.entries() {
+        let _ = write!(stages, " {name}={:.3}ms", d.as_secs_f64() * 1e3);
+    }
+    eprintln!("slow-batch: {total_ms:.3}ms ≥ {threshold}ms — queries {queries:?} —{stages}");
+}
+
+/// `--cluster-stats`: sweep every worker's metric registry (proto v4
+/// `STATS`) and print the combined view — plain series sum by name,
+/// histogram buckets merge exactly ([`crate::obs::aggregate`]), and the
+/// `_p50/_p95/_p99` lines are re-derived from the merged buckets, never
+/// averaged.
+fn print_cluster_stats(coord: &mut crate::shard::ShardCoordinator) {
+    let per_worker = coord.collect_stats();
+    println!("cluster: {} worker(s) answered STATS", per_worker.len());
+    for (addr, series) in &per_worker {
+        println!("cluster worker={addr}: {} series", series.len());
+    }
+    let images: Vec<Vec<(String, u64)>> = per_worker.into_iter().map(|(_, s)| s).collect();
+    let mut agg = crate::obs::aggregate(&images);
+    agg.extend(crate::obs::derive_quantiles(&agg));
+    agg.sort_by(|a, b| a.0.cmp(&b.0));
+    for (name, v) in &agg {
+        println!("cluster {name} {v}");
+    }
+}
+
 /// Sharded coordinator from a `--shards` topology spec — comma-separated
 /// replica groups, pipe-separated members (used by `batch`/`serve`).
 fn shard_coordinator_of(args: &Args, spec_shards: &str) -> Result<crate::shard::ShardCoordinator> {
@@ -322,6 +452,25 @@ fn print_shard_metrics(coord: &crate::shard::ShardCoordinator) {
         m.verify_mismatches,
         m.probes
     );
+    // per-worker service-time distributions, from the histograms the
+    // coordinator records per reply — extra lines on purpose: the
+    // `fabric:` line's format above is pinned by the CI smokes
+    for (name, sample) in crate::obs::global().snapshot() {
+        let Some(rest) = name.strip_prefix("mm_shard_worker_service_us{worker=\"") else {
+            continue;
+        };
+        let Some(addr) = rest.strip_suffix("\"}") else {
+            continue;
+        };
+        if let crate::obs::Sample::Hist(h) = sample {
+            println!(
+                "fabric worker={addr}: served={} p50_ms={:.3} p99_ms={:.3}",
+                h.count(),
+                h.p50() as f64 / 1e3,
+                h.p99() as f64 / 1e3
+            );
+        }
+    }
 }
 
 fn print_batch(r: &BatchResponse) {
@@ -359,6 +508,7 @@ fn coordinator_of(args: &Args) -> Result<Coordinator> {
 /// CLI entrypoint.
 pub fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(&argv)?;
+    ensure_obs_flags(&args)?;
     match args.cmd.as_str() {
         "motifs" => {
             let c = coordinator_of(&args)?;
@@ -463,6 +613,12 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 .collect();
             ensure!(!texts.is_empty(), "--queries must name at least one query");
             let repeat = args.parse_num("repeat", 1usize)?.max(1);
+            let trace = args.get("trace").is_some();
+            let slow_ms = slow_query_ms_of(&args)?;
+            ensure!(
+                args.get("cluster-stats").is_none() || args.get("shards").is_some(),
+                "--cluster-stats needs --shards a1|a2,… (it sweeps shard-worker registries)"
+            );
             let mut last = None;
             // either the in-process service or the sharded coordinator —
             // answers are identical, only who matches the bases differs
@@ -483,6 +639,10 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 };
                 println!("batch {round}/{repeat}: elapsed {:.3}s", t.secs());
                 print_batch(&r);
+                if trace {
+                    print_trace(&r, t.elapsed());
+                }
+                maybe_log_slow(slow_ms, t.elapsed(), spec, &r);
                 last = Some(r.stats);
             }
             let m = match (&coord, &svc) {
@@ -497,6 +657,10 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 "store: hits={} misses={} inserts={} evictions={} invalidations={} bytes={}",
                 m.hits, m.misses, m.inserts, m.evictions, m.invalidations, m.bytes
             );
+            if args.get("cluster-stats").is_some() {
+                let c = coord.as_mut().expect("checked against --shards above");
+                print_cluster_stats(c);
+            }
             if args.get("assert-warm-hits").is_some() {
                 let s = last.expect("at least one round ran");
                 // with a single round the warmth must come from a store
@@ -548,6 +712,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 slice_pin,
             };
             let worker = crate::shard::ShardWorker::bind(graph, listen, config)?;
+            spawn_metrics_of(&args)?;
             // killing the process skips the graceful-shutdown compaction
             // (no signal handler in a std-only crate): with --persist the
             // WAL is flushed per record, so the next start replays it
@@ -563,8 +728,12 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             worker.wait();
         }
         "serve" => {
+            let trace = args.get("trace").is_some();
+            let slow_ms = slow_query_ms_of(&args)?;
             if let Some(addrs) = args.get("shards") {
+                let cluster_stats = args.get("cluster-stats").is_some();
                 let mut coord = shard_coordinator_of(&args, addrs)?;
+                spawn_metrics_of(&args)?;
                 println!(
                     "morphmine sharded service ready ({} workers). One batch per line, queries separated by ';' — `quit` exits",
                     coord.num_shards()
@@ -596,17 +765,30 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                         .map(str::trim)
                         .filter(|s| !s.is_empty())
                         .collect();
+                    let t = crate::util::timer::Timer::start();
                     match coord.call(&texts) {
                         Ok(r) => {
                             print_batch(&r);
+                            if trace {
+                                print_trace(&r, t.elapsed());
+                            }
+                            maybe_log_slow(slow_ms, t.elapsed(), text, &r);
                             print_shard_metrics(&coord);
+                            if cluster_stats {
+                                print_cluster_stats(&mut coord);
+                            }
                         }
                         Err(e) => eprintln!("error: {e:#}"),
                     }
                 }
                 return Ok(());
             }
+            ensure!(
+                args.get("cluster-stats").is_none(),
+                "--cluster-stats needs --shards a1|a2,… (it sweeps shard-worker registries)"
+            );
             let svc = service_of(&args)?;
+            spawn_metrics_of(&args)?;
             println!(
                 "morphmine service ready (epoch {}). One batch per line, queries separated by ';'",
                 svc.epoch()
@@ -657,8 +839,15 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                     .map(str::trim)
                     .filter(|s| !s.is_empty())
                     .collect();
+                let t = crate::util::timer::Timer::start();
                 match svc.call(&texts) {
-                    Ok(r) => print_batch(&r),
+                    Ok(r) => {
+                        print_batch(&r);
+                        if trace {
+                            print_trace(&r, t.elapsed());
+                        }
+                        maybe_log_slow(slow_ms, t.elapsed(), text, &r);
+                    }
                     Err(e) => eprintln!("error: {e:#}"),
                 }
             }
@@ -872,7 +1061,7 @@ mod tests {
         let shards = format!("{},{}", a.addr(), b.addr());
         run(argv(&format!(
             "batch --graph mico:tiny --queries motifs:3;cliques:3 --pmr naive --threads 2 \
-             --shards {shards} --repeat 2 --assert-warm-hits"
+             --shards {shards} --repeat 2 --assert-warm-hits --trace --cluster-stats"
         )))
         .unwrap();
         // --persist and --fsync-every belong on the workers in sharded mode
@@ -1022,6 +1211,41 @@ mod tests {
         )))
         .unwrap();
         w.shutdown();
+    }
+
+    #[test]
+    fn obs_flags_are_validated() {
+        // --metrics needs a long-lived serving process
+        for cmd in [
+            "motifs --graph mico:tiny --size 3 --metrics 127.0.0.1:0",
+            "batch --graph mico:tiny --queries motifs:3 --metrics 127.0.0.1:0",
+            "info --graph mico:tiny --metrics 127.0.0.1:0",
+            "store inspect --dir /tmp/nope --metrics 127.0.0.1:0",
+        ] {
+            assert!(run(argv(cmd)).is_err(), "{cmd} must reject --metrics");
+        }
+        // --trace / --slow-query-ms render batch timings: batch/serve only
+        assert!(run(argv("motifs --graph mico:tiny --size 3 --trace")).is_err());
+        assert!(run(argv("info --graph mico:tiny --slow-query-ms 5")).is_err());
+        assert!(run(argv("store inspect --dir /tmp/nope --trace")).is_err());
+        // bad threshold values fail fast, before any work
+        assert!(run(argv(
+            "batch --graph mico:tiny --queries motifs:3 --slow-query-ms wat"
+        ))
+        .is_err());
+        // --cluster-stats needs a shard fabric to sweep
+        assert!(run(argv(
+            "batch --graph mico:tiny --queries motifs:3 --cluster-stats"
+        ))
+        .is_err());
+        assert!(run(argv("motifs --graph mico:tiny --cluster-stats")).is_err());
+        // accepted where they act: a traced batch with threshold 0 logs
+        // every round and still answers
+        run(argv(
+            "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 \
+             --trace --slow-query-ms 0",
+        ))
+        .unwrap();
     }
 
     #[test]

@@ -38,6 +38,18 @@ pub struct FusedExecutor<'g> {
     scratch: Vec<VertexId>,
     /// current partial match (by depth)
     partial: Vec<VertexId>,
+    /// trie nodes expanded, accumulated locally (the executor is
+    /// per-thread) and flushed to `mm_fused_node_visits_total` on drop so
+    /// the hot walk never touches a shared cache line
+    node_visits: u64,
+}
+
+impl Drop for FusedExecutor<'_> {
+    fn drop(&mut self) {
+        if self.node_visits > 0 {
+            crate::obs_counter!("mm_fused_node_visits_total").add(self.node_visits);
+        }
+    }
 }
 
 impl<'g> FusedExecutor<'g> {
@@ -48,6 +60,7 @@ impl<'g> FusedExecutor<'g> {
             bufs: (0..depth).map(|_| Vec::new()).collect(),
             scratch: Vec::new(),
             partial: vec![0; depth],
+            node_visits: 0,
         }
     }
 
@@ -90,6 +103,7 @@ impl<'g> FusedExecutor<'g> {
     ) {
         let graph: &'g DataGraph = self.graph;
         let l = &fused.nodes[node_idx].level;
+        self.node_visits += 1;
 
         // per-level set ops in the shared kernel — computed once here and
         // reused by every pattern routed through this trie node

@@ -22,6 +22,11 @@
 //! the whole process — CI runs the test suite both ways; [`force_tier`]
 //! narrows dispatch at runtime for benchmarks ([`Tier::Scalar`] pins the
 //! portable merge, [`Tier::Simd`] re-enables auto detection).
+//!
+//! Every dispatch decision is counted into the observability registry
+//! (`mm_kernel_ops_total{tier="scalar|gallop|ssse3|avx2|neon"}`,
+//! [`crate::obs`]), so a scrape shows which tiers actually served a
+//! workload — the counter evidence behind the A7 kernels ablation.
 
 use crate::graph::VertexId;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -119,6 +124,7 @@ pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
         return;
     }
     if large.len() / small.len() >= GALLOP_RATIO {
+        crate::obs_counter!("mm_kernel_ops_total{tier=\"gallop\"}").inc();
         gallop_intersect(small, large, out);
         return;
     }
@@ -126,11 +132,13 @@ pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     if small.len() >= SIMD_MIN {
         match active_level() {
             SimdLevel::Avx2 => {
+                crate::obs_counter!("mm_kernel_ops_total{tier=\"avx2\"}").inc();
                 // SAFETY: avx2 presence checked by `detected_level`
                 unsafe { x86::intersect_avx2(small, large, out) };
                 return;
             }
             SimdLevel::Ssse3 => {
+                crate::obs_counter!("mm_kernel_ops_total{tier=\"ssse3\"}").inc();
                 // SAFETY: ssse3 presence checked by `detected_level`
                 unsafe { x86::intersect_ssse3(small, large, out) };
                 return;
@@ -140,10 +148,12 @@ pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     }
     #[cfg(target_arch = "aarch64")]
     if small.len() >= SIMD_MIN && active_level() == SimdLevel::Neon {
+        crate::obs_counter!("mm_kernel_ops_total{tier=\"neon\"}").inc();
         // SAFETY: neon presence checked by `detected_level`
         unsafe { neon::intersect_neon(small, large, out) };
         return;
     }
+    crate::obs_counter!("mm_kernel_ops_total{tier=\"scalar\"}").inc();
     merge_intersect(small, large, 0, 0, out);
 }
 
@@ -155,6 +165,7 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
         return;
     }
     if b.len() / a.len().max(1) >= GALLOP_RATIO {
+        crate::obs_counter!("mm_kernel_ops_total{tier=\"gallop\"}").inc();
         // few candidates vs large subtracted list: binary search each
         for &x in a {
             if b.binary_search(&x).is_err() {
@@ -170,11 +181,13 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
     if b.len() >= SIMD_MIN && a.len() / b.len() < GALLOP_RATIO {
         match active_level() {
             SimdLevel::Avx2 => {
+                crate::obs_counter!("mm_kernel_ops_total{tier=\"avx2\"}").inc();
                 // SAFETY: avx2 presence checked by `detected_level`
                 unsafe { x86::difference_avx2(a, b, out) };
                 return;
             }
             SimdLevel::Ssse3 => {
+                crate::obs_counter!("mm_kernel_ops_total{tier=\"ssse3\"}").inc();
                 // SAFETY: ssse3 (⊇ sse2) presence checked by `detected_level`
                 unsafe { x86::difference_sse2(a, b, out) };
                 return;
@@ -187,10 +200,12 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
         && a.len() / b.len() < GALLOP_RATIO
         && active_level() == SimdLevel::Neon
     {
+        crate::obs_counter!("mm_kernel_ops_total{tier=\"neon\"}").inc();
         // SAFETY: neon presence checked by `detected_level`
         unsafe { neon::difference_neon(a, b, out) };
         return;
     }
+    crate::obs_counter!("mm_kernel_ops_total{tier=\"scalar\"}").inc();
     merge_difference(a, b, out);
 }
 

@@ -116,6 +116,7 @@ pub fn candidates<'g>(
     // the hottest loop for path/star-shaped levels (the last level of most
     // edge-induced plans).
     if l.intersect.len() == 1 && l.subtract.is_empty() {
+        crate::obs_counter!("mm_kernel_ops_total{tier=\"adj\"}").inc();
         return Cands::Adj(window_slice(
             graph.neighbors(partial[l.intersect[0]]),
             lo,
@@ -152,6 +153,7 @@ pub fn candidates<'g>(
                         n_sub += 1;
                     }
                 }
+                crate::obs_counter!("mm_kernel_ops_total{tier=\"hub\"}").inc();
                 bitmap::fold_rows_into(&and_rows[..n_and], &sub_rows[..n_sub], lo, hi, buf);
                 word_wise = true;
             }
@@ -179,6 +181,7 @@ pub fn candidates<'g>(
             }
             let u = partial[j];
             if let Some(row) = graph.hub_row(u) {
+                crate::obs_counter!("mm_kernel_ops_total{tier=\"hub\"}").inc();
                 bitmap::intersect_row_into(buf, row, scratch);
             } else {
                 intersect::intersect_into(buf, window_slice(graph.neighbors(u), lo, hi), scratch);
@@ -195,6 +198,7 @@ pub fn candidates<'g>(
             if word_wise {
                 continue; // already applied word-wise as ANDNOT
             }
+            crate::obs_counter!("mm_kernel_ops_total{tier=\"hub\"}").inc();
             bitmap::difference_row_into(buf, row, scratch);
         } else {
             intersect::difference_into(buf, graph.neighbors(u), scratch);

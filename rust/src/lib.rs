@@ -51,6 +51,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod graph;
 pub mod morph;
+pub mod obs;
 pub mod pattern;
 pub mod plan;
 pub mod runtime;

@@ -1,0 +1,394 @@
+//! Exposition: Prometheus-style text, JSON, cross-worker aggregation, and
+//! the plain-TCP scrape listener.
+//!
+//! Everything downstream of the registry speaks one intermediate form:
+//! **flat summable series** — `Vec<(name, u64)>` where histograms are
+//! expanded to `_count`, `_sum`, and cumulative `_bucket{le="…"}` entries
+//! (with a final `le="+Inf"`). The coordinator's cluster view of N
+//! workers is a name-keyed combination ([`aggregate`]): plain values sum
+//! directly, cumulative buckets are decumulated to exact per-bucket
+//! deltas, summed, and re-cumulated (identical to merging the raw
+//! histograms), and percentiles are *re-derived* from the combined
+//! buckets ([`derive_quantiles`]) rather than averaged (averaging p99s is
+//! statistically meaningless; merged buckets give the true cluster-wide
+//! distribution at bucket resolution).
+//!
+//! The scrape endpoint ([`spawn_scrape_listener`]) is a deliberately tiny
+//! HTTP/1.0 responder: read one request, answer text (or JSON for paths
+//! containing `json`), close. No routing, no keep-alive, no dependency —
+//! `curl http://addr/metrics` works and that is the whole contract.
+
+use super::registry::{Registry, Sample};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Expand every registered metric into flat summable series (sorted by
+/// name): counters and gauges verbatim, histograms as `_count` / `_sum` /
+/// cumulative nonzero `_bucket{le="…"}` / `_bucket{le="+Inf"}`.
+pub fn flatten(reg: &Registry) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    for (name, sample) in reg.snapshot() {
+        match sample {
+            Sample::Counter(v) | Sample::Gauge(v) => out.push((name, v)),
+            Sample::Hist(h) => {
+                out.push((format!("{name}_count"), h.count()));
+                out.push((format!("{name}_sum"), h.sum));
+                let mut cum = 0u64;
+                for (b, &n) in h.buckets.iter().enumerate() {
+                    if n > 0 {
+                        cum += n;
+                        out.push((
+                            format!("{name}_bucket{{le=\"{}\"}}", super::hist::bucket_upper(b)),
+                            cum,
+                        ));
+                    }
+                }
+                out.push((format!("{name}_bucket{{le=\"+Inf\"}}"), cum));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// Combine flat series images — the cluster view of N workers. Only
+/// valid on [`flatten`]-shaped input. Counters, gauges, `_count` and
+/// `_sum` series sum by name. Cumulative `_bucket{le="…"}` series do NOT
+/// sum directly: [`flatten`] omits empty buckets, so a worker with values
+/// only in later buckets contributes nothing to an earlier bound another
+/// worker emitted, under-counting it. Each image is therefore
+/// *decumulated* into exact per-bucket deltas first, the deltas summed by
+/// `(histogram, bound)`, and the result re-cumulated — identical to
+/// merging the raw histograms.
+pub fn aggregate(images: &[Vec<(String, u64)>]) -> Vec<(String, u64)> {
+    use std::collections::BTreeMap;
+    let mut sums: BTreeMap<String, u64> = BTreeMap::new();
+    // per-histogram per-bucket counts, summed across images
+    let mut hists: BTreeMap<String, BTreeMap<u64, u64>> = BTreeMap::new();
+    for image in images {
+        let mut buckets: BTreeMap<&str, Vec<(u64, u64)>> = BTreeMap::new();
+        for (name, v) in image {
+            if let Some((prefix, bound)) = bucket_bound(name) {
+                buckets.entry(prefix).or_default().push((bound, *v));
+            } else {
+                *sums.entry(name.clone()).or_insert(0) += v;
+            }
+        }
+        for (prefix, mut bs) in buckets {
+            bs.sort_unstable();
+            let mut prev = 0u64;
+            for (bound, cum) in bs {
+                let delta = cum.saturating_sub(prev);
+                prev = cum;
+                *hists
+                    .entry(prefix.to_string())
+                    .or_default()
+                    .entry(bound)
+                    .or_insert(0) += delta;
+            }
+        }
+    }
+    let mut out: Vec<(String, u64)> = sums.into_iter().collect();
+    for (prefix, bounds) in hists {
+        // re-cumulate in bound order; `+Inf` (u64::MAX) sorts last and
+        // lands back on the total, so the image stays flatten-shaped
+        let mut cum = 0u64;
+        for (bound, n) in bounds {
+            cum += n;
+            let le = if bound == u64::MAX {
+                "+Inf".to_string()
+            } else {
+                bound.to_string()
+            };
+            out.push((format!("{prefix}_bucket{{le=\"{le}\"}}"), cum));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// Parse the `le` bound out of a `…_bucket{le="…"}` series name.
+fn bucket_bound(name: &str) -> Option<(&str, u64)> {
+    let open = name.find("_bucket{le=\"")?;
+    let prefix = &name[..open];
+    let rest = &name[open + "_bucket{le=\"".len()..];
+    let le = rest.strip_suffix("\"}")?;
+    let bound = if le == "+Inf" {
+        u64::MAX
+    } else {
+        le.parse().ok()?
+    };
+    Some((prefix, bound))
+}
+
+/// Re-derive `_p50` / `_p95` / `_p99` series from the cumulative bucket
+/// series in a flat image — how percentiles are reported for aggregated
+/// (multi-worker) data, where the raw histograms live in other processes.
+pub fn derive_quantiles(flat: &[(String, u64)]) -> Vec<(String, u64)> {
+    // group (le, cum) pairs per histogram prefix
+    let mut groups: std::collections::BTreeMap<&str, Vec<(u64, u64)>> =
+        std::collections::BTreeMap::new();
+    for (name, v) in flat {
+        if let Some((prefix, bound)) = bucket_bound(name) {
+            groups.entry(prefix).or_default().push((bound, *v));
+        }
+    }
+    let mut out = Vec::new();
+    for (prefix, mut buckets) in groups {
+        buckets.sort_unstable();
+        let total = buckets.last().map(|&(_, c)| c).unwrap_or(0);
+        for (label, q) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+            let bound = if total == 0 {
+                0
+            } else {
+                let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+                buckets
+                    .iter()
+                    .find(|&&(_, cum)| cum >= rank)
+                    .map(|&(le, _)| le)
+                    .unwrap_or(u64::MAX)
+            };
+            out.push((format!("{prefix}_{label}"), bound));
+        }
+    }
+    out
+}
+
+/// Render flat series as exposition text: one `name value` line each.
+pub fn render_pairs_text(pairs: &[(String, u64)]) -> String {
+    let mut s = String::new();
+    for (name, v) in pairs {
+        s.push_str(name);
+        s.push(' ');
+        s.push_str(&v.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+/// Full flat image plus derived percentiles, sorted by name.
+fn full_pairs(reg: &Registry) -> Vec<(String, u64)> {
+    let mut pairs = flatten(reg);
+    pairs.extend(derive_quantiles(&pairs));
+    pairs.sort_by(|a, b| a.0.cmp(&b.0));
+    pairs
+}
+
+/// Prometheus-style text exposition of a registry (flat series plus
+/// derived `_p50/_p95/_p99` lines).
+pub fn render_text(reg: &Registry) -> String {
+    render_pairs_text(&full_pairs(reg))
+}
+
+/// JSON object exposition (`{"name": value, …}`) of the same series as
+/// [`render_text`] — what bench rows embed as counter evidence.
+pub fn render_json(reg: &Registry) -> String {
+    render_pairs_json(&full_pairs(reg))
+}
+
+/// Render flat series as a JSON object.
+pub fn render_pairs_json(pairs: &[(String, u64)]) -> String {
+    let mut s = String::from("{");
+    for (i, (name, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('"');
+        for ch in name.chars() {
+            match ch {
+                '"' => s.push_str("\\\""),
+                '\\' => s.push_str("\\\\"),
+                c => s.push(c),
+            }
+        }
+        s.push_str("\":");
+        s.push_str(&v.to_string());
+    }
+    s.push('}');
+    s
+}
+
+/// Answer one scrape connection: read the request head, write the
+/// exposition, close.
+fn serve_scrape(mut conn: TcpStream, reg: &Registry) {
+    let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = conn.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    // read until the blank line ending the request head (curl sends one
+    // immediately; a bare `nc` probe that closes early is fine too)
+    loop {
+        match conn.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                    break;
+                }
+            }
+        }
+    }
+    let request_line = head.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    let json = request_line.windows(4).any(|w| w == b"json");
+    let (body, ctype) = if json {
+        (render_json(reg), "application/json")
+    } else {
+        (render_text(reg), "text/plain; version=0.0.4")
+    };
+    let _ = write!(
+        conn,
+        "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = conn.flush();
+}
+
+/// Bind `addr` and serve the **global** registry to every connection on a
+/// detached thread, forever. Returns the bound address (so `--metrics
+/// 127.0.0.1:0` reports the ephemeral port it got).
+pub fn spawn_scrape_listener(addr: &str) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("mm-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming().flatten() {
+                serve_scrape(conn, super::global());
+            }
+        })
+        .expect("spawn metrics listener");
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    fn sample_registry() -> Registry {
+        let r = Registry::new();
+        r.counter("mm_store_hits_total").add(3);
+        r.counter("mm_store_misses_total").add(2);
+        r.gauge("mm_wal_queue_depth").set(1);
+        let h = r.histogram("mm_batch_us");
+        for v in [10u64, 20, 3000] {
+            h.record(v);
+        }
+        r
+    }
+
+    #[test]
+    fn flatten_expands_histograms_summably() {
+        let flat = flatten(&sample_registry());
+        let get = |n: &str| {
+            flat.iter()
+                .find(|(name, _)| name == n)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| panic!("missing series {n} in {flat:?}"))
+        };
+        assert_eq!(get("mm_store_hits_total"), 3);
+        assert_eq!(get("mm_wal_queue_depth"), 1);
+        assert_eq!(get("mm_batch_us_count"), 3);
+        assert_eq!(get("mm_batch_us_sum"), 3030);
+        // 10 → bucket [8,15], 20 → [16,31], 3000 → [2048,4095]; cumulative
+        assert_eq!(get("mm_batch_us_bucket{le=\"15\"}"), 1);
+        assert_eq!(get("mm_batch_us_bucket{le=\"31\"}"), 2);
+        assert_eq!(get("mm_batch_us_bucket{le=\"4095\"}"), 3);
+        assert_eq!(get("mm_batch_us_bucket{le=\"+Inf\"}"), 3);
+    }
+
+    #[test]
+    fn aggregate_sums_and_requantiles() {
+        let a = flatten(&sample_registry());
+        let b = flatten(&sample_registry());
+        let sum = aggregate(&[a, b]);
+        let get = |n: &str| {
+            sum.iter()
+                .find(|(name, _)| name == n)
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        assert_eq!(get("mm_store_hits_total"), 6);
+        assert_eq!(get("mm_batch_us_count"), 6);
+        assert_eq!(get("mm_batch_us_bucket{le=\"+Inf\"}"), 6);
+        let qs = derive_quantiles(&sum);
+        let q = |n: &str| {
+            qs.iter()
+                .find(|(name, _)| name == n)
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        // 6 values: 10,10,20,20,3000,3000 → rank 3 (p50) is 20 → le=31
+        assert_eq!(q("mm_batch_us_p50"), 31);
+        assert_eq!(q("mm_batch_us_p99"), 4095);
+    }
+
+    #[test]
+    fn aggregate_is_exact_on_disjoint_bucket_support() {
+        // worker A's values land in buckets B skipped and vice versa:
+        // a plain name-keyed sum of the cumulative series would miss A's
+        // carried-forward count at B's bounds and skew percentiles upward
+        let a = Registry::new();
+        for v in [10u64, 3000, 3000] {
+            a.histogram("mm_x_us").record(v); // buckets le=15, le=4095
+        }
+        let b = Registry::new();
+        for v in [20u64, 20] {
+            b.histogram("mm_x_us").record(v); // bucket le=31 only
+        }
+        let sum = aggregate(&[flatten(&a), flatten(&b)]);
+        let get = |n: &str| {
+            sum.iter()
+                .find(|(name, _)| name == n)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| panic!("missing {n} in {sum:?}"))
+        };
+        // merged values 10,20,20,3000,3000 — cumulative counts must match
+        // merging the raw histograms, not the naive per-name sum
+        assert_eq!(get("mm_x_us_bucket{le=\"15\"}"), 1);
+        assert_eq!(get("mm_x_us_bucket{le=\"31\"}"), 3);
+        assert_eq!(get("mm_x_us_bucket{le=\"4095\"}"), 5);
+        assert_eq!(get("mm_x_us_bucket{le=\"+Inf\"}"), 5);
+        let qs = derive_quantiles(&sum);
+        let p50 = qs.iter().find(|(n, _)| n == "mm_x_us_p50").unwrap().1;
+        assert_eq!(p50, 31, "rank-3 value is 20 → bucket le=31");
+    }
+
+    #[test]
+    fn text_and_json_render() {
+        let r = sample_registry();
+        let text = render_text(&r);
+        assert!(text.contains("mm_store_hits_total 3\n"), "{text}");
+        assert!(text.contains("mm_batch_us_p50 31\n"), "{text}");
+        assert!(text.contains("mm_batch_us_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        let json = render_json(&r);
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"mm_store_hits_total\":3"), "{json}");
+        assert!(
+            json.contains("\"mm_batch_us_bucket{le=\\\"+Inf\\\"}\":3"),
+            "{json}"
+        );
+    }
+
+    #[test]
+    fn scrape_listener_answers_http() {
+        // exercises the listener end to end over loopback — but against
+        // the process-global registry, so only presence is asserted
+        crate::obs::global().counter("mm_scrape_selftest_total").inc();
+        let addr = spawn_scrape_listener("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("mm_scrape_selftest_total"), "{resp}");
+        // JSON flavor
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET /metrics.json HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("application/json"), "{resp}");
+        assert!(resp.contains("\"mm_scrape_selftest_total\":"), "{resp}");
+    }
+}

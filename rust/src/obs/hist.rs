@@ -1,0 +1,313 @@
+//! Log2-bucketed histograms with mergeable snapshots and percentile
+//! extraction.
+//!
+//! Bucket `b` holds values whose bit length is `b`: bucket 0 is exactly
+//! `{0}`, bucket `b ≥ 1` covers `[2^(b-1), 2^b - 1]`. 65 buckets span the
+//! full `u64` domain, so recording never clamps and a microsecond latency
+//! histogram resolves from sub-microsecond to half a million years within
+//! a factor of two — the right trade for latency data, where percentile
+//! *magnitude* matters and 2× resolution is plenty.
+//!
+//! Recording is two relaxed `fetch_add`s (bucket + running sum).
+//! Percentiles are computed from snapshots at read time and are reported
+//! as the **upper bound of the bucket holding the rank-q value** — a
+//! conservative bound: at least a `q` fraction of recorded values are ≤
+//! the reported pq (the property test pins this contract). Snapshots are
+//! plain arrays, so cross-worker merging is element-wise addition —
+//! commutative and associative, which is what lets the coordinator sum
+//! worker histograms in any order and still report exact bucket counts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Bucket count: bit lengths 0..=64.
+pub const NUM_BUCKETS: usize = 65;
+
+/// Bucket index of a value: its bit length.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Largest value bucket `b` can hold.
+pub fn bucket_upper(b: usize) -> u64 {
+    match b {
+        0 => 0,
+        1..=63 => (1u64 << b) - 1,
+        _ => u64::MAX,
+    }
+}
+
+/// Smallest value bucket `b` can hold.
+pub fn bucket_lower(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// Concurrent log2 histogram.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Point-in-time copy. The count is *derived from the buckets*, so a
+    /// snapshot is always internally consistent (every counted value is in
+    /// exactly one bucket) even when taken mid-record.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Mergeable, serializable histogram image.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts, `NUM_BUCKETS` long (shorter vectors — e.g. built
+    /// from a partial wire image — are treated as zero-extended).
+    pub buckets: Vec<u64>,
+    /// Sum of recorded values.
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot {
+            buckets: vec![0; NUM_BUCKETS],
+            sum: 0,
+        }
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Element-wise accumulate `other` into `self` — commutative and
+    /// associative, the algebra cross-worker aggregation relies on.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Upper bound of the bucket containing the rank-⌈q·n⌉ value
+    /// (0 when empty). At least a `q` fraction of recorded values are ≤
+    /// the returned bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(b);
+            }
+        }
+        bucket_upper(NUM_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn bucket_bounds_partition_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        for b in 0..NUM_BUCKETS {
+            assert!(bucket_lower(b) <= bucket_upper(b));
+            assert_eq!(bucket_of(bucket_lower(b)), b);
+            assert_eq!(bucket_of(bucket_upper(b)), b);
+            if b > 0 {
+                assert_eq!(bucket_upper(b - 1) + 1, bucket_lower(b), "buckets meet");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        let h = Histogram::new();
+        // 100 values: 1..=100
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.sum, 5050);
+        // rank 50 value is 50 → bucket 6 ([32,63]) → upper bound 63
+        assert_eq!(s.p50(), 63);
+        // rank 99 value is 99 → bucket 7 ([64,127]) → upper bound 127
+        assert_eq!(s.p99(), 127);
+        assert_eq!(s.quantile(1.0), 127);
+        assert_eq!(HistSnapshot::empty().p50(), 0);
+    }
+
+    /// Satellite property test: for every quantile, the reported bound is
+    /// the upper edge of a bucket that (a) at least a q-fraction of the
+    /// recorded values fall at or below, and (b) actually contains the
+    /// rank-q value — i.e. the rank-q value lies within the reported
+    /// bucket's bounds.
+    #[test]
+    fn prop_percentiles_bound_recorded_values() {
+        proptest::check(0x0B5E, 120, |rng| {
+            let n = 1 + rng.below_usize(400);
+            let mut vals: Vec<u64> = (0..n)
+                .map(|_| {
+                    // mix magnitudes: uniform small, exponential large
+                    let shift = rng.below(48) as u32;
+                    rng.below(1 << 16) << shift
+                })
+                .collect();
+            let h = Histogram::new();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            let s = h.snapshot();
+            assert_eq!(s.count(), n as u64);
+            for &q in &[0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let bound = s.quantile(q);
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = vals[rank - 1];
+                // the rank-q value lies within the reported bucket
+                assert!(
+                    exact <= bound,
+                    "q={q}: exact {exact} above reported bound {bound}"
+                );
+                assert!(
+                    exact >= bucket_lower(bucket_of(bound)),
+                    "q={q}: exact {exact} below reported bucket"
+                );
+                // at least a q fraction of values are ≤ the bound
+                let at_or_below = vals.iter().filter(|&&v| v <= bound).count();
+                assert!(
+                    at_or_below >= rank,
+                    "q={q}: only {at_or_below}/{n} values ≤ {bound}"
+                );
+            }
+        });
+    }
+
+    /// Satellite property test: merge is associative (and commutative) —
+    /// the coordinator may fold worker snapshots in any order.
+    #[test]
+    fn prop_merge_associative() {
+        proptest::check(0x03E6, 100, |rng| {
+            let mk = |rng: &mut crate::util::rng::Rng| {
+                let h = Histogram::new();
+                for _ in 0..rng.below(200) {
+                    h.record(rng.below(1 << 30));
+                }
+                h.snapshot()
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+            // (a ⊕ b) ⊕ c
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            // a ⊕ (b ⊕ c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "associativity");
+            // b ⊕ a == a ⊕ b
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "commutativity");
+            assert_eq!(left.count(), a.count() + b.count() + c.count());
+            assert_eq!(left.sum, a.sum + b.sum + c.sum);
+        });
+    }
+
+    #[test]
+    fn merge_zero_extends_short_images() {
+        let mut short = HistSnapshot {
+            buckets: vec![3, 1],
+            sum: 4,
+        };
+        let full = HistSnapshot::empty();
+        short.merge(&full);
+        assert_eq!(short.buckets.len(), NUM_BUCKETS);
+        assert_eq!(short.count(), 4);
+    }
+
+    #[test]
+    fn record_duration_uses_micros() {
+        let h = Histogram::new();
+        h.record_duration(Duration::from_millis(3));
+        let s = h.snapshot();
+        assert_eq!(s.sum, 3000);
+        assert_eq!(s.count(), 1);
+    }
+}

@@ -1,0 +1,85 @@
+//! UNIFIED OBSERVABILITY — one dependency-free metrics core for all five
+//! layers.
+//!
+//! Until now the system's only runtime visibility was a hand-rolled
+//! `fabric:` line and the per-store hit/miss totals — every layer counted
+//! (or didn't) its own way. This module is the single counter
+//! implementation they all fold onto:
+//!
+//! * [`registry`] — atomic [`Counter`]s and [`Gauge`]s plus a process-wide
+//!   name → metric [`Registry`] ([`global()`]). Metrics are `Arc`-shared:
+//!   a component can own its counters privately (the
+//!   [`ResultStore`](crate::service::ResultStore) does, so per-instance
+//!   snapshots stay exact) and *also* register the same atomics for
+//!   scraping — registration is a pointer, never a copy, so the scrape
+//!   view is always live.
+//! * [`hist`] — log2-bucketed latency [`Histogram`]s: one atomic per
+//!   power-of-two bucket, mergeable snapshots, p50/p95/p99 extraction.
+//!   Recording is one relaxed `fetch_add` per bucket — cheap enough for
+//!   per-request paths; percentiles are computed at read time.
+//! * [`span`] — scoped [`Span`] timers that record their elapsed time into
+//!   a histogram on drop (unwind-safe: a panicking request still counts).
+//! * [`export`] — Prometheus-style text + JSON exposition, the flat
+//!   summable series form the proto v4 `STATS` reply carries, cross-worker
+//!   aggregation (sums by name, re-derives percentiles from summed
+//!   buckets), and the plain-TCP scrape listener behind
+//!   `--metrics <addr>`.
+//!
+//! # Series naming scheme
+//!
+//! `mm_<layer>_<what>[_total|_us]{label="v"}` — layer prefixes are
+//! `kernel` (tier dispatch), `fused` (trie walk), `store` / `planner`
+//! (morph-aware cache), `wal` / `batch` (durable service), `shard` /
+//! `worker` (distribution fabric). `_total` marks monotone counters,
+//! `_us` marks microsecond histograms (expanded on export to `_count`,
+//! `_sum`, cumulative `_bucket{le="…"}`, and derived `_p50/_p95/_p99`).
+//! Labels are baked into the series name — the registry is a flat
+//! namespace, which is exactly what lets cross-worker aggregation combine
+//! by name ([`aggregate`]: plain series sum, buckets merge exactly).
+//!
+//! Hot-path call sites cache their handle once via [`obs_counter!`] /
+//! [`obs_gauge!`] / [`obs_histogram!`] so steady-state cost is a single
+//! relaxed atomic op, with the registry lock touched only on first use.
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use export::{
+    aggregate, derive_quantiles, flatten, render_json, render_text, spawn_scrape_listener,
+};
+pub use hist::{HistSnapshot, Histogram};
+pub use registry::{global, Counter, Gauge, Registry, Sample};
+pub use span::Span;
+
+/// Cached global counter handle: expands to a `&'static`-lifetime lookup
+/// whose registry access happens once per call site.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<std::sync::Arc<$crate::obs::Counter>> =
+            std::sync::OnceLock::new();
+        &**HANDLE.get_or_init(|| $crate::obs::global().counter($name))
+    }};
+}
+
+/// Cached global gauge handle (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<std::sync::Arc<$crate::obs::Gauge>> =
+            std::sync::OnceLock::new();
+        &**HANDLE.get_or_init(|| $crate::obs::global().gauge($name))
+    }};
+}
+
+/// Cached global histogram handle (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_histogram {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<std::sync::Arc<$crate::obs::Histogram>> =
+            std::sync::OnceLock::new();
+        &**HANDLE.get_or_init(|| $crate::obs::global().histogram($name))
+    }};
+}

@@ -1,0 +1,284 @@
+//! Atomic counters/gauges and the name-keyed metric registry.
+//!
+//! Counters and gauges are single relaxed `AtomicU64`s — increments from
+//! any number of threads sum exactly (fetch-and-add is atomic; relaxed
+//! ordering only relaxes *when* other threads see the value, never whether
+//! an increment is counted). The registry maps series names to `Arc`ed
+//! metrics; handles stay valid forever, so hot paths look a name up once
+//! and then never touch the lock again.
+
+use super::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous non-negative level (queue depths, in-flight requests).
+/// Decrements saturate at zero rather than wrapping: a scrape racing a
+/// transient imbalance should read a small number, never ~2^64.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.sub(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One registered metric.
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Histogram>),
+}
+
+/// Point-in-time value of one registered metric.
+#[derive(Clone, Debug)]
+pub enum Sample {
+    Counter(u64),
+    Gauge(u64),
+    Hist(super::hist::HistSnapshot),
+}
+
+/// Name → metric map. Lookup is get-or-create; re-registering a name
+/// replaces the binding (the common case is a restarted in-process test
+/// worker re-registering its store — last writer wins, and the old `Arc`
+/// stays valid for whoever still holds it).
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter named `name`. A name previously bound to
+    /// a different metric kind is rebound to a fresh counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(Metric::Counter(c)) = m.get(name) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::new());
+        m.insert(name.to_string(), Metric::Counter(c.clone()));
+        c
+    }
+
+    /// Get or create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(Metric::Gauge(g)) = m.get(name) {
+            return g.clone();
+        }
+        let g = Arc::new(Gauge::new());
+        m.insert(name.to_string(), Metric::Gauge(g.clone()));
+        g
+    }
+
+    /// Get or create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(Metric::Hist(h)) = m.get(name) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::new());
+        m.insert(name.to_string(), Metric::Hist(h.clone()));
+        h
+    }
+
+    /// Register an existing counter under `name` — how a component that
+    /// owns its counters privately (e.g. a `ResultStore`) exposes the very
+    /// same atomics for scraping. Registration shares the `Arc`; the
+    /// scrape view is live, not a copy.
+    pub fn register_counter(&self, name: &str, c: Arc<Counter>) {
+        self.metrics
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Metric::Counter(c));
+    }
+
+    /// Register an existing gauge under `name` (see [`Registry::register_counter`]).
+    pub fn register_gauge(&self, name: &str, g: Arc<Gauge>) {
+        self.metrics
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Metric::Gauge(g));
+    }
+
+    /// Register an existing histogram under `name` (see [`Registry::register_counter`]).
+    pub fn register_histogram(&self, name: &str, h: Arc<Histogram>) {
+        self.metrics
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Metric::Hist(h));
+    }
+
+    /// Snapshot every registered metric, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, Sample)> {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .map(|(name, metric)| {
+                let sample = match metric {
+                    Metric::Counter(c) => Sample::Counter(c.get()),
+                    Metric::Gauge(g) => Sample::Gauge(g.get()),
+                    Metric::Hist(h) => Sample::Hist(h.snapshot()),
+                };
+                (name.clone(), sample)
+            })
+            .collect()
+    }
+}
+
+/// The process-wide registry: what `--metrics` scrapes, what the proto v4
+/// `STATS` reply snapshots, and what the bench harness embeds in JSON
+/// rows.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // saturates, never wraps
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn registry_get_or_create_shares_handles() {
+        let r = Registry::new();
+        let a = r.counter("x_total");
+        let b = r.counter("x_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "both handles hit the same atomic");
+        // kind rebind: a gauge request on a counter name yields a fresh
+        // gauge (the counter handle stays usable but unregistered)
+        let g = r.gauge("x_total");
+        g.set(9);
+        assert_eq!(a.get(), 3);
+        match &r.snapshot()[..] {
+            [(name, Sample::Gauge(v))] => {
+                assert_eq!(name, "x_total");
+                assert_eq!(*v, 9);
+            }
+            other => panic!("unexpected snapshot {other:?}"),
+        }
+    }
+
+    #[test]
+    fn registered_external_counter_is_live() {
+        let r = Registry::new();
+        let c = Arc::new(Counter::new());
+        r.register_counter("mm_store_hits_total", c.clone());
+        c.add(11);
+        match &r.snapshot()[..] {
+            [(_, Sample::Counter(v))] => assert_eq!(*v, 11),
+            other => panic!("unexpected snapshot {other:?}"),
+        }
+    }
+
+    /// Satellite: concurrent updates from many threads sum exactly — the
+    /// whole point of fetch-and-add counters.
+    #[test]
+    fn concurrent_updates_sum_exactly() {
+        let r = Registry::new();
+        let threads = 8usize;
+        let per_thread = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let r = &r;
+                s.spawn(move || {
+                    let c = r.counter("mm_concurrency_test_total");
+                    let h = r.histogram("mm_concurrency_test_us");
+                    for i in 0..per_thread {
+                        c.inc();
+                        h.record(t as u64 * per_thread + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            r.counter("mm_concurrency_test_total").get(),
+            threads as u64 * per_thread
+        );
+        let snap = r.histogram("mm_concurrency_test_us").snapshot();
+        assert_eq!(snap.count(), threads as u64 * per_thread);
+        // sum of 0..(threads*per_thread) exactly
+        let n = threads as u64 * per_thread;
+        assert_eq!(snap.sum, n * (n - 1) / 2);
+    }
+}

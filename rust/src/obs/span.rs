@@ -1,0 +1,96 @@
+//! Scoped span timers: time a region by holding a value.
+//!
+//! A [`Span`] records its elapsed wall time into a [`Histogram`] when
+//! dropped — including on unwind, so a panicking request is still counted
+//! (a crash that silently vanishes from the latency distribution is how
+//! p99s lie). For regions whose attribution is decided late (e.g. a batch
+//! that only turns out to be slow at the end), [`Span::cancel`] discards
+//! the measurement and [`Span::finish`] ends it early and returns the
+//! elapsed time.
+
+use super::hist::Histogram;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Live timer bound to a histogram.
+#[derive(Debug)]
+pub struct Span {
+    hist: Option<Arc<Histogram>>,
+    start: Instant,
+}
+
+impl Span {
+    /// Start timing; the drop records into `hist`.
+    pub fn start(hist: Arc<Histogram>) -> Span {
+        Span {
+            hist: Some(hist),
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed time so far (the span keeps running).
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Record now instead of at scope end; returns the recorded duration.
+    pub fn finish(mut self) -> Duration {
+        let d = self.start.elapsed();
+        if let Some(h) = self.hist.take() {
+            h.record_duration(d);
+        }
+        d
+    }
+
+    /// Drop without recording.
+    pub fn cancel(mut self) {
+        self.hist = None;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(h) = self.hist.take() {
+            h.record_duration(self.start.elapsed());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_on_drop() {
+        let h = Arc::new(Histogram::new());
+        {
+            let _s = Span::start(h.clone());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 1);
+        assert!(snap.sum >= 1000, "at least 1ms in micros, got {}", snap.sum);
+    }
+
+    #[test]
+    fn span_records_on_panic_unwind() {
+        let h = Arc::new(Histogram::new());
+        let hc = h.clone();
+        let result = std::panic::catch_unwind(move || {
+            let _s = Span::start(hc);
+            panic!("boom");
+        });
+        assert!(result.is_err());
+        assert_eq!(h.snapshot().count(), 1, "unwind still records");
+    }
+
+    #[test]
+    fn finish_and_cancel() {
+        let h = Arc::new(Histogram::new());
+        let d = Span::start(h.clone()).finish();
+        assert_eq!(h.snapshot().count(), 1);
+        assert!(d >= Duration::ZERO);
+        Span::start(h.clone()).cancel();
+        assert_eq!(h.snapshot().count(), 1, "cancelled span not recorded");
+    }
+}

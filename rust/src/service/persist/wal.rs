@@ -135,7 +135,9 @@ impl Wal {
         if let Some(n) = self.fsync_every {
             self.appended_since_sync += 1;
             if self.appended_since_sync >= n.max(1) {
+                let t = std::time::Instant::now();
                 self.file.sync_data()?;
+                crate::obs_histogram!("mm_wal_fsync_us").record_duration(t.elapsed());
                 self.appended_since_sync = 0;
                 self.syncs += 1;
             }

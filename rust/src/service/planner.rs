@@ -179,15 +179,21 @@ impl QueryPlanner {
         let plan = profile.time("plan", || self.morph(queries, stats));
         let mut values: HashMap<CanonKey, i128> = HashMap::new();
         let mut missing: Vec<usize> = Vec::new();
-        for (i, p) in plan.base.iter().enumerate() {
-            let k = p.canonical_key();
-            match store.get(&k, epoch) {
-                Some(v) => {
-                    values.insert(k, v);
+        profile.time("probe", || {
+            for (i, p) in plan.base.iter().enumerate() {
+                let k = p.canonical_key();
+                match store.get(&k, epoch) {
+                    Some(v) => {
+                        values.insert(k, v);
+                    }
+                    None => missing.push(i),
                 }
-                None => missing.push(i),
             }
-        }
+        });
+        crate::obs_counter!("mm_planner_batches_total").inc();
+        crate::obs_counter!("mm_planner_cache_hits_total")
+            .add((plan.base.len() - missing.len()) as u64);
+        crate::obs_counter!("mm_planner_cache_misses_total").add(missing.len() as u64);
         let fresh = self.execute_bases(graph, &plan.base, &missing, stats, profile);
         for (k, v) in fresh {
             store.insert(k, epoch, v);
@@ -230,15 +236,21 @@ impl QueryPlanner {
         let plan = profile.time("plan", || self.morph(queries, stats));
         let mut values: HashMap<CanonKey, i128> = HashMap::new();
         let mut missing: Vec<usize> = Vec::new();
-        for (i, p) in plan.base.iter().enumerate() {
-            let k = p.canonical_key();
-            match store.get(&k, epoch) {
-                Some(v) => {
-                    values.insert(k, v);
+        profile.time("probe", || {
+            for (i, p) in plan.base.iter().enumerate() {
+                let k = p.canonical_key();
+                match store.get(&k, epoch) {
+                    Some(v) => {
+                        values.insert(k, v);
+                    }
+                    None => missing.push(i),
                 }
-                None => missing.push(i),
             }
-        }
+        });
+        crate::obs_counter!("mm_planner_batches_total").inc();
+        crate::obs_counter!("mm_planner_cache_hits_total")
+            .add((plan.base.len() - missing.len()) as u64);
+        crate::obs_counter!("mm_planner_cache_misses_total").add(missing.len() as u64);
         let fresh = profile.time("match", || pool.execute_bases(&plan.base, &missing, epoch))?;
         for (k, v) in fresh {
             store.insert(k, epoch, v);

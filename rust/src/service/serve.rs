@@ -135,7 +135,7 @@ pub struct BatchResponse {
     pub stats: BatchStats,
     /// Graph epoch the batch was answered at.
     pub epoch: u64,
-    /// Phase breakdown (plan / fuse / match / convert / stats).
+    /// Phase breakdown (plan / probe / fuse / match / convert / persist).
     pub profile: PhaseProfile,
 }
 
@@ -199,15 +199,21 @@ impl WalWriter {
     }
 
     fn insert(&self, key: CanonKey, value: i128) {
-        let _ = self.tx.send(WalCmd::Insert(key, value));
+        if self.tx.send(WalCmd::Insert(key, value)).is_ok() {
+            crate::obs_gauge!("mm_wal_queue_depth").inc();
+        }
     }
 
     fn invalidate(&self, fp: GraphFingerprint) {
-        let _ = self.tx.send(WalCmd::Invalidate(fp));
+        if self.tx.send(WalCmd::Invalidate(fp)).is_ok() {
+            crate::obs_gauge!("mm_wal_queue_depth").inc();
+        }
     }
 
     fn compact(&self, image: Vec<(CanonKey, i128)>) {
-        let _ = self.tx.send(WalCmd::Compact(image));
+        if self.tx.send(WalCmd::Compact(image)).is_ok() {
+            crate::obs_gauge!("mm_wal_queue_depth").inc();
+        }
     }
 
     /// Whether the writer asked for a cadence compaction (one-shot: the
@@ -246,10 +252,21 @@ impl Drop for WalWriter {
 /// a broken disk can only cool a future restart, never corrupt answers.
 fn wal_writer_loop(rx: &mpsc::Receiver<WalCmd>, mut p: Persistence<i128>, due: &AtomicBool) {
     while let Ok(cmd) = rx.recv() {
+        crate::obs_gauge!("mm_wal_queue_depth").dec();
         let result = match cmd {
-            WalCmd::Insert(k, v) => p.record_insert(&k, &v),
+            WalCmd::Insert(k, v) => {
+                let t = std::time::Instant::now();
+                let r = p.record_insert(&k, &v);
+                crate::obs_histogram!("mm_wal_append_us").record_duration(t.elapsed());
+                r
+            }
             WalCmd::Invalidate(fp) => p.record_invalidation(fp),
-            WalCmd::Compact(image) => p.compact(&image),
+            WalCmd::Compact(image) => {
+                let t = std::time::Instant::now();
+                let r = p.compact(&image);
+                crate::obs_histogram!("mm_wal_compaction_us").record_duration(t.elapsed());
+                r
+            }
             WalCmd::Shutdown { image } => {
                 if let Some(image) = image {
                     // skip when nothing was logged since the last
@@ -273,6 +290,7 @@ fn wal_writer_loop(rx: &mpsc::Receiver<WalCmd>, mut p: Persistence<i128>, due: &
     // degraded: keep draining so enqueuers never see a closed channel
     // mid-session and shutdown still joins promptly
     for cmd in rx.iter() {
+        crate::obs_gauge!("mm_wal_queue_depth").dec();
         if matches!(cmd, WalCmd::Shutdown { .. }) {
             return;
         }
@@ -389,6 +407,10 @@ impl Service {
             }
             None => (None, None),
         };
+        // expose the store's live counters under mm_store_* for scraping
+        // (last service started in-process wins the binding — fine for the
+        // one-service CLI processes and for tests)
+        store.register_metrics(crate::obs::global(), "mm_store_");
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 graph: dyn_graph,
@@ -555,6 +577,7 @@ fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Job>>, planner: QueryP
 /// Serve one batch: snapshot, morph, split bases into cached / owned /
 /// coalesced, execute owned, publish, await coalesced, compose.
 fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) -> BatchResponse {
+    let batch_start = std::time::Instant::now();
     // flatten the batch into one pattern list (the morph plan dedups bases
     // across all queries)
     let mut flat: Vec<Pattern> = Vec::new();
@@ -604,7 +627,7 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
     let mut awaited: Vec<(CanonKey, Arc<Cell>)> = Vec::new();
     let mut owned: Vec<usize> = Vec::new();
     let mut owned_keys: Vec<(CanonKey, u64)> = Vec::new();
-    {
+    profile.time("probe", || {
         let mut st = shared.state.lock().unwrap();
         for (i, p) in plan.base.iter().enumerate() {
             let k = p.canonical_key();
@@ -618,7 +641,12 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
                 owned_keys.push((k, epoch));
             }
         }
-    }
+    });
+    crate::obs_counter!("mm_planner_batches_total").inc();
+    crate::obs_counter!("mm_planner_cache_hits_total").add(values.len() as u64);
+    crate::obs_counter!("mm_planner_cache_misses_total")
+        .add((owned.len() + awaited.len()) as u64);
+    crate::obs_counter!("mm_planner_coalesced_total").add(awaited.len() as u64);
     // from here until publish, an unwind must fail our registered cells —
     // otherwise batches coalesced onto them would wait forever
     let mut guard = OwnedCells {
@@ -631,7 +659,7 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
 
     // publish: feed the store (stale inserts are dropped there) and wake
     // any batch coalesced onto our bases
-    {
+    profile.time("persist", || {
         let mut st = shared.state.lock().unwrap();
         let st = &mut *st;
         for &(k, v) in &fresh {
@@ -660,7 +688,7 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
                 w.compact(st.store.entries());
             }
         }
-    }
+    });
     guard.armed = false;
     let executed = fresh.len();
     values.extend(fresh);
@@ -683,6 +711,7 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
 
     let vals = planner.compose(&plan, &values, &mut profile);
     let results = to_query_results(queries, &spans, &vals);
+    crate::obs_histogram!("mm_service_batch_us").record_duration(batch_start.elapsed());
 
     BatchResponse {
         results,

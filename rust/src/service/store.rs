@@ -12,8 +12,10 @@
 //! [`ResultStore::set_epoch`]), so incremental updates can never leak
 //! stale counts.
 
+use crate::obs::{Counter, Gauge, Registry};
 use crate::pattern::canon::CanonKey;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Approximate heap weight of a cached value, for the byte budget.
 pub trait CacheWeight {
@@ -52,8 +54,9 @@ impl PersistValue for i128 {
 /// (key, LRU stamp, hash-map slot).
 const ENTRY_OVERHEAD: usize = 64;
 
-/// Store counters. `bytes` is the current footprint; everything else is
-/// cumulative since construction.
+/// Point-in-time view of the store counters, rendered from the live
+/// [`crate::obs`] atomics by [`ResultStore::metrics`]. `bytes` is the
+/// current footprint; everything else is cumulative since construction.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StoreMetrics {
     /// Lookups served from the store.
@@ -82,6 +85,23 @@ struct Entry<V> {
     last_used: u64,
 }
 
+/// The store's live counters: [`crate::obs`] atomics, privately owned so
+/// per-instance snapshots ([`ResultStore::metrics`]) stay exact, and
+/// `Arc`-shared so [`ResultStore::register_metrics`] can expose the very
+/// same atomics to a scrape registry — one counter implementation, two
+/// views.
+#[derive(Default)]
+struct StoreCounters {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    inserts: Arc<Counter>,
+    evictions: Arc<Counter>,
+    invalidations: Arc<Counter>,
+    stale_drops: Arc<Counter>,
+    restored: Arc<Counter>,
+    bytes: Arc<Gauge>,
+}
+
 /// LRU result store for one graph. All live entries belong to the current
 /// epoch — [`ResultStore::set_epoch`] purges everything older, which keeps
 /// the key a plain [`CanonKey`] while the lookup contract stays
@@ -91,7 +111,7 @@ pub struct ResultStore<V> {
     epoch: u64,
     tick: u64,
     map: HashMap<CanonKey, Entry<V>>,
-    metrics: StoreMetrics,
+    counters: StoreCounters,
 }
 
 impl<V: CacheWeight + Clone> ResultStore<V> {
@@ -103,7 +123,7 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
             epoch: 0,
             tick: 0,
             map: HashMap::new(),
-            metrics: StoreMetrics::default(),
+            counters: StoreCounters::default(),
         }
     }
 
@@ -121,9 +141,43 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
         self.map.is_empty()
     }
 
-    /// Cumulative counters plus the current byte footprint.
+    /// Cumulative counters plus the current byte footprint, snapshotted
+    /// from the live atomics.
     pub fn metrics(&self) -> StoreMetrics {
-        self.metrics
+        StoreMetrics {
+            hits: self.counters.hits.get(),
+            misses: self.counters.misses.get(),
+            inserts: self.counters.inserts.get(),
+            evictions: self.counters.evictions.get(),
+            invalidations: self.counters.invalidations.get(),
+            stale_drops: self.counters.stale_drops.get(),
+            restored: self.counters.restored.get(),
+            bytes: self.counters.bytes.get() as usize,
+        }
+    }
+
+    /// Expose this store's live counters to `reg` under
+    /// `{prefix}hits_total`, `{prefix}misses_total`, …, `{prefix}bytes`.
+    /// Registration shares the atomics — the scrape view tracks every
+    /// subsequent store operation with no copying or polling.
+    pub fn register_metrics(&self, reg: &Registry, prefix: &str) {
+        reg.register_counter(&format!("{prefix}hits_total"), self.counters.hits.clone());
+        reg.register_counter(&format!("{prefix}misses_total"), self.counters.misses.clone());
+        reg.register_counter(&format!("{prefix}inserts_total"), self.counters.inserts.clone());
+        reg.register_counter(
+            &format!("{prefix}evictions_total"),
+            self.counters.evictions.clone(),
+        );
+        reg.register_counter(
+            &format!("{prefix}invalidations_total"),
+            self.counters.invalidations.clone(),
+        );
+        reg.register_counter(
+            &format!("{prefix}stale_drops_total"),
+            self.counters.stale_drops.clone(),
+        );
+        reg.register_counter(&format!("{prefix}restored_total"), self.counters.restored.clone());
+        reg.register_gauge(&format!("{prefix}bytes"), self.counters.bytes.clone());
     }
 
     /// Advance to `epoch`, purging entries cached under older epochs.
@@ -134,8 +188,8 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
         if epoch == self.epoch {
             return;
         }
-        self.metrics.invalidations += self.map.len() as u64;
-        self.metrics.bytes = 0;
+        self.counters.invalidations.add(self.map.len() as u64);
+        self.counters.bytes.set(0);
         self.map.clear();
         self.epoch = epoch;
     }
@@ -145,18 +199,18 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
     /// snapshot does not match what the store holds).
     pub fn get(&mut self, key: &CanonKey, epoch: u64) -> Option<V> {
         if epoch != self.epoch {
-            self.metrics.misses += 1;
+            self.counters.misses.inc();
             return None;
         }
         match self.map.get_mut(key) {
             Some(e) => {
                 self.tick += 1;
                 e.last_used = self.tick;
-                self.metrics.hits += 1;
+                self.counters.hits.inc();
                 Some(e.value.clone())
             }
             None => {
-                self.metrics.misses += 1;
+                self.counters.misses.inc();
                 None
             }
         }
@@ -170,11 +224,11 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
     /// re-derive the staleness predicate.
     pub fn insert(&mut self, key: CanonKey, epoch: u64, value: V) -> bool {
         if epoch != self.epoch {
-            self.metrics.stale_drops += 1;
+            self.counters.stale_drops.inc();
             return false;
         }
         self.put(key, value);
-        self.metrics.inserts += 1;
+        self.counters.inserts.inc();
         self.evict_to_budget();
         true
     }
@@ -187,7 +241,7 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
     /// least-recently-restored surplus.
     pub fn restore(&mut self, key: CanonKey, value: V) {
         self.put(key, value);
-        self.metrics.restored += 1;
+        self.counters.restored.inc();
         self.evict_to_budget();
     }
 
@@ -211,9 +265,9 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
                 last_used: self.tick,
             },
         ) {
-            self.metrics.bytes -= old.bytes;
+            self.counters.bytes.sub(old.bytes as u64);
         }
-        self.metrics.bytes += bytes;
+        self.counters.bytes.add(bytes as u64);
     }
 
     /// Evict least-recently-used entries until the footprint fits the
@@ -222,7 +276,7 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
     /// holds at most a few thousand base patterns, eviction is rare, and
     /// it keeps hits allocation-free.
     fn evict_to_budget(&mut self) {
-        while self.metrics.bytes > self.budget_bytes && self.map.len() > 1 {
+        while self.counters.bytes.get() > self.budget_bytes as u64 && self.map.len() > 1 {
             let key = *self
                 .map
                 .iter()
@@ -230,8 +284,8 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
                 .map(|(k, _)| k)
                 .expect("map non-empty");
             let e = self.map.remove(&key).expect("key just found");
-            self.metrics.bytes -= e.bytes;
-            self.metrics.evictions += 1;
+            self.counters.bytes.sub(e.bytes as u64);
+            self.counters.evictions.inc();
         }
     }
 }

@@ -60,6 +60,7 @@
 
 use super::proto::{self, ExecRequest, ExecResponse, Msg};
 use crate::graph::{DataGraph, GraphFingerprint};
+use crate::obs::{Counter, Registry};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
 use crate::util::rng::splitmix64;
@@ -68,7 +69,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{ErrorKind, Read};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Fabric tuning: connection deadlines, liveness probing, retry budget,
@@ -131,7 +132,11 @@ impl Default for PoolConfig {
     }
 }
 
-/// Coordinator-side counters for the shard fabric.
+/// Point-in-time view of the coordinator-side fabric counters, rendered
+/// from the live [`crate::obs`] atomics a pool owns (see [`PoolCounters`])
+/// — the struct is the *view*, the atomics are the one implementation.
+/// Per-batch deltas are still accumulated as a plain struct under the
+/// batch mutex and absorbed into the atomics once per batch.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ShardMetrics {
     /// Exec requests sent (one per dealt sub-slice, retries included).
@@ -171,20 +176,72 @@ pub struct ShardMetrics {
     pub verify_mismatches: u64,
 }
 
-impl ShardMetrics {
-    fn absorb(&mut self, d: ShardMetrics) {
-        self.requests += d.requests;
-        self.bases_sent += d.bases_sent;
-        self.partials_merged += d.partials_merged;
-        self.remote_cached += d.remote_cached;
-        self.errors += d.errors;
-        self.worker_failures += d.worker_failures;
-        self.retries += d.retries;
-        self.refanned += d.refanned;
-        self.probes += d.probes;
-        self.failovers += d.failovers;
-        self.hedges += d.hedges;
-        self.verify_mismatches += d.verify_mismatches;
+/// The pool's live counters: one `Arc`ed atomic per [`ShardMetrics`]
+/// field. Registered under `mm_shard_*` in the process registry so a
+/// `--metrics` scrape and [`ShardPool::metrics`] read the very same
+/// atomics.
+#[derive(Default)]
+struct PoolCounters {
+    requests: Arc<Counter>,
+    bases_sent: Arc<Counter>,
+    partials_merged: Arc<Counter>,
+    remote_cached: Arc<Counter>,
+    errors: Arc<Counter>,
+    worker_failures: Arc<Counter>,
+    retries: Arc<Counter>,
+    refanned: Arc<Counter>,
+    probes: Arc<Counter>,
+    failovers: Arc<Counter>,
+    hedges: Arc<Counter>,
+    verify_mismatches: Arc<Counter>,
+}
+
+impl PoolCounters {
+    fn register(&self, reg: &Registry) {
+        reg.register_counter("mm_shard_requests_total", self.requests.clone());
+        reg.register_counter("mm_shard_bases_sent_total", self.bases_sent.clone());
+        reg.register_counter("mm_shard_partials_merged_total", self.partials_merged.clone());
+        reg.register_counter("mm_shard_remote_cached_total", self.remote_cached.clone());
+        reg.register_counter("mm_shard_errors_total", self.errors.clone());
+        reg.register_counter("mm_shard_worker_failures_total", self.worker_failures.clone());
+        reg.register_counter("mm_shard_retries_total", self.retries.clone());
+        reg.register_counter("mm_shard_refanned_total", self.refanned.clone());
+        reg.register_counter("mm_shard_probes_total", self.probes.clone());
+        reg.register_counter("mm_shard_failovers_total", self.failovers.clone());
+        reg.register_counter("mm_shard_hedges_total", self.hedges.clone());
+        reg.register_counter("mm_shard_verify_mismatches_total", self.verify_mismatches.clone());
+    }
+
+    fn absorb(&self, d: &ShardMetrics) {
+        self.requests.add(d.requests);
+        self.bases_sent.add(d.bases_sent);
+        self.partials_merged.add(d.partials_merged);
+        self.remote_cached.add(d.remote_cached);
+        self.errors.add(d.errors);
+        self.worker_failures.add(d.worker_failures);
+        self.retries.add(d.retries);
+        self.refanned.add(d.refanned);
+        self.probes.add(d.probes);
+        self.failovers.add(d.failovers);
+        self.hedges.add(d.hedges);
+        self.verify_mismatches.add(d.verify_mismatches);
+    }
+
+    fn render(&self) -> ShardMetrics {
+        ShardMetrics {
+            requests: self.requests.get(),
+            bases_sent: self.bases_sent.get(),
+            partials_merged: self.partials_merged.get(),
+            remote_cached: self.remote_cached.get(),
+            errors: self.errors.get(),
+            worker_failures: self.worker_failures.get(),
+            retries: self.retries.get(),
+            refanned: self.refanned.get(),
+            probes: self.probes.get(),
+            failovers: self.failovers.get(),
+            hedges: self.hedges.get(),
+            verify_mismatches: self.verify_mismatches.get(),
+        }
     }
 }
 
@@ -518,7 +575,7 @@ pub struct ShardPool {
     replicated: bool,
     config: PoolConfig,
     next_id: u64,
-    metrics: ShardMetrics,
+    counters: PoolCounters,
 }
 
 impl ShardPool {
@@ -623,6 +680,8 @@ impl ShardPool {
             sub_slices = super::weighted_ranges(&weights, workers.len() * per);
             slice_queue = vec![0; sub_slices.len()];
         }
+        let counters = PoolCounters::default();
+        counters.register(crate::obs::global());
         Ok(ShardPool {
             workers,
             fingerprint,
@@ -634,7 +693,7 @@ impl ShardPool {
             replicated,
             config,
             next_id: 0,
-            metrics: ShardMetrics::default(),
+            counters,
         })
     }
 
@@ -668,9 +727,40 @@ impl ShardPool {
         self.sub_slices.len()
     }
 
-    /// Coordinator-side fabric counters.
+    /// Coordinator-side fabric counters (a point-in-time render of the
+    /// pool's live `mm_shard_*` atomics).
     pub fn metrics(&self) -> ShardMetrics {
-        self.metrics
+        self.counters.render()
+    }
+
+    /// Ask every connected worker for a snapshot of its metric registry
+    /// (proto v4 `STATS`, answered inline from the worker's read loop) and
+    /// return `(address, flat series)` per worker that answered. Workers
+    /// that fail to answer are skipped — a stats sweep is diagnostics,
+    /// never a correctness gate. Aggregate the serieses with
+    /// [`crate::obs::aggregate`] for the cluster view.
+    pub fn collect_stats(&mut self) -> Vec<(String, Vec<(String, u64)>)> {
+        let cfg = self.config;
+        let mut out = Vec::new();
+        let mut probes = 0u64;
+        for slot in &mut self.workers {
+            let Some(client) = slot.client.as_mut() else {
+                continue;
+            };
+            let id = self.next_id;
+            self.next_id += 1;
+            if client.send(&Msg::Stats { id }).is_err() {
+                continue;
+            }
+            match client.recv_reply(cfg.probe_interval, cfg.shard_timeout, &mut probes) {
+                Ok(Msg::StatsReply { id: rid, series }) if rid == id => {
+                    out.push((slot.addr.clone(), series));
+                }
+                _ => {}
+            }
+        }
+        self.counters.probes.add(probes);
+        out
     }
 
     /// The fabric tuning this pool runs with.
@@ -774,9 +864,9 @@ impl ShardPool {
             self.next_id = ids.into_inner();
         }
         let state = batch.work.into_inner().expect("batch threads joined");
-        self.metrics.absorb(state.delta);
+        self.counters.absorb(&state.delta);
         if let Some(fatal) = state.fatal {
-            self.metrics.errors += 1;
+            self.counters.errors.inc();
             let detail = if state.failures.is_empty() {
                 String::new()
             } else {
@@ -785,7 +875,7 @@ impl ShardPool {
             bail!("sharded batch failed: {fatal}{detail}");
         }
         if state.remaining > 0 {
-            self.metrics.errors += 1;
+            self.counters.errors.inc();
             bail!(
                 "sharded batch failed: {} of {} sub-slices unserved and no live worker \
                  remains; worker failures:\n  {}",
@@ -1053,6 +1143,18 @@ fn merge_reply(
     };
     let m = ctx.slot_id;
     let mut w = ctx.batch.work.lock().unwrap();
+    // Service time from dispatch to reply, even for late hedge losers —
+    // the worker really did spend that long. Labels stay bounded: one
+    // series per worker address, one per fixed sub-slice boundary.
+    if let Some(&(_, sent)) = w.slices[idx].inflight.iter().find(|&&(s, _)| s == m) {
+        let el = sent.elapsed();
+        let (lo, hi) = (w.slices[idx].lo, w.slices[idx].hi);
+        let reg = crate::obs::global();
+        reg.histogram(&format!("mm_shard_worker_service_us{{worker=\"{addr}\"}}"))
+            .record_duration(el);
+        reg.histogram(&format!("mm_shard_slice_service_us{{slice=\"{lo}-{hi}\"}}"))
+            .record_duration(el);
+    }
     if w.slices[idx].done {
         // the late loser of a hedge or a degraded verify: the slice is
         // already merged exactly once — drop the duplicate

@@ -287,10 +287,14 @@ impl ShardCoordinator {
         // must not depend on which path computed the statistics
         let stats = crate::graph::GraphStats::compute(&graph, 2000, 0x5E55);
         let pool = ShardPool::connect_with(groups, &graph, config)?;
+        let store = ResultStore::new(cache_bytes);
+        // expose the composed-totals store on the coordinator's own
+        // `--metrics` scrape (last coordinator built in-process wins)
+        store.register_metrics(crate::obs::global(), "mm_store_");
         Ok(ShardCoordinator {
             stats,
             planner,
-            store: ResultStore::new(cache_bytes),
+            store,
             pool,
         })
     }
@@ -318,6 +322,13 @@ impl ShardCoordinator {
     /// Counters of the coordinator-local store of composed totals.
     pub fn store_metrics(&self) -> StoreMetrics {
         self.store.metrics()
+    }
+
+    /// Proto v4 `STATS` sweep: every connected worker's metric registry as
+    /// `(address, flat series)`, for the coordinator's aggregated cluster
+    /// view (`--cluster-stats`). Unresponsive workers are skipped.
+    pub fn collect_stats(&mut self) -> Vec<(String, Vec<(String, u64)>)> {
+        self.pool.collect_stats()
     }
 
     /// Parse and serve one batch of query texts (`motifs:4`,

@@ -59,8 +59,12 @@ pub const MAGIC: &[u8; 8] = b"MMSHARD1";
 /// replica it is within that group, so a worker can pre-warm the persisted
 /// slices its group owns and siblings of one group share a persistence
 /// story (per-slice keys are fingerprint × slice, identical across
-/// replicas).
-pub const VERSION: u32 = 3;
+/// replicas). v4 added STATS/STATS_REPLY: the coordinator asks a worker
+/// for a snapshot of its metric registry (flat `(series name, value)`
+/// pairs, see [`crate::obs::flatten`]) and aggregates the replies into one
+/// cluster view. Like PING, a STATS request is answered inline from the
+/// worker's read loop, never queued behind matching work.
+pub const VERSION: u32 = 4;
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
@@ -70,6 +74,8 @@ const TAG_RESULT: u8 = 5;
 const TAG_ERROR: u8 = 6;
 const TAG_PING: u8 = 7;
 const TAG_PONG: u8 = 8;
+const TAG_STATS: u8 = 9;
+const TAG_STATS_REPLY: u8 = 10;
 
 /// One shard-execution request: match `patterns` (base patterns of a morph
 /// plan) with the first exploration level restricted to `[lo, hi)`.
@@ -156,6 +162,16 @@ pub enum Msg {
     /// a pong proves the socket and the read loop; `inflight > 0` proves
     /// the probed requests are actually registered and being worked.
     Pong { nonce: u64, inflight: u32 },
+    /// Coordinator → worker: snapshot your metric registry. Answered
+    /// inline from the read loop, like [`Msg::Ping`].
+    Stats { id: u64 },
+    /// Worker → coordinator: flat `(series name, value)` pairs in the
+    /// summable form of [`crate::obs::flatten`] — histograms ride as
+    /// `_count`/`_sum`/cumulative `_bucket{le="…"}` series, so the
+    /// coordinator can sum same-named series across workers and re-derive
+    /// cluster percentiles exactly (percentiles themselves never cross the
+    /// wire: averaging them would be meaningless).
+    StatsReply { id: u64, series: Vec<(String, u64)> },
 }
 
 fn put_fingerprint(out: &mut Vec<u8>, fp: GraphFingerprint) {
@@ -297,6 +313,20 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             out.extend_from_slice(&nonce.to_le_bytes());
             out.extend_from_slice(&inflight.to_le_bytes());
         }
+        Msg::Stats { id } => {
+            out.push(TAG_STATS);
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+        Msg::StatsReply { id, series } => {
+            out.push(TAG_STATS_REPLY);
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(series.len() as u32).to_le_bytes());
+            for (name, value) in series {
+                out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+                out.extend_from_slice(name.as_bytes());
+                out.extend_from_slice(&value.to_le_bytes());
+            }
+        }
     }
     out
 }
@@ -414,6 +444,27 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
             nonce: r.u64()?,
             inflight: r.u32()?,
         },
+        TAG_STATS => Msg::Stats { id: r.u64()? },
+        TAG_STATS_REPLY => {
+            let id = r.u64()?;
+            let n = r.u32()? as usize;
+            // an honest count is bounded by the payload: every series
+            // costs at least 12 bytes on the wire (length + value)
+            if n > payload.len() / 12 + 1 {
+                return None;
+            }
+            let mut series = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name_len = r.u32()? as usize;
+                if name_len > payload.len() {
+                    return None;
+                }
+                let name = std::str::from_utf8(r.take(name_len)?).ok()?.to_string();
+                let value = r.u64()?;
+                series.push((name, value));
+            }
+            Msg::StatsReply { id, series }
+        }
         _ => return None,
     };
     // trailing garbage after a well-formed body means a codec mismatch:
@@ -577,6 +628,66 @@ mod tests {
         // probes are tiny: they must fit well under any frame budget so a
         // probe can always be written even when big replies are in flight
         assert!(encode(&Msg::Ping { nonce: 1 }).len() < 16);
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        match roundtrip(&Msg::Stats { id: 77 }) {
+            Msg::Stats { id } => assert_eq!(id, 77),
+            other => panic!("{other:?}"),
+        }
+        let series = vec![
+            ("mm_store_hits_total".to_string(), 123u64),
+            ("mm_service_batch_us_bucket{le=\"4095\"}".to_string(), 9),
+            (String::new(), u64::MAX), // empty names survive too
+        ];
+        match roundtrip(&Msg::StatsReply { id: 77, series: series.clone() }) {
+            Msg::StatsReply { id, series: got } => {
+                assert_eq!(id, 77);
+                assert_eq!(got, series);
+            }
+            other => panic!("{other:?}"),
+        }
+        // empty registries are representable
+        match roundtrip(&Msg::StatsReply { id: 1, series: vec![] }) {
+            Msg::StatsReply { series, .. } => assert!(series.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_stats_bytes_never_panic() {
+        let mut buf = Vec::new();
+        let series = vec![("mm_kernel_ops_total".to_string(), 42u64)];
+        write_msg(&mut buf, &Msg::StatsReply { id: 3, series }).unwrap();
+        for cut in 0..buf.len() {
+            assert!(read_msg(&mut &buf[..cut]).is_err(), "cut at {cut}");
+        }
+        // a count field claiming more series than the payload can hold
+        let mut evil = vec![TAG_STATS_REPLY];
+        evil.extend_from_slice(&1u64.to_le_bytes());
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&evil).is_none());
+        // a name length pointing past the payload
+        let mut evil = vec![TAG_STATS_REPLY];
+        evil.extend_from_slice(&1u64.to_le_bytes());
+        evil.extend_from_slice(&1u32.to_le_bytes());
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&evil).is_none());
+        // invalid UTF-8 in a series name is refused, not lossily accepted
+        // (names are generated by our own exporter; garbage means a codec
+        // mismatch)
+        let mut evil = vec![TAG_STATS_REPLY];
+        evil.extend_from_slice(&1u64.to_le_bytes());
+        evil.extend_from_slice(&1u32.to_le_bytes());
+        evil.extend_from_slice(&2u32.to_le_bytes());
+        evil.extend_from_slice(&[0xFF, 0xFE]);
+        evil.extend_from_slice(&7u64.to_le_bytes());
+        assert!(decode(&evil).is_none());
+        // trailing garbage after a well-formed reply is refused
+        let mut ok = encode(&Msg::StatsReply { id: 2, series: vec![] });
+        ok.push(0);
+        assert!(decode(&ok).is_none());
     }
 
     #[test]

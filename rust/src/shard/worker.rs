@@ -383,6 +383,17 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
                     return;
                 }
             }
+            Msg::Stats { id } => {
+                // answered inline like PING: a registry snapshot is cheap
+                // and must not queue behind matching work
+                let reply = Msg::StatsReply {
+                    id,
+                    series: crate::obs::flatten(crate::obs::global()),
+                };
+                if proto::write_msg(&mut *writer.lock().unwrap(), &reply).is_err() {
+                    return;
+                }
+            }
             Msg::Exec(req) => {
                 // count the request before reading the next message: a
                 // pong sent for a later ping must already include it
@@ -395,6 +406,7 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
                     // silently: the OwnedCells guard inside handle_exec
                     // has already failed any cells it owned, and the
                     // coordinator gets an explicit error
+                    let started = std::time::Instant::now();
                     let reply = match std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| handle_exec(&state, &req)),
                     ) {
@@ -405,6 +417,8 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
                             message: "worker request panicked".into(),
                         },
                     };
+                    crate::obs_counter!("mm_worker_requests_total").inc();
+                    crate::obs_histogram!("mm_worker_exec_us").record_duration(started.elapsed());
                     let _ = proto::write_msg(&mut *writer.lock().unwrap(), &reply);
                     // decrement only after the reply hit the socket: a
                     // pong reporting zero in-flight therefore proves every
@@ -578,15 +592,23 @@ fn handle_exec(
             if values.contains_key(k) {
                 continue; // duplicate base in one request
             }
+            // every distinct base probes the slice store exactly once, so
+            // worker-wide: store hits + misses == bases probed (the CI
+            // metrics smoke asserts this across the scrape endpoint)
+            crate::obs_counter!("mm_worker_bases_probed_total").inc();
             if let Some(v) = ss.store.get(k, 0) {
+                crate::obs_counter!("mm_worker_store_hits_total").inc();
                 values.insert(*k, v);
             } else if let Some(cell) = inner.inflight.get(&(slice, *k)) {
+                crate::obs_counter!("mm_worker_store_misses_total").inc();
                 awaited.push((*k, cell.clone()));
             } else {
+                crate::obs_counter!("mm_worker_store_misses_total").inc();
                 inner.inflight.insert((slice, *k), Arc::new(Cell::default()));
                 owned.push(i);
             }
         }
+        crate::obs_gauge!("mm_worker_slice_stores").set(inner.slices.len() as u64);
     }
     let cached = values.len() as u32;
     let mut guard = OwnedCells {
@@ -830,6 +852,45 @@ mod tests {
             Msg::Pong { nonce, inflight } => assert_eq!((nonce, inflight), (42, 0)),
             other => panic!("expected PONG, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn stats_requests_snapshot_the_registry_inline() {
+        let w = worker(0x6008);
+        let graph_fp = w.fingerprint();
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &hello(graph_fp)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
+        // one exec so the probe counters have moved
+        let req = ExecRequest {
+            id: 1,
+            epoch: 0,
+            fingerprint: graph_fp,
+            lo: 0,
+            hi: 60,
+            patterns: vec![catalog::triangle(), catalog::path(3)],
+        };
+        proto::write_msg(&mut stream, &Msg::Exec(req)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Result(_)));
+        proto::write_msg(&mut stream, &Msg::Stats { id: 9 }).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::StatsReply { id, series } => {
+                assert_eq!(id, 9);
+                let get = |name: &str| {
+                    series.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+                };
+                // presence only (the registry is process-global and other
+                // tests in this binary move the same counters concurrently;
+                // strict hits+misses==probed is asserted by the CI smoke
+                // against an isolated worker process)
+                assert!(get("mm_worker_bases_probed_total").unwrap_or(0) >= 2);
+                assert!(get("mm_worker_requests_total").unwrap_or(0) >= 1);
+                assert!(get("mm_worker_exec_us_count").is_some());
+            }
+            other => panic!("expected STATS_REPLY, got {other:?}"),
+        }
+        drop(stream);
+        w.shutdown();
     }
 
     #[test]
