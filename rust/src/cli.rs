@@ -9,8 +9,8 @@
 //! morphmine gen     --dataset mico[:scale] --out <path>
 //! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits] [--trace] [--slow-query-ms N] [--cluster-stats]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--metrics <addr:port>] [--trace] [--slow-query-ms N] [--cluster-stats]
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits] [--trace] [--trace-tree] [--slow-query-ms N] [--metrics-dump <path>] [--cluster-stats]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--metrics <addr:port>] [--trace] [--trace-tree] [--slow-query-ms N] [--cluster-stats]
 //! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--slice i/k] [--metrics <addr:port>]
 //! morphmine store   <inspect|compact|purge|verify> --dir <dir> [--graph <spec>]
 //! ```
@@ -74,6 +74,21 @@
 //! worker's registry over proto v4 `STATS` and prints the combined
 //! cluster view (plain series sum by name, histogram buckets merge
 //! exactly), with percentiles re-derived from the merged buckets.
+//!
+//! Distributed tracing ([`crate::obs::trace`]): every served batch also
+//! carries a span tree under a process-unique trace id — one child per
+//! pipeline stage and, in sharded mode, one span per remote sub-slice
+//! with the worker's own spans (store probe, match) grafted underneath
+//! and failover / hedge / retry events as tagged siblings. `--trace-tree`
+//! (on `batch` / `serve`) renders the indented tree with per-span
+//! wall/self times; once a span tree exists, the `--trace` line derives
+//! its stage numbers from it, so the two renderings can never disagree.
+//! Finished traces land in the in-process flight recorder (the last few
+//! batches, slow ones pinned), which the `--metrics` listener serves as
+//! `/trace.json`. `--metrics-dump <path>` (on `batch` only) writes the
+//! final metric registry as JSON at exit — the one-shot counterpart of
+//! the scrape endpoint — and every registry carries a constant
+//! `mm_build_info{version,simd}` series identifying what produced it.
 
 use crate::coordinator::{Config, Coordinator};
 use crate::graph::io::load_spec;
@@ -276,11 +291,12 @@ fn ensure_no_shard_timing_flags(args: &Args) -> Result<()> {
 
 /// The observability flags are only meaningful where they act:
 /// `--metrics` binds a scrape endpoint, which only the long-lived serving
-/// processes have; `--trace` / `--slow-query-ms` render per-batch stage
-/// timings, which only the batch-serving front doors produce;
+/// processes have; `--trace` / `--trace-tree` / `--slow-query-ms` render
+/// per-batch timings, which only the batch-serving front doors produce;
 /// `--cluster-stats` sweeps shard-worker registries, which needs a
-/// coordinator. Reject them anywhere else so a typo'd deployment fails
-/// instead of silently not observing.
+/// coordinator; `--metrics-dump` is the one-shot exporter for the
+/// exits-when-done `batch` command. Reject them anywhere else so a
+/// typo'd deployment fails instead of silently not observing.
 fn ensure_obs_flags(args: &Args) -> Result<()> {
     let cmd = args.cmd.as_str();
     if !matches!(cmd, "serve" | "shard-worker") {
@@ -291,7 +307,7 @@ fn ensure_obs_flags(args: &Args) -> Result<()> {
         );
     }
     if !matches!(cmd, "batch" | "serve") {
-        for key in ["trace", "slow-query-ms"] {
+        for key in ["trace", "trace-tree", "slow-query-ms"] {
             ensure!(
                 args.get(key).is_none(),
                 "--{key} renders per-batch timings: it is accepted on `batch` and `serve` only"
@@ -301,6 +317,13 @@ fn ensure_obs_flags(args: &Args) -> Result<()> {
             args.get("cluster-stats").is_none(),
             "--cluster-stats aggregates shard-worker registries: it is accepted on \
              `batch` and `serve` (with --shards) only"
+        );
+    }
+    if cmd != "batch" {
+        ensure!(
+            args.get("metrics-dump").is_none(),
+            "--metrics-dump writes the registry once at exit: it is accepted on `batch` \
+             only (long-lived processes expose --metrics instead)"
         );
     }
     Ok(())
@@ -329,27 +352,49 @@ fn spawn_metrics_of(args: &Args) -> Result<()> {
 
 /// `--trace`: one line of per-batch stage wall times in pipeline order
 /// (stages a batch never entered are omitted; wall time outside the
-/// instrumented stages shows as `other`).
+/// instrumented stages shows as `other`). When the response carries a
+/// span tree the stage numbers are derived from it via
+/// [`crate::obs::Trace::stage_us`] — one timing source, so this line
+/// and `--trace-tree` can never disagree — and the [`PhaseProfile`]
+/// remains only as the fallback for trace-less responses.
+///
+/// [`PhaseProfile`]: crate::util::timer::PhaseProfile
 fn print_trace(r: &BatchResponse, elapsed: std::time::Duration) {
     const STAGES: [&str; 7] = ["plan", "probe", "match", "fuse", "convert", "stats", "persist"];
     let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
     print!("trace: epoch={} total={:.3}ms", r.epoch, ms(elapsed));
-    let mut known = std::time::Duration::ZERO;
-    for s in STAGES {
-        let d = r.profile.get(s);
-        if !d.is_zero() {
-            known += d;
-            print!(" {s}={:.3}ms", ms(d));
+    let mut known_ms = 0.0;
+    let mut stage = |name: &str, stage_ms: f64| {
+        if stage_ms > 0.0 {
+            known_ms += stage_ms;
+            print!(" {name}={stage_ms:.3}ms");
+        }
+    };
+    if let Some(root) = r.trace.root() {
+        for s in STAGES {
+            stage(s, r.trace.stage_us(s) as f64 / 1e3);
+        }
+        // stage names the builder recorded beyond the pipeline set (a
+        // future stage, a per-pattern profile entry) still show up
+        let mut seen: Vec<&str> = STAGES.to_vec();
+        for s in &r.trace.spans {
+            if s.parent == root.id && !seen.contains(&s.name.as_str()) {
+                seen.push(&s.name);
+                stage(&s.name, r.trace.stage_us(&s.name) as f64 / 1e3);
+            }
+        }
+    } else {
+        for s in STAGES {
+            stage(s, ms(r.profile.get(s)));
+        }
+        for (name, d) in r.profile.entries() {
+            if !STAGES.contains(&name.as_str()) {
+                stage(name, ms(*d));
+            }
         }
     }
-    for (name, d) in r.profile.entries() {
-        if !STAGES.contains(&name.as_str()) && !d.is_zero() {
-            known += *d;
-            print!(" {name}={:.3}ms", ms(*d));
-        }
-    }
-    if elapsed > known {
-        print!(" other={:.3}ms", ms(elapsed - known));
+    if ms(elapsed) > known_ms {
+        print!(" other={:.3}ms", ms(elapsed) - known_ms);
     }
     println!();
 }
@@ -509,6 +554,9 @@ fn coordinator_of(args: &Args) -> Result<Coordinator> {
 pub fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(&argv)?;
     ensure_obs_flags(&args)?;
+    // every process carries the build-info series, so any scrape,
+    // STATS_REPLY, or --metrics-dump identifies what produced it
+    crate::obs::register_build_info();
     match args.cmd.as_str() {
         "motifs" => {
             let c = coordinator_of(&args)?;
@@ -614,7 +662,18 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             ensure!(!texts.is_empty(), "--queries must name at least one query");
             let repeat = args.parse_num("repeat", 1usize)?.max(1);
             let trace = args.get("trace").is_some();
+            let trace_tree = args.get("trace-tree").is_some();
             let slow_ms = slow_query_ms_of(&args)?;
+            // --metrics-dump fails fast on an unwritable path, before any
+            // matching work; the registry is written once after the last round
+            let metrics_dump = match args.get("metrics-dump") {
+                Some(p) => {
+                    std::fs::File::create(p)
+                        .with_context(|| format!("--metrics-dump {p}: path is not writable"))?;
+                    Some(p.to_string())
+                }
+                None => None,
+            };
             ensure!(
                 args.get("cluster-stats").is_none() || args.get("shards").is_some(),
                 "--cluster-stats needs --shards a1|a2,… (it sweeps shard-worker registries)"
@@ -642,7 +701,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 if trace {
                     print_trace(&r, t.elapsed());
                 }
+                if trace_tree {
+                    print!("{}", r.trace.render_tree());
+                }
                 maybe_log_slow(slow_ms, t.elapsed(), spec, &r);
+                // the flight recorder always retains (pinning slow rounds),
+                // so /trace.json and post-mortems work without render flags
+                let slow = slow_ms.is_some_and(|th| t.elapsed().as_secs_f64() * 1e3 >= th as f64);
+                crate::obs::trace::recorder().record(r.trace.clone(), slow);
                 last = Some(r.stats);
             }
             let m = match (&coord, &svc) {
@@ -676,6 +742,12 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 );
                 ensure!(m.hits > 0, "store reported zero hits: {m:?}");
                 println!("warm-cache assertion passed ({} hits)", m.hits);
+            }
+            if let Some(path) = metrics_dump {
+                let doc = crate::obs::render_json(crate::obs::global());
+                std::fs::write(&path, &doc)
+                    .with_context(|| format!("writing --metrics-dump {path}"))?;
+                println!("metrics-dump: wrote {} bytes to {path}", doc.len());
             }
         }
         "shard-worker" => {
@@ -729,7 +801,15 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         }
         "serve" => {
             let trace = args.get("trace").is_some();
+            let trace_tree = args.get("trace-tree").is_some();
             let slow_ms = slow_query_ms_of(&args)?;
+            // batches served below feed the flight recorder unconditionally
+            // (slow ones pinned), so --metrics' /trace.json has evidence to
+            // serve even when neither render flag is set
+            let record = |r: &BatchResponse, elapsed: std::time::Duration| {
+                let slow = slow_ms.is_some_and(|th| elapsed.as_secs_f64() * 1e3 >= th as f64);
+                crate::obs::trace::recorder().record(r.trace.clone(), slow);
+            };
             if let Some(addrs) = args.get("shards") {
                 let cluster_stats = args.get("cluster-stats").is_some();
                 let mut coord = shard_coordinator_of(&args, addrs)?;
@@ -772,7 +852,11 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                             if trace {
                                 print_trace(&r, t.elapsed());
                             }
+                            if trace_tree {
+                                print!("{}", r.trace.render_tree());
+                            }
                             maybe_log_slow(slow_ms, t.elapsed(), text, &r);
+                            record(&r, t.elapsed());
                             print_shard_metrics(&coord);
                             if cluster_stats {
                                 print_cluster_stats(&mut coord);
@@ -846,7 +930,11 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                         if trace {
                             print_trace(&r, t.elapsed());
                         }
+                        if trace_tree {
+                            print!("{}", r.trace.render_tree());
+                        }
                         maybe_log_slow(slow_ms, t.elapsed(), text, &r);
+                        record(&r, t.elapsed());
                     }
                     Err(e) => eprintln!("error: {e:#}"),
                 }
@@ -1061,7 +1149,7 @@ mod tests {
         let shards = format!("{},{}", a.addr(), b.addr());
         run(argv(&format!(
             "batch --graph mico:tiny --queries motifs:3;cliques:3 --pmr naive --threads 2 \
-             --shards {shards} --repeat 2 --assert-warm-hits --trace --cluster-stats"
+             --shards {shards} --repeat 2 --assert-warm-hits --trace --trace-tree --cluster-stats"
         )))
         .unwrap();
         // --persist and --fsync-every belong on the workers in sharded mode
@@ -1224,10 +1312,19 @@ mod tests {
         ] {
             assert!(run(argv(cmd)).is_err(), "{cmd} must reject --metrics");
         }
-        // --trace / --slow-query-ms render batch timings: batch/serve only
+        // --trace / --trace-tree / --slow-query-ms render batch timings:
+        // batch/serve only
         assert!(run(argv("motifs --graph mico:tiny --size 3 --trace")).is_err());
+        assert!(run(argv("motifs --graph mico:tiny --size 3 --trace-tree")).is_err());
         assert!(run(argv("info --graph mico:tiny --slow-query-ms 5")).is_err());
         assert!(run(argv("store inspect --dir /tmp/nope --trace")).is_err());
+        assert!(run(argv("store inspect --dir /tmp/nope --trace-tree")).is_err());
+        // --metrics-dump is the one-shot batch exporter: nowhere else (on
+        // `serve` the rejection fires before the stdin loop is entered)
+        assert!(
+            run(argv("motifs --graph mico:tiny --size 3 --metrics-dump /tmp/x.json")).is_err()
+        );
+        assert!(run(argv("serve --graph mico:tiny --metrics-dump /tmp/x.json")).is_err());
         // bad threshold values fail fast, before any work
         assert!(run(argv(
             "batch --graph mico:tiny --queries motifs:3 --slow-query-ms wat"
@@ -1240,12 +1337,32 @@ mod tests {
         .is_err());
         assert!(run(argv("motifs --graph mico:tiny --cluster-stats")).is_err());
         // accepted where they act: a traced batch with threshold 0 logs
-        // every round and still answers
+        // every round, renders its span tree, and still answers
         run(argv(
             "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 \
-             --trace --slow-query-ms 0",
+             --trace --trace-tree --slow-query-ms 0",
         ))
         .unwrap();
+    }
+
+    #[test]
+    fn metrics_dump_writes_registry_json() {
+        // an unwritable path fails before any matching work happens
+        assert!(run(argv(
+            "batch --graph mico:tiny --queries motifs:3 --metrics-dump /nonexistent-dir/m.json"
+        ))
+        .is_err());
+        let out = std::env::temp_dir().join("mm_cli_metrics_dump.json");
+        let _ = std::fs::remove_file(&out);
+        run(argv(&format!(
+            "batch --graph mico:tiny --queries motifs:3 --pmr naive --threads 2 \
+             --metrics-dump {}",
+            out.display()
+        )))
+        .unwrap();
+        let doc = std::fs::read_to_string(&out).unwrap();
+        assert!(doc.trim_start().starts_with('{'), "{doc}");
+        assert!(doc.contains("mm_build_info"), "the dump must identify its producer: {doc}");
     }
 
     #[test]

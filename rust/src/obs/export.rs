@@ -15,8 +15,16 @@
 //!
 //! The scrape endpoint ([`spawn_scrape_listener`]) is a deliberately tiny
 //! HTTP/1.0 responder: read one request, answer text (or JSON for paths
-//! containing `json`), close. No routing, no keep-alive, no dependency —
+//! containing `json`, or the flight recorder's trace dump for paths
+//! containing `trace` — checked first, since `/trace.json` contains
+//! both), close. No routing, no keep-alive, no dependency —
 //! `curl http://addr/metrics` works and that is the whole contract.
+//!
+//! Renderers treat series names as *data, not markup*: the text form
+//! replaces ASCII control characters (a newline inside a label value
+//! could forge a whole extra series line) and the JSON form escapes
+//! quotes, backslashes, and control characters per RFC 8259 — hostile
+//! label values render escaped, never structurally.
 
 use super::registry::{Registry, Sample};
 use std::io::{Read, Write};
@@ -156,10 +164,15 @@ pub fn derive_quantiles(flat: &[(String, u64)]) -> Vec<(String, u64)> {
 }
 
 /// Render flat series as exposition text: one `name value` line each.
+/// Control characters in a name are replaced with `?` — a newline (or
+/// carriage return, or escape) inside a label value must not be able to
+/// forge extra lines in the exposition.
 pub fn render_pairs_text(pairs: &[(String, u64)]) -> String {
     let mut s = String::new();
     for (name, v) in pairs {
-        s.push_str(name);
+        for ch in name.chars() {
+            s.push(if ch.is_control() { '?' } else { ch });
+        }
         s.push(' ');
         s.push_str(&v.to_string());
         s.push('\n');
@@ -194,19 +207,35 @@ pub fn render_pairs_json(pairs: &[(String, u64)]) -> String {
         if i > 0 {
             s.push(',');
         }
-        s.push('"');
-        for ch in name.chars() {
-            match ch {
-                '"' => s.push_str("\\\""),
-                '\\' => s.push_str("\\\\"),
-                c => s.push(c),
-            }
-        }
-        s.push_str("\":");
+        json_escape_into(&mut s, name);
+        s.push(':');
         s.push_str(&v.to_string());
     }
     s.push('}');
     s
+}
+
+/// Append `s` as a quoted JSON string, escaping per RFC 8259: `"`, `\`,
+/// and every control character below U+0020 (`\n`/`\r`/`\t` get their
+/// short forms, the rest `\u00XX`). Shared by the metrics and trace
+/// renderers so one hardening covers both documents.
+pub(crate) fn json_escape_into(out: &mut String, s: &str) {
+    use std::fmt::Write;
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Answer one scrape connection: read the request head, write the
@@ -230,8 +259,12 @@ fn serve_scrape(mut conn: TcpStream, reg: &Registry) {
         }
     }
     let request_line = head.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    // `/trace.json` contains `json`, so the trace route is checked first
+    let trace = request_line.windows(5).any(|w| w == b"trace");
     let json = request_line.windows(4).any(|w| w == b"json");
-    let (body, ctype) = if json {
+    let (body, ctype) = if trace {
+        (super::trace::recorder().to_json(), "application/json")
+    } else if json {
         (render_json(reg), "application/json")
     } else {
         (render_text(reg), "text/plain; version=0.0.4")
@@ -244,9 +277,32 @@ fn serve_scrape(mut conn: TcpStream, reg: &Registry) {
     let _ = conn.flush();
 }
 
+/// Register the `mm_build_info{version="…",simd="on|off"}` constant-1
+/// series in the **global** registry (idempotent — the gauge is set, not
+/// summed, so repeated calls are harmless). It rides in every scrape and
+/// proto `STATS` reply, making a mixed-binary or mixed-SIMD-tier fleet
+/// visible in the aggregated cluster view: N workers on one build sum to
+/// exactly N; any other total means the fleet disagrees about what it is
+/// running.
+pub fn register_build_info() {
+    let simd = if crate::exec::intersect::simd_active() {
+        "on"
+    } else {
+        "off"
+    };
+    crate::obs::global()
+        .gauge(&format!(
+            "mm_build_info{{version=\"{}\",simd=\"{simd}\"}}",
+            env!("CARGO_PKG_VERSION")
+        ))
+        .set(1);
+}
+
 /// Bind `addr` and serve the **global** registry to every connection on a
-/// detached thread, forever. Returns the bound address (so `--metrics
-/// 127.0.0.1:0` reports the ephemeral port it got).
+/// detached thread, forever (paths containing `trace` serve the global
+/// flight recorder instead — see [`super::trace`]). Returns the bound
+/// address (so `--metrics 127.0.0.1:0` reports the ephemeral port it
+/// got).
 pub fn spawn_scrape_listener(addr: &str) -> std::io::Result<SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let bound = listener.local_addr()?;
@@ -372,6 +428,39 @@ mod tests {
     }
 
     #[test]
+    fn hostile_names_render_escaped_or_replaced() {
+        // label values are attacker-influenced in principle (worker
+        // addresses, file paths); the renderers must treat them as data
+        let evil = vec![
+            ("mm_x{label=\"quote\\\"here\"}".to_string(), 1u64),
+            ("mm_x{label=\"back\\\\slash\"}".to_string(), 2u64),
+            ("mm_x{label=\"new\nline\"} forged_series 999".to_string(), 3u64),
+            ("mm_x{label=\"tab\there\"}".to_string(), 4u64),
+            ("mm_x{label=\"esc\u{1b}[2J\"}".to_string(), 5u64),
+        ];
+        let text = render_pairs_text(&evil);
+        // exactly one line per series: the newline could not forge one
+        assert_eq!(text.lines().count(), evil.len(), "{text}");
+        assert!(!text.contains("forged_series 999\n"), "{text}");
+        assert!(text.contains("new?line"), "{text}");
+        assert!(text.contains("tab?here"), "{text}");
+        assert!(!text.contains('\u{1b}'), "{text}");
+        let json = render_pairs_json(&evil);
+        // structurally valid: no raw control bytes, quotes and
+        // backslashes escaped, braces only as literal characters inside
+        // strings (which escaping has made inert)
+        assert!(!json.contains('\n') && !json.contains('\t') && !json.contains('\u{1b}'), "{json}");
+        assert!(json.contains("quote\\\"here"), "{json}");
+        assert!(json.contains("back\\\\slash"), "{json}");
+        assert!(json.contains("new\\nline"), "{json}");
+        assert!(json.contains("esc\\u001b"), "{json}");
+        // every value still present and keyed
+        for (_, v) in &evil {
+            assert!(json.contains(&format!(":{v}")), "{json}");
+        }
+    }
+
+    #[test]
     fn scrape_listener_answers_http() {
         // exercises the listener end to end over loopback — but against
         // the process-global registry, so only presence is asserted
@@ -390,5 +479,34 @@ mod tests {
         conn.read_to_string(&mut resp).unwrap();
         assert!(resp.contains("application/json"), "{resp}");
         assert!(resp.contains("\"mm_scrape_selftest_total\":"), "{resp}");
+        // the trace route wins over the json substring it contains
+        let mut b = crate::obs::TraceBuilder::with_id(0x5CA1AB1E);
+        b.span(0, "batch", 0, 10, String::new());
+        crate::obs::trace::recorder().record(b.finish(), false);
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET /trace.json HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("application/json"), "{resp}");
+        assert!(resp.contains("\"recent\":["), "{resp}");
+        assert!(resp.contains("000000005ca1ab1e"), "{resp}");
+        assert!(!resp.contains("mm_scrape_selftest_total"), "{resp}");
+    }
+
+    #[test]
+    fn build_info_series_rides_every_exposition() {
+        register_build_info();
+        register_build_info(); // idempotent
+        let text = render_text(crate::obs::global());
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("mm_build_info{"))
+            .unwrap_or_else(|| panic!("no mm_build_info in {text}"));
+        assert!(line.ends_with(" 1"), "{line}");
+        assert!(line.contains(&format!("version=\"{}\"", env!("CARGO_PKG_VERSION"))), "{line}");
+        assert!(line.contains("simd=\"on\"") || line.contains("simd=\"off\""), "{line}");
+        // the flat STATS form carries it too
+        let flat = flatten(crate::obs::global());
+        assert!(flat.iter().any(|(n, v)| n.starts_with("mm_build_info{") && *v == 1));
     }
 }

@@ -19,11 +19,16 @@
 //!   per-request paths; percentiles are computed at read time.
 //! * [`span`] — scoped [`Span`] timers that record their elapsed time into
 //!   a histogram on drop (unwind-safe: a panicking request still counts).
+//! * [`trace`] — per-batch distributed [`Trace`]s: span trees assembled
+//!   across the shard fabric (proto v5 carries the trace context down and
+//!   the worker's child spans back up) plus the [`FlightRecorder`] that
+//!   retains recent and slow traces for `/trace.json` / `--trace-tree`.
 //! * [`export`] — Prometheus-style text + JSON exposition, the flat
 //!   summable series form the proto v4 `STATS` reply carries, cross-worker
 //!   aggregation (sums by name, re-derives percentiles from summed
 //!   buckets), and the plain-TCP scrape listener behind
-//!   `--metrics <addr>`.
+//!   `--metrics <addr>` (which also serves the flight recorder at
+//!   `/trace.json`).
 //!
 //! # Series naming scheme
 //!
@@ -45,13 +50,16 @@ pub mod export;
 pub mod hist;
 pub mod registry;
 pub mod span;
+pub mod trace;
 
 pub use export::{
-    aggregate, derive_quantiles, flatten, render_json, render_text, spawn_scrape_listener,
+    aggregate, derive_quantiles, flatten, register_build_info, render_json, render_text,
+    spawn_scrape_listener,
 };
 pub use hist::{HistSnapshot, Histogram};
 pub use registry::{global, Counter, Gauge, Registry, Sample};
 pub use span::Span;
+pub use trace::{FlightRecorder, SpanRecord, Trace, TraceBuilder};
 
 /// Cached global counter handle: expands to a `&'static`-lifetime lookup
 /// whose registry access happens once per call site.

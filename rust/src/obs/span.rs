@@ -7,6 +7,13 @@
 //! that only turns out to be slow at the end), [`Span::cancel`] discards
 //! the measurement and [`Span::finish`] ends it early and returns the
 //! elapsed time.
+//!
+//! Distinct from a *trace* span ([`super::trace::SpanRecord`]): a [`Span`]
+//! aggregates into a latency distribution and forgets the individual
+//! event; a trace span is the individual event, kept with its causal
+//! parent so one batch's tree can be reconstructed. The two are fed by
+//! the same measurements — a region worth a histogram is usually worth a
+//! node in the slow-query flight recorder too.
 
 use super::hist::Histogram;
 use std::sync::Arc;

@@ -1,0 +1,543 @@
+//! DISTRIBUTED TRACING — per-batch span trees and a slow-query flight
+//! recorder.
+//!
+//! The metrics registry ([`crate::obs::registry`]) answers "how much /
+//! how fast on average"; this module answers "*where did this batch's
+//! time go*". Every served batch gets a [`Trace`]: a process-unique
+//! trace id plus a tree of [`SpanRecord`]s — the batch root, one child
+//! per pipeline stage (plan / probe / match / fuse / convert / persist,
+//! from the same [`PhaseProfile`](crate::util::timer::PhaseProfile) the
+//! legacy `trace:` line reads), and on a sharded coordinator one span
+//! per remote sub-slice dispatch with the worker's own child spans
+//! (store probe, match) grafted underneath. Hedges, failovers, and
+//! retries appear as sibling spans with outcome tags, so the `fabric:`
+//! counters become causally attributed events.
+//!
+//! Propagation: the shard protocol (proto v5) carries the trace context
+//! downstream — EXEC holds `(trace_id, parent_span)` — and the worker's
+//! child spans ride back in RESULT with *reply-relative* parent indices
+//! ([`WIRE_PARENT_ROOT`] marks "attach to the dispatch span"). The
+//! coordinator renumbers them into its own span-id space when grafting,
+//! so span ids never need cross-process coordination.
+//!
+//! Tracing is **read-only**: spans observe timings that are measured
+//! anyway, no control-flow decision ever consults them, and the sharded
+//! fabric records them unconditionally (the worker already computes the
+//! per-request profile it previously discarded). Enabling or disabling
+//! the renderers therefore cannot change any count — CI re-asserts
+//! sharded counts byte-identical with tracing on and off.
+//!
+//! Retention: the process-global [`FlightRecorder`] keeps the last
+//! [`RING_CAPACITY`] complete traces in a ring and *pins* any trace
+//! whose batch blew `--slow-query-ms` (up to [`PINNED_CAPACITY`],
+//! oldest pin evicted first), so the evidence for a slow batch survives
+//! until someone looks: `--metrics`' HTTP listener serves the whole
+//! recorder as `/trace.json`, and `--trace-tree` renders the indented
+//! tree with per-span wall/self times as batches complete.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Reply-relative parent sentinel in proto v5 RESULT spans: "my parent
+/// is the coordinator's dispatch span for this sub-slice".
+pub const WIRE_PARENT_ROOT: u32 = u32::MAX;
+
+/// Complete traces kept in the flight-recorder ring (most recent wins).
+pub const RING_CAPACITY: usize = 16;
+
+/// Slow traces kept pinned (oldest pin evicted once full — a pin
+/// protects evidence, it must not become an unbounded leak).
+pub const PINNED_CAPACITY: usize = 32;
+
+/// One timed event in a trace. `start_us` is microseconds since the
+/// trace's root began (remote spans are offset by their dispatch time
+/// when grafted, so the whole tree shares one clock origin); `parent`
+/// is the parent span's id, `0` for the root. `tag` is a freeform
+/// `key=value …` detail string (worker address, slice bounds, outcome).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub parent: u64,
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tag: String,
+}
+
+/// A finished batch's span tree. Spans are stored flat (parents before
+/// children is typical but not required — the renderer resolves links
+/// by id), which keeps the wire and JSON forms trivial.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub trace_id: u64,
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Trace {
+    /// The root span (parent id 0), if the trace is non-empty.
+    pub fn root(&self) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.parent == 0)
+    }
+
+    /// Total wall time of a span minus the wall time of its direct
+    /// children — the time it spent working rather than delegating.
+    /// Children can overlap the parent (remote spans run concurrently),
+    /// so self time saturates at zero instead of going negative.
+    pub fn self_us(&self, span: &SpanRecord) -> u64 {
+        let children: u64 = self
+            .spans
+            .iter()
+            .filter(|s| s.parent == span.id && s.id != span.id)
+            .map(|s| s.dur_us)
+            .sum();
+        span.dur_us.saturating_sub(children)
+    }
+
+    /// Sum of the durations of a stage's direct children of the root by
+    /// name — the single timing source the legacy `trace:` line derives
+    /// its stage numbers from once a trace exists.
+    pub fn stage_us(&self, name: &str) -> u64 {
+        let Some(root) = self.root() else { return 0 };
+        self.spans
+            .iter()
+            .filter(|s| s.parent == root.id && s.name == name)
+            .map(|s| s.dur_us)
+            .sum()
+    }
+
+    /// Render the indented span tree, one span per line:
+    ///
+    /// ```text
+    /// trace 00000000000001a4 (2 spans)
+    ///   batch  wall=12.345ms self=0.100ms
+    ///     match  wall=12.245ms self=12.245ms  [outcome=ok]
+    /// ```
+    ///
+    /// Orphan spans (parent id absent — possible if a reply raced a
+    /// failure) are rendered at the end under an `orphans:` marker
+    /// rather than dropped: a trace renderer must never hide evidence.
+    pub fn render_tree(&self) -> String {
+        let mut out = format!("trace {:016x} ({} spans)\n", self.trace_id, self.spans.len());
+        let mut emitted = vec![false; self.spans.len()];
+        // roots first (parent 0), then depth-first by parent link
+        let mut stack: Vec<(usize, usize)> = Vec::new();
+        for (i, s) in self.spans.iter().enumerate().rev() {
+            if s.parent == 0 {
+                stack.push((i, 1));
+            }
+        }
+        while let Some((i, depth)) = stack.pop() {
+            if emitted[i] {
+                continue; // defensive: a span cycle must not hang the renderer
+            }
+            emitted[i] = true;
+            self.render_line(&mut out, &self.spans[i], depth);
+            let id = self.spans[i].id;
+            for (j, s) in self.spans.iter().enumerate().rev() {
+                if !emitted[j] && s.parent == id && s.id != id {
+                    stack.push((j, depth + 1));
+                }
+            }
+        }
+        if emitted.iter().any(|&e| !e) {
+            out.push_str("  orphans:\n");
+            for (i, s) in self.spans.iter().enumerate() {
+                if !emitted[i] {
+                    self.render_line(&mut out, s, 2);
+                }
+            }
+        }
+        out
+    }
+
+    fn render_line(&self, out: &mut String, s: &SpanRecord, depth: usize) {
+        use std::fmt::Write;
+        let ms = |us: u64| us as f64 / 1e3;
+        let _ = write!(
+            out,
+            "{:indent$}{}  wall={:.3}ms self={:.3}ms",
+            "",
+            s.name,
+            ms(s.dur_us),
+            ms(self.self_us(s)),
+            indent = depth * 2
+        );
+        if !s.tag.is_empty() {
+            let _ = write!(out, "  [{}]", s.tag);
+        }
+        out.push('\n');
+    }
+
+    /// JSON form of one trace (object with `trace_id` as a hex string
+    /// and a flat `spans` array). Strings go through the same hardened
+    /// escaping as the metrics exporter — worker addresses and outcome
+    /// tags are data, not markup.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write;
+        let mut out = format!(
+            "{{\"trace_id\":\"{:016x}\",\"spans\":[",
+            self.trace_id
+        );
+        for (i, s) in self.spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"id\":{},\"parent\":{},\"name\":",
+                s.id, s.parent
+            );
+            super::export::json_escape_into(&mut out, &s.name);
+            let _ = write!(out, ",\"start_us\":{},\"dur_us\":{},\"tag\":", s.start_us, s.dur_us);
+            super::export::json_escape_into(&mut out, &s.tag);
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Incrementally builds one trace: allocates span ids, records spans,
+/// and grafts remote (reply-relative) spans into the local id space.
+/// Single-threaded by design — the sharded coordinator already funnels
+/// every reply through one batch mutex, and the service layer builds
+/// its trace after the batch completes.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    trace: Trace,
+    next_id: u64,
+}
+
+impl TraceBuilder {
+    /// Start a trace with a fresh process-unique id.
+    pub fn new() -> TraceBuilder {
+        Self::with_id(next_trace_id())
+    }
+
+    /// Start a trace under an existing id (tests, resumed contexts).
+    pub fn with_id(trace_id: u64) -> TraceBuilder {
+        TraceBuilder {
+            trace: Trace {
+                trace_id,
+                spans: Vec::new(),
+            },
+            next_id: 1,
+        }
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.trace.trace_id
+    }
+
+    /// Record one span and return its id (parent `0` makes it a root).
+    pub fn span(
+        &mut self,
+        parent: u64,
+        name: &str,
+        start_us: u64,
+        dur_us: u64,
+        tag: String,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.trace.spans.push(SpanRecord {
+            id,
+            parent,
+            name: name.to_string(),
+            start_us,
+            dur_us,
+            tag,
+        });
+        id
+    }
+
+    /// Graft a remote reply's spans under `parent`: reply-relative
+    /// parent indices are renumbered into this trace's id space
+    /// ([`WIRE_PARENT_ROOT`] or any out-of-range index attaches to
+    /// `parent` — a malformed index degrades to a flatter tree, never
+    /// a panic or a dropped span), and `offset_us` (the dispatch time
+    /// of the sub-slice) shifts the remote clock onto the trace's.
+    pub fn graft(
+        &mut self,
+        parent: u64,
+        offset_us: u64,
+        remote: &[(u32, u64, u64, String, String)],
+    ) -> Vec<u64> {
+        let ids: Vec<u64> = remote
+            .iter()
+            .enumerate()
+            .map(|(i, _)| self.next_id + i as u64)
+            .collect();
+        self.next_id += remote.len() as u64;
+        for (i, (rel_parent, start_us, dur_us, name, tag)) in remote.iter().enumerate() {
+            let p = match ids.get(*rel_parent as usize) {
+                Some(&id) if *rel_parent as usize != i => id,
+                _ => parent,
+            };
+            self.trace.spans.push(SpanRecord {
+                id: ids[i],
+                parent: p,
+                name: name.clone(),
+                start_us: offset_us.saturating_add(*start_us),
+                dur_us: *dur_us,
+                tag: tag.clone(),
+            });
+        }
+        ids
+    }
+
+    /// Absorb spans that were built elsewhere against this trace's id
+    /// space (the shard pool collects its spans under the batch mutex
+    /// with ids allocated from [`TraceBuilder::reserve`]d ranges).
+    pub fn absorb(&mut self, spans: Vec<SpanRecord>) {
+        self.trace.spans.extend(spans);
+    }
+
+    /// Reserve `n` span ids for an external collector and return the
+    /// first — the collector owns `[first, first + n)`.
+    pub fn reserve(&mut self, n: u64) -> u64 {
+        let first = self.next_id;
+        self.next_id += n;
+        first
+    }
+
+    pub fn finish(self) -> Trace {
+        self.trace
+    }
+}
+
+impl Default for TraceBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(0);
+
+/// Process-unique trace id: wall-clock seconds at first use in the high
+/// bits (so ids from different processes almost never collide and sort
+/// roughly by time), a process-local counter in the low bits (so ids
+/// within a process never collide). Zero is reserved for "no trace".
+pub fn next_trace_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    let seed = *SEED.get_or_init(|| {
+        let secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(1);
+        (secs & 0xFFFF_FFFF) << 24
+    });
+    let n = NEXT_TRACE.fetch_add(1, Ordering::Relaxed) + 1;
+    (seed | (n & 0xFF_FFFF)).max(1)
+}
+
+/// Lock-protected retention for finished traces: a ring of the most
+/// recent [`RING_CAPACITY`] plus a pinned shelf for slow batches (see
+/// module docs). `Arc`-shared so a snapshot never copies span vectors.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    inner: Mutex<Shelves>,
+}
+
+#[derive(Debug, Default)]
+struct Shelves {
+    ring: VecDeque<Arc<Trace>>,
+    pinned: VecDeque<Arc<Trace>>,
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    /// Retain a finished trace; `pin` marks it slow (kept on the pinned
+    /// shelf past ring eviction). Poisoned-lock recovery: a panicking
+    /// recorder user must not take batch serving down with it.
+    pub fn record(&self, trace: Trace, pin: bool) -> Arc<Trace> {
+        let trace = Arc::new(trace);
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.ring.push_back(Arc::clone(&trace));
+        while g.ring.len() > RING_CAPACITY {
+            g.ring.pop_front();
+        }
+        if pin {
+            g.pinned.push_back(Arc::clone(&trace));
+            while g.pinned.len() > PINNED_CAPACITY {
+                g.pinned.pop_front();
+            }
+        }
+        trace
+    }
+
+    /// `(recent, pinned)`, oldest first in both.
+    pub fn snapshot(&self) -> (Vec<Arc<Trace>>, Vec<Arc<Trace>>) {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        (g.ring.iter().cloned().collect(), g.pinned.iter().cloned().collect())
+    }
+
+    /// The `/trace.json` document: `{"recent": […], "pinned": […]}`.
+    pub fn to_json(&self) -> String {
+        let (recent, pinned) = self.snapshot();
+        let join = |ts: &[Arc<Trace>]| {
+            ts.iter().map(|t| t.to_json()).collect::<Vec<_>>().join(",")
+        };
+        format!(
+            "{{\"recent\":[{}],\"pinned\":[{}]}}",
+            join(&recent),
+            join(&pinned)
+        )
+    }
+}
+
+/// The process-global flight recorder (`/trace.json` serves this one).
+pub fn recorder() -> &'static FlightRecorder {
+    static GLOBAL: OnceLock<FlightRecorder> = OnceLock::new();
+    GLOBAL.get_or_init(FlightRecorder::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_trace(id: u64) -> Trace {
+        let mut b = TraceBuilder::with_id(id);
+        let root = b.span(0, "batch", 0, 1000, String::new());
+        let m = b.span(root, "match", 100, 800, String::new());
+        b.span(m, "slice", 120, 300, "worker=\"a:1\" outcome=ok".into());
+        b.finish()
+    }
+
+    #[test]
+    fn builder_allocates_unique_ids_and_links_parents() {
+        let t = toy_trace(7);
+        assert_eq!(t.trace_id, 7);
+        assert_eq!(t.spans.len(), 3);
+        let root = t.root().unwrap();
+        assert_eq!(root.name, "batch");
+        let ids: std::collections::HashSet<u64> = t.spans.iter().map(|s| s.id).collect();
+        assert_eq!(ids.len(), 3, "span ids are unique");
+        assert_eq!(t.stage_us("match"), 800);
+        assert_eq!(t.stage_us("nope"), 0);
+        // self time: batch delegated 800 of its 1000, match 300 of 800
+        assert_eq!(t.self_us(root), 200);
+        let m = t.spans.iter().find(|s| s.name == "match").unwrap();
+        assert_eq!(t.self_us(m), 500);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn render_tree_indents_and_keeps_orphans() {
+        let mut t = toy_trace(0xAB);
+        let out = t.render_tree();
+        assert!(out.starts_with("trace 00000000000000ab (3 spans)\n"), "{out}");
+        assert!(out.contains("\n  batch  wall=1.000ms self=0.200ms\n"), "{out}");
+        assert!(out.contains("\n    match  wall=0.800ms"), "{out}");
+        assert!(out.contains("\n      slice  wall=0.300ms"), "{out}");
+        assert!(out.contains("[worker=\"a:1\" outcome=ok]"), "{out}");
+        assert!(!out.contains("orphans"), "{out}");
+        // a span whose parent id does not exist still renders
+        t.spans.push(SpanRecord {
+            id: 99,
+            parent: 42,
+            name: "lost".into(),
+            start_us: 0,
+            dur_us: 5,
+            tag: String::new(),
+        });
+        let out = t.render_tree();
+        assert!(out.contains("orphans:"), "{out}");
+        assert!(out.contains("lost"), "{out}");
+    }
+
+    #[test]
+    fn graft_renumbers_remote_parents_and_offsets_clocks() {
+        let mut b = TraceBuilder::with_id(1);
+        let root = b.span(0, "batch", 0, 100, String::new());
+        let slice = b.span(root, "slice", 10, 80, String::new());
+        // remote reply: span 0 is the worker's probe (parent = dispatch
+        // span), span 1 is its match nested under span 0
+        let remote = vec![
+            (WIRE_PARENT_ROOT, 0u64, 30u64, "probe".to_string(), String::new()),
+            (0u32, 5u64, 20u64, "match".to_string(), "tier=avx2".to_string()),
+        ];
+        let ids = b.graft(slice, 10, &remote);
+        let t = b.finish();
+        let probe = t.spans.iter().find(|s| s.name == "probe").unwrap();
+        let mat = t.spans.iter().find(|s| s.name == "match").unwrap();
+        assert_eq!(probe.parent, slice);
+        assert_eq!(probe.start_us, 10, "offset by dispatch time");
+        assert_eq!(mat.parent, ids[0], "reply-relative index renumbered");
+        assert_eq!(mat.start_us, 15);
+        assert_eq!(mat.tag, "tier=avx2");
+        // out-of-range and self-referential parents degrade to `parent`
+        let mut b = TraceBuilder::with_id(2);
+        let root = b.span(0, "batch", 0, 1, String::new());
+        let ids = b.graft(
+            root,
+            0,
+            &[
+                (7u32, 0, 1, "evil".to_string(), String::new()),
+                (1u32, 0, 1, "selfish".to_string(), String::new()),
+            ],
+        );
+        let t = b.finish();
+        assert!(t
+            .spans
+            .iter()
+            .all(|s| s.parent == root || s.parent == 0 || ids.contains(&s.parent)));
+        assert_eq!(t.spans.iter().find(|s| s.name == "evil").unwrap().parent, root);
+        assert_eq!(t.spans.iter().find(|s| s.name == "selfish").unwrap().parent, root);
+    }
+
+    #[test]
+    fn json_escapes_hostile_tags() {
+        let mut b = TraceBuilder::with_id(3);
+        b.span(0, "na\"me\\", 0, 1, "tag\nwith {braces}".into());
+        let json = b.finish().to_json();
+        assert!(json.contains("\"trace_id\":\"0000000000000003\""), "{json}");
+        assert!(json.contains("\"na\\\"me\\\\\""), "{json}");
+        assert!(json.contains("\\n"), "{json}");
+        assert!(!json.contains('\n'), "raw newline must never reach the document");
+    }
+
+    #[test]
+    fn flight_recorder_rings_and_pins() {
+        let rec = FlightRecorder::new();
+        for i in 0..(RING_CAPACITY as u64 + 4) {
+            rec.record(toy_trace(i + 1), false);
+        }
+        let (recent, pinned) = rec.snapshot();
+        assert_eq!(recent.len(), RING_CAPACITY);
+        assert!(pinned.is_empty());
+        // oldest were evicted, newest survive
+        assert_eq!(recent.last().unwrap().trace_id, RING_CAPACITY as u64 + 4);
+        assert!(recent.iter().all(|t| t.trace_id > 4));
+        // a pinned slow trace survives arbitrarily many later records
+        let slow = rec.record(toy_trace(0xDEAD), true);
+        for i in 0..(RING_CAPACITY as u64 + 4) {
+            rec.record(toy_trace(1000 + i), false);
+        }
+        let (recent, pinned) = rec.snapshot();
+        assert!(recent.iter().all(|t| t.trace_id != 0xDEAD));
+        assert_eq!(pinned.len(), 1);
+        assert_eq!(pinned[0].trace_id, slow.trace_id);
+        // the pinned shelf is bounded too
+        for i in 0..(PINNED_CAPACITY as u64 + 8) {
+            rec.record(toy_trace(2000 + i), true);
+        }
+        let (_, pinned) = rec.snapshot();
+        assert_eq!(pinned.len(), PINNED_CAPACITY);
+        assert!(pinned.iter().all(|t| t.trace_id != 0xDEAD), "oldest pin evicted");
+        let json = rec.to_json();
+        assert!(json.starts_with("{\"recent\":["), "{json}");
+        assert!(json.contains("\"pinned\":["), "{json}");
+    }
+}

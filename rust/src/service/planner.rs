@@ -222,6 +222,13 @@ impl QueryPlanner {
     /// that terminal case still fails the whole batch loudly. The store
     /// is untouched by a failed batch, so a retry (or a local fallback
     /// via [`QueryPlanner::serve_batch`]) starts from the same state.
+    ///
+    /// Tracing rides through transparently: if the caller armed the pool
+    /// with [`crate::shard::ShardPool::set_trace`], the `match` stage's
+    /// fan-out carries the trace context in every EXEC and the pool
+    /// collects the fabric's spans for the caller to drain — this method
+    /// neither reads nor alters them, so traced and untraced batches
+    /// compute identical results.
     #[allow(clippy::too_many_arguments)]
     pub fn serve_batch_sharded(
         &self,

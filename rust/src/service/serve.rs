@@ -46,6 +46,7 @@ use super::store::{ResultStore, StoreMetrics};
 use crate::coordinator::query::Query;
 use crate::graph::{DataGraph, DynGraph, GraphFingerprint, GraphStats, Relabeling, VertexId};
 use crate::morph::Policy;
+use crate::obs::{Trace, TraceBuilder};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
 use crate::util::timer::PhaseProfile;
@@ -137,6 +138,13 @@ pub struct BatchResponse {
     pub epoch: u64,
     /// Phase breakdown (plan / probe / fuse / match / convert / persist).
     pub profile: PhaseProfile,
+    /// The batch's span tree: a root `batch` span with one child per
+    /// pipeline stage, and — on the sharded path — one child per remote
+    /// sub-slice under the `match` stage, with the worker's own phase
+    /// spans grafted beneath (proto v5). Always populated; rendering and
+    /// retention are the caller's choice (`--trace-tree`, the flight
+    /// recorder, `/trace.json`).
+    pub trace: Trace,
 }
 
 /// Completion cell for one in-flight base computation: owners fill it
@@ -713,6 +721,7 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
     let results = to_query_results(queries, &spans, &vals);
     crate::obs_histogram!("mm_service_batch_us").record_duration(batch_start.elapsed());
 
+    let trace = build_batch_trace(&profile, batch_start.elapsed(), queries.len(), epoch);
     BatchResponse {
         results,
         stats: BatchStats {
@@ -724,7 +733,37 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
         },
         epoch,
         profile,
+        trace,
     }
+}
+
+/// Assemble one batch's span tree from its phase profile: a root `batch`
+/// span covering the whole wall time with one child per pipeline stage,
+/// laid out sequentially — the profile records durations, not
+/// timestamps, and the stages run in order. The sharded coordinator
+/// builds its richer tree (remote sub-slice spans, failovers, hedges)
+/// itself; this is the single-process shape.
+pub(crate) fn build_batch_trace(
+    profile: &PhaseProfile,
+    total: std::time::Duration,
+    queries: usize,
+    epoch: u64,
+) -> Trace {
+    let mut tb = TraceBuilder::new();
+    let batch_span = tb.span(
+        0,
+        "batch",
+        0,
+        total.as_micros() as u64,
+        format!("queries={queries} epoch={epoch}"),
+    );
+    let mut clock_us = 0u64;
+    for (name, d) in profile.entries() {
+        let dur_us = d.as_micros() as u64;
+        tb.span(batch_span, name, clock_us, dur_us, String::new());
+        clock_us += dur_us;
+    }
+    tb.finish()
 }
 
 /// Convert composed per-pattern **map counts** (aligned with the batch's

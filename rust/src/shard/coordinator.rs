@@ -60,7 +60,7 @@
 
 use super::proto::{self, ExecRequest, ExecResponse, Msg};
 use crate::graph::{DataGraph, GraphFingerprint};
-use crate::obs::{Counter, Registry};
+use crate::obs::{Counter, Registry, SpanRecord};
 use crate::pattern::canon::CanonKey;
 use crate::pattern::Pattern;
 use crate::util::rng::splitmix64;
@@ -491,6 +491,17 @@ impl WorkerSlot {
     }
 }
 
+/// Trace context armed for one batch (see [`ShardPool::set_trace`]):
+/// the wire context every EXEC carries down, plus the id range and time
+/// base the batch's coordinator-side spans are built against.
+#[derive(Clone, Copy, Debug)]
+struct TraceCtx {
+    trace_id: u64,
+    parent_span: u64,
+    id_base: u64,
+    epoch: Instant,
+}
+
 /// What one replica answered for a verified read, parked until a sibling
 /// answers the duplicate and the two can be compared.
 struct PendingRead {
@@ -546,6 +557,17 @@ struct WorkState {
     /// Unrecoverable batch failure (dead group, verify mismatch): every
     /// member thread drains out as soon as it observes this.
     fatal: Option<String>,
+    /// Coordinator-side spans of the batch's distributed trace: one per
+    /// served sub-slice copy (the worker's phase spans grafted beneath),
+    /// plus failover / re-fan / retry event spans. Appended under the
+    /// batch mutex; drained by [`ShardPool::take_spans`].
+    trace_spans: Vec<SpanRecord>,
+    /// Next span id, allocated upward from the embedder's reserved base.
+    trace_next: u64,
+    /// Parent span id every top-level pool span hangs under.
+    trace_parent: u64,
+    /// The trace's birth instant — all span clocks are relative to it.
+    trace_epoch: Instant,
 }
 
 struct Batch {
@@ -576,6 +598,12 @@ pub struct ShardPool {
     config: PoolConfig,
     next_id: u64,
     counters: PoolCounters,
+    /// Trace context armed for the next batch (consumed by
+    /// [`ShardPool::execute_bases`]).
+    trace_ctx: Option<TraceCtx>,
+    /// Spans collected by the most recent batch, drained by
+    /// [`ShardPool::take_spans`].
+    last_spans: Vec<SpanRecord>,
 }
 
 impl ShardPool {
@@ -694,6 +722,8 @@ impl ShardPool {
             config,
             next_id: 0,
             counters,
+            trace_ctx: None,
+            last_spans: Vec::new(),
         })
     }
 
@@ -768,6 +798,33 @@ impl ShardPool {
         self.config
     }
 
+    /// Arm the distributed-trace context for the **next**
+    /// [`ShardPool::execute_bases`] call: every EXEC of that batch
+    /// carries `(trace_id, parent_span)` down the wire (proto v5), and
+    /// the spans the batch collects — one per served sub-slice copy with
+    /// the worker's phase spans grafted beneath, plus failover / re-fan /
+    /// retry event spans — are parented under `parent_span`. Span ids are
+    /// allocated upward from `id_base` (reserve a generous range with
+    /// [`crate::obs::TraceBuilder::reserve`] so they never collide with
+    /// the embedder's own ids) and clocks are measured from `epoch`, the
+    /// trace's birth instant. Tracing is passive: it never changes what a
+    /// batch computes, only what it reports.
+    pub fn set_trace(&mut self, trace_id: u64, parent_span: u64, id_base: u64, epoch: Instant) {
+        self.trace_ctx = Some(TraceCtx {
+            trace_id,
+            parent_span,
+            id_base,
+            epoch,
+        });
+    }
+
+    /// Drain the spans collected by the most recent batch (empty if none
+    /// ran since the last drain). Spans survive batch failure on purpose
+    /// — the trace of a batch that died is exactly the one worth reading.
+    pub fn take_spans(&mut self) -> Vec<SpanRecord> {
+        std::mem::take(&mut self.last_spans)
+    }
+
     /// Match the subset of `base` selected by `indices` across the pool
     /// and return **full-graph** map counts per canonical key: sub-slices
     /// are dealt to workers from a shared queue, each worker runs the same
@@ -816,6 +873,15 @@ impl ShardPool {
             });
         }
         let remaining = slices.len();
+        // tracing is always on: spans are byproducts of instants the
+        // fabric reads anyway, and an unarmed batch just gets the
+        // untraced wire context (trace_id 0) with ids from 1
+        let trace = self.trace_ctx.take().unwrap_or(TraceCtx {
+            trace_id: 0,
+            parent_span: 0,
+            id_base: 1,
+            epoch: Instant::now(),
+        });
         let batch = Batch {
             work: Mutex::new(WorkState {
                 queues,
@@ -827,6 +893,10 @@ impl ShardPool {
                 delta: ShardMetrics::default(),
                 failures: Vec::new(),
                 fatal: None,
+                trace_spans: Vec::new(),
+                trace_next: trace.id_base,
+                trace_parent: trace.parent_span,
+                trace_epoch: trace.epoch,
             }),
             changed: Condvar::new(),
         };
@@ -856,6 +926,8 @@ impl ShardPool {
                             replicated,
                             hedge,
                             slot_id,
+                            trace_id: trace.trace_id,
+                            trace_parent: trace.parent_span,
                         };
                         run_member(slot, &ctx)
                     });
@@ -865,6 +937,7 @@ impl ShardPool {
         }
         let state = batch.work.into_inner().expect("batch threads joined");
         self.counters.absorb(&state.delta);
+        self.last_spans = state.trace_spans;
         if let Some(fatal) = state.fatal {
             self.counters.errors.inc();
             let detail = if state.failures.is_empty() {
@@ -930,6 +1003,71 @@ struct MemberCtx<'a> {
     /// Whether this member may hedge stragglers (its group has siblings).
     hedge: bool,
     slot_id: usize,
+    /// Trace context stamped into every EXEC this batch sends (proto v5).
+    trace_id: u64,
+    trace_parent: u64,
+}
+
+/// Append one coordinator-side span under the batch's trace parent and
+/// return its id. Called under the batch mutex.
+fn push_span(w: &mut WorkState, name: String, start_us: u64, dur_us: u64, tag: String) -> u64 {
+    let id = w.trace_next;
+    w.trace_next += 1;
+    let parent = w.trace_parent;
+    w.trace_spans.push(SpanRecord {
+        id,
+        parent,
+        name,
+        start_us,
+        dur_us,
+        tag,
+    });
+    id
+}
+
+/// Record the span for one served sub-slice copy — coordinator-side wall
+/// clock from dispatch to reply, tagged with the serving worker and the
+/// race outcome — and graft the worker's own phase spans beneath it
+/// (reply-relative parent indices renumbered into the batch's id range,
+/// remote clocks shifted by the dispatch offset onto the trace's
+/// timeline). Late hedge losers are recorded too, tagged as such: the
+/// worker really did spend that time.
+fn record_slice_span(
+    w: &mut WorkState,
+    addr: &str,
+    idx: usize,
+    sent: Instant,
+    el: Duration,
+    outcome: &str,
+    remote: &[proto::WireSpan],
+) {
+    let (lo, hi) = (w.slices[idx].lo, w.slices[idx].hi);
+    let start_us = sent.saturating_duration_since(w.trace_epoch).as_micros() as u64;
+    let slice_span = push_span(
+        w,
+        format!("slice {lo}-{hi}"),
+        start_us,
+        el.as_micros() as u64,
+        format!("worker={addr} outcome={outcome}"),
+    );
+    let first = w.trace_next;
+    w.trace_next += remote.len() as u64;
+    for (i, rs) in remote.iter().enumerate() {
+        let rel = rs.rel_parent as usize;
+        let parent = if rel < remote.len() && rel != i {
+            first + rel as u64
+        } else {
+            slice_span
+        };
+        w.trace_spans.push(SpanRecord {
+            id: first + i as u64,
+            parent,
+            name: rs.name.clone(),
+            start_us: start_us.saturating_add(rs.start_us),
+            dur_us: rs.dur_us,
+            tag: rs.tag.clone(),
+        });
+    }
 }
 
 /// One member's batch loop: deal admissible sub-slices into the pipeline
@@ -986,6 +1124,8 @@ fn run_member(slot: &mut WorkerSlot, ctx: &MemberCtx<'_>) {
                 fingerprint: ctx.fingerprint,
                 lo,
                 hi,
+                trace_id: ctx.trace_id,
+                parent_span: ctx.trace_parent,
                 patterns: ctx.patterns.to_vec(),
             };
             let client = slot.client.as_mut().expect("checked live above");
@@ -1146,7 +1286,12 @@ fn merge_reply(
     // Service time from dispatch to reply, even for late hedge losers —
     // the worker really did spend that long. Labels stay bounded: one
     // series per worker address, one per fixed sub-slice boundary.
-    if let Some(&(_, sent)) = w.slices[idx].inflight.iter().find(|&&(s, _)| s == m) {
+    let dispatched = w.slices[idx]
+        .inflight
+        .iter()
+        .find(|&&(s, _)| s == m)
+        .map(|&(_, sent)| sent);
+    if let Some(sent) = dispatched {
         let el = sent.elapsed();
         let (lo, hi) = (w.slices[idx].lo, w.slices[idx].hi);
         let reg = crate::obs::global();
@@ -1160,6 +1305,9 @@ fn merge_reply(
         // already merged exactly once — drop the duplicate
         inflight.remove(&resp.id);
         w.slices[idx].inflight.retain(|&(s, _)| s != m);
+        if let Some(sent) = dispatched {
+            record_slice_span(&mut w, addr, idx, sent, sent.elapsed(), "hedge-loser", &resp.spans);
+        }
         return None;
     }
     let mut seen: HashSet<CanonKey> = HashSet::with_capacity(resp.values.len());
@@ -1178,6 +1326,16 @@ fn merge_reply(
     }
     inflight.remove(&resp.id);
     w.slices[idx].inflight.retain(|&(s, _)| s != m);
+    if let Some(sent) = dispatched {
+        // a duplicate still running a non-verify slice means we just won
+        // a hedge race; verify duplicates are expected pairs, not races
+        let outcome = if !w.slices[idx].verify && !w.slices[idx].inflight.is_empty() {
+            "hedge-winner"
+        } else {
+            "ok"
+        };
+        record_slice_span(&mut w, addr, idx, sent, sent.elapsed(), outcome, &resp.spans);
+    }
     if !w.slices[idx].verify {
         finish_slice(&mut w, ctx.batch, idx, resp.served_from_store, &resp.values, ctx.distinct);
         return None;
@@ -1275,14 +1433,35 @@ fn fail_member(
             w.queues[q].push_back(idx);
             lost += 1;
         }
+        // the failure shows up in the batch's trace as an event span
+        // (zero duration, timestamped at detection) named after the
+        // recovery path taken — failover to a sibling vs re-fan to the
+        // surviving unreplicated workers
+        let at_us = Instant::now()
+            .saturating_duration_since(w.trace_epoch)
+            .as_micros() as u64;
         if ctx.replicated {
             if sibling_alive {
                 w.delta.failovers += lost;
+                push_span(
+                    &mut w,
+                    "failover".into(),
+                    at_us,
+                    0,
+                    format!("worker={} slices={lost}", slot.addr),
+                );
             }
             counted = !sibling_alive;
             w.retrying[q] += 1;
         } else {
             w.delta.refanned += lost;
+            push_span(
+                &mut w,
+                "refan".into(),
+                at_us,
+                0,
+                format!("worker={} slices={lost}", slot.addr),
+            );
             counted = true;
         }
         ctx.batch.changed.notify_all();
@@ -1302,7 +1481,18 @@ fn fail_member(
             let frac = (splitmix64(jitter) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
             std::thread::sleep(base.mul_f64(0.5 + frac));
             if counted {
-                ctx.batch.work.lock().unwrap().delta.retries += 1;
+                let mut w = ctx.batch.work.lock().unwrap();
+                w.delta.retries += 1;
+                let at_us = Instant::now()
+                    .saturating_duration_since(w.trace_epoch)
+                    .as_micros() as u64;
+                push_span(
+                    &mut w,
+                    "retry".into(),
+                    at_us,
+                    0,
+                    format!("worker={} attempt={}", slot.addr, attempt + 1),
+                );
             }
             if let Ok(c) = slot.reconnect(cfg, ctx.fingerprint) {
                 slot.client = Some(c);
@@ -1589,6 +1779,43 @@ mod tests {
             format!("{err:#}").contains("replicated topology"),
             "{err:#}"
         );
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    #[test]
+    fn batch_spans_cover_every_sub_slice() {
+        let (workers, addrs) = spawn_workers(0x700A, 2);
+        let g = erdos_renyi(70, 260, 0x700A);
+        let mut pool = ShardPool::connect(&addrs, &g).unwrap();
+        let base = vec![catalog::triangle(), catalog::path(3)];
+        let indices: Vec<usize> = (0..base.len()).collect();
+        pool.set_trace(0xDEAD_BEEF, 42, 1000, Instant::now());
+        pool.execute_bases(&base, &indices, 0).unwrap();
+        let spans = pool.take_spans();
+        let slices: Vec<&SpanRecord> =
+            spans.iter().filter(|s| s.name.starts_with("slice ")).collect();
+        assert_eq!(
+            slices.len(),
+            pool.num_sub_slices(),
+            "one span per served sub-slice: {spans:?}"
+        );
+        for s in &slices {
+            assert_eq!(s.parent, 42, "slice spans hang under the armed parent");
+            assert!(s.id >= 1000, "ids come from the reserved range: {}", s.id);
+            assert!(s.tag.contains("outcome=ok"), "{}", s.tag);
+            assert!(
+                spans.iter().any(|c| c.parent == s.id && c.name == "probe"),
+                "slice span {} has the worker's probe grafted beneath it",
+                s.id
+            );
+        }
+        // the drain is a drain, and an unarmed batch collects afresh
+        assert!(pool.take_spans().is_empty());
+        pool.execute_bases(&base, &indices, 0).unwrap();
+        assert!(!pool.take_spans().is_empty(), "tracing is always on");
+        drop(pool);
         for w in workers {
             w.shutdown();
         }

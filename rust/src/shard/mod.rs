@@ -342,7 +342,12 @@ impl ShardCoordinator {
         self.call_parsed(&parsed)
     }
 
-    /// Serve one pre-parsed batch.
+    /// Serve one pre-parsed batch. The batch gets a fresh trace id and a
+    /// span tree that spans the whole fabric: a root `batch` span, one
+    /// child per pipeline stage, and under the `match` stage one span per
+    /// remote sub-slice (the worker's own phase spans grafted beneath,
+    /// carried back in the proto v5 RESULT) plus failover / hedge / retry
+    /// event spans with outcome tags.
     pub fn call_parsed(&mut self, queries: &[ServiceQuery]) -> Result<BatchResponse> {
         let mut flat = Vec::new();
         let mut spans = Vec::with_capacity(queries.len());
@@ -351,6 +356,18 @@ impl ShardCoordinator {
             flat.extend(q.patterns.iter().cloned());
             spans.push((start, flat.len()));
         }
+        // fixed span-id layout for the batch's trace: 1 is the root batch
+        // span, 2 is the match stage (the parent every fabric span hangs
+        // under — it must be known before the batch runs, so the pool can
+        // parent its spans while replies land), the other stages follow,
+        // and the pool allocates upward from TRACE_POOL_BASE, comfortably
+        // past the handful of stage spans
+        const TRACE_ROOT: u64 = 1;
+        const TRACE_MATCH: u64 = 2;
+        const TRACE_POOL_BASE: u64 = 64;
+        let trace_id = crate::obs::trace::next_trace_id();
+        let started = std::time::Instant::now();
+        self.pool.set_trace(trace_id, TRACE_MATCH, TRACE_POOL_BASE, started);
         let mut profile = PhaseProfile::new();
         let (vals, stats) = self.planner.serve_batch_sharded(
             &flat,
@@ -360,11 +377,44 @@ impl ShardCoordinator {
             &mut self.pool,
             &mut profile,
         )?;
+        let mut records = vec![crate::obs::SpanRecord {
+            id: TRACE_ROOT,
+            parent: 0,
+            name: "batch".into(),
+            start_us: 0,
+            dur_us: started.elapsed().as_micros() as u64,
+            tag: format!("queries={} epoch=0 shards={}", queries.len(), self.pool.num_shards()),
+        }];
+        let mut next_id = TRACE_MATCH + 1;
+        let mut clock_us = 0u64;
+        for (name, d) in profile.entries() {
+            let dur_us = d.as_micros() as u64;
+            let id = if name == "match" {
+                TRACE_MATCH
+            } else {
+                next_id += 1;
+                next_id - 1
+            };
+            records.push(crate::obs::SpanRecord {
+                id,
+                parent: TRACE_ROOT,
+                name: name.clone(),
+                start_us: clock_us,
+                dur_us,
+                tag: String::new(),
+            });
+            clock_us += dur_us;
+        }
+        records.extend(self.pool.take_spans());
         Ok(BatchResponse {
             results: to_query_results(queries, &spans, &vals),
             stats,
             epoch: 0,
             profile,
+            trace: crate::obs::Trace {
+                trace_id,
+                spans: records,
+            },
         })
     }
 }

@@ -63,8 +63,13 @@ pub const MAGIC: &[u8; 8] = b"MMSHARD1";
 /// for a snapshot of its metric registry (flat `(series name, value)`
 /// pairs, see [`crate::obs::flatten`]) and aggregates the replies into one
 /// cluster view. Like PING, a STATS request is answered inline from the
-/// worker's read loop, never queued behind matching work.
-pub const VERSION: u32 = 4;
+/// worker's read loop, never queued behind matching work. v5 added trace
+/// context: EXEC carries `(trace_id, parent_span)` of the coordinator's
+/// batch trace and RESULT carries the worker's child spans back
+/// ([`WireSpan`] — store probe, match, with reply-relative parent
+/// indices), so a sharded batch assembles one span tree across the whole
+/// fabric (see [`crate::obs::trace`]).
+pub const VERSION: u32 = 5;
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
@@ -96,8 +101,34 @@ pub struct ExecRequest {
     pub lo: u32,
     /// First-level slice end.
     pub hi: u32,
+    /// Trace id of the coordinator's batch trace (0 = untraced). Pure
+    /// observability: the worker echoes it into nothing and decides
+    /// nothing by it — it only labels the spans riding back in the
+    /// response.
+    pub trace_id: u64,
+    /// Span id of the coordinator's dispatch span for this sub-slice —
+    /// the parent the worker's spans conceptually attach to
+    /// (informational; the response's spans use reply-relative indices,
+    /// see [`WireSpan::rel_parent`]).
+    pub parent_span: u64,
     /// Base patterns to match (distinct canonical forms).
     pub patterns: Vec<Pattern>,
+}
+
+/// One worker-side trace span riding back in a proto v5 RESULT.
+/// Timings are microseconds relative to the worker's handling of the
+/// request (the coordinator offsets them by the sub-slice dispatch time
+/// when grafting); `rel_parent` is an index into the same reply's span
+/// list, or [`crate::obs::trace::WIRE_PARENT_ROOT`] to attach to the
+/// coordinator's dispatch span — reply-relative links mean span ids
+/// never need cross-process coordination.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireSpan {
+    pub rel_parent: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub name: String,
+    pub tag: String,
 }
 
 /// A shard's answer: per-base **partial map counts** over its slice.
@@ -113,6 +144,11 @@ pub struct ExecResponse {
     /// `(canonical key, partial map count)` — one entry per distinct
     /// requested base.
     pub values: Vec<(CanonKey, i128)>,
+    /// The worker's trace spans for this request (store probe, match
+    /// stages), reply-relative (proto v5). Observability only — the
+    /// coordinator's merge logic never reads them; an empty vector is a
+    /// complete, valid response.
+    pub spans: Vec<WireSpan>,
 }
 
 /// A protocol message.
@@ -244,6 +280,47 @@ fn take_fingerprint(r: &mut ByteReader<'_>) -> Option<GraphFingerprint> {
     GraphFingerprint::from_bytes(r.take(GraphFingerprint::BYTES)?)
 }
 
+/// Minimum wire cost of one [`WireSpan`]: rel_parent + start + dur +
+/// two u16 string lengths — bounds an honest span count by the payload.
+const WIRE_SPAN_MIN: usize = 4 + 8 + 8 + 2 + 2;
+
+fn put_wire_span(out: &mut Vec<u8>, s: &WireSpan) {
+    out.extend_from_slice(&s.rel_parent.to_le_bytes());
+    out.extend_from_slice(&s.start_us.to_le_bytes());
+    out.extend_from_slice(&s.dur_us.to_le_bytes());
+    for text in [&s.name, &s.tag] {
+        // u16 length caps a span string at 64 KiB; truncate at a char
+        // boundary rather than emit a length the bytes don't honor
+        let mut len = text.len().min(u16::MAX as usize);
+        while len > 0 && !text.is_char_boundary(len) {
+            len -= 1;
+        }
+        out.extend_from_slice(&(len as u16).to_le_bytes());
+        out.extend_from_slice(&text.as_bytes()[..len]);
+    }
+}
+
+fn take_wire_span(r: &mut ByteReader<'_>) -> Option<WireSpan> {
+    let rel_parent = r.u32()?;
+    let start_us = r.u64()?;
+    let dur_us = r.u64()?;
+    let mut texts = [String::new(), String::new()];
+    for t in &mut texts {
+        let len = u16::from_le_bytes(r.take(2)?.try_into().ok()?) as usize;
+        // strict UTF-8: span names are generated by our own tracer;
+        // garbage means a codec mismatch, not a name worth salvaging
+        *t = std::str::from_utf8(r.take(len)?).ok()?.to_string();
+    }
+    let [name, tag] = texts;
+    Some(WireSpan {
+        rel_parent,
+        start_us,
+        dur_us,
+        name,
+        tag,
+    })
+}
+
 /// Encode a message into one frame payload (tag + body).
 pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
@@ -281,6 +358,8 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_fingerprint(&mut out, req.fingerprint);
             out.extend_from_slice(&req.lo.to_le_bytes());
             out.extend_from_slice(&req.hi.to_le_bytes());
+            out.extend_from_slice(&req.trace_id.to_le_bytes());
+            out.extend_from_slice(&req.parent_span.to_le_bytes());
             out.extend_from_slice(&(req.patterns.len() as u32).to_le_bytes());
             for p in &req.patterns {
                 put_pattern(&mut out, p);
@@ -297,6 +376,10 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 out.extend_from_slice(&k.pairs.to_le_bytes());
                 out.extend_from_slice(&k.labels.to_le_bytes());
                 out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&(resp.spans.len() as u32).to_le_bytes());
+            for s in &resp.spans {
+                put_wire_span(&mut out, s);
             }
         }
         Msg::Error { id, message } => {
@@ -388,6 +471,8 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
             let fingerprint = take_fingerprint(&mut r)?;
             let lo = r.u32()?;
             let hi = r.u32()?;
+            let trace_id = r.u64()?;
+            let parent_span = r.u64()?;
             let n = r.u32()? as usize;
             // an honest count is bounded by the payload: every pattern
             // costs at least 4 bytes on the wire
@@ -404,6 +489,8 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
                 fingerprint,
                 lo,
                 hi,
+                trace_id,
+                parent_span,
                 patterns,
             })
         }
@@ -425,11 +512,22 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
                 let v = i128::from_le_bytes(r.take(16)?.try_into().ok()?);
                 values.push((key, v));
             }
+            let m = r.u32()? as usize;
+            // same bound discipline as values: every span costs at least
+            // WIRE_SPAN_MIN bytes on the wire
+            if m > payload.len() / WIRE_SPAN_MIN + 1 {
+                return None;
+            }
+            let mut spans = Vec::with_capacity(m);
+            for _ in 0..m {
+                spans.push(take_wire_span(&mut r)?);
+            }
             Msg::Result(ExecResponse {
                 id,
                 epoch,
                 served_from_store,
                 values,
+                spans,
             })
         }
         TAG_ERROR => {
@@ -574,11 +672,14 @@ mod tests {
             fingerprint: fp(1),
             lo: 100,
             hi: 200,
+            trace_id: 0xFACE_0FF5,
+            parent_span: 17,
             patterns: patterns.clone(),
         };
         match roundtrip(&Msg::Exec(req)) {
             Msg::Exec(got) => {
                 assert_eq!((got.id, got.epoch, got.lo, got.hi), (42, 3, 100, 200));
+                assert_eq!((got.trace_id, got.parent_span), (0xFACE_0FF5, 17));
                 assert_eq!(got.fingerprint, fp(1));
                 assert_eq!(got.patterns.len(), patterns.len());
                 for (a, b) in got.patterns.iter().zip(&patterns) {
@@ -596,17 +697,46 @@ mod tests {
             (catalog::clique(4).canonical_key(), -7i128),
             (catalog::cycle(5).canonical_key(), i128::MAX),
         ];
+        let spans = vec![
+            WireSpan {
+                rel_parent: crate::obs::trace::WIRE_PARENT_ROOT,
+                start_us: 0,
+                dur_us: 1200,
+                name: "probe".into(),
+                tag: "hits=2 misses=1".into(),
+            },
+            WireSpan {
+                rel_parent: 0,
+                start_us: 1200,
+                dur_us: 88_000,
+                name: "match".into(),
+                tag: String::new(), // empty tags survive too
+            },
+        ];
         let resp = ExecResponse {
             id: 42,
             epoch: 9,
             served_from_store: 2,
             values: values.clone(),
+            spans: spans.clone(),
         };
         match roundtrip(&Msg::Result(resp)) {
             Msg::Result(got) => {
                 assert_eq!((got.id, got.epoch, got.served_from_store), (42, 9, 2));
                 assert_eq!(got.values, values);
+                assert_eq!(got.spans, spans);
             }
+            other => panic!("{other:?}"),
+        }
+        // spanless responses are representable (and the common warm case)
+        match roundtrip(&Msg::Result(ExecResponse {
+            id: 1,
+            epoch: 0,
+            served_from_store: 0,
+            values: vec![],
+            spans: vec![],
+        })) {
+            Msg::Result(got) => assert!(got.values.is_empty() && got.spans.is_empty()),
             other => panic!("{other:?}"),
         }
         match roundtrip(&Msg::Error { id: 5, message: "boom".into() }) {
@@ -727,6 +857,8 @@ mod tests {
             fingerprint: fp(1),
             lo: 0,
             hi: 50,
+            trace_id: 0xABCD,
+            parent_span: 3,
             patterns: vec![catalog::triangle(), catalog::diamond().vertex_induced()],
         };
         write_msg(&mut buf, &Msg::Exec(req)).unwrap();
@@ -754,6 +886,8 @@ mod tests {
         evil_exec.extend_from_slice(&fp(1).to_bytes());
         evil_exec.extend_from_slice(&0u32.to_le_bytes());
         evil_exec.extend_from_slice(&10u32.to_le_bytes());
+        evil_exec.extend_from_slice(&7u64.to_le_bytes()); // trace_id
+        evil_exec.extend_from_slice(&1u64.to_le_bytes()); // parent_span
         evil_exec.extend_from_slice(&1u32.to_le_bytes());
         evil_exec.extend_from_slice(&[3, 1, 0, 7, 0]); // edge (0,7) on a 3-vertex pattern
         assert!(decode(&evil_exec).is_none());
@@ -767,5 +901,105 @@ mod tests {
         });
         ok.push(0);
         assert!(decode(&ok).is_none());
+    }
+
+    #[test]
+    fn hostile_trace_span_bytes_never_panic() {
+        // the v5 fields get the same fuzz walks as the rest of the codec:
+        // a spanful RESULT survives every truncation and every bit flip
+        let resp = ExecResponse {
+            id: 9,
+            epoch: 1,
+            served_from_store: 0,
+            values: vec![(catalog::triangle().canonical_key(), 5i128)],
+            spans: vec![
+                WireSpan {
+                    rel_parent: crate::obs::trace::WIRE_PARENT_ROOT,
+                    start_us: 3,
+                    dur_us: 400,
+                    name: "probe".into(),
+                    tag: "hits=1".into(),
+                },
+                WireSpan {
+                    rel_parent: 0,
+                    start_us: 403,
+                    dur_us: 9000,
+                    name: "match".into(),
+                    tag: "lo=0 hi=50".into(),
+                },
+            ],
+        };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Result(resp.clone())).unwrap();
+        for cut in 0..buf.len() {
+            assert!(read_msg(&mut &buf[..cut]).is_err(), "cut at {cut}");
+        }
+        for at in 0..buf.len() {
+            let mut evil = buf.clone();
+            evil[at] ^= 0x20;
+            let _ = read_msg(&mut &evil[..]);
+        }
+        let body = encode(&Msg::Result(resp));
+        // a span count claiming more spans than the payload can hold
+        let mut evil = body.clone();
+        let count_at = body.len()
+            - resp_spans_bytes(&body)
+            - 4;
+        evil[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&evil).is_none());
+        // a span tag length pointing past the payload (the final tag's
+        // u16 length field sits exactly tag-len + 2 bytes from the end)
+        let mut evil = body.clone();
+        let at = evil.len() - "lo=0 hi=50".len() - 2;
+        evil[at..at + 2].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(decode(&evil).is_none());
+        // invalid UTF-8 in a span name is refused, not lossily accepted
+        let mut evil = Vec::new();
+        evil.push(TAG_RESULT);
+        evil.extend_from_slice(&1u64.to_le_bytes());
+        evil.extend_from_slice(&0u64.to_le_bytes());
+        evil.extend_from_slice(&0u32.to_le_bytes());
+        evil.extend_from_slice(&0u32.to_le_bytes()); // zero values
+        evil.extend_from_slice(&1u32.to_le_bytes()); // one span
+        evil.extend_from_slice(&0u32.to_le_bytes()); // rel_parent
+        evil.extend_from_slice(&0u64.to_le_bytes()); // start
+        evil.extend_from_slice(&0u64.to_le_bytes()); // dur
+        evil.extend_from_slice(&2u16.to_le_bytes());
+        evil.extend_from_slice(&[0xFF, 0xFE]); // not UTF-8
+        evil.extend_from_slice(&0u16.to_le_bytes());
+        assert!(decode(&evil).is_none());
+        // truncated EXEC trace context (v4-shaped body) is unreadable,
+        // never misparsed: the old layout is 16 bytes short of v5's
+        let req = ExecRequest {
+            id: 1,
+            epoch: 0,
+            fingerprint: fp(1),
+            lo: 0,
+            hi: 10,
+            trace_id: 0,
+            parent_span: 0,
+            patterns: vec![catalog::triangle()],
+        };
+        let body = encode(&Msg::Exec(req));
+        let mut v4_shaped = body.clone();
+        // excise the two trace-context words (they sit after lo/hi)
+        let at = 1 + 8 + 8 + GraphFingerprint::BYTES + 4 + 4;
+        v4_shaped.drain(at..at + 16);
+        assert!(decode(&v4_shaped).is_none());
+    }
+
+    /// Bytes the span section occupies at the tail of an encoded RESULT
+    /// (everything after the values) — lets the hostile test find the
+    /// span-count field without hardcoding offsets.
+    fn resp_spans_bytes(body: &[u8]) -> usize {
+        // re-decode to learn the span section size structurally
+        match decode(body) {
+            Some(Msg::Result(r)) => r
+                .spans
+                .iter()
+                .map(|s| WIRE_SPAN_MIN + s.name.len() + s.tag.len())
+                .sum(),
+            _ => panic!("helper fed a non-RESULT body"),
+        }
     }
 }

@@ -177,6 +177,9 @@ impl ShardWorker {
         let listener = TcpListener::bind(listen)
             .with_context(|| format!("binding shard worker listener on {listen}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
+        // every exposition from this process (scrape, STATS_REPLY) carries
+        // the constant mm_build_info series identifying version and SIMD leg
+        crate::obs::register_build_info();
         // the same stats seed as the service layer, so fused order
         // selection on the worker mirrors what a single process would pick
         let stats = GraphStats::compute(&graph, 2000, 0x5E55);
@@ -580,6 +583,7 @@ fn handle_exec(
     let keys: Vec<CanonKey> = req.patterns.iter().map(|p| p.canonical_key()).collect();
 
     // split the request: store hits / in-flight elsewhere / ours to match
+    let probe_timer = std::time::Instant::now();
     let mut values: HashMap<CanonKey, i128> = HashMap::new();
     let mut owned: Vec<usize> = Vec::new();
     let mut awaited: Vec<(CanonKey, Arc<Cell>)> = Vec::new();
@@ -610,7 +614,9 @@ fn handle_exec(
         }
         crate::obs_gauge!("mm_worker_slice_stores").set(inner.slices.len() as u64);
     }
+    let probe_us = probe_timer.elapsed().as_micros() as u64;
     let cached = values.len() as u32;
+    let awaited_n = awaited.len();
     let mut guard = OwnedCells {
         state,
         keys: owned.iter().map(|&i| (slice, keys[i])).collect(),
@@ -629,6 +635,7 @@ fn handle_exec(
 
     // publish: feed the slice's store, mirror into its WAL, wake
     // coalesced peers
+    let publish_timer = std::time::Instant::now();
     {
         let mut inner = state.inner.lock().unwrap();
         let inner = &mut *inner;
@@ -665,8 +672,10 @@ fn handle_exec(
     }
     guard.armed = false;
     values.extend(fresh.iter().copied());
+    let publish_us = publish_timer.elapsed().as_micros() as u64;
 
     // block on bases another connection is matching over the same slice
+    let await_timer = std::time::Instant::now();
     for (k, cell) in awaited {
         let mut slot = cell.value.lock().unwrap();
         while slot.is_none() {
@@ -679,6 +688,7 @@ fn handle_exec(
             Err(msg) => return Err(format!("coalesced base failed: {msg}")),
         }
     }
+    let await_us = await_timer.elapsed().as_micros() as u64;
 
     // one entry per distinct requested key, in request order
     let mut out: Vec<(CanonKey, i128)> = Vec::with_capacity(values.len());
@@ -691,11 +701,59 @@ fn handle_exec(
             out.push((*k, v));
         }
     }
+    // the worker's side of the batch's span tree (proto v5): a flat list
+    // of phase children the coordinator grafts under this sub-slice's
+    // span. rel_parent = WIRE_PARENT_ROOT attaches every phase directly
+    // to the slice span; start offsets are request-relative microseconds,
+    // laid out sequentially in execution order (probe → kernel phases →
+    // publish → coalesced-await). Always built: the spans are a byproduct
+    // of timers the worker runs anyway, so whether the coordinator traces
+    // or not cannot change what this function computes.
+    let root = crate::obs::trace::WIRE_PARENT_ROOT;
+    let mut spans = Vec::with_capacity(3 + profile.entries().len());
+    let mut clock_us = 0u64;
+    spans.push(proto::WireSpan {
+        rel_parent: root,
+        start_us: clock_us,
+        dur_us: probe_us,
+        name: "probe".into(),
+        tag: format!("hits={cached} owned={} awaited={awaited_n}", owned.len()),
+    });
+    clock_us += probe_us;
+    for (name, d) in profile.entries() {
+        let dur_us = d.as_micros() as u64;
+        spans.push(proto::WireSpan {
+            rel_parent: root,
+            start_us: clock_us,
+            dur_us,
+            name: name.clone(),
+            tag: String::new(),
+        });
+        clock_us += dur_us;
+    }
+    spans.push(proto::WireSpan {
+        rel_parent: root,
+        start_us: clock_us,
+        dur_us: publish_us,
+        name: "publish".into(),
+        tag: String::new(),
+    });
+    clock_us += publish_us;
+    if awaited_n > 0 {
+        spans.push(proto::WireSpan {
+            rel_parent: root,
+            start_us: clock_us,
+            dur_us: await_us,
+            name: "await".into(),
+            tag: format!("coalesced={awaited_n}"),
+        });
+    }
     Ok(ExecResponse {
         id: req.id,
         epoch: req.epoch,
         served_from_store: cached,
         values: out,
+        spans,
     })
 }
 
@@ -755,6 +813,8 @@ mod tests {
             fingerprint: graph_fp,
             lo,
             hi,
+            trace_id: 0,
+            parent_span: 0,
             patterns: patterns.clone(),
         };
         proto::write_msg(&mut stream, &Msg::Exec(full(0, 60, 1))).unwrap();
@@ -772,12 +832,28 @@ mod tests {
             let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
             assert_eq!(*v, direct, "{p:?}");
         }
+        // v5: the reply carries the worker's span list — the store probe
+        // plus the kernel-tier phase breakdown, all parented at the root
+        // sentinel with sequential request-relative clocks
+        let names: Vec<&str> = whole.spans.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"probe"), "{names:?}");
+        assert!(names.contains(&"match"), "{names:?}");
+        for pair in whole.spans.windows(2) {
+            assert!(pair[0].start_us + pair[0].dur_us <= pair[1].start_us);
+        }
+        for s in &whole.spans {
+            assert_eq!(s.rel_parent, crate::obs::trace::WIRE_PARENT_ROOT);
+        }
+        assert!(whole.spans[0].tag.contains("hits=0"), "{}", whole.spans[0].tag);
         // re-sent bases are served from the worker-local store
         proto::write_msg(&mut stream, &Msg::Exec(full(0, 60, 2))).unwrap();
         match proto::read_msg(&mut stream).unwrap() {
             Msg::Result(r) => {
                 assert_eq!(r.served_from_store, 2);
                 assert_eq!(r.values, whole.values);
+                // warm replies still report the probe span (with the hits)
+                let probe = r.spans.iter().find(|s| s.name == "probe").unwrap();
+                assert!(probe.tag.contains("hits=2"), "{}", probe.tag);
             }
             other => panic!("{other:?}"),
         }
@@ -868,6 +944,8 @@ mod tests {
             fingerprint: graph_fp,
             lo: 0,
             hi: 60,
+            trace_id: 0,
+            parent_span: 0,
             patterns: vec![catalog::triangle(), catalog::path(3)],
         };
         proto::write_msg(&mut stream, &Msg::Exec(req)).unwrap();
@@ -908,6 +986,8 @@ mod tests {
             fingerprint: graph_fp,
             lo,
             hi,
+            trace_id: 0,
+            parent_span: 0,
             patterns: vec![catalog::triangle()],
         };
         proto::write_msg(&mut stream, &Msg::Exec(req(0, 30, 10))).unwrap();
@@ -945,6 +1025,8 @@ mod tests {
             fingerprint: fp(123),
             lo: 0,
             hi: 10,
+            trace_id: 0,
+            parent_span: 0,
             patterns: vec![catalog::triangle()],
         };
         proto::write_msg(&mut stream, &Msg::Exec(req)).unwrap();
@@ -962,6 +1044,8 @@ mod tests {
             fingerprint: w.fingerprint(),
             lo: 50,
             hi: 10_000,
+            trace_id: 0,
+            parent_span: 0,
             patterns: vec![catalog::triangle()],
         };
         proto::write_msg(&mut stream, &Msg::Exec(req)).unwrap();

@@ -357,6 +357,7 @@ fn spawn_lying_worker(fingerprint: GraphFingerprint) -> String {
                             epoch: req.epoch,
                             served_from_store: 0,
                             values,
+                            spans: Vec::new(),
                         });
                         if proto::write_msg(&mut s, &reply).is_err() {
                             break;
@@ -438,6 +439,8 @@ fn proto_decode_survives_hostile_mutations() {
             fingerprint: fp,
             lo: 2,
             hi: 17,
+            trace_id: u64::MAX,
+            parent_span: 42,
             patterns: vec![catalog::triangle(), catalog::cycle(4).vertex_induced()],
         }),
         Msg::Result(ExecResponse {
@@ -447,6 +450,22 @@ fn proto_decode_survives_hostile_mutations() {
             values: vec![
                 (catalog::triangle().canonical_key(), 99),
                 (catalog::path(3).canonical_key(), -4),
+            ],
+            spans: vec![
+                proto::WireSpan {
+                    rel_parent: u32::MAX,
+                    start_us: 0,
+                    dur_us: 120,
+                    name: "probe".into(),
+                    tag: "hits=0 owned=2 awaited=0".into(),
+                },
+                proto::WireSpan {
+                    rel_parent: 0,
+                    start_us: 5,
+                    dur_us: 100,
+                    name: "match".into(),
+                    tag: String::new(),
+                },
             ],
         }),
         Msg::Error { id: 9, message: "boom".into() },

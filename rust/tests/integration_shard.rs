@@ -123,6 +123,80 @@ fn coordinator_answers_match_inprocess_service_end_to_end() {
 }
 
 #[test]
+fn sharded_batch_trace_spans_the_fabric_end_to_end() {
+    // one trace id covers the coordinator's batch tree, the per-sub-slice
+    // dispatch spans, and the worker spans grafted from proto v5 RESULTs —
+    // while the counts stay identical to an untraced single-process run
+    // (tracing is passive, it must never change an answer)
+    let g = || erdos_renyi(60, 240, 0x54F1);
+    let (workers, addrs) = spawn_workers(&g(), 2, worker_config());
+    let planner = QueryPlanner::new(Policy::Naive, true, 2);
+    let mut coord = ShardCoordinator::connect(g(), &addrs, planner, 1 << 20).unwrap();
+    let svc = morphmine::service::Service::start(
+        g(),
+        morphmine::service::ServiceConfig {
+            workers: 1,
+            threads: 2,
+            policy: Policy::Naive,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: None,
+        },
+    );
+    let batch = ["motifs:4"];
+    let sharded = coord.call(&batch).unwrap();
+    let single = svc.call(&batch).unwrap();
+    assert_eq!(sharded.results, single.results, "tracing must not change answers");
+
+    let t = &sharded.trace;
+    assert_ne!(t.trace_id, 0, "a served batch always gets a trace id");
+    let root = t.root().expect("batch root span");
+    assert_eq!(root.name, "batch");
+    assert!(root.tag.contains("shards=2"), "{:?}", root.tag);
+    assert!(t.stage_us("match") > 0, "the remote match stage is timed");
+    let slices: Vec<_> = t.spans.iter().filter(|s| s.name.starts_with("slice ")).collect();
+    assert_eq!(
+        slices.len(),
+        coord.num_sub_slices(),
+        "one dispatch span per remote sub-slice"
+    );
+    for s in &slices {
+        assert!(s.tag.contains("worker="), "dispatch spans name their worker: {:?}", s.tag);
+        assert!(s.tag.contains("outcome=ok"), "healthy dispatches are tagged ok: {:?}", s.tag);
+        assert!(
+            t.spans.iter().any(|c| c.parent == s.id && c.name == "probe"),
+            "the worker's own spans are grafted under the dispatch span"
+        );
+    }
+    // the rendered tree and the JSON carry the same grep-able trace id
+    let id_hex = format!("{:016x}", t.trace_id);
+    let tree = t.render_tree();
+    assert!(tree.starts_with(&format!("trace {id_hex}")), "{tree}");
+    assert!(!tree.contains("orphans"), "every fabric span links into the tree: {tree}");
+    assert!(t.to_json().contains(&id_hex));
+
+    // the single-process response carries its own trace from the same
+    // span-tree timing source, under a distinct id
+    let st = &single.trace;
+    assert_ne!(st.trace_id, 0);
+    assert_ne!(st.trace_id, t.trace_id, "trace ids are process-unique per batch");
+    assert_eq!(st.root().expect("root").name, "batch");
+
+    // a warm repeat still yields a complete trace — no remote dispatches,
+    // so no slice spans, but the root and stages remain
+    let warm = coord.call(&batch).unwrap();
+    assert_eq!(warm.results, single.results);
+    let wt = &warm.trace;
+    assert_ne!(wt.trace_id, t.trace_id);
+    assert!(wt.root().is_some());
+    assert!(!wt.spans.iter().any(|s| s.name.starts_with("slice ")));
+    drop(coord);
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
 fn wrong_graph_is_rejected_at_connect() {
     let g = erdos_renyi(40, 120, 0x54C1);
     let (workers, addrs) = spawn_workers(&g, 1, worker_config());
@@ -263,6 +337,8 @@ fn protocol_survives_torn_streams_and_hostile_bytes() {
             fingerprint: fp,
             lo: 0,
             hi: 20,
+            trace_id: 0x1234,
+            parent_span: 7,
             patterns: vec![catalog::triangle(), catalog::cycle(4).vertex_induced()],
         }),
         Msg::Result(ExecResponse {
@@ -270,6 +346,13 @@ fn protocol_survives_torn_streams_and_hostile_bytes() {
             epoch: 0,
             served_from_store: 1,
             values: vec![(catalog::triangle().canonical_key(), 99)],
+            spans: vec![proto::WireSpan {
+                rel_parent: u32::MAX,
+                start_us: 3,
+                dur_us: 40,
+                name: "probe".into(),
+                tag: "hits=1".into(),
+            }],
         }),
         Msg::Error { id: 2, message: "nope".into() },
     ];
