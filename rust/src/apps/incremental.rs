@@ -300,4 +300,70 @@ mod tests {
         assert!(inc.insert_edge(non.0, non.1));
         assert_eq!(inc.version(), v0 + 1);
     }
+
+    #[test]
+    fn self_loops_are_rejected() {
+        let g0 = erdos_renyi(8, 14, 5);
+        let mut inc = IncrementalMotifCounter::new(DynGraph::from_data_graph(&g0), 3, 1);
+        let before = inc.counts();
+        let v0 = inc.version();
+        assert!(!inc.insert_edge(3, 3), "self-loop insert must be refused");
+        assert!(!inc.remove_edge(3, 3), "self-loop removal is a no-op");
+        assert_eq!(before, inc.counts(), "rejected self-loops must not touch counts");
+        assert_eq!(inc.version(), v0, "rejected self-loops must not bump the version");
+    }
+
+    #[test]
+    fn version_is_monotone_and_bumps_exactly_on_applied_mutations() {
+        let g0 = erdos_renyi(12, 24, 9);
+        let mut inc = IncrementalMotifCounter::new(DynGraph::from_data_graph(&g0), 3, 1);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut last = inc.version();
+        for _ in 0..40 {
+            let u = rng.below(12) as u32;
+            let v = rng.below(12) as u32;
+            let applied = if rng.below(2) == 0 {
+                inc.insert_edge(u, v)
+            } else {
+                inc.remove_edge(u, v)
+            };
+            let now = inc.version();
+            if applied {
+                assert_eq!(now, last + 1, "each applied mutation bumps exactly once");
+            } else {
+                assert_eq!(now, last, "rejected mutations (dup/missing/self-loop) never bump");
+            }
+            last = now;
+        }
+        assert_counts_match_batch(&inc, 3);
+    }
+
+    #[test]
+    fn removal_deltas_carry_the_negative_sign() {
+        // a single triangle: removing one edge must subtract the triangle
+        // and add the wedge the surviving two edges induce
+        let g0 = crate::graph::GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (0, 2)])
+            .build("tri");
+        let mut inc = IncrementalMotifCounter::new(DynGraph::from_data_graph(&g0), 3, 1);
+        let count_of = |inc: &IncrementalMotifCounter, q: &Pattern| {
+            inc.counts()
+                .into_iter()
+                .find(|(p, _)| p.canonical_key() == q.canonical_key())
+                .map(|(_, c)| c)
+                .unwrap()
+        };
+        let tri = catalog::triangle().vertex_induced();
+        let wedge = catalog::path(3).vertex_induced();
+        assert_eq!(count_of(&inc, &tri), 1);
+        assert_eq!(count_of(&inc, &wedge), 0);
+        assert!(inc.remove_edge(0, 1));
+        assert_eq!(count_of(&inc, &tri), 0, "removal must subtract the dead triangle");
+        assert_eq!(count_of(&inc, &wedge), 1, "…and credit the wedge it leaves behind");
+        assert_counts_match_batch(&inc, 3);
+        // putting the edge back restores the starting counts exactly
+        assert!(inc.insert_edge(0, 1));
+        assert_eq!(count_of(&inc, &tri), 1);
+        assert_eq!(count_of(&inc, &wedge), 0);
+    }
 }

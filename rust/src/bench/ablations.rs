@@ -697,6 +697,7 @@ pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) 
             fused: true,
             cache_bytes: 64 << 20,
             persist: None,
+            delta_budget: crate::service::delta::DEFAULT_DELTA_BUDGET,
         };
         let svc = Service::start(d.generate(scale), config.clone());
         let (cold, t_cold) = time(|| svc.call(&batch_a).expect("cold batch"));
@@ -754,6 +755,120 @@ pub fn ablation_service_to(scale: Scale, threads: usize, out: &std::path::Path) 
     write_rows_json(out, &json, rows.len())
 }
 
+/// A11: delta-morphing result maintenance — in-place delta patching vs
+/// purge-and-recompute under a write-heavy mixed workload.
+pub fn ablation_incremental_service(scale: Scale, threads: usize) -> Result<()> {
+    let out =
+        std::env::var("MM_INCREMENTAL_JSON").unwrap_or_else(|_| "BENCH_incremental.json".into());
+    ablation_incremental_service_to(scale, threads, std::path::Path::new(&out))
+}
+
+/// [`ablation_incremental_service`] with an explicit JSON output path (see
+/// [`ablation_fused_to`] for why tests avoid the env override).
+///
+/// Per dataset, the same deterministic workload — warm a motif + match
+/// batch, then alternate random edge updates with re-serves of that batch
+/// — runs through two services that differ only in `delta_budget`:
+/// * **delta-patch** — the default budget: updates delta-patch the store
+///   in place, re-serves stay warm.
+/// * **purge** — budget 0: every update purges the store (the pre-delta
+///   behavior), re-serves recompute every base cold.
+///
+/// Both modes apply the identical update stream and their final answers
+/// are asserted equal, so the speedup column measures maintenance
+/// strategy alone, never workload drift.
+pub fn ablation_incremental_service_to(
+    scale: Scale,
+    threads: usize,
+    out: &std::path::Path,
+) -> Result<()> {
+    use crate::service::{Service, ServiceConfig};
+    println!("\n### A11 — delta-morphing maintenance (delta-patch vs purge-and-recompute)\n");
+    println!("| graph | mode | updates | total (s) | ms/update | bases recomputed | patched |");
+    println!("|-------|------|---------|-----------|-----------|------------------|---------|");
+    let batch = ["motifs:4", "match:cycle4,diamond-vi"];
+    let updates = 12usize;
+    let mut rows: Vec<String> = Vec::new();
+    for d in [Dataset::MicoSim, Dataset::YoutubeSim] {
+        let n = d.generate(scale).num_vertices();
+        let mut finals: Vec<crate::service::BatchResponse> = Vec::new();
+        let mut purge_total = 0.0f64;
+        for (mode, budget) in [
+            ("purge", 0usize),
+            ("delta-patch", crate::service::delta::DEFAULT_DELTA_BUDGET),
+        ] {
+            let svc = Service::start(
+                d.generate(scale),
+                ServiceConfig {
+                    workers: 1,
+                    threads,
+                    policy: Policy::Naive,
+                    fused: true,
+                    cache_bytes: 64 << 20,
+                    persist: None,
+                    delta_budget: budget,
+                },
+            );
+            svc.call(&batch).expect("warming batch");
+            // the identical deterministic update stream for both modes
+            let mut rng = crate::util::rng::Rng::new(0xA11 ^ n as u64);
+            let mut executed = 0usize;
+            let mut last = None;
+            let (_, total_s) = time(|| {
+                let mut applied = 0usize;
+                while applied < updates {
+                    let u = rng.below(n as u64) as u32;
+                    let v = rng.below(n as u64) as u32;
+                    if u == v {
+                        continue;
+                    }
+                    let changed = if rng.below(100) < 30 {
+                        svc.remove_edge(u, v).expect("in-range removal")
+                    } else {
+                        svc.insert_edge(u, v).expect("in-range insertion")
+                    };
+                    if !changed {
+                        continue;
+                    }
+                    applied += 1;
+                    let r = svc.call(&batch).expect("re-serve after update");
+                    executed += r.stats.executed_bases;
+                    last = Some(r);
+                }
+            });
+            let r = last.expect("at least one update applied");
+            finals.push(r);
+            let m = svc.store_metrics();
+            if mode == "purge" {
+                purge_total = total_s;
+            }
+            let speedup = purge_total / total_s.max(1e-9);
+            println!(
+                "| {} | {mode} | {updates} | {total_s:.3} | {:.1} | {executed} | {} |",
+                d.code(),
+                1e3 * total_s / updates as f64,
+                m.patched
+            );
+            rows.push(with_metrics(format!(
+                "    {{\"graph\": \"{}\", \"mode\": \"{mode}\", \"updates\": {updates}, \"total_s\": {total_s:.6}, \"ms_per_update\": {:.3}, \"executed_bases\": {executed}, \"patched\": {}, \"speedup_vs_purge\": {speedup:.3}}}",
+                d.code(),
+                1e3 * total_s / updates as f64,
+                m.patched,
+            )));
+        }
+        assert_eq!(
+            finals[0].results, finals[1].results,
+            "{}: both maintenance strategies must serve identical answers",
+            d.code()
+        );
+    }
+    let json = format!(
+        "{{\n  \"experiment\": \"incremental_delta_maintenance\",\n  \"scale\": \"{scale:?}\",\n  \"threads\": {threads},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    write_rows_json(out, &json, rows.len())
+}
+
 /// A10: distributed first-level sharding — 1/2/4-shard scaling.
 pub fn ablation_shard(scale: Scale, threads: usize) -> Result<()> {
     let out = std::env::var("MM_SHARD_JSON").unwrap_or_else(|_| "BENCH_shard.json".into());
@@ -793,6 +908,7 @@ pub fn ablation_shard_to(scale: Scale, threads: usize, out: &std::path::Path) ->
                 fused: true,
                 cache_bytes: 64 << 20,
                 persist: None,
+                delta_budget: crate::service::delta::DEFAULT_DELTA_BUDGET,
             },
         );
         let (single, t_single) = time(|| svc.call(&batch).expect("baseline batch"));
@@ -1088,6 +1204,7 @@ pub fn ablation_persist_to(scale: Scale, threads: usize, out: &std::path::Path) 
                 dir: dir.clone(),
                 opts,
             }),
+            delta_budget: crate::service::delta::DEFAULT_DELTA_BUDGET,
         };
 
         // cold: fresh directory, graceful shutdown compacts
@@ -1172,7 +1289,8 @@ pub fn run_all(scale: Scale, threads: usize) -> Result<()> {
     ablation_kernels(scale, threads)?;
     ablation_service(scale, threads)?;
     ablation_persist(scale, threads)?;
-    ablation_shard(scale, threads)
+    ablation_shard(scale, threads)?;
+    ablation_incremental_service(scale, threads)
 }
 
 #[cfg(test)]
@@ -1237,6 +1355,20 @@ mod tests {
         assert!(body.contains("\"batch\": \"overlap\""));
         assert!(body.contains("\"metrics\": {"), "{body}");
         assert!(body.contains("mm_planner_batches_total"), "{body}");
+        assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
+    }
+
+    #[test]
+    fn incremental_ablation_smoke() {
+        // asserts delta-patch == purge answers inside, on the identical
+        // deterministic update stream; explicit temp output path
+        let out = std::env::temp_dir().join("mm_bench_incremental_smoke.json");
+        ablation_incremental_service_to(Scale::Tiny, 2, &out).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("incremental_delta_maintenance"));
+        assert!(body.contains("\"mode\": \"delta-patch\""));
+        assert!(body.contains("\"mode\": \"purge\""));
+        assert!(body.contains("\"metrics\": {"), "{body}");
         assert!(existing_measured_rows(&out), "smoke run must emit measured rows");
     }
 

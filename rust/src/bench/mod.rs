@@ -14,6 +14,7 @@
 //! | `service`  | A8 — service result cache (cold/warm/overlap) | [`ablations::ablation_service`] |
 //! | `persist`  | A9 — durable store (cold/warm-restart/replay) | [`ablations::ablation_persist`] |
 //! | `shard`    | A10 — first-level sharding (1/2/4 workers) + fault recovery (0 vs 1 mid-batch kill) | [`ablations::ablation_shard`] |
+//! | `incremental` | A11 — delta-morphing maintenance (delta-patch vs purge-and-recompute) | [`ablations::ablation_incremental_service`] |
 //!
 //! Reports are printed as markdown; EXPERIMENTS.md records a run.
 
@@ -61,6 +62,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
         "service" => ablations::ablation_service(scale, threads),
         "persist" => ablations::ablation_persist(scale, threads),
         "shard" => ablations::ablation_shard(scale, threads),
+        "incremental" => ablations::ablation_incremental_service(scale, threads),
         "ablations" => ablations::run_all(scale, threads),
         "all" => {
             table2(scale)?;
@@ -72,7 +74,7 @@ pub fn run_experiment(exp: &str, scale: Scale, threads: usize) -> Result<()> {
             ablations::run_all(scale, threads)
         }
         other => bail!(
-            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations|all)"
+            "unknown experiment {other:?} (table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|incremental|ablations|all)"
         ),
     }
 }

@@ -7,10 +7,10 @@
 //! morphmine cliques --graph <spec> [--k 4]
 //! morphmine census  --graph <spec> [--artifacts artifacts]
 //! morphmine gen     --dataset mico[:scale] --out <path>
-//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|ablations] [--scale tiny|small|medium]
+//! morphmine bench   [--exp all|table1|table2|table3|table4|fig2|fig5|fused|kernels|service|persist|shard|incremental|ablations] [--scale tiny|small|medium]
 //! morphmine info    --graph <spec>
-//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits] [--trace] [--trace-tree] [--slow-query-ms N] [--metrics-dump <path>] [--cluster-stats]
-//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--metrics <addr:port>] [--trace] [--trace-tree] [--slow-query-ms N] [--cluster-stats]
+//! morphmine batch   --graph <spec> --queries "motifs:4;match:cycle4,p3" [--repeat 2] [--workers 2] [--cache-mb 64] [--delta-budget N] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--assert-warm-hits] [--trace] [--trace-tree] [--slow-query-ms N] [--metrics-dump <path>] [--cluster-stats]
+//! morphmine serve   --graph <spec> [--workers 2] [--cache-mb 64] [--delta-budget N] [--persist <dir>] [--fsync-every N] [--shards 'a1|a2,b1|b2'] [--connect-timeout S] [--shard-timeout S] [--probe-interval S] [--hedge-timeout S] [--verify-reads F] [--metrics <addr:port>] [--trace] [--trace-tree] [--slow-query-ms N] [--cluster-stats]
 //! morphmine shard-worker --graph <spec> --listen <addr:port> [--threads N] [--cache-mb 64] [--persist <dir>] [--fsync-every N] [--slice i/k] [--metrics <addr:port>]
 //! morphmine store   <inspect|compact|purge|verify> --dir <dir> [--graph <spec>]
 //! ```
@@ -60,8 +60,14 @@
 //! often an idle-looking worker is PINGed for signs of life (all in
 //! seconds). `shard-worker --slice i/k` pins a worker to group `i` of a
 //! `k`-group topology so it pre-warms its group's persisted slices at
-//! startup instead of lazily on first request. Edge updates are rejected
-//! in sharded serve (the workers' graph copies are immutable).
+//! startup instead of lazily on first request. Sharded serve accepts the
+//! same `+ u v` / `- u v` edge updates as the single-process loop: the
+//! coordinator delta-patches its composed totals and broadcasts the
+//! mutation to every worker (proto v6 `UPDATE`, fingerprint-verified on
+//! both ends), which rebase their per-slice stores in place — the session
+//! never restarts cold. Updates between existing vertices only (worker
+//! copies are fixed-size); `--delta-budget N` caps the delta pass's
+//! neighborhood enumeration (0 disables patching — every update purges).
 //!
 //! Observability ([`crate::obs`]): `--metrics <addr:port>` (on the
 //! long-lived `serve` / `shard-worker` processes only) binds a plain-HTTP
@@ -199,6 +205,13 @@ fn persist_of(args: &Args) -> Result<Option<PersistConfig>> {
     Ok(Some(pc))
 }
 
+/// Delta-morphing enumeration budget from `--delta-budget N`. `0`
+/// disables in-place patching: every edge update purges the store (the
+/// pre-delta behavior), with the fallback still explicitly counted.
+fn delta_budget_of(args: &Args) -> Result<usize> {
+    args.parse_num("delta-budget", crate::service::delta::DEFAULT_DELTA_BUDGET)
+}
+
 fn service_of(args: &Args) -> Result<Service> {
     ensure_no_shard_timing_flags(args)?;
     let spec = args
@@ -212,6 +225,7 @@ fn service_of(args: &Args) -> Result<Service> {
         fused: fused_of(args)?,
         cache_bytes: args.parse_num("cache-mb", 64usize)? << 20,
         persist: persist_of(args)?,
+        delta_budget: delta_budget_of(args)?,
     };
     let svc = Service::try_start(graph, config)?;
     if let Some(r) = svc.recovery_report() {
@@ -462,13 +476,14 @@ fn shard_coordinator_of(args: &Args, spec_shards: &str) -> Result<crate::shard::
     );
     let cache_bytes = args.parse_num("cache-mb", 64usize)? << 20;
     let config = pool_config_of(args)?;
-    let coord = crate::shard::ShardCoordinator::connect_with(
+    let mut coord = crate::shard::ShardCoordinator::connect_with(
         graph,
         &groups,
         planner,
         cache_bytes,
         config,
     )?;
+    coord.set_delta_budget(delta_budget_of(args)?);
     let rendered: Vec<String> = groups.iter().map(|g| g.join("|")).collect();
     println!(
         "sharded across {} workers in {} group(s) ({} sub-slices): {}",
@@ -815,9 +830,11 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 let mut coord = shard_coordinator_of(&args, addrs)?;
                 spawn_metrics_of(&args)?;
                 println!(
-                    "morphmine sharded service ready ({} workers). One batch per line, queries separated by ';' — `quit` exits",
-                    coord.num_shards()
+                    "morphmine sharded service ready ({} workers, epoch {}). One batch per line, queries separated by ';'",
+                    coord.num_shards(),
+                    coord.epoch()
                 );
+                println!("  e.g. `motifs:4;match:cycle4,diamond-vi` — `+ u v` / `- u v` applies an edge update across the fabric, `quit` exits");
                 let stdin = std::io::stdin();
                 let mut line = String::new();
                 loop {
@@ -832,12 +849,30 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                     if text == "quit" || text == "exit" {
                         break;
                     }
-                    if text.starts_with('+') || text.starts_with('-') {
-                        eprintln!(
-                            "error: edge updates are not supported in sharded mode — the \
-                             workers' graph copies are immutable (restart the cluster on the \
-                             new graph instead)"
-                        );
+                    if let Some(rest) = text.strip_prefix('+').or_else(|| text.strip_prefix('-')) {
+                        let insert = text.starts_with('+');
+                        let mut it = rest.split_whitespace();
+                        match (
+                            it.next().and_then(|s| s.parse::<u32>().ok()),
+                            it.next().and_then(|s| s.parse::<u32>().ok()),
+                        ) {
+                            (Some(u), Some(v)) if u != v => {
+                                let applied = if insert {
+                                    coord.insert_edge(u, v)
+                                } else {
+                                    coord.remove_edge(u, v)
+                                };
+                                match applied {
+                                    Ok(applied) => println!(
+                                        "{} edge ({u},{v}): applied={applied} epoch={}",
+                                        if insert { "insert" } else { "remove" },
+                                        coord.epoch()
+                                    ),
+                                    Err(e) => eprintln!("error: {e:#}"),
+                                }
+                            }
+                            _ => eprintln!("usage: +|- <u> <v> (two distinct vertex ids)"),
+                        }
                         continue;
                     }
                     let texts: Vec<&str> = text

@@ -1,0 +1,482 @@
+//! DELTA-MORPHING — incremental maintenance of cached base-pattern counts.
+//!
+//! An edge update only perturbs the matches that touch the updated edge's
+//! neighborhood, so the cached full-map count of a base pattern can be
+//! *patched* instead of recomputed: for edge `(u,v)` the count delta of a
+//! connected `k`-vertex pattern is confined to the connected `k`-vertex
+//! sets of the data graph that contain **both** endpoints (any map whose
+//! constraint evaluation differs between the two graph states must place
+//! `u` and `v` in its image, and any set hosting a map of a connected
+//! pattern is itself connected). [`edge_update_deltas`] enumerates those
+//! sets once per pattern size and counts constraint-satisfying bijections
+//! with the edge present and with it absent; the signed difference is the
+//! exact delta in the same symmetrized full-map-count space the
+//! [`ResultStore`](super::ResultStore) holds (no automorphism scaling —
+//! bijections *are* full maps).
+//!
+//! The fragment this proves is deliberately conservative: **unlabeled,
+//! connected patterns of ≥ 2 vertices** (anti-edges and open pairs are
+//! fine — the bijection counter checks them directly). Anything outside
+//! it, or any update whose neighborhood enumeration exceeds the caller's
+//! budget, gets an explicit [`DeltaOutcome::Fallback`] with a reason —
+//! counted in `mm_delta_fallback_total`, never a silent wrong answer. The
+//! caller purges those entries (cold recompute on next touch); it patches
+//! the rest in place under the same epoch bump.
+//!
+//! Contract: the graph passed in must **contain** the edge `(u,v)` — call
+//! after applying an insertion, and *before* applying a removal (the
+//! enumeration walks the graph state in which the edge exists, which is a
+//! superset of both states' relevant sets).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::time::Instant;
+
+use crate::graph::{DynGraph, VertexId};
+use crate::pattern::canon::CanonKey;
+use crate::pattern::Pattern;
+use crate::{obs_counter, obs_histogram};
+
+/// Default cap on distinct connected vertex sets examined per pattern
+/// size during one update's delta pass (see [`edge_update_deltas`]).
+pub const DEFAULT_DELTA_BUDGET: usize = 1 << 16;
+
+/// Per-base result of a delta pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaOutcome {
+    /// Exact signed change of the stored (symmetrized full-map) count.
+    Patch(i128),
+    /// The delta pass cannot prove this base — the caller must purge it.
+    /// The reason is a short static tag (`"labeled"`, `"disconnected"`,
+    /// `"trivial"`, `"delta disabled"`, `"neighborhood budget exceeded"`).
+    Fallback(&'static str),
+}
+
+/// Everything [`edge_update_deltas`] learned about one edge update:
+/// exactly one outcome per distinct base-pattern key passed in.
+#[derive(Debug, Default)]
+pub struct DeltaReport {
+    pub deltas: HashMap<CanonKey, DeltaOutcome>,
+    /// Connected vertex sets enumerated across all pattern sizes.
+    pub sets_examined: u64,
+}
+
+impl DeltaReport {
+    /// Number of bases that fell back (must be purged by the caller).
+    pub fn fallbacks(&self) -> u64 {
+        self.deltas
+            .values()
+            .filter(|o| matches!(o, DeltaOutcome::Fallback(_)))
+            .count() as u64
+    }
+}
+
+/// Compute per-base count deltas for the edge update `(u, v)`.
+///
+/// `inserted` selects the sign: `true` means the edge was just inserted
+/// (the delta moves counts from the without-edge state to the current
+/// state), `false` means it is about to be removed. Either way the graph
+/// must currently contain the edge (see module docs).
+///
+/// `max_sets` bounds the enumeration per pattern size; `0` disables the
+/// delta pass entirely (every base falls back — the purge baseline).
+pub fn edge_update_deltas(
+    graph: &DynGraph,
+    u: VertexId,
+    v: VertexId,
+    inserted: bool,
+    bases: &[(CanonKey, Pattern)],
+    max_sets: usize,
+) -> DeltaReport {
+    debug_assert!(
+        graph.has_edge(u, v),
+        "delta contract: the graph must contain the updated edge"
+    );
+    let start = Instant::now();
+    let mut report = DeltaReport::default();
+    // Partition supported bases by size; everything else falls back now.
+    let mut by_size: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, (key, p)) in bases.iter().enumerate() {
+        let unsupported = if max_sets == 0 {
+            Some("delta disabled")
+        } else if p.is_labeled() {
+            Some("labeled")
+        } else if p.num_vertices() < 2 {
+            Some("trivial")
+        } else if !p.is_connected() {
+            Some("disconnected")
+        } else {
+            None
+        };
+        match unsupported {
+            Some(reason) => {
+                report.deltas.insert(*key, DeltaOutcome::Fallback(reason));
+            }
+            None => by_size.entry(p.num_vertices()).or_default().push(i),
+        }
+    }
+    for (k, idxs) in by_size {
+        match connected_supersets(graph, u, v, k, max_sets, &mut report.sets_examined) {
+            None => {
+                for &i in &idxs {
+                    report
+                        .deltas
+                        .insert(bases[i].0, DeltaOutcome::Fallback("neighborhood budget exceeded"));
+                }
+            }
+            Some(sets) => {
+                for &i in &idxs {
+                    let p = &bases[i].1;
+                    let mut d: i128 = 0;
+                    for s in &sets {
+                        d += count_maps(graph, p, s, (u, v), false)
+                            - count_maps(graph, p, s, (u, v), true);
+                    }
+                    let delta = if inserted { d } else { -d };
+                    report.deltas.insert(bases[i].0, DeltaOutcome::Patch(delta));
+                }
+            }
+        }
+    }
+    obs_counter!("mm_delta_sets_examined_total").add(report.sets_examined);
+    obs_counter!("mm_delta_fallback_total").add(report.fallbacks());
+    obs_histogram!("mm_delta_us").record_duration(start.elapsed());
+    report
+}
+
+/// Enumerate every vertex set `S` with `|S| = k`, `{u,v} ⊆ S`, and `G[S]`
+/// connected, by breadth-first growth from `{u,v}` (an edge, hence
+/// connected): a connected superset is always reachable by adding one
+/// adjacent vertex at a time. Returns `None` — delta pass abandoned for
+/// this size — if the frontier exceeds `max_sets` distinct sets or the
+/// growth work exceeds a proportional cap (dense hubs can generate far
+/// more candidate extensions than surviving sets).
+fn connected_supersets(
+    graph: &DynGraph,
+    u: VertexId,
+    v: VertexId,
+    k: usize,
+    max_sets: usize,
+    sets_examined: &mut u64,
+) -> Option<Vec<Vec<VertexId>>> {
+    let mut seed = vec![u, v];
+    seed.sort_unstable();
+    let mut frontier: BTreeSet<Vec<VertexId>> = BTreeSet::new();
+    frontier.insert(seed);
+    let work_cap = max_sets.saturating_mul(64).max(1024);
+    let mut work = 0usize;
+    for _ in 2..k {
+        let mut next: BTreeSet<Vec<VertexId>> = BTreeSet::new();
+        for s in &frontier {
+            for &w in s {
+                for &x in graph.neighbors(w) {
+                    let pos = match s.binary_search(&x) {
+                        Ok(_) => continue, // already a member
+                        Err(pos) => pos,
+                    };
+                    work += 1;
+                    if work > work_cap {
+                        return None;
+                    }
+                    let mut t = Vec::with_capacity(s.len() + 1);
+                    t.extend_from_slice(&s[..pos]);
+                    t.push(x);
+                    t.extend_from_slice(&s[pos..]);
+                    next.insert(t);
+                    if next.len() > max_sets {
+                        return None;
+                    }
+                }
+            }
+        }
+        frontier = next;
+    }
+    *sets_examined += frontier.len() as u64;
+    Some(frontier.into_iter().collect())
+}
+
+/// Count bijections `φ : V(p) → S` under which every pattern edge maps to
+/// a graph edge and every pattern anti-edge to a non-edge (open pairs are
+/// unconstrained). With `exclude_uv` the pair `{u,v}` is treated as
+/// absent — the without-edge state — so the *same* enumeration serves
+/// both sides of the delta.
+fn count_maps(
+    graph: &DynGraph,
+    p: &Pattern,
+    set: &[VertexId],
+    uv: (VertexId, VertexId),
+    exclude_uv: bool,
+) -> i128 {
+    debug_assert_eq!(set.len(), p.num_vertices());
+    let mut assigned: Vec<VertexId> = Vec::with_capacity(set.len());
+    let mut used = vec![false; set.len()];
+    extend_maps(graph, p, set, uv, exclude_uv, &mut assigned, &mut used)
+}
+
+fn extend_maps(
+    graph: &DynGraph,
+    p: &Pattern,
+    set: &[VertexId],
+    uv: (VertexId, VertexId),
+    exclude_uv: bool,
+    assigned: &mut Vec<VertexId>,
+    used: &mut [bool],
+) -> i128 {
+    let i = assigned.len();
+    if i == set.len() {
+        return 1;
+    }
+    let mut total = 0i128;
+    for slot in 0..set.len() {
+        if used[slot] {
+            continue;
+        }
+        let g = set[slot];
+        let consistent = (0..i).all(|j| {
+            let present = edge_present(graph, assigned[j], g, uv, exclude_uv);
+            if p.has_edge(j, i) {
+                present
+            } else if p.has_anti_edge(j, i) {
+                !present
+            } else {
+                true
+            }
+        });
+        if consistent {
+            used[slot] = true;
+            assigned.push(g);
+            total += extend_maps(graph, p, set, uv, exclude_uv, assigned, used);
+            assigned.pop();
+            used[slot] = false;
+        }
+    }
+    total
+}
+
+#[inline]
+fn edge_present(
+    graph: &DynGraph,
+    x: VertexId,
+    y: VertexId,
+    uv: (VertexId, VertexId),
+    exclude_uv: bool,
+) -> bool {
+    if exclude_uv && ((x, y) == uv || (y, x) == uv) {
+        return false;
+    }
+    graph.has_edge(x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::{aggregate_pattern, CountAgg};
+    use crate::graph::generators::erdos_renyi;
+    use crate::pattern::catalog;
+
+    /// Bases the delta fragment must prove exactly: every flavor of
+    /// constraint (edge-induced open pairs, vertex-induced anti-edges,
+    /// cliques, stars) across sizes 2–4.
+    fn exact_bases() -> Vec<(CanonKey, Pattern)> {
+        let mut pats = vec![
+            catalog::path(2),
+            catalog::triangle(),
+            catalog::path(3),
+            catalog::path(4),
+            catalog::star(4),
+            catalog::cycle(4),
+            catalog::cycle(4).vertex_induced(),
+            catalog::diamond().vertex_induced(),
+            catalog::clique(4),
+        ];
+        pats.extend(catalog::motifs_vertex_induced(4));
+        let mut out: Vec<(CanonKey, Pattern)> = Vec::new();
+        for p in pats {
+            let k = p.canonical_key();
+            if !out.iter().any(|(k0, _)| *k0 == k) {
+                out.push((k, p));
+            }
+        }
+        out
+    }
+
+    /// Symmetrized full-map counts straight from the batch matcher — the
+    /// store-value convention the deltas must patch.
+    fn full_counts(g: &DynGraph, bases: &[(CanonKey, Pattern)]) -> HashMap<CanonKey, i128> {
+        let dg = g.to_data_graph("delta-oracle");
+        bases
+            .iter()
+            .map(|(k, p)| (*k, aggregate_pattern(&dg, p, &CountAgg, 1)))
+            .collect()
+    }
+
+    fn assert_deltas_exact(
+        old: &HashMap<CanonKey, i128>,
+        new: &HashMap<CanonKey, i128>,
+        report: &DeltaReport,
+        bases: &[(CanonKey, Pattern)],
+        ctx: &str,
+    ) {
+        assert_eq!(report.deltas.len(), bases.len(), "{ctx}: one outcome per base");
+        for (k, p) in bases {
+            match report.deltas.get(k) {
+                Some(DeltaOutcome::Patch(d)) => assert_eq!(
+                    old[k] + d,
+                    new[k],
+                    "{ctx}: wrong delta {d} for {p:?} (old {} new {})",
+                    old[k],
+                    new[k]
+                ),
+                other => panic!("{ctx}: expected exact delta for {p:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn insert_deltas_match_recount() {
+        let bases = exact_bases();
+        for seed in [3u64, 11, 42] {
+            let mut g = DynGraph::from_data_graph(&erdos_renyi(30, 80, seed));
+            let (a, b) = (0..30u32)
+                .flat_map(|a| (0..30u32).map(move |b| (a, b)))
+                .find(|&(a, b)| a < b && !g.has_edge(a, b) && g.degree(a) > 0 && g.degree(b) > 0)
+                .expect("sparse graph has a non-edge between non-isolated vertices");
+            let old = full_counts(&g, &bases);
+            assert!(g.insert_edge(a, b));
+            let report = edge_update_deltas(&g, a, b, true, &bases, DEFAULT_DELTA_BUDGET);
+            let new = full_counts(&g, &bases);
+            assert_deltas_exact(&old, &new, &report, &bases, &format!("insert seed {seed}"));
+            assert!(report.sets_examined > 0);
+            assert_eq!(report.fallbacks(), 0);
+        }
+    }
+
+    #[test]
+    fn removal_deltas_match_recount() {
+        let bases = exact_bases();
+        for seed in [7u64, 19] {
+            let mut g = DynGraph::from_data_graph(&erdos_renyi(30, 80, seed));
+            let (a, b) = (0..30u32)
+                .flat_map(|a| (0..30u32).map(move |b| (a, b)))
+                .find(|&(a, b)| a < b && g.has_edge(a, b))
+                .expect("graph has an edge");
+            let old = full_counts(&g, &bases);
+            // Deltas are computed on the pre-removal graph (which still
+            // contains the edge), then the removal is applied.
+            let report = edge_update_deltas(&g, a, b, false, &bases, DEFAULT_DELTA_BUDGET);
+            assert!(g.remove_edge(a, b));
+            let new = full_counts(&g, &bases);
+            assert_deltas_exact(&old, &new, &report, &bases, &format!("remove seed {seed}"));
+        }
+    }
+
+    #[test]
+    fn hub_disconnect_deltas_are_exact() {
+        // A star: removing a hub edge is the worst case for "which
+        // matches died" bookkeeping — wedges and stars through the hub.
+        let mut g = DynGraph::new(12);
+        for leaf in 1..12u32 {
+            g.insert_edge(0, leaf);
+        }
+        g.insert_edge(1, 2);
+        let bases = exact_bases();
+        let old = full_counts(&g, &bases);
+        let report = edge_update_deltas(&g, 0, 7, false, &bases, DEFAULT_DELTA_BUDGET);
+        assert!(g.remove_edge(0, 7));
+        let new = full_counts(&g, &bases);
+        assert_deltas_exact(&old, &new, &report, &bases, "hub disconnect");
+    }
+
+    #[test]
+    fn single_edge_base_delta_is_aut_sized() {
+        // The 2-vertex base: one new edge adds exactly |Aut(edge)| = 2
+        // full maps (both orientations).
+        let mut g = DynGraph::from_data_graph(&erdos_renyi(10, 12, 1));
+        let (a, b) = (0..10u32)
+            .flat_map(|a| (0..10u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !g.has_edge(a, b))
+            .unwrap();
+        assert!(g.insert_edge(a, b));
+        let edge = catalog::path(2);
+        let bases = vec![(edge.canonical_key(), edge)];
+        let report = edge_update_deltas(&g, a, b, true, &bases, DEFAULT_DELTA_BUDGET);
+        assert_eq!(
+            report.deltas[&bases[0].0],
+            DeltaOutcome::Patch(2),
+            "insert: +2 maps"
+        );
+        let report = edge_update_deltas(&g, a, b, false, &bases, DEFAULT_DELTA_BUDGET);
+        assert_eq!(
+            report.deltas[&bases[0].0],
+            DeltaOutcome::Patch(-2),
+            "removal: the same magnitude, negated"
+        );
+    }
+
+    #[test]
+    fn budget_zero_disables_the_delta_pass() {
+        let mut g = DynGraph::new(4);
+        g.insert_edge(0, 1);
+        let bases = exact_bases();
+        let report = edge_update_deltas(&g, 0, 1, true, &bases, 0);
+        assert_eq!(report.sets_examined, 0);
+        assert_eq!(report.fallbacks(), bases.len() as u64);
+        for (k, _) in &bases {
+            assert_eq!(report.deltas[k], DeltaOutcome::Fallback("delta disabled"));
+        }
+    }
+
+    #[test]
+    fn unsupported_fragments_fall_back_supported_still_patch() {
+        let mut g = DynGraph::from_data_graph(&erdos_renyi(20, 50, 5));
+        let (a, b) = (0..20u32)
+            .flat_map(|a| (0..20u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !g.has_edge(a, b))
+            .unwrap();
+        let labeled = catalog::triangle().with_labels(&[1, 1, 1]);
+        let lonely = Pattern::from_edges(1, &[]);
+        let split = Pattern::from_edges(4, &[(0, 1), (2, 3)]);
+        let tri = catalog::triangle();
+        let bases = vec![
+            (labeled.canonical_key(), labeled),
+            (lonely.canonical_key(), lonely),
+            (split.canonical_key(), split),
+            (tri.canonical_key(), tri),
+        ];
+        let old = full_counts(&g, &[bases[3].clone()]);
+        assert!(g.insert_edge(a, b));
+        let report = edge_update_deltas(&g, a, b, true, &bases, DEFAULT_DELTA_BUDGET);
+        let new = full_counts(&g, &[bases[3].clone()]);
+        assert_eq!(report.deltas[&bases[0].0], DeltaOutcome::Fallback("labeled"));
+        assert_eq!(report.deltas[&bases[1].0], DeltaOutcome::Fallback("trivial"));
+        assert_eq!(
+            report.deltas[&bases[2].0],
+            DeltaOutcome::Fallback("disconnected")
+        );
+        match report.deltas[&bases[3].0] {
+            DeltaOutcome::Patch(d) => {
+                assert_eq!(old[&bases[3].0] + d, new[&bases[3].0], "triangle stays exact")
+            }
+            ref other => panic!("triangle should patch, got {other:?}"),
+        }
+        assert_eq!(report.fallbacks(), 3);
+    }
+
+    #[test]
+    fn tight_budget_falls_back_loudly() {
+        // K5: three connected 3-sets contain any given edge, so a budget
+        // of one set must abandon the pass rather than undercount.
+        let mut g = DynGraph::new(5);
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                g.insert_edge(u, v);
+            }
+        }
+        let tri = catalog::triangle();
+        let bases = vec![(tri.canonical_key(), tri)];
+        let report = edge_update_deltas(&g, 0, 1, true, &bases, 1);
+        assert_eq!(
+            report.deltas[&bases[0].0],
+            DeltaOutcome::Fallback("neighborhood budget exceeded")
+        );
+    }
+}

@@ -23,6 +23,13 @@
 //!   [`remove_edge`](crate::graph::DynGraph::remove_edge) so incremental
 //!   updates bump the epoch instead of silently serving stale counts.
 //!
+//! * [`delta`] — delta-morphing: an applied edge update computes per-base
+//!   count *deltas* from the updated edge's neighborhood and patches
+//!   cached values in place under the epoch bump; bases outside the
+//!   proven fragment fall back to a counted, explicit purge. The store
+//!   behaves as a maintained materialized view, not a cache that
+//!   restarts cold on every write.
+//!
 //! * [`persist`] — durable result store: a CRC-framed write-ahead log of
 //!   store inserts/invalidations plus periodic snapshot compaction, keyed
 //!   by a [`crate::graph::GraphFingerprint`] so a restarted `serve`
@@ -63,11 +70,13 @@
 //! assert_eq!(s2.executed_bases, 0, "second batch is fully cache-served");
 //! ```
 
+pub mod delta;
 pub mod persist;
 pub mod planner;
 pub mod serve;
 pub mod store;
 
+pub use delta::{edge_update_deltas, DeltaOutcome, DeltaReport, DEFAULT_DELTA_BUDGET};
 pub use persist::{PersistConfig, PersistOpts, RecoveryReport};
 pub use planner::{BatchStats, QueryPlanner};
 pub use serve::{BatchResponse, QueryResult, Service, ServiceConfig, ServiceQuery};

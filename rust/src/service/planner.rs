@@ -106,6 +106,15 @@ impl QueryPlanner {
         }
     }
 
+    /// The deduplicated base-pattern set the morph plan for `queries`
+    /// executes over. Mutable embedders ([`crate::service::Service`], the
+    /// sharded coordinator) record these in a `CanonKey → Pattern`
+    /// registry so delta-morphing can resolve stored keys back to the
+    /// patterns the delta pass needs — the store alone only knows keys.
+    pub fn plan_bases(&self, queries: &[Pattern], stats: &GraphStats) -> Vec<Pattern> {
+        self.morph(queries, stats).base
+    }
+
     /// Execute the subset of `base` selected by `indices`: one fused
     /// traversal when two or more patterns are missing (the cached bases
     /// never enter the plan trie), a single sweep otherwise. Returns

@@ -13,11 +13,18 @@
 //!   interest in the owner's completion cell and blocks on it after
 //!   finishing its own share. Each `(canonical key, epoch)` pair is
 //!   matched at most once process-wide.
-//! * **Invalidation** — the service owns a [`DynGraph`];
+//! * **Maintenance** — the service owns a [`DynGraph`];
 //!   [`Service::insert_edge`]/[`Service::remove_edge`] delegate to it, and
-//!   every *applied* mutation bumps [`DynGraph::version`]. Batches pin the
-//!   epoch at admission: the CSR snapshot is rebuilt lazily on the first
-//!   batch after a mutation, the store purges entries from older epochs,
+//!   every *applied* mutation bumps [`DynGraph::version`]. Instead of
+//!   purging the store, an applied update runs the delta-morphing pass
+//!   ([`crate::service::delta`]): per-base count deltas computed from the
+//!   updated edge's neighborhood **patch cached values in place** under
+//!   the epoch bump ([`ResultStore::rebase_epoch`]); bases the pass cannot
+//!   prove (labeled, disconnected, neighborhood over budget, or bases
+//!   whose pattern this process has never planned) fall back to an
+//!   explicit counted purge — `mm_delta_fallback_total` — and recompute
+//!   cold on next touch. Batches still pin the epoch at admission: the
+//!   CSR snapshot is rebuilt lazily on the first batch after a mutation,
 //!   and results computed against a superseded snapshot never enter the
 //!   cache — stale counts are structurally unservable.
 //! * **Durability** — with [`ServiceConfig::persist`] set, published
@@ -80,6 +87,12 @@ pub struct ServiceConfig {
     /// [`crate::service::persist`]) so a restart recovers warm. `None`
     /// keeps the store purely in-memory.
     pub persist: Option<PersistConfig>,
+    /// Delta-morphing enumeration budget: the cap on distinct connected
+    /// neighborhood sets examined per pattern size when an edge update
+    /// patches the store in place (see [`crate::service::delta`]). `0`
+    /// disables the delta pass — every update purges, the pre-delta
+    /// behavior, with the fallback still explicitly counted.
+    pub delta_budget: usize,
 }
 
 impl Default for ServiceConfig {
@@ -91,6 +104,7 @@ impl Default for ServiceConfig {
             fused: true,
             cache_bytes: 64 << 20,
             persist: None,
+            delta_budget: super::delta::DEFAULT_DELTA_BUDGET,
         }
     }
 }
@@ -323,6 +337,14 @@ struct State {
     /// edge updates arrive in original (input) IDs and are translated into
     /// the engine's internal ID space, which snapshots keep forever.
     relabel: Option<Relabeling>,
+    /// Every base pattern this process has planned, by canonical key —
+    /// the delta pass needs the *pattern* behind each stored key to count
+    /// its perturbed maps. Keys the registry cannot resolve (e.g. entries
+    /// restored from disk before their base was ever planned here) are
+    /// purged on update, never guessed.
+    patterns: HashMap<CanonKey, Pattern>,
+    /// See [`ServiceConfig::delta_budget`].
+    delta_budget: usize,
 }
 
 impl State {
@@ -429,6 +451,8 @@ impl Service {
                 inflight: HashMap::new(),
                 relabel,
                 persist,
+                patterns: HashMap::new(),
+                delta_budget: config.delta_budget,
             }),
         });
         let planner = QueryPlanner::new(config.policy, config.fused, config.threads);
@@ -482,13 +506,15 @@ impl Service {
     }
 
     /// Apply an edge insertion. `Ok(true)` means the update was applied
-    /// and bumped the graph epoch ([`DynGraph::insert_edge`]),
-    /// invalidating every cached result; `Ok(false)` is a duplicate
-    /// insert (no-op, cache stays warm); self-loops and IDs that would
-    /// grow the graph by more than [`MAX_UPDATE_GROWTH`] vertices are
-    /// errors. Vertex IDs are the graph's **original** (input) IDs — any
-    /// degree-ordered relabeling from the initial build is translated
-    /// internally.
+    /// and bumped the graph epoch ([`DynGraph::insert_edge`]); the result
+    /// store is **delta-patched in place** across the bump
+    /// ([`crate::service::delta`]), so cached bases in the proven
+    /// fragment stay servable — only unprovable ones recompute cold.
+    /// `Ok(false)` is a duplicate insert (no-op, cache stays warm);
+    /// self-loops and IDs that would grow the graph by more than
+    /// [`MAX_UPDATE_GROWTH`] vertices are errors. Vertex IDs are the
+    /// graph's **original** (input) IDs — any degree-ordered relabeling
+    /// from the initial build is translated internally.
     pub fn insert_edge(&self, u: VertexId, v: VertexId) -> Result<bool> {
         ensure!(u != v, "self loop ({u},{u}) not allowed");
         let mut st = self.shared.state.lock().unwrap();
@@ -499,7 +525,12 @@ impl Service {
             "vertex {hi} would grow the {}-vertex graph past the {MAX_UPDATE_GROWTH}-vertex update cap",
             st.graph.num_vertices()
         );
-        Ok(st.graph.insert_edge(u, v))
+        if !st.graph.insert_edge(u, v) {
+            return Ok(false);
+        }
+        // the graph now contains the edge — the state the delta pass walks
+        rebase_after_update(&mut st, u, v, true);
+        Ok(true)
     }
 
     /// Apply an edge removal (see [`Service::insert_edge`]). Out-of-range
@@ -510,7 +541,14 @@ impl Service {
         if u == v || u.max(v) as usize >= st.graph.num_vertices() {
             return Ok(false);
         }
-        Ok(st.graph.remove_edge(u, v))
+        if !st.graph.has_edge(u, v) {
+            return Ok(false);
+        }
+        // removal deltas are computed on the pre-removal graph — the one
+        // that still contains the edge — then the removal is applied and
+        // the store rebased to the post-removal epoch
+        rebase_after_update(&mut st, u, v, false);
+        Ok(true)
     }
 
     /// Current graph epoch (count of applied mutations).
@@ -552,6 +590,55 @@ impl Drop for Service {
         if let Some(writer) = writer {
             writer.shutdown(image);
         }
+    }
+}
+
+/// Delta-rebase the service state across one applied edge update.
+///
+/// Call with the edge `(u,v)` **present** in `st.graph`: for an insertion
+/// the caller has already applied it; for a removal this function computes
+/// the deltas first (on the graph that still contains the edge), then
+/// applies the removal itself. Stored values whose delta the pass proved
+/// are patched in place; everything else — explicit fallbacks and keys
+/// whose pattern the registry cannot resolve — is purged and recomputes
+/// cold on next touch. The WAL is rebound to the mutated fingerprint and
+/// the patched image folded into a snapshot under this same lock hold, so
+/// a restart on the mutated graph recovers the patched values warm.
+fn rebase_after_update(st: &mut State, u: VertexId, v: VertexId, inserted: bool) {
+    debug_assert!(st.graph.has_edge(u, v), "delta pass needs the edge present");
+    let bases: Vec<(CanonKey, Pattern)> = st
+        .store
+        .entries()
+        .iter()
+        .filter_map(|(k, _)| st.patterns.get(k).map(|p| (*k, p.clone())))
+        .collect();
+    let report =
+        super::delta::edge_update_deltas(&st.graph, u, v, inserted, &bases, st.delta_budget);
+    if !inserted {
+        let removed = st.graph.remove_edge(u, v);
+        debug_assert!(removed, "caller checked the edge exists");
+    }
+    let epoch = st.graph.version();
+    crate::obs_counter!("mm_delta_updates_total").inc();
+    let (patched, _dropped) = st.store.rebase_epoch(epoch, |k, old| {
+        match report.deltas.get(k) {
+            Some(super::delta::DeltaOutcome::Patch(d)) => {
+                let next = old + d;
+                // a negative full-map count means a broken delta; purge
+                // defensively rather than ever serving it
+                (next >= 0).then_some(next)
+            }
+            _ => None,
+        }
+    });
+    crate::obs_counter!("mm_delta_patched_total").add(patched);
+    // everything persisted so far describes a graph that no longer
+    // exists: rebind the log to the mutated fingerprint, then fold the
+    // freshly patched image into a snapshot. Both are enqueued under this
+    // lock hold, so no concurrent batch's insert can slip between them.
+    if let Some(w) = &st.persist {
+        w.invalidate(st.graph.fingerprint());
+        w.compact(st.store.entries());
     }
 }
 
@@ -604,18 +691,10 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
         let epoch = st.graph.version();
         st.store.set_epoch(epoch);
         if st.snapshot.is_none() || st.snapshot_epoch != epoch {
+            // the WAL was already rebound to the mutated fingerprint at
+            // update time (rebase_after_update, under this same mutex) —
+            // this branch only rebuilds the execution snapshot and stats
             let g = st.graph.to_data_graph("service");
-            // the epoch moved: everything persisted so far describes a
-            // graph that no longer exists — enqueue the rebind before any
-            // new insert can land behind it, then a (near-empty-image)
-            // compaction that shrinks the log to a header. Both are
-            // commands to the writer thread: enqueuing under this lock is
-            // what pins their order against the inserts other batches
-            // publish — no IO happens here
-            if let Some(w) = &st.persist {
-                w.invalidate(g.fingerprint());
-                w.compact(st.store.entries());
-            }
             st.stats = Some(Arc::new(GraphStats::compute(&g, 2000, 0x5E55)));
             st.snapshot = Some(Arc::new(g));
             st.snapshot_epoch = epoch;
@@ -639,6 +718,9 @@ fn process(shared: &Shared, planner: &QueryPlanner, queries: &[ServiceQuery]) ->
         let mut st = shared.state.lock().unwrap();
         for (i, p) in plan.base.iter().enumerate() {
             let k = p.canonical_key();
+            // remember the pattern behind every planned base key: the
+            // delta pass resolves stored keys through this registry
+            st.patterns.entry(k).or_insert_with(|| p.clone());
             if let Some(v) = st.store.get(&k, epoch) {
                 values.insert(k, v);
             } else if let Some(cell) = st.inflight.get(&(k, epoch)) {
@@ -801,17 +883,22 @@ mod tests {
     use super::*;
     use crate::graph::generators::erdos_renyi;
 
+    fn config(workers: usize, delta_budget: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            threads: 2,
+            policy: Policy::Naive,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: None,
+            delta_budget,
+        }
+    }
+
     fn service(seed: u64, workers: usize) -> Service {
         Service::start(
             erdos_renyi(50, 180, seed),
-            ServiceConfig {
-                workers,
-                threads: 2,
-                policy: Policy::Naive,
-                fused: true,
-                cache_bytes: 1 << 20,
-                persist: None,
-            },
+            config(workers, crate::service::delta::DEFAULT_DELTA_BUDGET),
         )
     }
 
@@ -841,7 +928,7 @@ mod tests {
     }
 
     #[test]
-    fn edge_updates_bump_epoch_and_invalidate() {
+    fn edge_updates_delta_patch_the_store_in_place() {
         let svc = service(0x5003, 1);
         let r0 = svc.call(&["motifs:3"]).unwrap();
         assert_eq!(r0.epoch, 0);
@@ -856,17 +943,54 @@ mod tests {
         let r1 = svc.call(&["motifs:3"]).unwrap();
         assert_eq!(r1.epoch, 1);
         assert_eq!(
-            r1.stats.executed_bases, r1.stats.total_bases,
-            "mutation must invalidate the cache"
+            r1.stats.executed_bases, 0,
+            "the whole motif base set is in the delta fragment: the \
+             mutation patches it in place, nothing recomputes"
         );
-        // removing the edge restores the original counts (epoch 2, cold)
+        assert!(svc.store_metrics().patched > 0, "patches must be counted");
+        // the patched counts are the truth: a cold service on the mutated
+        // graph must answer identically
+        let mut mutated = crate::graph::DynGraph::from_data_graph(&g);
+        assert!(mutated.insert_edge(u, v));
+        let cold = Service::start(
+            mutated.to_data_graph("mutated"),
+            config(1, crate::service::delta::DEFAULT_DELTA_BUDGET),
+        );
+        assert_eq!(r1.results, cold.call(&["motifs:3"]).unwrap().results);
+        // removing the edge restores the original counts — again patched,
+        // not recomputed
         assert!(svc.remove_edge(u, v).unwrap());
         assert!(!svc.remove_edge(u, v).unwrap(), "second removal is a no-op");
         assert_eq!(svc.epoch(), 2);
         let r2 = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(r2.stats.executed_bases, 0);
         for (a, b) in r0.results.iter().zip(&r2.results) {
             assert_eq!(a.counts, b.counts, "counts must match the restored graph");
         }
+    }
+
+    #[test]
+    fn delta_budget_zero_purges_and_counts_the_fallback() {
+        let fallback = crate::obs_counter!("mm_delta_fallback_total");
+        let fb0 = fallback.get();
+        let svc = Service::start(erdos_renyi(50, 180, 0x5003), config(1, 0));
+        svc.call(&["motifs:3"]).unwrap();
+        let g = erdos_renyi(50, 180, 0x5003);
+        let (u, v) = (0..50u32)
+            .flat_map(|a| (0..50u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !g.has_edge(a, b))
+            .unwrap();
+        assert!(svc.insert_edge(u, v).unwrap());
+        let r = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(
+            r.stats.executed_bases, r.stats.total_bases,
+            "budget 0 disables the delta pass: every base recomputes"
+        );
+        assert_eq!(svc.store_metrics().patched, 0);
+        assert!(
+            fallback.get() > fb0,
+            "disabled delta must surface as counted fallbacks, never silence"
+        );
     }
 
     #[test]
@@ -887,6 +1011,7 @@ mod tests {
                 fused: true,
                 cache_bytes: 1 << 20,
                 persist: None,
+                delta_budget: crate::service::delta::DEFAULT_DELTA_BUDGET,
             },
         );
         // 5-vertex star: C(4,2) = 6 wedges, no triangles
@@ -933,6 +1058,7 @@ mod tests {
             fused: true,
             cache_bytes: 1 << 20,
             persist: Some(crate::service::persist::PersistConfig::new(&dir)),
+            delta_budget: crate::service::delta::DEFAULT_DELTA_BUDGET,
         };
         let g = || erdos_renyi(50, 180, 0x5EAE);
         let svc = Service::try_start(g(), config()).unwrap();
@@ -950,6 +1076,48 @@ mod tests {
     }
 
     #[test]
+    fn delta_patched_store_persists_and_restarts_warm_on_the_mutated_graph() {
+        // an update rebinds the WAL to the mutated fingerprint and folds
+        // the PATCHED image into a snapshot, so a restart on the mutated
+        // graph recovers those patched values warm — the "never restarts
+        // cold" half of the materialized-view story
+        let dir = std::env::temp_dir().join("mm_serve_delta_persist_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = || ServiceConfig {
+            workers: 1,
+            threads: 2,
+            policy: Policy::Naive,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: Some(crate::service::persist::PersistConfig::new(&dir)),
+            delta_budget: crate::service::delta::DEFAULT_DELTA_BUDGET,
+        };
+        let g = || erdos_renyi(50, 180, 0x5EB0);
+        let fresh = g();
+        let (u, v) = (0..50u32)
+            .flat_map(|a| (0..50u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !fresh.has_edge(a, b))
+            .expect("sparse graph has a non-edge");
+        let svc = Service::try_start(g(), mk()).unwrap();
+        svc.call(&["motifs:3"]).unwrap();
+        assert!(svc.insert_edge(u, v).unwrap());
+        let patched = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(patched.stats.executed_bases, 0, "served from patched entries");
+        drop(svc);
+        // restart on the MUTATED graph: its fingerprint is what the WAL
+        // was rebound to at update time
+        let mut mutated = crate::graph::DynGraph::from_data_graph(&g());
+        assert!(mutated.insert_edge(u, v));
+        let svc = Service::try_start(mutated.to_data_graph("mutated"), mk()).unwrap();
+        let rep = svc.recovery_report().expect("persistence configured");
+        assert!(rep.fingerprint_matched, "mutated-graph fingerprint must match");
+        assert!(rep.restored > 0);
+        let warm = svc.call(&["motifs:3"]).unwrap();
+        assert_eq!(warm.stats.executed_bases, 0, "patched values recovered warm");
+        assert_eq!(warm.results, patched.results);
+    }
+
+    #[test]
     fn wal_writer_keeps_record_order_across_interleaved_epoch_bumps() {
         // inserts and epoch invalidations now reach disk via the writer
         // thread; this interleaves them aggressively and then restarts.
@@ -959,6 +1127,8 @@ mod tests {
         // the result comparison below.
         let dir = std::env::temp_dir().join("mm_serve_wal_writer_unit");
         let _ = std::fs::remove_dir_all(&dir);
+        // delta_budget 0: this test exercises the purge path's WAL record
+        // ordering, so updates must invalidate rather than patch
         let config = || ServiceConfig {
             workers: 2,
             threads: 2,
@@ -966,6 +1136,7 @@ mod tests {
             fused: true,
             cache_bytes: 1 << 20,
             persist: Some(crate::service::persist::PersistConfig::new(&dir)),
+            delta_budget: 0,
         };
         let g = || erdos_renyi(50, 180, 0x5EAF);
         let svc = Service::try_start(g(), config()).unwrap();

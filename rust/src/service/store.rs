@@ -69,6 +69,9 @@ pub struct StoreMetrics {
     pub evictions: u64,
     /// Entries purged because the graph epoch moved past them.
     pub invalidations: u64,
+    /// Entries carried across an epoch bump by a delta patch
+    /// ([`ResultStore::rebase_epoch`]) instead of being purged.
+    pub patched: u64,
     /// Inserts dropped because they were computed against an old epoch.
     pub stale_drops: u64,
     /// Entries seeded from a recovered persistent image at startup
@@ -97,6 +100,7 @@ struct StoreCounters {
     inserts: Arc<Counter>,
     evictions: Arc<Counter>,
     invalidations: Arc<Counter>,
+    patched: Arc<Counter>,
     stale_drops: Arc<Counter>,
     restored: Arc<Counter>,
     bytes: Arc<Gauge>,
@@ -150,6 +154,7 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
             inserts: self.counters.inserts.get(),
             evictions: self.counters.evictions.get(),
             invalidations: self.counters.invalidations.get(),
+            patched: self.counters.patched.get(),
             stale_drops: self.counters.stale_drops.get(),
             restored: self.counters.restored.get(),
             bytes: self.counters.bytes.get() as usize,
@@ -172,6 +177,7 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
             &format!("{prefix}invalidations_total"),
             self.counters.invalidations.clone(),
         );
+        reg.register_counter(&format!("{prefix}patched_total"), self.counters.patched.clone());
         reg.register_counter(
             &format!("{prefix}stale_drops_total"),
             self.counters.stale_drops.clone(),
@@ -192,6 +198,53 @@ impl<V: CacheWeight + Clone> ResultStore<V> {
         self.counters.bytes.set(0);
         self.map.clear();
         self.epoch = epoch;
+    }
+
+    /// Advance to `epoch` like [`ResultStore::set_epoch`], but give the
+    /// caller the chance to **carry** each entry across the bump instead
+    /// of purging it: `patch(key, value)` returns `Some(new_value)` to
+    /// keep the entry at the new epoch (re-weighed, recency preserved) or
+    /// `None` to drop it — dropped entries count as invalidations exactly
+    /// like a purge, carried ones as `patched`. This is the delta-morphing
+    /// entry point ([`crate::service::delta`]): patched entries stay
+    /// servable across an edge update, the unprovable rest recomputes
+    /// cold. Same-epoch calls are no-ops. Returns `(patched, dropped)`.
+    pub fn rebase_epoch(
+        &mut self,
+        epoch: u64,
+        mut patch: impl FnMut(&CanonKey, &V) -> Option<V>,
+    ) -> (u64, u64) {
+        debug_assert!(epoch >= self.epoch, "epochs must be monotone");
+        if epoch == self.epoch {
+            return (0, 0);
+        }
+        let (mut patched, mut dropped) = (0u64, 0u64);
+        let mut byte_delta: i64 = 0;
+        self.map.retain(|k, e| match patch(k, &e.value) {
+            Some(v) => {
+                let bytes = v.weight_bytes() + ENTRY_OVERHEAD;
+                byte_delta += bytes as i64 - e.bytes as i64;
+                e.value = v;
+                e.bytes = bytes;
+                patched += 1;
+                true
+            }
+            None => {
+                byte_delta -= e.bytes as i64;
+                dropped += 1;
+                false
+            }
+        });
+        if byte_delta >= 0 {
+            self.counters.bytes.add(byte_delta as u64);
+        } else {
+            self.counters.bytes.sub((-byte_delta) as u64);
+        }
+        self.counters.patched.add(patched);
+        self.counters.invalidations.add(dropped);
+        self.epoch = epoch;
+        self.evict_to_budget();
+        (patched, dropped)
     }
 
     /// Look up the value for `key` computed at `epoch`. A hit refreshes the
@@ -422,6 +475,55 @@ mod tests {
         small.restore(key(2), 2);
         assert_eq!(small.len(), 1, "restore respects the byte budget");
         assert_eq!(small.get(&key(2), 0), Some(2), "most recent restore survives");
+    }
+
+    #[test]
+    fn rebase_epoch_patches_in_place_and_drops_the_rest() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.insert(key(1), 0, 10);
+        s.insert(key(2), 0, 20);
+        s.insert(key(3), 0, 30);
+        let bytes_before = s.metrics().bytes;
+        let (patched, dropped) = s.rebase_epoch(1, |k, v| {
+            if *k == key(2) {
+                None // unprovable: must recompute cold
+            } else {
+                Some(v + 5)
+            }
+        });
+        assert_eq!((patched, dropped), (2, 1));
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.get(&key(1), 1), Some(15), "carried to the new epoch");
+        assert_eq!(s.get(&key(3), 1), Some(35));
+        assert_eq!(s.get(&key(2), 1), None, "dropped entry misses");
+        assert_eq!(s.get(&key(1), 0), None, "old epoch no longer served");
+        let m = s.metrics();
+        assert_eq!(m.patched, 2);
+        assert_eq!(m.invalidations, 1, "drops count like a purge");
+        assert_eq!(m.bytes, bytes_before - (16 + ENTRY_OVERHEAD));
+    }
+
+    #[test]
+    fn rebase_epoch_same_epoch_is_noop() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.insert(key(1), 0, 1);
+        let (patched, dropped) = s.rebase_epoch(0, |_, _| None);
+        assert_eq!((patched, dropped), (0, 0));
+        assert_eq!(s.get(&key(1), 0), Some(1), "no-op must not touch entries");
+        assert_eq!(s.metrics().patched, 0);
+    }
+
+    #[test]
+    fn rebase_epoch_drop_all_equals_purge() {
+        let mut s: ResultStore<i128> = ResultStore::new(1 << 20);
+        s.insert(key(1), 0, 1);
+        s.insert(key(2), 0, 2);
+        let (patched, dropped) = s.rebase_epoch(3, |_, _| None);
+        assert_eq!((patched, dropped), (0, 2));
+        assert!(s.is_empty());
+        assert_eq!(s.metrics().bytes, 0);
+        assert_eq!(s.metrics().invalidations, 2);
+        assert_eq!(s.epoch(), 3);
     }
 
     #[test]

@@ -58,7 +58,7 @@
 //! Partial answers are never merged into results: a missing sub-slice
 //! fails the batch loudly.
 
-use super::proto::{self, ExecRequest, ExecResponse, Msg};
+use super::proto::{self, ExecRequest, ExecResponse, Msg, UpdateRequest};
 use crate::graph::{DataGraph, GraphFingerprint};
 use crate::obs::{Counter, Registry, SpanRecord};
 use crate::pattern::canon::CanonKey;
@@ -243,6 +243,28 @@ impl PoolCounters {
             verify_mismatches: self.verify_mismatches.get(),
         }
     }
+}
+
+/// What one [`ShardPool::broadcast_update`] achieved across the pool:
+/// how many members applied the mutation, how many were dropped for
+/// refusing (or dying mid-update), and the summed per-slice store
+/// bookkeeping the applying workers reported.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UpdateOutcome {
+    /// Members that applied the mutation and landed on the new
+    /// fingerprint.
+    pub updated: usize,
+    /// Members dropped from the pool: refused the update, answered with
+    /// the wrong fingerprint, or died mid-broadcast. Their seats remain
+    /// (reconnects handshake against the *new* fingerprint), but until a
+    /// restarted worker holds the mutated graph they stay dead.
+    pub failed: usize,
+    /// Per-slice store entries carried warm across the epoch, summed over
+    /// the applying workers.
+    pub carried: u64,
+    /// Per-slice store entries purged to recompute-on-demand, summed over
+    /// the applying workers.
+    pub purged: u64,
 }
 
 /// One connected shard worker: the framed stream plus an incremental
@@ -796,6 +818,115 @@ impl ShardPool {
     /// The fabric tuning this pool runs with.
     pub fn config(&self) -> PoolConfig {
         self.config
+    }
+
+    /// Broadcast one applied edge mutation to every pool member (proto v6
+    /// `UPDATE`): each worker verifies the `old → new` fingerprint
+    /// transition against its own copy, mutates it, rebases its per-slice
+    /// stores, and acks. A member that refuses (diverged copy), answers
+    /// with the wrong fingerprint, or dies mid-broadcast is dropped from
+    /// the pool exactly like a mid-batch failure — its seat remains, and
+    /// any reconnect now handshakes against the **new** fingerprint, so a
+    /// stale restart can never rejoin with pre-update content. The
+    /// broadcast fails loudly (never silently serving a partial pool) when
+    /// it leaves a replica group — or, unreplicated, the whole pool — with
+    /// no live member.
+    ///
+    /// `u`/`v` are **internal** vertex ids (the coordinator translates
+    /// original ids before calling). The pool's own expected fingerprint
+    /// advances to `new_fingerprint` whether or not every member applied:
+    /// the coordinator's graph has already moved, and the only workers
+    /// worth talking to are the ones that moved with it.
+    pub fn broadcast_update(
+        &mut self,
+        insert: bool,
+        u: u32,
+        v: u32,
+        old_fingerprint: GraphFingerprint,
+        new_fingerprint: GraphFingerprint,
+        new_version: u64,
+    ) -> Result<UpdateOutcome> {
+        ensure!(
+            old_fingerprint == self.fingerprint,
+            "update broadcast starts from fingerprint {old_fingerprint}, but the pool \
+             expects {} — the coordinator and pool have diverged",
+            self.fingerprint
+        );
+        let cfg = self.config;
+        let mut probes = 0u64;
+        let mut outcome = UpdateOutcome::default();
+        let mut failures: Vec<String> = Vec::new();
+        for slot in &mut self.workers {
+            let Some(client) = slot.client.as_mut() else {
+                outcome.failed += 1;
+                failures.push(format!("{}: not connected", slot.addr));
+                continue;
+            };
+            let id = self.next_id;
+            self.next_id += 1;
+            let req = UpdateRequest {
+                id,
+                insert,
+                u,
+                v,
+                old_fingerprint,
+                new_fingerprint,
+                new_version,
+            };
+            let reply = client
+                .send(&Msg::Update(req))
+                .and_then(|()| client.recv_reply(cfg.probe_interval, cfg.shard_timeout, &mut probes));
+            let reason = match reply {
+                Ok(Msg::UpdateAck(ack)) if ack.id == id => {
+                    if ack.applied && ack.fingerprint == new_fingerprint {
+                        outcome.updated += 1;
+                        outcome.carried += ack.carried;
+                        outcome.purged += ack.purged;
+                        None
+                    } else {
+                        Some(format!(
+                            "update refused: {} (worker now holds {})",
+                            ack.error, ack.fingerprint
+                        ))
+                    }
+                }
+                Ok(other) => Some(format!("unexpected update reply {other:?}")),
+                Err(e) => Some(format!("{e:#}")),
+            };
+            if let Some(reason) = reason {
+                slot.client = None;
+                self.counters.worker_failures.inc();
+                outcome.failed += 1;
+                failures.push(format!("{}: {reason}", slot.addr));
+            }
+        }
+        self.counters.probes.add(probes);
+        self.fingerprint = new_fingerprint;
+        // a queue with no live member left can never serve its slices:
+        // that redundancy (or, unreplicated, the whole pool) is gone, and
+        // the next batch would only discover it the slow way
+        let mut live = vec![0usize; self.num_queues];
+        for s in &self.workers {
+            if s.client.is_some() {
+                live[s.queue] += 1;
+            }
+        }
+        if let Some(q) = live.iter().position(|&n| n == 0) {
+            self.counters.errors.inc();
+            let scope = if self.replicated {
+                format!("shard group {}", q + 1)
+            } else {
+                "the pool".to_string()
+            };
+            bail!(
+                "edge update left {scope} with no live member ({} of {} workers \
+                 updated); failures:\n  {}",
+                outcome.updated,
+                self.workers.len(),
+                failures.join("\n  ")
+            );
+        }
+        Ok(outcome)
     }
 
     /// Arm the distributed-trace context for the **next**

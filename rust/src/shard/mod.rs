@@ -14,16 +14,19 @@
 //!
 //! The split:
 //!
-//! * [`worker`] — `morphmine shard-worker --listen <addr>`: owns an
-//!   immutable copy of the graph, answers slice requests over a framed TCP
-//!   protocol (pipelined: several requests in flight per connection,
+//! * [`worker`] — `morphmine shard-worker --listen <addr>`: owns a
+//!   **mutable** copy of the graph, answers slice requests over a framed
+//!   TCP protocol (pipelined: several requests in flight per connection,
 //!   replies matched by id), caches partials in per-slice
 //!   [`ResultStore`](crate::service::ResultStore)s (a re-sent
 //!   base × slice is served without matching), coalesces concurrent
 //!   requests for the same base × slice, answers liveness probes inline
-//!   from its read loop, and optionally persists its partials keyed by
-//!   [`shard_fingerprint`] — graph × slice — so a shard restart recovers
-//!   warm.
+//!   from its read loop, applies coordinator-broadcast edge updates
+//!   (proto v6 `UPDATE`: fingerprint-verified transitions, per-slice
+//!   stores rebased — provably-unchanged bases carried warm, the rest
+//!   purged to recompute-on-demand), and optionally persists its partials
+//!   keyed by [`shard_fingerprint`] — graph × slice — so a shard restart
+//!   recovers warm.
 //! * [`proto`] — the wire protocol, reusing the persistence layer's
 //!   CRC32 framing ([`crate::service::persist::frame`]). Handshakes carry
 //!   the protocol version and graph fingerprint; a worker holding
@@ -51,7 +54,10 @@
 //!   `morphmine batch|serve --shards <topology>`, composing the summed
 //!   totals through the same morph algebra and result store as the
 //!   single-process service
-//!   ([`QueryPlanner::serve_batch_sharded`](crate::service::QueryPlanner::serve_batch_sharded)).
+//!   ([`QueryPlanner::serve_batch_sharded`](crate::service::QueryPlanner::serve_batch_sharded)),
+//!   and accepting live edge updates — delta-patching its own composed
+//!   totals and broadcasting the mutation across the pool, so a
+//!   long-lived sharded serve session never restarts cold.
 //!
 //! Failover, hedging, and re-fanning are trivially correct for the same
 //! reason sharding is exact: sub-slices tile the first-level range, every
@@ -91,14 +97,18 @@ pub mod coordinator;
 pub mod proto;
 pub mod worker;
 
-pub use coordinator::{PoolConfig, ShardClient, ShardMetrics, ShardPool};
+pub use coordinator::{PoolConfig, ShardClient, ShardMetrics, ShardPool, UpdateOutcome};
 pub use worker::{ShardWorker, WorkerConfig};
 
-use crate::graph::{DataGraph, GraphFingerprint};
+use crate::graph::{DataGraph, DynGraph, GraphFingerprint, Relabeling, VertexId};
+use crate::pattern::canon::CanonKey;
+use crate::pattern::Pattern;
+use crate::service::delta::{self, DeltaOutcome};
 use crate::service::serve::{to_query_results, BatchResponse, ServiceQuery};
 use crate::service::{QueryPlanner, ResultStore, StoreMetrics};
 use crate::util::timer::PhaseProfile;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
 
 /// Parse a shard topology spec: comma-separated replica groups, each a
 /// pipe-separated list of worker addresses — `a1|a2,b1|b2` is two groups
@@ -245,15 +255,39 @@ pub fn shard_fingerprint(fp: GraphFingerprint, lo: u32, hi: u32) -> GraphFingerp
 /// [`BatchResponse`]s — byte-identical in content to what the
 /// single-process service produces for the same graph and queries.
 ///
-/// The coordinator's graph is immutable (epoch pinned at 0): edge updates
-/// would desynchronize it from the workers' copies, so the sharded CLI
-/// rejects them. Mutable sharded serving would need update broadcast —
-/// recorded as a ROADMAP follow-up.
+/// The coordinator's graph is **mutable**: [`ShardCoordinator::insert_edge`]
+/// / [`ShardCoordinator::remove_edge`] apply the mutation to the
+/// coordinator's own [`DynGraph`] copy, delta-patch the composed-totals
+/// store across the epoch bump (the same
+/// [`crate::service::delta`] pass the single-process service runs — the
+/// coordinator's totals are full-graph counts, so a proven nonzero delta
+/// patches exactly), and broadcast the mutation across the pool (proto v6
+/// `UPDATE`), where each worker verifies the fingerprint transition
+/// against its own copy and rebases its per-slice stores. Subsequent
+/// batches carry the new graph version as their epoch. Sharded updates
+/// never grow the vertex set: workers hold fixed copies whose slice
+/// boundaries are keyed by the original vertex range, so an id outside it
+/// is an error (the single-process service's
+/// [`crate::service::serve::MAX_UPDATE_GROWTH`] slack does not apply
+/// here).
+///
+/// The coordinator's [`crate::graph::GraphStats`] are pinned at connect
+/// time and never recomputed: fused plan orders are a function of the
+/// stats, and the workers pin theirs the same way, so recomputing on one
+/// side would silently re-key cached partials.
 pub struct ShardCoordinator {
+    graph: DynGraph,
+    /// Original→internal id translation from the initial degree-ordered
+    /// build (`None` when the graph was not relabeled).
+    relabel: Option<Relabeling>,
     stats: crate::graph::GraphStats,
     planner: QueryPlanner,
     store: ResultStore<i128>,
     pool: ShardPool,
+    /// Every base pattern any batch has planned, keyed canonically — the
+    /// delta pass needs patterns, the store only knows keys.
+    patterns: HashMap<CanonKey, Pattern>,
+    delta_budget: usize,
 }
 
 impl ShardCoordinator {
@@ -291,12 +325,26 @@ impl ShardCoordinator {
         // expose the composed-totals store on the coordinator's own
         // `--metrics` scrape (last coordinator built in-process wins)
         store.register_metrics(crate::obs::global(), "mm_store_");
+        let relabel = graph.relabeling().cloned();
         Ok(ShardCoordinator {
+            graph: DynGraph::from_data_graph(&graph),
+            relabel,
             stats,
             planner,
             store,
             pool,
+            patterns: HashMap::new(),
+            delta_budget: delta::DEFAULT_DELTA_BUDGET,
         })
+    }
+
+    /// Cap the connected `(k)`-set neighborhood the delta pass may examine
+    /// per update before falling back to a purge (see
+    /// [`crate::service::delta::DEFAULT_DELTA_BUDGET`]); `0` disables
+    /// delta-patching entirely — every update purges the composed-totals
+    /// store and recomputes cold.
+    pub fn set_delta_budget(&mut self, budget: usize) {
+        self.delta_budget = budget;
     }
 
     /// Number of connected shard workers (replicas count individually).
@@ -322,6 +370,118 @@ impl ShardCoordinator {
     /// Counters of the coordinator-local store of composed totals.
     pub fn store_metrics(&self) -> StoreMetrics {
         self.store.metrics()
+    }
+
+    /// Current graph epoch (count of applied mutations across the fabric).
+    pub fn epoch(&self) -> u64 {
+        self.graph.version()
+    }
+
+    /// Map an original (input) vertex id to the internal id the workers'
+    /// degree-ordered CSRs use. Identity when the graph was never
+    /// relabeled, or for ids past the relabeling's range.
+    fn internal(&self, v: VertexId) -> VertexId {
+        match &self.relabel {
+            Some(r) if (v as usize) < r.len() => r.new_id(v),
+            _ => v,
+        }
+    }
+
+    /// Apply an edge insertion across the fabric: mutate the coordinator's
+    /// copy, delta-patch the composed-totals store, and broadcast the
+    /// mutation to every worker (see the struct docs). `Ok(true)` means
+    /// applied everywhere that survived; `Ok(false)` is a duplicate insert
+    /// (no-op, nothing broadcast). Self-loops and ids outside the vertex
+    /// set are errors — sharded updates never grow the graph. Vertex ids
+    /// are **original** (input) ids, exactly like the single-process
+    /// service.
+    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> Result<bool> {
+        ensure!(u != v, "self loop ({u},{u}) not allowed");
+        let (u, v) = (self.internal(u), self.internal(v));
+        ensure!(
+            (u.max(v) as usize) < self.graph.num_vertices(),
+            "vertex {} is outside the {}-vertex sharded graph: workers hold fixed \
+             copies keyed by the original vertex range, so sharded updates cannot \
+             grow the graph",
+            u.max(v),
+            self.graph.num_vertices()
+        );
+        let old_fp = self.graph.fingerprint();
+        if !self.graph.insert_edge(u, v) {
+            return Ok(false);
+        }
+        // the graph now contains the edge — the state the delta pass walks
+        self.rebase_and_broadcast(u, v, true, old_fp)?;
+        Ok(true)
+    }
+
+    /// Apply an edge removal across the fabric (see
+    /// [`ShardCoordinator::insert_edge`]). Ids that name no edge return
+    /// `Ok(false)`.
+    pub fn remove_edge(&mut self, u: VertexId, v: VertexId) -> Result<bool> {
+        let (u, v) = (self.internal(u), self.internal(v));
+        if u == v || u.max(v) as usize >= self.graph.num_vertices() {
+            return Ok(false);
+        }
+        if !self.graph.has_edge(u, v) {
+            return Ok(false);
+        }
+        let old_fp = self.graph.fingerprint();
+        // removal deltas are computed on the pre-removal graph — the one
+        // that still contains the edge — then the removal is applied and
+        // the store rebased to the post-removal epoch
+        self.rebase_and_broadcast(u, v, false, old_fp)?;
+        Ok(true)
+    }
+
+    /// Delta-rebase the composed-totals store across one applied edge
+    /// update and broadcast the mutation to the pool. Called with the edge
+    /// `(u,v)` **present** in `self.graph` (insertions already applied;
+    /// removals applied here, after the delta pass). The coordinator's
+    /// totals are order-independent full-graph counts, so every proven
+    /// delta — zero or not — patches exactly; only fallbacks (and keys the
+    /// registry can't resolve) purge to recompute-on-demand. The broadcast
+    /// errors when it leaves a replica group with no live member; the
+    /// coordinator's own state is already rebased by then, so a later
+    /// batch against a repaired pool serves the patched values.
+    fn rebase_and_broadcast(
+        &mut self,
+        u: VertexId,
+        v: VertexId,
+        inserted: bool,
+        old_fp: GraphFingerprint,
+    ) -> Result<()> {
+        debug_assert!(self.graph.has_edge(u, v), "delta pass needs the edge present");
+        let bases: Vec<(CanonKey, Pattern)> = self
+            .store
+            .entries()
+            .iter()
+            .filter_map(|(k, _)| self.patterns.get(k).map(|p| (*k, p.clone())))
+            .collect();
+        let report =
+            delta::edge_update_deltas(&self.graph, u, v, inserted, &bases, self.delta_budget);
+        if !inserted {
+            let removed = self.graph.remove_edge(u, v);
+            debug_assert!(removed, "caller checked the edge exists");
+        }
+        let epoch = self.graph.version();
+        let new_fp = self.graph.fingerprint();
+        crate::obs_counter!("mm_delta_updates_total").inc();
+        let (patched, _dropped) = self.store.rebase_epoch(epoch, |k, old| {
+            match report.deltas.get(k) {
+                Some(DeltaOutcome::Patch(d)) => {
+                    let next = old + d;
+                    // a negative full-map count means a broken delta;
+                    // purge defensively rather than ever serving it
+                    (next >= 0).then_some(next)
+                }
+                _ => None,
+            }
+        });
+        crate::obs_counter!("mm_delta_patched_total").add(patched);
+        self.pool
+            .broadcast_update(inserted, u, v, old_fp, new_fp, epoch)?;
+        Ok(())
     }
 
     /// Proto v4 `STATS` sweep: every connected worker's metric registry as
@@ -368,12 +528,21 @@ impl ShardCoordinator {
         let trace_id = crate::obs::trace::next_trace_id();
         let started = std::time::Instant::now();
         self.pool.set_trace(trace_id, TRACE_MATCH, TRACE_POOL_BASE, started);
+        // record the batch's base patterns before serving: a later edge
+        // update must be able to resolve every stored key back to its
+        // pattern for the delta pass (the morph plan is recomputed inside
+        // serve_batch_sharded; planning is pure rewriting, cheap next to
+        // one remote fan-out)
+        for p in self.planner.plan_bases(&flat, &self.stats) {
+            self.patterns.entry(p.canonical_key()).or_insert(p);
+        }
+        let epoch = self.graph.version();
         let mut profile = PhaseProfile::new();
         let (vals, stats) = self.planner.serve_batch_sharded(
             &flat,
             &self.stats,
             &mut self.store,
-            0,
+            epoch,
             &mut self.pool,
             &mut profile,
         )?;
@@ -383,7 +552,11 @@ impl ShardCoordinator {
             name: "batch".into(),
             start_us: 0,
             dur_us: started.elapsed().as_micros() as u64,
-            tag: format!("queries={} epoch=0 shards={}", queries.len(), self.pool.num_shards()),
+            tag: format!(
+                "queries={} epoch={epoch} shards={}",
+                queries.len(),
+                self.pool.num_shards()
+            ),
         }];
         let mut next_id = TRACE_MATCH + 1;
         let mut clock_us = 0u64;
@@ -409,7 +582,7 @@ impl ShardCoordinator {
         Ok(BatchResponse {
             results: to_query_results(queries, &spans, &vals),
             stats,
-            epoch: 0,
+            epoch,
             profile,
             trace: crate::obs::Trace {
                 trace_id,

@@ -30,6 +30,16 @@
 //! wedged-but-connected worker be told apart from one that is legitimately
 //! deep in a heavy slice.
 //!
+//! Graph mutation rides on [`Msg::Update`] (proto v6): the coordinator
+//! broadcasts one applied edge insert/removal, naming the fingerprint it
+//! mutated *from* and the fingerprint and version it arrived *at*, and the
+//! worker answers [`Msg::UpdateAck`] after mutating its own copy and
+//! delta-patching its per-slice stores. The double fingerprint makes the
+//! transition itself verifiable end-to-end: a worker whose copy diverged
+//! (missed update, torn restart) fails the `old` check, and a worker whose
+//! mutation somehow landed elsewhere fails the `new` check — both surface
+//! as a refused ack, never as silently wrong partials.
+//!
 //! Decoding is total on hostile bytes, exactly like WAL replay: a short
 //! header, an oversized length, a CRC mismatch or an unreadable body all
 //! surface as an [`io::Error`] from [`read_msg`] (which closes the
@@ -68,8 +78,12 @@ pub const MAGIC: &[u8; 8] = b"MMSHARD1";
 /// batch trace and RESULT carries the worker's child spans back
 /// ([`WireSpan`] — store probe, match, with reply-relative parent
 /// indices), so a sharded batch assembles one span tree across the whole
-/// fabric (see [`crate::obs::trace`]).
-pub const VERSION: u32 = 5;
+/// fabric (see [`crate::obs::trace`]). v6 added UPDATE/UPDATE_ACK: the
+/// coordinator broadcasts applied edge mutations (with the old and new
+/// graph fingerprints and the new version) so workers mutate their graph
+/// copies in place and delta-patch their per-slice stores instead of
+/// being restarted cold.
+pub const VERSION: u32 = 6;
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
@@ -81,6 +95,8 @@ const TAG_PING: u8 = 7;
 const TAG_PONG: u8 = 8;
 const TAG_STATS: u8 = 9;
 const TAG_STATS_REPLY: u8 = 10;
+const TAG_UPDATE: u8 = 11;
+const TAG_UPDATE_ACK: u8 = 12;
 
 /// One shard-execution request: match `patterns` (base patterns of a morph
 /// plan) with the first exploration level restricted to `[lo, hi)`.
@@ -151,6 +167,57 @@ pub struct ExecResponse {
     pub spans: Vec<WireSpan>,
 }
 
+/// One broadcast edge mutation (proto v6). Vertex ids are **internal**
+/// (post-relabeling) ids — the coordinator translates before it
+/// broadcasts, so a worker applies the update to the identical graph copy
+/// it loaded at bind time without knowing about original ids at all.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UpdateRequest {
+    /// Request id, echoed in the ack.
+    pub id: u64,
+    /// `true` for an insertion, `false` for a removal.
+    pub insert: bool,
+    /// Internal endpoint ids of the mutated edge.
+    pub u: u32,
+    /// See `u`.
+    pub v: u32,
+    /// Fingerprint of the graph the coordinator mutated *from*. A worker
+    /// whose copy doesn't carry this fingerprint has diverged (missed an
+    /// update, restarted against other content) and must refuse.
+    pub old_fingerprint: GraphFingerprint,
+    /// Fingerprint the coordinator's graph arrived *at*. The worker
+    /// verifies its own copy lands on the same fingerprint after applying
+    /// the mutation — the transition is checked on both ends.
+    pub new_fingerprint: GraphFingerprint,
+    /// The coordinator's graph version after the mutation; becomes the
+    /// epoch of the worker's rebased per-slice stores.
+    pub new_version: u64,
+}
+
+/// A worker's answer to an [`UpdateRequest`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UpdateAck {
+    /// Echoed request id.
+    pub id: u64,
+    /// Whether the worker applied the mutation and landed on the
+    /// requested fingerprint. `false` always comes with a descriptive
+    /// `error` naming what diverged.
+    pub applied: bool,
+    /// The worker's graph fingerprint after handling the request —
+    /// `new_fingerprint` on success, whatever it actually holds on
+    /// failure, so the coordinator's error can name both sides.
+    pub fingerprint: GraphFingerprint,
+    /// Per-slice store entries carried across the epoch (delta-patched in
+    /// place — for a worker these are exactly the provably-unchanged
+    /// bases, see the worker docs for why partials are never arithmetic-
+    /// patched).
+    pub carried: u64,
+    /// Per-slice store entries purged to recompute-on-demand.
+    pub purged: u64,
+    /// Human-readable failure description; empty on success.
+    pub error: String,
+}
+
 /// A protocol message.
 #[derive(Clone, Debug)]
 pub enum Msg {
@@ -208,6 +275,11 @@ pub enum Msg {
     /// cluster percentiles exactly (percentiles themselves never cross the
     /// wire: averaging them would be meaningless).
     StatsReply { id: u64, series: Vec<(String, u64)> },
+    /// Coordinator → worker: apply one edge mutation to your graph copy
+    /// and rebase your per-slice stores (proto v6).
+    Update(UpdateRequest),
+    /// Worker → coordinator: mutation outcome.
+    UpdateAck(UpdateAck),
 }
 
 fn put_fingerprint(out: &mut Vec<u8>, fp: GraphFingerprint) {
@@ -410,6 +482,25 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 out.extend_from_slice(&value.to_le_bytes());
             }
         }
+        Msg::Update(req) => {
+            out.push(TAG_UPDATE);
+            out.extend_from_slice(&req.id.to_le_bytes());
+            out.push(req.insert as u8);
+            out.extend_from_slice(&req.u.to_le_bytes());
+            out.extend_from_slice(&req.v.to_le_bytes());
+            put_fingerprint(&mut out, req.old_fingerprint);
+            put_fingerprint(&mut out, req.new_fingerprint);
+            out.extend_from_slice(&req.new_version.to_le_bytes());
+        }
+        Msg::UpdateAck(ack) => {
+            out.push(TAG_UPDATE_ACK);
+            out.extend_from_slice(&ack.id.to_le_bytes());
+            out.push(ack.applied as u8);
+            put_fingerprint(&mut out, ack.fingerprint);
+            out.extend_from_slice(&ack.carried.to_le_bytes());
+            out.extend_from_slice(&ack.purged.to_le_bytes());
+            out.extend_from_slice(ack.error.as_bytes());
+        }
     }
     out
 }
@@ -562,6 +653,49 @@ pub fn decode(payload: &[u8]) -> Option<Msg> {
                 series.push((name, value));
             }
             Msg::StatsReply { id, series }
+        }
+        TAG_UPDATE => {
+            let id = r.u64()?;
+            // strict booleans: any byte but 0/1 means a codec mismatch
+            let insert = match r.u8()? {
+                0 => false,
+                1 => true,
+                _ => return None,
+            };
+            let u = r.u32()?;
+            let v = r.u32()?;
+            let old_fingerprint = take_fingerprint(&mut r)?;
+            let new_fingerprint = take_fingerprint(&mut r)?;
+            let new_version = r.u64()?;
+            Msg::Update(UpdateRequest {
+                id,
+                insert,
+                u,
+                v,
+                old_fingerprint,
+                new_fingerprint,
+                new_version,
+            })
+        }
+        TAG_UPDATE_ACK => {
+            let id = r.u64()?;
+            let applied = match r.u8()? {
+                0 => false,
+                1 => true,
+                _ => return None,
+            };
+            let fingerprint = take_fingerprint(&mut r)?;
+            let carried = r.u64()?;
+            let purged = r.u64()?;
+            // the error text runs to the end of the payload, like REJECT
+            return Some(Msg::UpdateAck(UpdateAck {
+                id,
+                applied,
+                fingerprint,
+                carried,
+                purged,
+                error: String::from_utf8_lossy(r.rest()).into_owned(),
+            }));
         }
         _ => return None,
     };
@@ -783,6 +917,93 @@ mod tests {
             Msg::StatsReply { series, .. } => assert!(series.is_empty()),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn update_roundtrip() {
+        let req = UpdateRequest {
+            id: 31,
+            insert: true,
+            u: 7,
+            v: 1999,
+            old_fingerprint: fp(4),
+            new_fingerprint: fp(5),
+            new_version: 12,
+        };
+        match roundtrip(&Msg::Update(req.clone())) {
+            Msg::Update(got) => assert_eq!(got, req),
+            other => panic!("{other:?}"),
+        }
+        // removals survive too (insert=false is a distinct wire byte)
+        let removal = UpdateRequest { insert: false, ..req };
+        match roundtrip(&Msg::Update(removal.clone())) {
+            Msg::Update(got) => assert_eq!(got, removal),
+            other => panic!("{other:?}"),
+        }
+        let ack = UpdateAck {
+            id: 31,
+            applied: true,
+            fingerprint: fp(5),
+            carried: 9,
+            purged: 4,
+            error: String::new(),
+        };
+        match roundtrip(&Msg::UpdateAck(ack.clone())) {
+            Msg::UpdateAck(got) => assert_eq!(got, ack),
+            other => panic!("{other:?}"),
+        }
+        let refused = UpdateAck {
+            applied: false,
+            error: "fingerprint diverged".into(),
+            ..ack
+        };
+        match roundtrip(&Msg::UpdateAck(refused.clone())) {
+            Msg::UpdateAck(got) => assert_eq!(got, refused),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_update_bytes_never_panic() {
+        let mut buf = Vec::new();
+        let req = UpdateRequest {
+            id: 2,
+            insert: false,
+            u: 0,
+            v: 49,
+            old_fingerprint: fp(1),
+            new_fingerprint: fp(2),
+            new_version: 3,
+        };
+        write_msg(&mut buf, &Msg::Update(req.clone())).unwrap();
+        for cut in 0..buf.len() {
+            assert!(read_msg(&mut &buf[..cut]).is_err(), "cut at {cut}");
+        }
+        for at in 0..buf.len() {
+            let mut evil = buf.clone();
+            evil[at] ^= 0x20;
+            let _ = read_msg(&mut &evil[..]);
+        }
+        // a non-boolean insert byte is a codec mismatch, not "truthy"
+        let mut evil = encode(&Msg::Update(req.clone()));
+        evil[1 + 8] = 2;
+        assert!(decode(&evil).is_none());
+        // trailing garbage after a well-formed UPDATE is refused
+        let mut ok = encode(&Msg::Update(req));
+        ok.push(0);
+        assert!(decode(&ok).is_none());
+        // a non-boolean applied byte in the ack is refused the same way
+        let ack = UpdateAck {
+            id: 2,
+            applied: true,
+            fingerprint: fp(2),
+            carried: 1,
+            purged: 0,
+            error: String::new(),
+        };
+        let mut evil = encode(&Msg::UpdateAck(ack));
+        evil[1 + 8] = 7;
+        assert!(decode(&evil).is_none());
     }
 
     #[test]

@@ -1,18 +1,38 @@
-//! Shard worker: a process that owns one immutable copy of the data graph
-//! and answers [`ExecRequest`]s — "match these base patterns with the
-//! first level restricted to `[lo, hi)`" — over TCP.
+//! Shard worker: a process that owns one copy of the data graph and
+//! answers [`ExecRequest`]s — "match these base patterns with the first
+//! level restricted to `[lo, hi)`" — over TCP, mutating that copy in
+//! place when the coordinator broadcasts [`Msg::Update`]s.
 //!
-//! The worker is the service layer in miniature, minus mutation:
+//! The worker is the service layer in miniature:
 //!
 //! * **Per-slice stores** — partial counts are pure functions of
 //!   `(canonical key, graph content, slice)`, so the worker keeps one
 //!   [`ResultStore`] *per first-level slice* it has served. The fabric's
 //!   work queue deals sub-slices dynamically — the same worker may serve
 //!   `[0, 7)` and `[31, 64)` in one batch and a different mix in the next
-//!   — and each slice's partials stay warm independently. The worker's
-//!   graph never mutates, so stores live permanently at epoch 0; content
-//!   identity rides on the [`GraphFingerprint`] checked at handshake *and
-//!   on every request*.
+//!   — and each slice's partials stay warm independently. Stores live at
+//!   the graph's current *version* (epoch); content identity rides on the
+//!   [`GraphFingerprint`] checked at handshake *and on every request*.
+//! * **Mutation** (proto v6) — an [`Msg::Update`] names the fingerprint
+//!   the coordinator mutated from and the one it arrived at. The worker
+//!   applies the edge to its own [`DynGraph`], verifies it lands on the
+//!   same fingerprint, regenerates its matching snapshot, and *rebases*
+//!   every slice store: a base is carried across the epoch only when the
+//!   delta pass ([`crate::service::delta`]) proves **no embedding was
+//!   created or destroyed** — a zero net delta on an anti-edge-free
+//!   pattern (affected embeddings all map a pattern edge onto the mutated
+//!   pair, so they all carry the same sign and a zero sum means zero
+//!   embeddings). Everything weaker is purged to recompute-on-demand:
+//!   per-slice partials split one embedding multiset by first-level
+//!   vertex, and a nonzero (or sign-mixed, for vertex-induced patterns)
+//!   delta may move counts *between* slices even when the full-graph
+//!   total is provably patchable — so the worker never arithmetic-patches
+//!   a partial. Requests in flight during an update stay pinned to their
+//!   admission state: they matched on the snapshot [`Arc`] they cloned at
+//!   admission, and their late store inserts are stale-dropped by the
+//!   epoch check. Graph stats (and therefore fused plan orders) are
+//!   pinned at bind time, never recomputed, so cached partials and
+//!   post-update recomputes always agree on slice boundaries and orders.
 //! * **Coalescing** — concurrent connections asking for the same
 //!   base × slice register on a per-`(slice, key)` in-flight cell (the
 //!   same at-most-once discipline as [`crate::service::serve`]): each
@@ -41,10 +61,12 @@
 //!
 //! [`ExecRequest`]: super::proto::ExecRequest
 
-use super::proto::{self, ExecRequest, ExecResponse, Msg};
-use crate::graph::{DataGraph, GraphFingerprint, GraphStats};
+use super::proto::{self, ExecRequest, ExecResponse, Msg, UpdateAck, UpdateRequest};
+use crate::graph::{DataGraph, DynGraph, GraphFingerprint, GraphStats};
 use crate::morph::Policy;
 use crate::pattern::canon::CanonKey;
+use crate::pattern::Pattern;
+use crate::service::delta::{self, DeltaOutcome};
 use crate::service::persist::{PersistConfig, Persistence};
 use crate::service::{QueryPlanner, ResultStore, StoreMetrics};
 use crate::util::timer::PhaseProfile;
@@ -52,7 +74,7 @@ use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 /// Worker tuning.
@@ -114,15 +136,38 @@ struct SliceStore {
 struct Inner {
     slices: HashMap<(u32, u32), SliceStore>,
     inflight: HashMap<((u32, u32), CanonKey), Arc<Cell>>,
+    /// Canonical key → pattern for every base this worker has been asked
+    /// to match. An [`Msg::Update`]'s delta pass needs the patterns behind
+    /// the cached keys; stored keys whose pattern was never seen (warm
+    /// restores from disk before any request) simply rebase as purges.
+    patterns: HashMap<CanonKey, Pattern>,
+}
+
+/// The worker's mutable graph identity, swapped atomically under one
+/// [`RwLock`]: requests clone the [`Arc`]s at admission (pinning
+/// themselves to that state), updates take the write lock to mutate.
+struct GraphState {
+    /// The mutable source of truth, in internal-id space.
+    dyn_graph: DynGraph,
+    /// Immutable matching snapshot of `dyn_graph`'s current content.
+    snapshot: Arc<DataGraph>,
+    /// Pinned at bind time and **never recomputed**: fused plan orders
+    /// (and therefore what a cached per-slice partial means) are a
+    /// function of the stats, so recomputing them after a mutation would
+    /// silently re-key every cached partial.
+    stats: Arc<GraphStats>,
+    fingerprint: GraphFingerprint,
+    /// Graph version = store epoch. Starts at 0, set to the
+    /// coordinator-supplied `new_version` on every applied update.
+    version: u64,
 }
 
 struct WorkerState {
-    graph: DataGraph,
-    stats: GraphStats,
-    fingerprint: GraphFingerprint,
+    graph: RwLock<GraphState>,
     planner: QueryPlanner,
     cache_bytes: usize,
     persist_config: Option<PersistConfig>,
+    // lock order: `graph` before `inner`, never the reverse
     inner: Mutex<Inner>,
 }
 
@@ -184,10 +229,15 @@ impl ShardWorker {
         // selection on the worker mirrors what a single process would pick
         let stats = GraphStats::compute(&graph, 2000, 0x5E55);
         let fingerprint = graph.fingerprint();
+        let dyn_graph = DynGraph::from_data_graph(&graph);
         let state = Arc::new(WorkerState {
-            graph,
-            stats,
-            fingerprint,
+            graph: RwLock::new(GraphState {
+                dyn_graph,
+                snapshot: Arc::new(graph),
+                stats: Arc::new(stats),
+                fingerprint,
+                version: 0,
+            }),
             // the policy field is morph-only and workers never morph: they
             // receive already-rewritten base patterns
             planner: QueryPlanner::new(Policy::Off, config.fused, config.threads),
@@ -196,6 +246,7 @@ impl ShardWorker {
             inner: Mutex::new(Inner {
                 slices: HashMap::new(),
                 inflight: HashMap::new(),
+                patterns: HashMap::new(),
             }),
         });
         if let Some((i, k)) = config.slice_pin {
@@ -223,9 +274,16 @@ impl ShardWorker {
         self.addr
     }
 
-    /// Fingerprint of the graph this worker serves slices of.
+    /// Fingerprint of the graph content this worker currently serves
+    /// slices of (moves when a broadcast update is applied).
     pub fn fingerprint(&self) -> GraphFingerprint {
-        self.state.fingerprint
+        self.state.graph.read().unwrap().fingerprint
+    }
+
+    /// The worker's current graph version (0 until the first applied
+    /// update; thereafter the coordinator-supplied version).
+    pub fn version(&self) -> u64 {
+        self.state.graph.read().unwrap().version
     }
 
     /// Counters of the worker-local partial-count stores, summed over
@@ -240,6 +298,7 @@ impl ShardWorker {
             m.inserts += s.inserts;
             m.evictions += s.evictions;
             m.invalidations += s.invalidations;
+            m.patched += s.patched;
             m.stale_drops += s.stale_drops;
             m.restored += s.restored;
             m.bytes += s.bytes;
@@ -316,6 +375,7 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
     let reject = |stream: &mut TcpStream, reason: String| {
         let _ = proto::write_msg(stream, &Msg::Reject { reason });
     };
+    let worker_fp = state.graph.read().unwrap().fingerprint;
     match proto::read_msg(&mut stream) {
         Ok(Msg::Hello { version, .. }) if version != proto::VERSION => {
             reject(
@@ -329,10 +389,10 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
             return;
         }
         Ok(Msg::Hello { fingerprint, group, groups, replica, .. })
-            if fingerprint == state.fingerprint =>
+            if fingerprint == worker_fp =>
         {
             let welcome = Msg::Welcome {
-                fingerprint: state.fingerprint,
+                fingerprint: worker_fp,
                 threads: state.planner.threads as u32,
             };
             if proto::write_msg(&mut stream, &welcome).is_err() {
@@ -351,8 +411,7 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
                 &mut stream,
                 format!(
                     "graph fingerprint mismatch: coordinator mines {fingerprint}, \
-                     this worker loaded {}",
-                    state.fingerprint
+                     this worker loaded {worker_fp}"
                 ),
             );
             return;
@@ -429,6 +488,17 @@ fn serve_connection(state: Arc<WorkerState>, mut stream: TcpStream) {
                     inflight.fetch_sub(1, Ordering::SeqCst);
                 });
             }
+            Msg::Update(req) => {
+                // handled inline on the read loop: mutations are rare,
+                // must not reorder against each other, and in-flight
+                // execs are pinned to the snapshot Arcs they cloned at
+                // admission — nothing here waits on them
+                let ack = handle_update(&state, &req);
+                if proto::write_msg(&mut *writer.lock().unwrap(), &Msg::UpdateAck(ack)).is_err()
+                {
+                    return;
+                }
+            }
             _ => return,
         }
     }
@@ -473,10 +543,13 @@ fn prewarm_group(state: &WorkerState, group: usize, groups: usize, replica: u32)
     if found.is_empty() {
         return;
     }
-    let weights: Vec<u64> = (0..state.graph.num_vertices() as u32)
-        .map(|v| state.graph.degree(v) as u64 + 1)
+    let gs = state.graph.read().unwrap();
+    let weights: Vec<u64> = (0..gs.snapshot.num_vertices() as u32)
+        .map(|v| gs.snapshot.degree(v) as u64 + 1)
         .collect();
     let (lo, hi) = super::weighted_cuts(&weights, groups)[group];
+    let (fingerprint, version) = (gs.fingerprint, gs.version);
+    drop(gs);
     let mut inner = state.inner.lock().unwrap();
     let mut warmed = 0usize;
     for &(slo, shi) in &found {
@@ -487,7 +560,7 @@ fn prewarm_group(state: &WorkerState, group: usize, groups: usize, replica: u32)
             break; // respect the store cap; the rest loads lazily
         }
         if !inner.slices.contains_key(&(slo, shi)) {
-            ensure_slice(state, &mut inner, (slo, shi));
+            ensure_slice(state, &mut inner, (slo, shi), fingerprint, version);
             warmed += 1;
         }
     }
@@ -511,11 +584,21 @@ fn persist_insert(persist: &mut Option<Persistence<i128>>, key: &CanonKey, value
     }
 }
 
-/// Get-or-create the store bound to `slice`. Each slice's durable store
-/// lives in its own subdirectory keyed by [`super::shard_fingerprint`] —
-/// graph fingerprint × slice — so a restarted worker recovers warm exactly
-/// for the `(graph, slice)` pairs that were persisted, and cold otherwise.
-fn ensure_slice(state: &WorkerState, inner: &mut Inner, slice: (u32, u32)) {
+/// Get-or-create the store bound to `slice`, at the worker's current
+/// `fingerprint` × `version`. Each slice's durable store lives in its own
+/// subdirectory keyed by [`super::shard_fingerprint`] — graph fingerprint
+/// × slice — so a restarted worker recovers warm exactly for the
+/// `(graph, slice)` pairs that were persisted, and cold otherwise. The
+/// store's epoch is initialised to `version` *before* any restore, so
+/// restored entries are servable at the current version and a later
+/// update rebase moves them like any other entry.
+fn ensure_slice(
+    state: &WorkerState,
+    inner: &mut Inner,
+    slice: (u32, u32),
+    fingerprint: GraphFingerprint,
+    version: u64,
+) {
     if inner.slices.contains_key(&slice) {
         return;
     }
@@ -534,8 +617,9 @@ fn ensure_slice(state: &WorkerState, inner: &mut Inner, slice: (u32, u32)) {
         store: ResultStore::new(state.cache_bytes),
         persist: None,
     };
+    ss.store.set_epoch(version);
     if let Some(pc) = &state.persist_config {
-        let sfp = super::shard_fingerprint(state.fingerprint, slice.0, slice.1);
+        let sfp = super::shard_fingerprint(fingerprint, slice.0, slice.1);
         let dir = pc.dir.join(format!("slice-{}-{}", slice.0, slice.1));
         match Persistence::open(&dir, sfp, pc.opts) {
             Ok((p, warm, report)) => {
@@ -563,16 +647,26 @@ fn handle_exec(
     state: &WorkerState,
     req: &ExecRequest,
 ) -> std::result::Result<ExecResponse, String> {
+    // admission: pin this request to the worker's current graph state —
+    // the snapshot/stats Arcs keep matching consistent even if an update
+    // lands mid-request, and the version pins the store epoch so a late
+    // publish after such an update is stale-dropped, never misfiled
+    let (snapshot, stats, fingerprint, version) = {
+        let gs = state.graph.read().unwrap();
+        (gs.snapshot.clone(), gs.stats.clone(), gs.fingerprint, gs.version)
+    };
     // re-check content identity per request: the coordinator's graph may
-    // have mutated since the handshake, and partials computed on this
-    // worker's (unmutated) copy must never merge into its answers
-    if req.fingerprint != state.fingerprint {
+    // have mutated since the handshake (or this worker may have missed an
+    // update), and partials computed on different content must never
+    // merge into its answers
+    if req.fingerprint != fingerprint {
         return Err(format!(
-            "graph fingerprint mismatch: request is for {}, this worker loaded {}",
-            req.fingerprint, state.fingerprint
+            "graph fingerprint mismatch: request is for {} (epoch {}), this worker \
+             holds {fingerprint} (version {version})",
+            req.fingerprint, req.epoch
         ));
     }
-    let n = state.graph.num_vertices() as u32;
+    let n = snapshot.num_vertices() as u32;
     if req.lo > req.hi || req.hi > n {
         return Err(format!(
             "bad shard slice [{}, {}) for a {n}-vertex graph",
@@ -589,8 +683,13 @@ fn handle_exec(
     let mut awaited: Vec<(CanonKey, Arc<Cell>)> = Vec::new();
     {
         let mut inner = state.inner.lock().unwrap();
-        ensure_slice(state, &mut inner, slice);
+        ensure_slice(state, &mut inner, slice, fingerprint, version);
         let inner = &mut *inner;
+        // remember the pattern behind every requested key: a later
+        // update's delta pass resolves cached keys through this registry
+        for (k, p) in keys.iter().zip(&req.patterns) {
+            inner.patterns.entry(*k).or_insert_with(|| p.clone());
+        }
         let ss = inner.slices.get_mut(&slice).expect("slice store just ensured");
         for (i, k) in keys.iter().enumerate() {
             if values.contains_key(k) {
@@ -600,7 +699,7 @@ fn handle_exec(
             // worker-wide: store hits + misses == bases probed (the CI
             // metrics smoke asserts this across the scrape endpoint)
             crate::obs_counter!("mm_worker_bases_probed_total").inc();
-            if let Some(v) = ss.store.get(k, 0) {
+            if let Some(v) = ss.store.get(k, version) {
                 crate::obs_counter!("mm_worker_store_hits_total").inc();
                 values.insert(*k, v);
             } else if let Some(cell) = inner.inflight.get(&(slice, *k)) {
@@ -625,10 +724,10 @@ fn handle_exec(
 
     let mut profile = PhaseProfile::new();
     let fresh = state.planner.execute_bases_range(
-        &state.graph,
+        &snapshot,
         &req.patterns,
         &owned,
-        &state.stats,
+        &stats,
         &mut profile,
         Some((req.lo, req.hi)),
     );
@@ -644,7 +743,10 @@ fn handle_exec(
         // aren't cached
         if let Some(ss) = inner.slices.get_mut(&slice) {
             for &(k, v) in &fresh {
-                if ss.store.insert(k, 0, v) {
+                // inserted at the ADMISSION version: if an update landed
+                // while this request matched, the store's epoch has moved
+                // on and these partials are stale-dropped, never misfiled
+                if ss.store.insert(k, version, v) {
                     persist_insert(&mut ss.persist, &k, v);
                 }
             }
@@ -755,6 +857,178 @@ fn handle_exec(
         values: out,
         spans,
     })
+}
+
+/// Apply one broadcast edge mutation: mutate the worker's graph copy,
+/// verify the fingerprint transition end-to-end, swap in a fresh matching
+/// snapshot (stats stay pinned), and rebase every per-slice store. A base
+/// is carried across the epoch only when the delta pass proves **no
+/// embedding changed**: a zero net delta on an anti-edge-free pattern
+/// (every affected embedding maps a pattern edge onto the mutated pair,
+/// so all carry one sign and a zero sum means none existed). Anything
+/// weaker — nonzero delta, vertex-induced/anti-edge patterns where
+/// creations and destructions can cancel, fallbacks, unknown patterns —
+/// is purged, because per-slice partials can shift between slices even
+/// when the full-graph total is exactly patchable.
+fn handle_update(state: &WorkerState, req: &UpdateRequest) -> UpdateAck {
+    crate::obs_counter!("mm_worker_updates_total").inc();
+    let mut gs = state.graph.write().unwrap();
+    let refuse = |gs: &GraphState, error: String| UpdateAck {
+        id: req.id,
+        applied: false,
+        fingerprint: gs.fingerprint,
+        carried: 0,
+        purged: 0,
+        error,
+    };
+    if gs.fingerprint != req.old_fingerprint {
+        return refuse(
+            &gs,
+            format!(
+                "update transition mismatch: coordinator mutates from {}, this worker \
+                 holds {} (version {})",
+                req.old_fingerprint, gs.fingerprint, gs.version
+            ),
+        );
+    }
+    let n = gs.snapshot.num_vertices() as u32;
+    if req.u == req.v || req.u >= n || req.v >= n {
+        return refuse(
+            &gs,
+            format!(
+                "bad update edge ({}, {}) for a {n}-vertex graph (the fabric \
+                 rejects self-loops and vertex growth)",
+                req.u, req.v
+            ),
+        );
+    }
+    if req.insert == gs.dyn_graph.has_edge(req.u, req.v) {
+        // an honest coordinator only broadcasts updates it applied; a
+        // no-op here means the copies diverged in edge content without
+        // diverging in fingerprint, which the transition check below
+        // would catch anyway — refuse it before touching anything
+        return refuse(
+            &gs,
+            format!(
+                "no-op update: edge ({}, {}) is already {}",
+                req.u,
+                req.v,
+                if req.insert { "present" } else { "absent" }
+            ),
+        );
+    }
+
+    // bases to classify: every key cached in any slice store whose
+    // pattern this worker has seen; unknown keys (warm restores never
+    // requested since) purge on rebase
+    let bases: Vec<(CanonKey, Pattern)> = {
+        let inner = state.inner.lock().unwrap();
+        let mut keys: std::collections::HashSet<CanonKey> = std::collections::HashSet::new();
+        for ss in inner.slices.values() {
+            keys.extend(ss.store.entries().iter().map(|(k, _)| *k));
+        }
+        keys.iter()
+            .filter_map(|k| inner.patterns.get(k).map(|p| (*k, p.clone())))
+            .collect()
+    };
+
+    // the delta pass runs on the graph WITH the edge present
+    let report = if req.insert {
+        let inserted = gs.dyn_graph.insert_edge(req.u, req.v);
+        debug_assert!(inserted, "presence checked above");
+        delta::edge_update_deltas(
+            &gs.dyn_graph,
+            req.u,
+            req.v,
+            true,
+            &bases,
+            delta::DEFAULT_DELTA_BUDGET,
+        )
+    } else {
+        let report = delta::edge_update_deltas(
+            &gs.dyn_graph,
+            req.u,
+            req.v,
+            false,
+            &bases,
+            delta::DEFAULT_DELTA_BUDGET,
+        );
+        let removed = gs.dyn_graph.remove_edge(req.u, req.v);
+        debug_assert!(removed, "presence checked above");
+        report
+    };
+
+    // the mutation is committed either way: swap in a snapshot of what
+    // this worker now actually holds, so even a failed transition leaves
+    // graph state and caches self-consistent (and every later request
+    // refuses on the fingerprint, loudly)
+    let new_fp = gs.dyn_graph.fingerprint();
+    let applied = new_fp == req.new_fingerprint;
+    gs.snapshot = Arc::new(gs.dyn_graph.to_data_graph("shard"));
+    gs.fingerprint = new_fp;
+    gs.version = req.new_version;
+
+    let carry: std::collections::HashSet<CanonKey> = if applied {
+        bases
+            .iter()
+            .filter(|(k, p)| {
+                matches!(report.deltas.get(k), Some(DeltaOutcome::Patch(0)))
+                    && p.anti_edges().is_empty()
+            })
+            .map(|(k, _)| *k)
+            .collect()
+    } else {
+        std::collections::HashSet::new()
+    };
+
+    let (mut carried, mut purged) = (0u64, 0u64);
+    {
+        let mut inner = state.inner.lock().unwrap();
+        for (&(lo, hi), ss) in inner.slices.iter_mut() {
+            let (c, p) = ss
+                .store
+                .rebase_epoch(req.new_version, |k, v| carry.contains(k).then_some(*v));
+            carried += c;
+            purged += p;
+            // the slice's durable identity moved with the graph: rebind
+            // its WAL to the new shard fingerprint and compact the
+            // carried entries under it (same degradation contract as
+            // everywhere else: first IO error disables persistence)
+            if let Some(pw) = &mut ss.persist {
+                let sfp = super::shard_fingerprint(new_fp, lo, hi);
+                let res = pw
+                    .record_invalidation(sfp)
+                    .and_then(|()| pw.compact(&ss.store.entries()));
+                if let Err(e) = res {
+                    eprintln!(
+                        "warning: shard persist rebase failed, persistence disabled: {e}"
+                    );
+                    ss.persist = None;
+                }
+            }
+        }
+    }
+    crate::obs_counter!("mm_worker_update_carried_total").add(carried);
+    crate::obs_counter!("mm_worker_update_purged_total").add(purged);
+    UpdateAck {
+        id: req.id,
+        applied,
+        fingerprint: new_fp,
+        carried,
+        purged,
+        error: if applied {
+            String::new()
+        } else {
+            format!(
+                "update transition diverged: applying ({}, {}) {} landed on {new_fp}, \
+                 coordinator expected {}",
+                req.u,
+                req.v,
+                if req.insert { "insert" } else { "removal" },
+                req.new_fingerprint
+            )
+        },
+    }
 }
 
 #[cfg(test)]
@@ -1007,6 +1281,194 @@ mod tests {
         let direct =
             crate::agg::aggregate_pattern(&g, &catalog::triangle(), &crate::agg::CountAgg, 1);
         assert_eq!(got[&10] + got[&11], direct, "slice partials sum exactly");
+        drop(stream);
+        w.shutdown();
+    }
+
+    #[test]
+    fn updates_mutate_the_graph_and_rebase_the_stores() {
+        let w = worker(0x6010);
+        let g = erdos_renyi(60, 220, 0x6010);
+        let mut dg = DynGraph::from_data_graph(&g);
+        let old_fp = w.fingerprint();
+        assert_eq!(old_fp, dg.fingerprint(), "worker and mirror start identical");
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &hello(old_fp)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
+        // seed the full-range slice store with an anti-edge-free base and
+        // a vertex-induced one (the latter must never be carried)
+        let patterns = vec![catalog::triangle(), catalog::cycle(4).vertex_induced()];
+        let exec = |fingerprint: GraphFingerprint, epoch: u64, id: u64| {
+            Msg::Exec(ExecRequest {
+                id,
+                epoch,
+                fingerprint,
+                lo: 0,
+                hi: 60,
+                trace_id: 0,
+                parent_span: 0,
+                patterns: patterns.clone(),
+            })
+        };
+        proto::write_msg(&mut stream, &exec(old_fp, 0, 1)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Result(_)));
+
+        // a non-edge whose endpoints share no neighbor: inserting it can
+        // create no triangle, so the triangle's delta is provably zero
+        let no_common = |a: u32, b: u32| {
+            let nb = g.neighbors(b);
+            !g.neighbors(a).iter().any(|x| nb.contains(x))
+        };
+        let (u, v) = (0..60u32)
+            .flat_map(|a| (0..60u32).map(move |b| (a, b)))
+            .find(|&(a, b)| a < b && !dg.has_edge(a, b) && no_common(a, b))
+            .expect("a sparse graph has a distant non-edge");
+        assert!(dg.insert_edge(u, v));
+        let new_fp = dg.fingerprint();
+        let update = UpdateRequest {
+            id: 9,
+            insert: true,
+            u,
+            v,
+            old_fingerprint: old_fp,
+            new_fingerprint: new_fp,
+            new_version: 1,
+        };
+        proto::write_msg(&mut stream, &Msg::Update(update.clone())).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::UpdateAck(ack) => {
+                assert!(ack.applied, "{}", ack.error);
+                assert_eq!(ack.id, 9);
+                assert_eq!(ack.fingerprint, new_fp);
+                assert_eq!(
+                    (ack.carried, ack.purged),
+                    (1, 1),
+                    "triangle carried (zero delta, no anti-edges), C4^E purged"
+                );
+                assert!(ack.error.is_empty());
+            }
+            other => panic!("expected UPDATE_ACK, got {other:?}"),
+        }
+        assert_eq!(w.fingerprint(), new_fp);
+        assert_eq!(w.version(), 1);
+
+        // a request still naming the pre-update graph is refused loudly
+        proto::write_msg(&mut stream, &exec(old_fp, 0, 2)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Error { id, message } => {
+                assert_eq!(id, 2);
+                assert!(message.contains("fingerprint mismatch"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // the mutated graph serves exact counts; the carried triangle
+        // comes straight from the rebased store
+        proto::write_msg(&mut stream, &exec(new_fp, 1, 3)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Result(r) => {
+                assert_eq!(r.served_from_store, 1, "the carried base serves warm");
+                let mutated = dg.to_data_graph("mutated");
+                for ((k, got), p) in r.values.iter().zip(&patterns) {
+                    assert_eq!(*k, p.canonical_key());
+                    let direct =
+                        crate::agg::aggregate_pattern(&mutated, p, &crate::agg::CountAgg, 1);
+                    assert_eq!(*got, direct, "{p:?}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // a duplicate of the same insert is a refused no-op
+        let dup = UpdateRequest {
+            id: 10,
+            old_fingerprint: new_fp,
+            ..update.clone()
+        };
+        proto::write_msg(&mut stream, &Msg::Update(dup)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::UpdateAck(ack) => {
+                assert!(!ack.applied);
+                assert_eq!(ack.fingerprint, new_fp, "a refused update changes nothing");
+                assert!(ack.error.contains("no-op"), "{}", ack.error);
+            }
+            other => panic!("{other:?}"),
+        }
+        // an update naming a stale starting fingerprint is refused by name
+        let stale = UpdateRequest { id: 11, ..update };
+        proto::write_msg(&mut stream, &Msg::Update(stale)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::UpdateAck(ack) => {
+                assert!(!ack.applied);
+                assert!(ack.error.contains("transition mismatch"), "{}", ack.error);
+            }
+            other => panic!("{other:?}"),
+        }
+        // removal round-trips the content back to the original fingerprint
+        assert!(dg.remove_edge(u, v));
+        assert_eq!(dg.fingerprint(), old_fp);
+        let removal = UpdateRequest {
+            id: 12,
+            insert: false,
+            u,
+            v,
+            old_fingerprint: new_fp,
+            new_fingerprint: old_fp,
+            new_version: 2,
+        };
+        proto::write_msg(&mut stream, &Msg::Update(removal)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::UpdateAck(ack) => {
+                assert!(ack.applied, "{}", ack.error);
+                assert_eq!(ack.fingerprint, old_fp);
+            }
+            other => panic!("{other:?}"),
+        }
+        proto::write_msg(&mut stream, &exec(old_fp, 2, 13)).unwrap();
+        match proto::read_msg(&mut stream).unwrap() {
+            Msg::Result(r) => {
+                for ((_, got), p) in r.values.iter().zip(&patterns) {
+                    let direct = crate::agg::aggregate_pattern(&g, p, &crate::agg::CountAgg, 1);
+                    assert_eq!(*got, direct, "{p:?}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        drop(stream);
+        w.shutdown();
+    }
+
+    #[test]
+    fn out_of_range_updates_are_refused_without_growth() {
+        // sharded graphs never grow: an endpoint past the vertex range is
+        // refused, unlike the single-process service which extends the
+        // vertex set on demand
+        let w = worker(0x6011);
+        let fp0 = w.fingerprint();
+        let mut stream = TcpStream::connect(w.addr()).unwrap();
+        proto::write_msg(&mut stream, &hello(fp0)).unwrap();
+        assert!(matches!(proto::read_msg(&mut stream).unwrap(), Msg::Welcome { .. }));
+        for (u, v) in [(0u32, 60u32), (7, 7)] {
+            let req = UpdateRequest {
+                id: 1,
+                insert: true,
+                u,
+                v,
+                old_fingerprint: fp0,
+                new_fingerprint: fp0,
+                new_version: 1,
+            };
+            proto::write_msg(&mut stream, &Msg::Update(req)).unwrap();
+            match proto::read_msg(&mut stream).unwrap() {
+                Msg::UpdateAck(ack) => {
+                    assert!(!ack.applied);
+                    assert_eq!(ack.fingerprint, fp0);
+                    assert!(ack.error.contains("bad update edge"), "{}", ack.error);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(w.fingerprint(), fp0, "refused updates leave the graph untouched");
+        assert_eq!(w.version(), 0);
         drop(stream);
         w.shutdown();
     }

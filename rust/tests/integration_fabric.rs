@@ -7,13 +7,13 @@
 mod support;
 
 use morphmine::graph::generators::erdos_renyi;
-use morphmine::graph::{DataGraph, GraphFingerprint, GraphStats};
+use morphmine::graph::{DataGraph, DynGraph, GraphFingerprint, GraphStats};
 use morphmine::morph::Policy;
 use morphmine::pattern::canon::CanonKey;
 use morphmine::pattern::catalog;
-use morphmine::service::{QueryPlanner, ResultStore};
+use morphmine::service::{QueryPlanner, ResultStore, Service, ServiceConfig};
 use morphmine::shard::proto::{self, ExecRequest, ExecResponse, Msg};
-use morphmine::shard::{PoolConfig, ShardPool, ShardWorker, WorkerConfig};
+use morphmine::shard::{PoolConfig, ShardCoordinator, ShardPool, ShardWorker, WorkerConfig};
 use morphmine::util::proptest;
 use morphmine::util::timer::PhaseProfile;
 use std::time::Duration;
@@ -523,4 +523,185 @@ fn proto_decode_survives_hostile_mutations() {
         err.to_string().contains("exceeds MAX_MSG_LEN"),
         "oversized frames are refused by name: {err}"
     );
+}
+
+/// A cache-less, delta-less, morph-less service over `g` — the oracle the
+/// update chaos tests compare the fabric against.
+fn cold_service(g: DataGraph) -> Service {
+    Service::start(
+        g,
+        ServiceConfig {
+            workers: 1,
+            threads: 2,
+            policy: Policy::Off,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: None,
+            delta_budget: 0,
+        },
+    )
+}
+
+/// First non-adjacent vertex pair of `g`, as ((internal), (original)) ids.
+fn non_edge(g: &DataGraph) -> ((u32, u32), (u32, u32)) {
+    let n = g.num_vertices() as u32;
+    let (a, b) = (0..n)
+        .flat_map(|a| (0..n).map(move |b| (a, b)))
+        .find(|&(a, b)| a != b && !g.has_edge(a, b))
+        .expect("sparse test graphs have non-edges");
+    ((a, b), (g.original_id(a), g.original_id(b)))
+}
+
+#[test]
+fn update_racing_an_inflight_batch_pins_to_admission_epoch_or_fails_loudly() {
+    // a reader coordinator's batch is in flight (replies stalled by the
+    // proxies) when a second coordinator broadcasts an edge insert to the
+    // same workers. The raced batch must either complete with the counts
+    // of its ADMISSION epoch — requests are pinned to the graph snapshot
+    // they were admitted on — or fail loudly naming the divergence; it
+    // must never serve a half-updated mix
+    let g = erdos_renyi(40, 140, 0xFA10);
+    let w0 = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let w1 = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let p0 = ChaosProxy::start(w0.addr());
+    let p1 = ChaosProxy::start(w1.addr());
+    let mut reader = ShardCoordinator::connect(
+        g.clone(),
+        &[p0.addr().to_string(), p1.addr().to_string()],
+        QueryPlanner::new(Policy::Naive, true, 2),
+        1 << 20,
+    )
+    .unwrap();
+    let mut writer = ShardCoordinator::connect(
+        g.clone(),
+        &[w0.addr().to_string(), w1.addr().to_string()],
+        QueryPlanner::new(Policy::Naive, true, 2),
+        1 << 20,
+    )
+    .unwrap();
+    let batch = ["motifs:4"];
+    let old = cold_service(g.clone()).call(&batch).unwrap();
+    let ((au, av), (ou, ov)) = non_edge(&g);
+    p0.delay_down(300);
+    p1.delay_down(300);
+    let raced = std::thread::scope(|s| {
+        let h = s.spawn(|| reader.call(&batch));
+        std::thread::sleep(Duration::from_millis(80)); // batch admitted, replies stalled
+        assert!(writer.insert_edge(ou, ov).unwrap(), "the racing insert applies");
+        h.join().unwrap()
+    });
+    match raced {
+        Ok(resp) => assert_eq!(
+            resp.results, old.results,
+            "a batch that completes under a racing update serves its admission epoch"
+        ),
+        Err(e) => {
+            let t = format!("{e:#}");
+            assert!(
+                t.contains("fingerprint") || t.contains("epoch") || t.contains("no live worker"),
+                "a raced batch may fail, but loudly, naming the divergence: {t}"
+            );
+        }
+    }
+    // the dust settles: the writer serves exactly the post-update truth
+    let mut updated = DynGraph::from_data_graph(&g);
+    assert!(updated.insert_edge(au, av));
+    let fresh = cold_service(updated.to_data_graph("updated")).call(&batch).unwrap();
+    assert_eq!(
+        writer.call(&batch).unwrap().results,
+        fresh.results,
+        "after the race the fabric serves the post-update counts"
+    );
+    drop(reader);
+    drop(writer);
+    drop(p0);
+    drop(p1);
+    w0.shutdown();
+    w1.shutdown();
+}
+
+#[test]
+fn replica_that_misses_an_update_is_fenced_while_its_sibling_serves() {
+    // one 2-replica group; the victim replica goes silent (SIGKILL-style:
+    // its traffic vanishes) exactly as an update is broadcast, so it never
+    // applies the mutation. The update must succeed on the sibling with
+    // the victim's failure counted; when the victim comes back — a cold
+    // reload of its original, pre-update graph — the fingerprint handshake
+    // must fence it out of the new epoch rather than let stale partials
+    // merge
+    let g = erdos_renyi(40, 140, 0xFA12);
+    let sibling = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let victim = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let proxy = ChaosProxy::start(victim.addr());
+    let groups = vec![vec![sibling.addr().to_string(), proxy.addr().to_string()]];
+    let mut coord = ShardCoordinator::connect_with(
+        g.clone(),
+        &groups,
+        QueryPlanner::new(Policy::Naive, true, 2),
+        1 << 20,
+        fast_config(),
+    )
+    .unwrap();
+    let batch = ["motifs:4"];
+    coord.call(&batch).unwrap();
+    let ((au, av), (ou, ov)) = non_edge(&g);
+    proxy.set_blackhole(true); // the UPDATE frame and its ack both vanish
+    assert!(coord.insert_edge(ou, ov).unwrap(), "the update lands on the surviving sibling");
+    let m = coord.shard_metrics();
+    assert!(m.worker_failures >= 1, "the missed update is a visible failure: {m:?}");
+    proxy.set_blackhole(false); // the victim is reachable again — and stale
+    let mut updated = DynGraph::from_data_graph(&g);
+    assert!(updated.insert_edge(au, av));
+    let new_g = updated.to_data_graph("updated");
+    let fresh = cold_service(new_g.clone()).call(&batch).unwrap();
+    assert_eq!(
+        coord.call(&batch).unwrap().results,
+        fresh.results,
+        "the sibling alone serves the post-update truth"
+    );
+    // fingerprint fencing, proven from the outside: the victim still
+    // handshakes for the PRE-update graph and hard-rejects the new one
+    assert!(
+        ShardPool::connect(&[victim.addr().to_string()], &g).is_ok(),
+        "the victim still holds the pre-update graph"
+    );
+    let err = ShardPool::connect(&[victim.addr().to_string()], &new_g).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("rejected handshake"),
+        "a stale replica is fenced by name: {err:#}"
+    );
+    drop(coord);
+    drop(proxy);
+    sibling.shutdown();
+    victim.shutdown();
+}
+
+#[test]
+fn update_with_no_live_workers_fails_loudly_naming_the_scope() {
+    // the pool's only worker dies before an update broadcast: accepting
+    // the mutation silently would strand every future batch on a graph
+    // the fleet does not hold, so the update must error naming the scope
+    let g = erdos_renyi(30, 90, 0xFA13);
+    let w = ShardWorker::bind(g.clone(), "127.0.0.1:0", worker_config()).unwrap();
+    let proxy = ChaosProxy::start(w.addr());
+    let addrs = vec![proxy.addr().to_string()];
+    let mut coord = ShardCoordinator::connect_with(
+        g.clone(),
+        &singletons(&addrs),
+        QueryPlanner::new(Policy::Naive, true, 2),
+        1 << 20,
+        fast_config(),
+    )
+    .unwrap();
+    coord.call(&["motifs:3"]).unwrap();
+    let (_, (ou, ov)) = non_edge(&g);
+    proxy.kill();
+    let err = coord.insert_edge(ou, ov).unwrap_err();
+    let t = format!("{err:#}");
+    assert!(t.contains("edge update left"), "the failure names the update: {t}");
+    assert!(t.contains("no live member"), "…and the dead scope: {t}");
+    let m = coord.shard_metrics();
+    assert!(m.errors >= 1, "the failed update is counted: {m:?}");
+    assert!(m.worker_failures >= 1, "{m:?}");
+    w.shutdown();
 }

@@ -1,0 +1,155 @@
+//! Differential tests for delta-morphing result maintenance: a
+//! delta-patched serving engine (single-process [`Service`] and sharded
+//! [`ShardCoordinator`]) is driven through randomized mutation workloads
+//! and cross-checked against a fresh cold engine after EVERY update — the
+//! tentpole claim that a long-lived serve session never has to restart
+//! cold, and never serves a wrong count to avoid it.
+
+mod support;
+
+use morphmine::graph::generators::erdos_renyi;
+use morphmine::graph::{DataGraph, GraphBuilder};
+use morphmine::morph::Policy;
+use morphmine::service::{Service, ServiceConfig, DEFAULT_DELTA_BUDGET};
+use morphmine::util::proptest;
+use support::differential::{Differential, ShardedEngine, UpdatableEngine};
+
+fn service_over(g: DataGraph, policy: Policy, delta_budget: usize) -> Service {
+    Service::start(
+        g,
+        ServiceConfig {
+            workers: 2,
+            threads: 2,
+            policy,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: None,
+            delta_budget,
+        },
+    )
+}
+
+/// The headline workload: ≥50 randomized mutations through a warm
+/// single-process service, answers checked against a cold recount after
+/// every one — and the delta path must actually patch, not quietly purge
+/// its way to correctness.
+#[test]
+fn fifty_mutation_workload_single_process() {
+    let g = erdos_renyi(22, 66, 0xD1F1);
+    let batch = ["motifs:4", "match:cycle4,diamond-vi"];
+    let mut diff = Differential::new(&g, &batch);
+    let mut svc = service_over(g, Policy::Naive, DEFAULT_DELTA_BUDGET);
+    svc.call(&batch).unwrap(); // warm the store so updates have cached values to maintain
+    diff.run_random(&mut svc, 50, 0xD1F2);
+    assert!(diff.applied >= 20, "the workload must actually mutate: {} applied", diff.applied);
+    assert!(
+        svc.store_metrics().patched > 0,
+        "the delta path must patch entries in place, not always fall back: {:?}",
+        svc.store_metrics()
+    );
+}
+
+/// The same ≥50-mutation differential through the fabric: a coordinator
+/// over two live workers, every update broadcast via proto v6 UPDATE and
+/// applied to the workers' own graph copies.
+#[test]
+fn fifty_mutation_workload_sharded_two_workers() {
+    let g = erdos_renyi(20, 60, 0xD1F3);
+    let batch = ["motifs:4", "match:cycle4,diamond-vi"];
+    let mut diff = Differential::new(&g, &batch);
+    let mut eng = ShardedEngine::start(&g, 2, Policy::Naive);
+    eng.serve(&batch).unwrap();
+    diff.run_random(&mut eng, 50, 0xD1F4);
+    assert!(diff.applied >= 20, "the workload must actually mutate: {} applied", diff.applied);
+    assert!(
+        morphmine::obs::global().counter("mm_worker_updates_total").get() > 0,
+        "updates must reach the workers over the wire, not just the coordinator"
+    );
+    eng.shutdown();
+}
+
+/// Satellite property: ER graphs × motif sizes 3–4 × every morph policy,
+/// each iteration running a shorter differential workload.
+#[test]
+fn differential_property_er_by_size_and_policy() {
+    proptest::check(0xD1F5, 5, |rng| {
+        let n = 12 + rng.below_usize(10);
+        let m = n + rng.below_usize(2 * n);
+        let g = erdos_renyi(n, m, rng.next_u64());
+        let size = 3 + rng.below_usize(2);
+        let policy = [Policy::Off, Policy::Naive, Policy::CostBased][rng.below_usize(3)];
+        let q = format!("motifs:{size}");
+        let batch = [q.as_str()];
+        let mut diff = Differential::new(&g, &batch);
+        let mut svc = service_over(g, policy, DEFAULT_DELTA_BUDGET);
+        svc.call(&batch).unwrap();
+        diff.run_random(&mut svc, 10, rng.next_u64());
+    });
+}
+
+/// Edge cases the delta math must shrug off: re-inserting an existing
+/// edge, removing an absent one (both exact no-ops, epoch untouched), and
+/// a self-loop (a hard error, loudly, before anything mutates).
+#[test]
+fn duplicate_inserts_missing_removals_and_self_loops() {
+    let g = erdos_renyi(14, 30, 0xD1F6);
+    let batch = ["motifs:3"];
+    let mut diff = Differential::new(&g, &batch);
+    let mut svc = service_over(g.clone(), Policy::Naive, DEFAULT_DELTA_BUDGET);
+    svc.call(&batch).unwrap();
+    // an edge the graph already has, addressed in original ids
+    let iu = 0u32;
+    let iv = *g.neighbors(iu).first().expect("vertex 0 has neighbors");
+    diff.step(&mut svc, true, g.original_id(iu), g.original_id(iv)); // duplicate insert → no-op
+    // a pair the graph does not connect
+    let (au, av) = (0..14u32)
+        .flat_map(|a| (0..14u32).map(move |b| (a, b)))
+        .find(|&(a, b)| a != b && !g.has_edge(a, b))
+        .expect("a 14-vertex 30-edge graph has non-edges");
+    let (ou, ov) = (g.original_id(au), g.original_id(av));
+    diff.step(&mut svc, false, ou, ov); // remove a non-edge → no-op
+    diff.step(&mut svc, true, ou, ov); // now insert it for real
+    diff.step(&mut svc, false, ou, ov); // …and take it back out
+    assert_eq!(diff.applied, 2, "exactly the two real mutations applied");
+    // self-loops error before touching anything
+    let before = svc.epoch();
+    let err = svc.insert_edge(7, 7).unwrap_err();
+    assert!(format!("{err:#}").contains("self loop"), "{err:#}");
+    assert_eq!(svc.epoch(), before, "a rejected self-loop must not bump the epoch");
+}
+
+/// Tearing down a hub one spoke at a time: every removal reshapes the
+/// neighborhood of the highest-degree vertex, the hardest case for the
+/// delta pass's locality argument.
+#[test]
+fn disconnecting_a_hub_stays_exact() {
+    // hub 0 wired to every ring vertex 1..=11, ring keeps things connected
+    let mut edges: Vec<(u32, u32)> = (1..12u32).map(|v| (0, v)).collect();
+    edges.extend((1..12u32).map(|v| (v, if v == 11 { 1 } else { v + 1 })));
+    let g = GraphBuilder::new().edges(&edges).build("hub");
+    let batch = ["motifs:4"];
+    let mut diff = Differential::new(&g, &batch);
+    let mut svc = service_over(g.clone(), Policy::Naive, DEFAULT_DELTA_BUDGET);
+    svc.call(&batch).unwrap();
+    for v in 1..12u32 {
+        diff.step(&mut svc, false, 0, v);
+    }
+    assert_eq!(diff.applied, 11, "all hub spokes removed");
+}
+
+/// With the delta budget at 0 every update must take the purge fallback —
+/// still exact, never patching, and counted out loud.
+#[test]
+fn purge_fallback_is_counted_never_silent() {
+    let g = erdos_renyi(16, 40, 0xD1F7);
+    let batch = ["motifs:3"];
+    let mut diff = Differential::new(&g, &batch);
+    let mut svc = service_over(g, Policy::Naive, 0);
+    svc.call(&batch).unwrap();
+    let fallback = morphmine::obs::global().counter("mm_delta_fallback_total");
+    let before = fallback.get();
+    diff.run_random(&mut svc, 6, 0xD1F8);
+    assert!(diff.applied > 0, "the workload must mutate");
+    assert_eq!(svc.store_metrics().patched, 0, "budget 0 must never patch");
+    assert!(fallback.get() > before, "fallbacks are counted, never silent");
+}

@@ -31,6 +31,7 @@ fn config(dir: &Path, opts: PersistOpts) -> ServiceConfig {
         policy: Policy::Naive,
         fused: true,
         cache_bytes: 8 << 20,
+        delta_budget: morphmine::service::DEFAULT_DELTA_BUDGET,
         persist: Some(PersistConfig {
             dir: dir.to_path_buf(),
             opts,

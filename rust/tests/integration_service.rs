@@ -19,6 +19,7 @@ fn naive_service(graph: DataGraph, workers: usize, threads: usize) -> Service {
             policy: Policy::Naive,
             fused: true,
             cache_bytes: 8 << 20,
+            delta_budget: morphmine::service::DEFAULT_DELTA_BUDGET,
             persist: None,
         },
     )
@@ -97,9 +98,11 @@ fn epoch_bump_serves_fresh_counts() {
     let r1 = svc.call(&batch).unwrap();
     assert_eq!(r1.epoch, 1);
     assert_eq!(
-        r1.stats.executed_bases, r1.stats.total_bases,
-        "the epoch bump must invalidate every cached base"
+        r1.stats.executed_bases, 0,
+        "motif bases are delta-patched in place, not recomputed: {:?}",
+        r1.stats
     );
+    assert!(svc.store_metrics().patched > 0, "the patch must be visible in store metrics");
     let snapshot = mirror.to_data_graph("mirror");
     for q in &r1.results {
         let pats: Vec<Pattern> = q.counts.iter().map(|(p, _)| p.clone()).collect();

@@ -99,6 +99,7 @@ fn coordinator_answers_match_inprocess_service_end_to_end() {
             policy: Policy::Naive,
             fused: true,
             cache_bytes: 1 << 20,
+            delta_budget: morphmine::service::DEFAULT_DELTA_BUDGET,
             persist: None,
         },
     );
@@ -140,6 +141,7 @@ fn sharded_batch_trace_spans_the_fabric_end_to_end() {
             policy: Policy::Naive,
             fused: true,
             cache_bytes: 1 << 20,
+            delta_budget: morphmine::service::DEFAULT_DELTA_BUDGET,
             persist: None,
         },
     );

@@ -1,0 +1,250 @@
+//! Differential result-maintenance harness: drive a delta-maintained
+//! serving engine and a mirror graph through the same mutation workload,
+//! and after EVERY applied update compare the engine's warm answers
+//! against a fresh cold engine built from the mirror. The engine under
+//! test patches (or purges) cached results in place across epochs; the
+//! oracle has no cache, no deltas and no epochs — if they ever disagree,
+//! delta maintenance changed an answer.
+//!
+//! The harness is engine-agnostic ([`UpdatableEngine`]) so the identical
+//! workload runs against the single-process [`Service`] and against a
+//! [`ShardCoordinator`] fanning out to live worker processes-in-threads
+//! ([`ShardedEngine`]) — the tentpole claim is that BOTH stay exact
+//! without ever restarting cold.
+//!
+//! Mutations are addressed in *original* vertex ids (the engines' public
+//! surface); the mirror translates through the graph's relabeling exactly
+//! like the engines do, so a relabeled serve graph is checked against the
+//! same logical edge set.
+#![allow(dead_code)]
+
+use morphmine::graph::{DataGraph, DynGraph, GraphFingerprint, Relabeling};
+use morphmine::morph::Policy;
+use morphmine::service::{BatchResponse, QueryPlanner, Service, ServiceConfig};
+use morphmine::shard::{ShardCoordinator, ShardWorker, WorkerConfig};
+use morphmine::util::rng::Rng;
+
+/// Anything that serves query batches over a mutable graph: apply an edge
+/// update, re-serve, report the graph epoch.
+pub trait UpdatableEngine {
+    /// Short name for assertion messages ("service", "sharded×2", …).
+    fn label(&self) -> String;
+    /// Apply `+ (u,v)` / `- (u,v)` in original vertex ids; Ok(changed).
+    fn apply(&mut self, insert: bool, u: u32, v: u32) -> anyhow::Result<bool>;
+    /// Serve one batch of query texts.
+    fn serve(&mut self, batch: &[&str]) -> anyhow::Result<BatchResponse>;
+    /// The engine's current graph epoch (mutation version).
+    fn epoch(&self) -> u64;
+}
+
+impl UpdatableEngine for Service {
+    fn label(&self) -> String {
+        "service".into()
+    }
+    fn apply(&mut self, insert: bool, u: u32, v: u32) -> anyhow::Result<bool> {
+        if insert {
+            self.insert_edge(u, v)
+        } else {
+            self.remove_edge(u, v)
+        }
+    }
+    fn serve(&mut self, batch: &[&str]) -> anyhow::Result<BatchResponse> {
+        self.call(batch)
+    }
+    fn epoch(&self) -> u64 {
+        Service::epoch(self)
+    }
+}
+
+/// A [`ShardCoordinator`] plus the in-process workers it fans out to,
+/// owned together so tests tear the whole fabric down in one place.
+pub struct ShardedEngine {
+    coord: ShardCoordinator,
+    workers: Vec<ShardWorker>,
+}
+
+impl ShardedEngine {
+    /// Spin up `num_workers` loopback workers over `g` and connect a
+    /// coordinator to them.
+    pub fn start(g: &DataGraph, num_workers: usize, policy: Policy) -> ShardedEngine {
+        let config = WorkerConfig {
+            threads: 2,
+            fused: true,
+            cache_bytes: 1 << 20,
+            persist: None,
+            slice_pin: None,
+        };
+        let workers: Vec<ShardWorker> = (0..num_workers)
+            .map(|_| ShardWorker::bind(g.clone(), "127.0.0.1:0", config.clone()).unwrap())
+            .collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+        let planner = QueryPlanner::new(policy, true, 2);
+        let coord = ShardCoordinator::connect(g.clone(), &addrs, planner, 1 << 20).unwrap();
+        ShardedEngine { coord, workers }
+    }
+
+    pub fn coordinator(&mut self) -> &mut ShardCoordinator {
+        &mut self.coord
+    }
+
+    pub fn workers(&self) -> &[ShardWorker] {
+        &self.workers
+    }
+
+    /// Graceful teardown (drop the coordinator first so workers see EOF).
+    pub fn shutdown(self) {
+        drop(self.coord);
+        for w in self.workers {
+            w.shutdown();
+        }
+    }
+}
+
+impl UpdatableEngine for ShardedEngine {
+    fn label(&self) -> String {
+        format!("sharded×{}", self.workers.len())
+    }
+    fn apply(&mut self, insert: bool, u: u32, v: u32) -> anyhow::Result<bool> {
+        if insert {
+            self.coord.insert_edge(u, v)
+        } else {
+            self.coord.remove_edge(u, v)
+        }
+    }
+    fn serve(&mut self, batch: &[&str]) -> anyhow::Result<BatchResponse> {
+        self.coord.call(batch)
+    }
+    fn epoch(&self) -> u64 {
+        self.coord.epoch()
+    }
+}
+
+/// The differential rig: a mirror of the engine's graph plus the batch to
+/// re-serve and cross-check after every mutation.
+pub struct Differential {
+    mirror: DynGraph,
+    relabel: Option<Relabeling>,
+    batch: Vec<String>,
+    /// Mutations attempted through [`Differential::step`].
+    pub steps: usize,
+    /// Mutations that actually changed the graph.
+    pub applied: usize,
+}
+
+impl Differential {
+    /// Mirror `start` (the exact graph the engine was started on) and
+    /// check `batch` after every mutation.
+    pub fn new(start: &DataGraph, batch: &[&str]) -> Differential {
+        Differential {
+            mirror: DynGraph::from_data_graph(start),
+            relabel: start.relabeling().cloned(),
+            batch: batch.iter().map(|s| s.to_string()).collect(),
+            steps: 0,
+            applied: 0,
+        }
+    }
+
+    fn internal(&self, v: u32) -> u32 {
+        match &self.relabel {
+            Some(r) if (v as usize) < r.len() => r.new_id(v),
+            _ => v,
+        }
+    }
+
+    /// The mirror's current fingerprint — what a correct engine's graph
+    /// must hash to after the same mutations.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        self.mirror.fingerprint()
+    }
+
+    /// Apply one mutation to both the engine and the mirror, assert they
+    /// agree on whether anything changed and that the epoch moves iff the
+    /// graph did, then cross-check the engine against a cold oracle.
+    pub fn step(&mut self, engine: &mut dyn UpdatableEngine, insert: bool, u: u32, v: u32) {
+        let sign = if insert { '+' } else { '-' };
+        let before = engine.epoch();
+        let changed = engine.apply(insert, u, v).unwrap_or_else(|e| {
+            panic!("{}: step {} {sign} ({u},{v}) must not fail: {e:#}", engine.label(), self.steps)
+        });
+        let (iu, iv) = (self.internal(u), self.internal(v));
+        let mirrored = if insert {
+            self.mirror.insert_edge(iu, iv)
+        } else {
+            self.mirror.remove_edge(iu, iv)
+        };
+        assert_eq!(
+            changed,
+            mirrored,
+            "{}: step {} {sign} ({u},{v}): engine and mirror disagree on whether the edge set changed",
+            engine.label(),
+            self.steps
+        );
+        if changed {
+            assert!(
+                engine.epoch() > before,
+                "{}: applied {sign} ({u},{v}) must bump the epoch past {before}",
+                engine.label()
+            );
+            self.applied += 1;
+        } else {
+            assert_eq!(
+                engine.epoch(),
+                before,
+                "{}: rejected {sign} ({u},{v}) must not bump the epoch",
+                engine.label()
+            );
+        }
+        self.steps += 1;
+        self.check(engine);
+    }
+
+    /// The differential check itself: the engine's warm answers vs a
+    /// fresh, cache-less, delta-less engine over the mirrored graph. The
+    /// oracle runs with morphing OFF so the two sides share as little
+    /// machinery as possible.
+    pub fn check(&self, engine: &mut dyn UpdatableEngine) {
+        let refs: Vec<&str> = self.batch.iter().map(|s| s.as_str()).collect();
+        let warm = engine
+            .serve(&refs)
+            .unwrap_or_else(|e| panic!("{}: warm batch failed: {e:#}", engine.label()));
+        let oracle = Service::start(
+            self.mirror.to_data_graph("differential-oracle"),
+            ServiceConfig {
+                workers: 1,
+                threads: 2,
+                policy: Policy::Off,
+                fused: true,
+                cache_bytes: 1 << 20,
+                persist: None,
+                delta_budget: 0,
+            },
+        );
+        let cold = oracle.call(&refs).expect("cold oracle batch");
+        assert_eq!(
+            warm.results, cold.results,
+            "{}: after {} applied mutations ({} attempted) the maintained answers diverged from a cold recount",
+            engine.label(),
+            self.applied,
+            self.steps
+        );
+    }
+
+    /// Drive `steps` random in-range mutations through the engine (a
+    /// ~55/45 insert/remove mix over random vertex pairs, so duplicate
+    /// inserts and missing-edge removals occur naturally), checking after
+    /// every one.
+    pub fn run_random(&mut self, engine: &mut dyn UpdatableEngine, steps: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let n = self.mirror.num_vertices() as u64;
+        let mut done = 0;
+        while done < steps {
+            let u = rng.below(n) as u32;
+            let v = rng.below(n) as u32;
+            if u == v {
+                continue;
+            }
+            self.step(engine, rng.below(100) < 55, u, v);
+            done += 1;
+        }
+    }
+}

@@ -17,6 +17,8 @@
 //! allow (each integration test binary compiles this module separately).
 #![allow(dead_code)]
 
+pub mod differential;
+
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
